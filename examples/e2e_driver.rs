@@ -1,0 +1,118 @@
+//! End-to-end driver — proves all three layers compose on a real workload
+//! (the EXPERIMENTS.md §E2E run):
+//!
+//!  1. Layer 1/2: load the AOT JAX/Pallas cost-model artifact via PJRT and
+//!     cross-check it against the pure-Rust oracle on this exact workload.
+//!  2. Layer 3: map the paper's Table 4 workload with all four strategies.
+//!  3. Use the AOT cost model *on the request path* to refine the Blocked
+//!     placement (paper §7 future work) — every candidate swap is scored by
+//!     the Pallas-kerneled artifact.
+//!  4. Simulate everything on the Table 1 cluster and report the paper's
+//!     headline metric, including the refined placement.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_driver
+//! ```
+
+use nicmap::coordinator::refine::{refine, Scorer};
+use nicmap::coordinator::MapperKind;
+use nicmap::harness::Metric;
+use nicmap::model::topology::ClusterSpec;
+use nicmap::model::traffic::TrafficMatrix;
+use nicmap::model::workload::Workload;
+use nicmap::report::figure::bar_chart;
+use nicmap::report::table::Table;
+use nicmap::runtime::{ArtifactStore, NativeScorer, PjrtScorer};
+use nicmap::sim::{simulate, SimConfig};
+
+fn main() -> nicmap::Result<()> {
+    let cluster = ClusterSpec::paper_cluster();
+    let w = Workload::builtin("synt4")?; // the paper's 91 %-gain workload
+    let traffic = TrafficMatrix::of_workload(&w);
+    println!("=== nicmap end-to-end driver ===");
+    println!("cluster:  {}", cluster.summary());
+    println!("workload: {} ({} jobs, {} procs)\n", w.name, w.jobs.len(), w.total_procs());
+
+    // --- Step 1: the AOT artifact, cross-checked against the oracle. ----
+    let store = ArtifactStore::open_default()?;
+    println!("[1] PJRT platform {} — {} artifacts in manifest", store.platform(), store.metas().len());
+    let pjrt = PjrtScorer::new(&store);
+    let probe = MapperKind::Cyclic.build().map(&w, &cluster)?;
+    let a = pjrt.score(&traffic, &probe, &cluster)?;
+    let b = NativeScorer.score(&traffic, &probe, &cluster)?;
+    let max_rel = a
+        .nic_tx
+        .iter()
+        .zip(&b.nic_tx)
+        .map(|(x, y)| (x - y).abs() / y.abs().max(1.0))
+        .fold(0.0f64, f64::max);
+    println!("    JAX/Pallas artifact vs Rust oracle: max rel err {max_rel:.2e} (must be < 1e-4)");
+    assert!(max_rel < 1e-4);
+
+    // --- Step 2: map with all strategies. --------------------------------
+    println!("\n[2] mapping with B/C/D/N…");
+    let mut placements = Vec::new();
+    for kind in MapperKind::PAPER {
+        let t0 = std::time::Instant::now();
+        let p = kind.build().map(&w, &cluster)?;
+        println!("    {:<8} {:>8.2?}  nodes used: {}", kind.name(), t0.elapsed(), p.nodes_used(&cluster));
+        placements.push((kind.name().to_string(), p));
+    }
+
+    // --- Step 3: AOT cost model on the hot path — refine Blocked. -------
+    println!("\n[3] refining Blocked with the AOT cost model…");
+    let blocked = placements[0].1.clone();
+    let t0 = std::time::Instant::now();
+    let rep = refine(&pjrt, &traffic, &blocked, &w, &cluster, 12)?;
+    println!(
+        "    objective {:.3e} -> {:.3e} | {} swaps | {} artifact executions | {:.2?}",
+        rep.before,
+        rep.after,
+        rep.swaps,
+        rep.evaluations,
+        t0.elapsed()
+    );
+    placements.push(("B+refine".into(), rep.placement));
+
+    // --- Step 4: simulate everything. ------------------------------------
+    println!("\n[4] simulating on the Table 1 cluster…");
+    let cfg = SimConfig::default();
+    let mut rows = Vec::new();
+    let mut table = Table::new(vec![
+        "strategy",
+        "waiting (ms)",
+        "workload finish (s)",
+        "total finish (s)",
+        "events",
+    ]);
+    for (name, p) in &placements {
+        let r = simulate(&w, p, &cluster, &cfg)?;
+        table.row(vec![
+            name.clone(),
+            format!("{:.3e}", r.waiting_ms()),
+            format!("{:.2}", r.workload_finish_s()),
+            format!("{:.2}", r.total_finish_s()),
+            r.events.to_string(),
+        ]);
+        rows.push((name.clone(), r.waiting_ms()));
+    }
+    print!("{table}");
+    println!();
+    println!("{}", bar_chart(&format!("{} — {}", w.name, Metric::WaitingMs.label()), &rows, 40));
+
+    let new = rows.iter().find(|(n, _)| n == "New").unwrap().1;
+    let best_other = rows
+        .iter()
+        .filter(|(n, _)| n != "New")
+        .map(|(_, v)| *v)
+        .fold(f64::INFINITY, f64::min);
+    println!(
+        "headline: New strategy gain vs best other = {:+.1}%  (paper reports ≈91% on this workload)",
+        (best_other - new) / best_other * 100.0
+    );
+    println!("refinement: Blocked {:.3e} -> B+refine {:.3e} ms waiting",
+        rows[0].1,
+        rows.iter().find(|(n, _)| n == "B+refine").unwrap().1
+    );
+    Ok(())
+}

@@ -1,0 +1,113 @@
+"""AOT lowering: JAX cost model -> HLO text artifacts for the Rust runtime.
+
+Interchange format is **HLO text**, not ``lowered.compile().serialize()`` /
+serialized ``HloModuleProto``: jax >= 0.5 emits protos with 64-bit instruction
+ids which the ``xla`` crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``).  The text parser on the Rust side
+(``HloModuleProto::from_text_file``) reassigns ids and round-trips cleanly —
+see /opt/xla-example/README.md.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts
+
+Emits one artifact per (P, N) shape variant plus the batched scorer, and a
+``manifest.txt`` the Rust runtime uses to discover shapes without re-parsing
+HLO.  Python runs only here, at build time; the Rust binary is self-contained
+once ``artifacts/`` exists.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (P, N) variants compiled ahead of time.  P is padded process count (the Rust
+# caller zero-pads: zero traffic rows / zero assignment rows are exact no-ops
+# in every output), N the padded node count.  The paper cluster is N = 16.
+SHAPE_VARIANTS = [
+    (32, 16),
+    (64, 16),
+    (128, 16),
+    (192, 16),
+    (256, 16),
+    (256, 32),
+]
+
+# Batch width for the swap-refinement scorer.
+BATCH_VARIANTS = [
+    (16, 64, 16),
+    (32, 128, 16),
+    (16, 256, 16),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_cost_model(p: int, n: int) -> str:
+    lowered = jax.jit(model.cost_model).lower(*model.example_shapes(p, n))
+    return to_hlo_text(lowered)
+
+
+def lower_node_loads(p: int, n: int) -> str:
+    lowered = jax.jit(model.node_loads).lower(*model.example_shapes(p, n))
+    return to_hlo_text(lowered)
+
+
+def lower_cost_model_batched(b: int, p: int, n: int) -> str:
+    lowered = jax.jit(model.cost_model_batched).lower(
+        *model.example_shapes_batched(b, p, n)
+    )
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for p, n in SHAPE_VARIANTS:
+        name = f"cost_model_p{p}_n{n}.hlo.txt"
+        text = lower_cost_model(p, n)
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            f.write(text)
+        manifest.append(f"cost_model {p} {n} {name}")
+        print(f"wrote {name} ({len(text)} chars)")
+
+    for p, n in SHAPE_VARIANTS:
+        name = f"node_loads_p{p}_n{n}.hlo.txt"
+        text = lower_node_loads(p, n)
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            f.write(text)
+        manifest.append(f"node_loads {p} {n} {name}")
+        print(f"wrote {name} ({len(text)} chars)")
+
+    for b, p, n in BATCH_VARIANTS:
+        name = f"cost_model_b{b}_p{p}_n{n}.hlo.txt"
+        text = lower_cost_model_batched(b, p, n)
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            f.write(text)
+        manifest.append(f"cost_model_batched {b} {p} {n} {name}")
+        print(f"wrote {name} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

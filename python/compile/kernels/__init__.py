@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels for the nicmap cost model.
+
+Kernels here are the compute hot-spot of placement scoring: tiled matmuls for
+``M = A^T T A`` (node-traffic aggregation) and masked row reductions for
+per-process communication demand / adjacency degree.
+
+All kernels are authored for TPU-style tiling (128-lane blocks held in VMEM,
+MXU-shaped accumulation) but are lowered with ``interpret=True`` on this image
+because the CPU PJRT plugin cannot execute Mosaic custom-calls.  Correctness is
+pinned to the pure-jnp oracle in :mod:`compile.kernels.ref` by pytest.
+"""
+
+from compile.kernels.matmul import matmul, matmul_at_b
+from compile.kernels.reduce import row_sum, row_nnz
+
+__all__ = ["matmul", "matmul_at_b", "row_sum", "row_nnz"]

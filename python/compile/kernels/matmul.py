@@ -1,0 +1,125 @@
+"""Tiled Pallas matmul kernels (Layer 1).
+
+Two entry points:
+
+``matmul(x, y)``       -> ``x @ y``    with MXU-shaped tiling.
+``matmul_at_b(a, b)``  -> ``a.T @ b``  without materializing ``a.T`` in HBM —
+                          the transpose happens on the VMEM tile, which is the
+                          TPU analogue of a shared-memory transpose in the CUDA
+                          formulation.
+
+Tiling strategy (see DESIGN.md §7/§8):
+
+* blocks are ``(BM, BK) x (BK, BN)`` with 128-lane alignment — the MXU systolic
+  array is 128x128, so full-lane blocks keep the array dense;
+* the K dimension is walked by the innermost grid axis; because the output
+  BlockSpec maps every K step to the same ``(i, j)`` tile, the output block
+  stays VMEM-resident across the K walk and serves as the accumulator (the
+  standard Pallas reduction idiom — no HBM round-trips between K steps);
+* inputs smaller than one block degenerate to a single grid step, which is the
+  common case for the cost model (P <= 128, N = 16 padded to lane width).
+
+``interpret=True`` everywhere: the CPU PJRT client executes the interpreted
+lowering; real-TPU lowering would emit a Mosaic custom-call the CPU plugin
+cannot run (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block(dim: int, pref: int) -> int:
+    """Largest block size <= ``pref`` that divides ``dim``.
+
+    The cost-model shapes are powers of two (padded by the Rust caller), so in
+    practice this returns ``pref`` or ``dim`` itself.  Falls back to a divisor
+    scan for odd shapes so the kernels stay total for the randomized sweeps.
+    """
+    if dim >= pref and dim % pref == 0:
+        return pref
+    for cand in range(min(dim, pref), 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """Grid point (i, j, k): accumulate ``x[i,k] @ y[k,j]`` into the output tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU pass: dot over the VMEM tiles, f32 accumulate.
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _matmul_at_b_kernel(a_ref, b_ref, o_ref):
+    """Grid point (i, j, k): accumulate ``a[k,i].T @ b[k,j]``.
+
+    The transpose is taken on the VMEM-resident tile (free relative to the
+    HBM stream), so A is read in its natural row-major layout.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].T, b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul(
+    x: jax.Array, y: jax.Array, *, bm: int = 128, bk: int = 128, bn: int = 128
+) -> jax.Array:
+    """``x @ y`` via the tiled Pallas kernel. ``x: (M, K)``, ``y: (K, N)``."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm, bk, bn = _block(m, bm), _block(k, bk), _block(n, bn)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul_at_b(
+    a: jax.Array, b: jax.Array, *, bm: int = 128, bk: int = 128, bn: int = 128
+) -> jax.Array:
+    """``a.T @ b`` via the tile-transposing kernel. ``a: (K, M)``, ``b: (K, N)``."""
+    k, m = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm, bk, bn = _block(m, bm), _block(k, bk), _block(n, bn)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_at_b_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, i)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

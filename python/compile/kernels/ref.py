@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the Layer-1 kernels and the Layer-2 cost model.
+
+This module is the correctness ground truth: every Pallas kernel and the whole
+lowered cost-model graph are pinned to these definitions by pytest
+(`python/tests/`), and the Rust native scorer (`rust/src/runtime/native.rs`)
+re-implements exactly these formulas so the AOT artifact can be cross-checked
+end-to-end from cargo tests.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul(x, y):
+    """Plain ``x @ y`` in f32."""
+    return jnp.matmul(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def matmul_at_b(a, b):
+    """Plain ``a.T @ b`` in f32."""
+    return jnp.matmul(a.astype(jnp.float32).T, b.astype(jnp.float32))
+
+
+def row_sum(t):
+    """Row sums as an ``(M, 1)`` column."""
+    return jnp.sum(t.astype(jnp.float32), axis=1, keepdims=True)
+
+
+def row_nnz(t):
+    """Count of strictly-positive entries per row as ``(M, 1)``."""
+    return jnp.sum((t > 0.0).astype(jnp.float32), axis=1, keepdims=True)
+
+
+def cost_model(t, a):
+    """Reference for the full Layer-2 cost model (see compile/model.py).
+
+    Args:
+      t: ``(P, P)`` f32 traffic matrix, ``t[i, j] = L_ij * lambda_ij`` in
+         bytes/sec (0 on the diagonal).
+      a: ``(P, N)`` f32 one-hot assignment matrix (row i = node of process i;
+         all-zero rows are padding).
+
+    Returns a 6-tuple matching the AOT artifact output order:
+      node_traffic ``(N, N)``, nic_tx ``(N,)``, nic_rx ``(N,)``,
+      intra ``(N,)``, cd ``(P,)``, adj ``(P,)``.
+    """
+    t = t.astype(jnp.float32)
+    a = a.astype(jnp.float32)
+    m = a.T @ (t @ a)                      # node-to-node traffic
+    diag = jnp.diag(m)
+    nic_tx = jnp.sum(m, axis=1) - diag     # inter-node egress per node
+    nic_rx = jnp.sum(m, axis=0) - diag     # inter-node ingress per node
+    cd = jnp.sum(t, axis=1) + jnp.sum(t, axis=0)   # eq. 1, both directions
+    adj = jnp.sum((t + t.T > 0.0).astype(jnp.float32), axis=1)
+    return m, nic_tx, nic_rx, diag, cd, adj

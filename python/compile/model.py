@@ -1,0 +1,100 @@
+"""Layer-2 cost-model graph (build-time JAX; never imported at runtime).
+
+The model scores a candidate process->node placement against a job traffic
+matrix.  It is the function the Rust coordinator's refinement loop and
+``nicmap evaluate`` call through the AOT artifact:
+
+    inputs :  T (P, P) f32   traffic matrix, T[i,j] = L_ij * lambda_ij (B/s)
+              A (P, N) f32   one-hot assignment (padding rows all-zero)
+    outputs:  node_traffic (N, N)  M = A^T T A
+              nic_tx       (N,)    inter-node egress per node  (row sums - diag)
+              nic_rx       (N,)    inter-node ingress per node (col sums - diag)
+              intra        (N,)    intra-node volume (diag of M)
+              cd           (P,)    communication demand per process (paper eq. 1,
+                                   both directions so receivers count too)
+              adj          (P,)    adjacency degree per process (eq. 2 inputs)
+
+The heavy lifting (both matmuls of A^T T A and the P-wide reductions) runs in
+the Layer-1 Pallas kernels; the N-wide postprocessing (diag extraction etc.)
+is plain jnp and fuses into the same HLO module at lowering time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import matmul, matmul_at_b, row_sum, row_nnz
+
+
+def cost_model(t: jax.Array, a: jax.Array):
+    """Placement scoring graph; see module docstring for shapes."""
+    t = t.astype(jnp.float32)
+    a = a.astype(jnp.float32)
+
+    # Node-to-node traffic M = A^T (T A): two Pallas matmuls; U = T A stays
+    # (P, N) so the dominant FLOPs (P x P x N) run on the dense first kernel.
+    u = matmul(t, a)                # (P, N)
+    m = matmul_at_b(a, u)           # (N, N)
+
+    diag = jnp.diagonal(m)
+    nic_tx = jnp.sum(m, axis=1) - diag
+    nic_rx = jnp.sum(m, axis=0) - diag
+
+    # Per-process demand and adjacency over the symmetrized traffic.
+    cd = (row_sum(t) + row_sum(t.T)).reshape(-1)
+    adj = row_nnz(t + t.T).reshape(-1)
+
+    return m, nic_tx, nic_rx, diag, cd, adj
+
+
+def node_loads(t: jax.Array, a: jax.Array):
+    """Placement-dependent outputs only: (M, nic_tx, nic_rx, intra).
+
+    The refinement hot path re-scores the *same* traffic matrix against many
+    candidate placements; cd/adj do not depend on A, so lowering a variant
+    without the two P-wide reductions shaves them off every call
+    (EXPERIMENTS.md §Perf, L2 iteration 2).
+    """
+    t = t.astype(jnp.float32)
+    a = a.astype(jnp.float32)
+    u = matmul(t, a)
+    m = matmul_at_b(a, u)
+    diag = jnp.diagonal(m)
+    return m, jnp.sum(m, axis=1) - diag, jnp.sum(m, axis=0) - diag, diag
+
+
+def cost_model_batched(t: jax.Array, abatch: jax.Array):
+    """Score ``B`` candidate placements of the same job in one call.
+
+    ``abatch: (B, P, N)``.  Used by the Rust refinement loop to amortize the
+    PJRT dispatch overhead across a whole swap-candidate batch.  Only the
+    placement-dependent outputs are returned (cd/adj do not depend on A):
+    node_traffic (B, N, N), nic_tx (B, N), nic_rx (B, N), intra (B, N).
+    """
+    t = t.astype(jnp.float32)
+    abatch = abatch.astype(jnp.float32)
+
+    def one(a):
+        u = matmul(t, a)
+        m = matmul_at_b(a, u)
+        diag = jnp.diagonal(m)
+        return m, jnp.sum(m, axis=1) - diag, jnp.sum(m, axis=0) - diag, diag
+
+    return jax.vmap(one)(abatch)
+
+
+def example_shapes(p: int, n: int):
+    """ShapeDtypeStructs used by aot.py to lower ``cost_model``."""
+    return (
+        jax.ShapeDtypeStruct((p, p), jnp.float32),
+        jax.ShapeDtypeStruct((p, n), jnp.float32),
+    )
+
+
+def example_shapes_batched(b: int, p: int, n: int):
+    """ShapeDtypeStructs used by aot.py to lower ``cost_model_batched``."""
+    return (
+        jax.ShapeDtypeStruct((p, p), jnp.float32),
+        jax.ShapeDtypeStruct((b, p, n), jnp.float32),
+    )

@@ -1,0 +1,83 @@
+"""AOT path: lowering emits parseable HLO text with the expected interface.
+
+These tests guard the interchange contract with the Rust runtime: entry
+computation name, parameter count/shapes, tuple arity, and the zero-padding
+semantics at the exact shapes shipped in artifacts/.
+"""
+
+import re
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def hlo_p64():
+    return aot.lower_cost_model(64, 16)
+
+
+def test_hlo_text_nonempty(hlo_p64):
+    assert len(hlo_p64) > 1000
+    assert "HloModule" in hlo_p64
+
+
+def test_hlo_has_entry_params(hlo_p64):
+    # ENTRY computation takes T (64,64) and A (64,16) f32 params.
+    assert re.search(r"ENTRY", hlo_p64)
+    assert "f32[64,64]" in hlo_p64
+    assert "f32[64,16]" in hlo_p64
+
+
+def test_hlo_returns_tuple_of_six(hlo_p64):
+    # return_tuple=True => root is a 6-tuple (m, tx, rx, intra, cd, adj).
+    entry = hlo_p64[hlo_p64.index("ENTRY"):]
+    m = re.search(r"ROOT[^\n]*tuple", entry)
+    assert m, "entry root must be a tuple"
+    root_line = entry[m.start():].split("\n")[0]
+    assert root_line.count("f32[16,16]") == 1          # node_traffic
+    assert root_line.count("f32[16]") >= 3             # tx, rx, intra
+    assert root_line.count("f32[64]") == 2             # cd, adj
+
+
+def test_hlo_no_custom_calls(hlo_p64):
+    """interpret=True must lower to plain HLO — a Mosaic custom-call would be
+    unrunnable on the CPU PJRT client."""
+    assert "custom-call" not in hlo_p64 or "mosaic" not in hlo_p64.lower()
+
+
+def test_all_shape_variants_lower():
+    for p, n in aot.SHAPE_VARIANTS:
+        text = aot.lower_cost_model(p, n)
+        assert f"f32[{p},{p}]" in text
+        assert f"f32[{p},{n}]" in text
+
+
+def test_batched_variants_lower():
+    for b, p, n in aot.BATCH_VARIANTS:
+        text = aot.lower_cost_model_batched(b, p, n)
+        assert f"f32[{b},{p},{n}]" in text
+
+
+def test_dominant_flops_are_one_dot():
+    """Optimization guard (DESIGN.md §10): the P x P x N contraction must
+    lower to dot ops, not an unrolled loop."""
+    text = aot.lower_cost_model(128, 16)
+    assert text.count("dot(") >= 2  # T@A and A^T@U
+
+
+def test_artifact_semantics_match_ref_at_shipped_shapes():
+    """Numerical round-trip at exactly the shipped artifact shapes."""
+    rng = np.random.default_rng(99)
+    for p, n in aot.SHAPE_VARIANTS[:3]:
+        t = rng.random((p, p), dtype=np.float32)
+        np.fill_diagonal(t, 0.0)
+        a = np.zeros((p, n), dtype=np.float32)
+        a[np.arange(p), rng.integers(0, n, p)] = 1.0
+        outs = model.cost_model(jnp.asarray(t), jnp.asarray(a))
+        refs = ref.cost_model(jnp.asarray(t), jnp.asarray(a))
+        for o, r in zip(outs, refs):
+            np.testing.assert_allclose(np.asarray(o), np.asarray(r), rtol=1e-4, atol=1e-2)

@@ -1,0 +1,145 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Seeded randomized sweeps over shapes, block sizes, sparsity, and dtypes stand
+in for hypothesis (not installed on this image); each case is deterministic
+and enumerable, so failures reproduce exactly.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import matmul, matmul_at_b, row_sum, row_nnz
+from compile.kernels import ref
+from compile.kernels.matmul import _block
+
+
+def _traffic(rng, p, sparsity=0.5, scale=1e6):
+    """Random non-negative traffic matrix with zero diagonal."""
+    t = rng.random((p, p), dtype=np.float32) * scale
+    mask = rng.random((p, p)) < sparsity
+    t = np.where(mask, t, 0.0).astype(np.float32)
+    np.fill_diagonal(t, 0.0)
+    return jnp.asarray(t)
+
+
+def _assign(rng, p, n):
+    """Random one-hot (P, N) assignment."""
+    a = np.zeros((p, n), dtype=np.float32)
+    a[np.arange(p), rng.integers(0, n, p)] = 1.0
+    return jnp.asarray(a)
+
+
+# ---------------------------------------------------------------- _block unit
+
+@pytest.mark.parametrize(
+    "dim,pref,expect",
+    [(128, 128, 128), (256, 128, 128), (64, 128, 64), (16, 128, 16),
+     (96, 128, 96), (48, 32, 24), (1, 128, 1), (7, 4, 1)],
+)
+def test_block_divides(dim, pref, expect):
+    b = _block(dim, pref)
+    assert dim % b == 0
+    assert b == expect
+
+
+def test_block_never_exceeds_pref_when_divisible():
+    for dim in [2, 4, 8, 16, 32, 64, 128, 256, 512]:
+        assert _block(dim, 128) <= 128 or dim < 128
+
+
+# ---------------------------------------------------------------- matmul
+
+@pytest.mark.parametrize("m,k,n", [
+    (8, 8, 8), (16, 32, 8), (32, 32, 16), (64, 64, 16),
+    (128, 128, 16), (128, 128, 128), (256, 128, 32), (24, 48, 12),
+])
+def test_matmul_matches_ref(m, k, n):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    np.testing.assert_allclose(matmul(x, y), ref.matmul(x, y), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bk,bn", [(8, 8, 8), (16, 32, 16), (32, 16, 8), (128, 128, 128)])
+def test_matmul_block_shape_invariance(bm, bk, bn):
+    """Result must not depend on the tiling — the core Pallas invariant."""
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(rng.standard_normal((64, 64)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    base = ref.matmul(x, y)
+    np.testing.assert_allclose(matmul(x, y, bm=bm, bk=bk, bn=bn), base, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(16, 16, 16), (64, 128, 16), (128, 64, 32), (48, 24, 12)])
+def test_matmul_at_b_matches_ref(m, k, n):
+    rng = np.random.default_rng(k * 1000 + m * 10 + n)
+    a = jnp.asarray(rng.standard_normal((k, m)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    np.testing.assert_allclose(matmul_at_b(a, b), ref.matmul_at_b(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_zero_padding_exact():
+    """Zero rows/cols (the Rust padding convention) must be exact no-ops."""
+    rng = np.random.default_rng(7)
+    t = _traffic(rng, 32)
+    a = _assign(rng, 32, 8)
+    tp = jnp.zeros((64, 64), dtype=jnp.float32).at[:32, :32].set(t)
+    ap = jnp.zeros((64, 8), dtype=jnp.float32).at[:32].set(a)
+    small = ref.matmul_at_b(a, ref.matmul(t, a))
+    padded = matmul_at_b(ap, matmul(tp, ap))
+    np.testing.assert_allclose(padded, small, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_identity():
+    eye = jnp.eye(64, dtype=jnp.float32)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((64, 64)).astype(np.float32))
+    np.testing.assert_allclose(matmul(x, eye), x, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(matmul(eye, x), x, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_sweep_seeded():
+    """Randomized shape sweep (hypothesis stand-in)."""
+    rng = np.random.default_rng(2026)
+    for case in range(20):
+        m = int(rng.choice([4, 8, 12, 16, 24, 32, 64]))
+        k = int(rng.choice([4, 8, 16, 32, 64, 128]))
+        n = int(rng.choice([2, 4, 8, 16, 32]))
+        x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+        y = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+        np.testing.assert_allclose(
+            matmul(x, y), ref.matmul(x, y), rtol=1e-4, atol=1e-4,
+            err_msg=f"case {case}: ({m},{k},{n})")
+
+
+# ---------------------------------------------------------------- reductions
+
+@pytest.mark.parametrize("p,q", [(8, 8), (32, 64), (64, 64), (128, 128), (24, 48)])
+def test_row_sum_matches_ref(p, q):
+    rng = np.random.default_rng(p + q)
+    t = jnp.asarray(rng.standard_normal((p, q)).astype(np.float32))
+    np.testing.assert_allclose(row_sum(t), ref.row_sum(t), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("p,sparsity", [(32, 0.1), (64, 0.5), (128, 0.9), (64, 0.0), (64, 1.0)])
+def test_row_nnz_matches_ref(p, sparsity):
+    rng = np.random.default_rng(int(p + sparsity * 100))
+    t = _traffic(rng, p, sparsity=sparsity)
+    np.testing.assert_allclose(row_nnz(t), ref.row_nnz(t), rtol=0, atol=0)
+
+
+def test_row_nnz_is_integral():
+    rng = np.random.default_rng(11)
+    t = _traffic(rng, 64)
+    got = np.asarray(row_nnz(t)).ravel()
+    assert np.all(got == np.round(got))
+    assert np.all(got >= 0) and np.all(got <= 63)
+
+
+def test_row_sum_block_invariance():
+    rng = np.random.default_rng(5)
+    t = jnp.asarray(rng.standard_normal((64, 128)).astype(np.float32))
+    base = ref.row_sum(t)
+    for bm, bk in [(8, 16), (16, 128), (64, 32), (32, 64)]:
+        np.testing.assert_allclose(row_sum(t, bm=bm, bk=bk), base, rtol=1e-4, atol=1e-4)

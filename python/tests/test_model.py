@@ -1,0 +1,113 @@
+"""Layer-2 correctness: the cost-model graph vs the oracle, plus the
+semantic properties the Rust coordinator relies on."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from tests.test_kernels import _traffic, _assign
+
+
+@pytest.mark.parametrize("p,n", [(16, 4), (32, 16), (64, 16), (128, 16)])
+def test_cost_model_matches_ref(p, n):
+    rng = np.random.default_rng(p * 100 + n)
+    t, a = _traffic(rng, p), _assign(rng, p, n)
+    outs = model.cost_model(t, a)
+    refs = ref.cost_model(t, a)
+    names = ["node_traffic", "nic_tx", "nic_rx", "intra", "cd", "adj"]
+    for name, o, r in zip(names, outs, refs):
+        np.testing.assert_allclose(o, r, rtol=1e-4, atol=1e-2, err_msg=name)
+
+
+def test_conservation_total_traffic():
+    """sum(M) == sum(T): aggregation conserves traffic volume."""
+    rng = np.random.default_rng(1)
+    t, a = _traffic(rng, 64), _assign(rng, 64, 16)
+    m, *_ = model.cost_model(t, a)
+    np.testing.assert_allclose(float(jnp.sum(m)), float(jnp.sum(t)), rtol=1e-5)
+
+
+def test_tx_rx_balance():
+    """Total NIC egress equals total NIC ingress (every inter-node byte is
+    sent once and received once)."""
+    rng = np.random.default_rng(2)
+    t, a = _traffic(rng, 64), _assign(rng, 64, 16)
+    _, tx, rx, *_ = model.cost_model(t, a)
+    np.testing.assert_allclose(float(jnp.sum(tx)), float(jnp.sum(rx)), rtol=1e-5)
+
+
+def test_single_node_placement_no_nic():
+    """All processes on one node => zero inter-node traffic."""
+    rng = np.random.default_rng(3)
+    t = _traffic(rng, 32)
+    a = jnp.zeros((32, 16), dtype=jnp.float32).at[:, 5].set(1.0)
+    m, tx, rx, intra, _, _ = model.cost_model(t, a)
+    np.testing.assert_allclose(np.asarray(tx), 0.0, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(rx), 0.0, atol=1e-3)
+    np.testing.assert_allclose(float(intra[5]), float(jnp.sum(t)), rtol=1e-5)
+
+
+def test_spread_placement_all_nic():
+    """One process per node => all traffic is inter-node."""
+    rng = np.random.default_rng(4)
+    t = _traffic(rng, 16)
+    a = jnp.eye(16, dtype=jnp.float32)
+    m, tx, rx, intra, _, _ = model.cost_model(t, a)
+    np.testing.assert_allclose(np.asarray(intra), 0.0, atol=1e-3)
+    np.testing.assert_allclose(float(jnp.sum(tx)), float(jnp.sum(t)), rtol=1e-5)
+    # node-traffic matrix is exactly the (padded) process traffic matrix
+    np.testing.assert_allclose(np.asarray(m), np.asarray(t), rtol=1e-4, atol=1e-2)
+
+
+def test_padding_rows_are_noops():
+    """The Rust caller pads T and A with zero rows — outputs must match the
+    unpadded computation on the live prefix."""
+    rng = np.random.default_rng(5)
+    p_live, p_pad, n = 24, 64, 16
+    t, a = _traffic(rng, p_live), _assign(rng, p_live, n)
+    tp = jnp.zeros((p_pad, p_pad), dtype=jnp.float32).at[:p_live, :p_live].set(t)
+    ap = jnp.zeros((p_pad, n), dtype=jnp.float32).at[:p_live].set(a)
+    m_small = ref.cost_model(t, a)[0]
+    outs = model.cost_model(tp, ap)
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(m_small), rtol=1e-4, atol=1e-2)
+    # padded processes contribute zero demand / adjacency
+    assert np.all(np.asarray(outs[4])[p_live:] == 0.0)
+    assert np.all(np.asarray(outs[5])[p_live:] == 0.0)
+
+
+def test_cd_matches_eq1_both_directions():
+    """CD_i = sum_j T[i,j] + sum_j T[j,i] (paper eq. 1 symmetrized)."""
+    rng = np.random.default_rng(6)
+    t = _traffic(rng, 32)
+    a = _assign(rng, 32, 16)
+    cd = np.asarray(model.cost_model(t, a)[4])
+    want = np.asarray(t).sum(axis=1) + np.asarray(t).sum(axis=0)
+    np.testing.assert_allclose(cd, want, rtol=1e-4)
+
+
+def test_batched_matches_unbatched():
+    rng = np.random.default_rng(7)
+    t = _traffic(rng, 64)
+    abatch = jnp.stack([_assign(np.random.default_rng(s), 64, 16) for s in range(8)])
+    m_b, tx_b, rx_b, intra_b = model.cost_model_batched(t, abatch)
+    for i in range(8):
+        m, tx, rx, intra, _, _ = model.cost_model(t, abatch[i])
+        np.testing.assert_allclose(np.asarray(m_b[i]), np.asarray(m), rtol=1e-4, atol=1e-2)
+        np.testing.assert_allclose(np.asarray(tx_b[i]), np.asarray(tx), rtol=1e-4, atol=1e-2)
+        np.testing.assert_allclose(np.asarray(rx_b[i]), np.asarray(rx), rtol=1e-4, atol=1e-2)
+        np.testing.assert_allclose(np.asarray(intra_b[i]), np.asarray(intra), rtol=1e-4, atol=1e-2)
+
+
+def test_permutation_equivariance():
+    """Relabeling processes must not change per-node outputs."""
+    rng = np.random.default_rng(8)
+    p, n = 32, 8
+    t, a = _traffic(rng, p), _assign(rng, p, n)
+    perm = rng.permutation(p)
+    tp = jnp.asarray(np.asarray(t)[np.ix_(perm, perm)])
+    ap = jnp.asarray(np.asarray(a)[perm])
+    m1 = model.cost_model(t, a)[0]
+    m2 = model.cost_model(tp, ap)[0]
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), rtol=1e-4, atol=1e-2)

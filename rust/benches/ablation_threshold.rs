@@ -1,0 +1,78 @@
+//! Ablation bench (DESIGN.md §6): which parts of the new strategy matter?
+//!
+//! Variants on synt3 + synt4 (the workloads where the paper's gains are
+//! largest):
+//!   * paper        — full algorithm (eq. 2 threshold, size-class order,
+//!                    CD order)
+//!   * no-threshold — never cap (pure packing; isolates the threshold rule)
+//!   * fixed-k      — replace eq. 2 with constant caps k ∈ {1, 2, 4, 8}
+//!   * no-sizeorder — map jobs in table order (isolates step 1)
+//!   * no-cdorder   — ranks in index order (isolates step 3.3)
+//!
+//! Writes `target/bench_results/ablation.csv`.
+
+use nicmap::coordinator::new_strategy::NewStrategy;
+use nicmap::coordinator::Mapper;
+use nicmap::model::topology::ClusterSpec;
+use nicmap::model::workload::Workload;
+use nicmap::report::csv::Csv;
+use nicmap::sim::{simulate, SimConfig};
+
+fn variants() -> Vec<(&'static str, NewStrategy)> {
+    let paper = NewStrategy::default();
+    let mut v = vec![
+        ("paper", paper),
+        ("no-threshold", NewStrategy { fixed_threshold: Some(usize::MAX), ..paper }),
+        ("no-sizeorder", NewStrategy { order_by_size_class: false, ..paper }),
+        ("no-cdorder", NewStrategy { order_by_demand: false, ..paper }),
+    ];
+    for k in [1usize, 2, 4, 8] {
+        v.push((
+            match k {
+                1 => "fixed-1",
+                2 => "fixed-2",
+                4 => "fixed-4",
+                _ => "fixed-8",
+            },
+            NewStrategy { fixed_threshold: Some(k), ..paper },
+        ));
+    }
+    v
+}
+
+fn main() {
+    let cluster = ClusterSpec::paper_cluster();
+    let cfg = SimConfig::default();
+    let mut csv = Csv::new();
+    csv.row(&["workload", "variant", "waiting_ms", "workload_finish_s"]);
+
+    for wname in ["synt3", "synt4"] {
+        let w = Workload::builtin(wname).unwrap();
+        println!("=== {wname} ===");
+        let mut rows: Vec<(String, f64)> = Vec::new();
+        for (label, strat) in variants() {
+            let p = strat.map(&w, &cluster).unwrap();
+            let r = simulate(&w, &p, &cluster, &cfg).unwrap();
+            println!(
+                "  {:<14} waiting {:>14.3e} ms   finish {:>8.2} s",
+                label,
+                r.waiting_ms(),
+                r.workload_finish_s()
+            );
+            csv.row(&[
+                wname.to_string(),
+                label.to_string(),
+                format!("{:.3}", r.waiting_ms()),
+                format!("{:.3}", r.workload_finish_s()),
+            ]);
+            rows.push((label.to_string(), r.waiting_ms()));
+        }
+        let paper = rows.iter().find(|(l, _)| l == "paper").unwrap().1;
+        let no_thr = rows.iter().find(|(l, _)| l == "no-threshold").unwrap().1;
+        println!(
+            "  threshold rule contribution: {:.1}x waiting reduction vs pure packing",
+            no_thr / paper.max(1e-12)
+        );
+    }
+    csv.write(std::path::Path::new("target/bench_results/ablation.csv")).unwrap();
+}

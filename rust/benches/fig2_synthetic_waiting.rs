@@ -1,0 +1,51 @@
+//! Figure 2 — waiting time of messages at NIC+memory queues, synthetic
+//! workloads (paper Tables 2–5) × {Blocked, Cyclic, DRB, New}.
+//!
+//! Regenerates the paper's bar groups and reports the per-workload gain of
+//! the new strategy vs the best other method (paper: ≈5 %, 8 %, 29 %, 91 %
+//! for synt 1–4). Writes `target/bench_results/fig2.csv`.
+//!
+//! Custom harness (`harness = false`) — criterion is not vendored offline.
+
+use nicmap::coordinator::MapperKind;
+use nicmap::harness::{render_figure, run_synthetic, Metric};
+use nicmap::model::topology::ClusterSpec;
+use nicmap::report::csv::Csv;
+use nicmap::sim::SimConfig;
+
+fn main() {
+    let cluster = ClusterSpec::paper_cluster();
+    let cfg = SimConfig::default();
+    let t0 = std::time::Instant::now();
+    let runs = run_synthetic(&cluster, &cfg).expect("synthetic sweep");
+    println!("{}", render_figure("Figure 2", &runs, Metric::WaitingMs));
+
+    let mut csv = Csv::new();
+    csv.row(&["workload", "mapper", "waiting_ms", "events", "sim_wall_s"]);
+    for run in &runs {
+        for cell in &run.cells {
+            csv.row(&[
+                run.workload.clone(),
+                cell.mapper.name().to_string(),
+                format!("{:.3}", cell.report.waiting_ms()),
+                cell.report.events.to_string(),
+                format!("{:.3}", cell.report.wall_secs),
+            ]);
+        }
+    }
+    csv.write(std::path::Path::new("target/bench_results/fig2.csv")).unwrap();
+
+    println!("paper-expected gains: synt1≈5%  synt2≈8%  synt3≈29%  synt4≈91%");
+    for run in &runs {
+        println!(
+            "  {}: measured gain {:+.1}%  (B/C/D/N = {:.3e}/{:.3e}/{:.3e}/{:.3e} ms)",
+            run.workload,
+            run.new_gain_pct(Metric::WaitingMs),
+            run.value(MapperKind::Blocked, Metric::WaitingMs).unwrap(),
+            run.value(MapperKind::Cyclic, Metric::WaitingMs).unwrap(),
+            run.value(MapperKind::Drb, Metric::WaitingMs).unwrap(),
+            run.value(MapperKind::New, Metric::WaitingMs).unwrap(),
+        );
+    }
+    println!("fig2 total wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,26 @@
+//! Figure 3 — workload finish time (s), synthetic workloads × strategies.
+//! Writes `target/bench_results/fig3.csv`.
+
+use nicmap::harness::{render_figure, run_synthetic, Metric};
+use nicmap::model::topology::ClusterSpec;
+use nicmap::report::csv::Csv;
+use nicmap::sim::SimConfig;
+
+fn main() {
+    let cluster = ClusterSpec::paper_cluster();
+    let runs = run_synthetic(&cluster, &SimConfig::default()).expect("synthetic sweep");
+    println!("{}", render_figure("Figure 3", &runs, Metric::WorkloadFinishS));
+
+    let mut csv = Csv::new();
+    csv.row(&["workload", "mapper", "workload_finish_s"]);
+    for run in &runs {
+        for cell in &run.cells {
+            csv.row(&[
+                run.workload.clone(),
+                cell.mapper.name().to_string(),
+                format!("{:.4}", cell.report.workload_finish_s()),
+            ]);
+        }
+    }
+    csv.write(std::path::Path::new("target/bench_results/fig3.csv")).unwrap();
+}

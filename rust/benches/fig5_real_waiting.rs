@@ -1,0 +1,44 @@
+//! Figure 5 — waiting time of messages, real (NPB) workloads (paper
+//! Tables 6–9) × strategies. Paper expectations: Real 1 ≈ 11 % gain; Real 2
+//! ≈ parity-with-Cyclic-or-better; Real 3 all close; Real 4 New ≈ Blocked
+//! with Cyclic clearly worse. Writes `target/bench_results/fig5.csv`.
+
+use nicmap::coordinator::MapperKind;
+use nicmap::harness::{render_figure, run_real, Metric};
+use nicmap::model::topology::ClusterSpec;
+use nicmap::report::csv::Csv;
+use nicmap::sim::SimConfig;
+
+fn main() {
+    let cluster = ClusterSpec::paper_cluster();
+    let runs = run_real(&cluster, &SimConfig::default()).expect("real sweep");
+    println!("{}", render_figure("Figure 5", &runs, Metric::WaitingMs));
+
+    let mut csv = Csv::new();
+    csv.row(&["workload", "mapper", "waiting_ms", "events"]);
+    for run in &runs {
+        for cell in &run.cells {
+            csv.row(&[
+                run.workload.clone(),
+                cell.mapper.name().to_string(),
+                format!("{:.3}", cell.report.waiting_ms()),
+                cell.report.events.to_string(),
+            ]);
+        }
+    }
+    csv.write(std::path::Path::new("target/bench_results/fig5.csv")).unwrap();
+
+    println!("paper-expected: real1 ≈ +11% vs Cyclic; real4: New ≈ Blocked ≪ Cyclic");
+    for run in &runs {
+        let b = run.value(MapperKind::Blocked, Metric::WaitingMs).unwrap();
+        let c = run.value(MapperKind::Cyclic, Metric::WaitingMs).unwrap();
+        let n = run.value(MapperKind::New, Metric::WaitingMs).unwrap();
+        println!(
+            "  {}: gain {:+.1}%  (New/Blocked = {:.2}, New/Cyclic = {:.2})",
+            run.workload,
+            run.new_gain_pct(Metric::WaitingMs),
+            n / b.max(1e-12),
+            n / c.max(1e-12),
+        );
+    }
+}

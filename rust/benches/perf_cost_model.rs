@@ -1,0 +1,52 @@
+//! Perf bench: cost-model scoring latency — the AOT JAX/Pallas artifact on
+//! the PJRT CPU client vs the pure-Rust native scorer, per shape variant.
+//!
+//! This is the L1/L2 hot path of the refinement loop; DESIGN.md §10 expects
+//! the PJRT call to be dominated by literal creation + dispatch (the compile
+//! is cached). Requires `make artifacts`.
+
+use nicmap::coordinator::refine::Scorer;
+use nicmap::coordinator::MapperKind;
+use nicmap::model::topology::ClusterSpec;
+use nicmap::model::traffic::TrafficMatrix;
+use nicmap::model::workload::Workload;
+use nicmap::report::stats::Summary;
+use nicmap::runtime::{ArtifactStore, NativeScorer, PjrtScorer};
+
+fn bench_scorer(
+    label: &str,
+    scorer: &dyn Scorer,
+    traffic: &TrafficMatrix,
+    placement: &nicmap::coordinator::Placement,
+    cluster: &ClusterSpec,
+    iters: usize,
+) {
+    // Warm-up (compiles + caches on the PJRT side).
+    scorer.score(traffic, placement, cluster).unwrap();
+    let mut samples = Vec::new();
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        let l = scorer.score(traffic, placement, cluster).unwrap();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+        std::hint::black_box(l);
+    }
+    let s = Summary::of(&samples);
+    println!("{label:<28} {}", s.display_with(|v| format!("{v:.1}us")));
+}
+
+fn main() {
+    let store = ArtifactStore::open_default().expect("run `make artifacts` first");
+    println!("PJRT platform: {}", store.platform());
+    let pjrt = PjrtScorer::new(&store);
+    let cluster = ClusterSpec::paper_cluster();
+
+    for wname in ["real4", "synt4", "synt1"] {
+        let w = Workload::builtin(wname).unwrap();
+        let traffic = TrafficMatrix::of_workload(&w);
+        let p = MapperKind::New.build().map(&w, &cluster).unwrap();
+        println!("--- {wname}: P={} N={}", w.total_procs(), cluster.nodes);
+        bench_scorer(&format!("{wname}/pjrt"), &pjrt, &traffic, &p, &cluster, 50);
+        bench_scorer(&format!("{wname}/native"), &NativeScorer, &traffic, &p, &cluster, 50);
+    }
+    println!("(compiled variants cached: {})", store.compiled_count());
+}

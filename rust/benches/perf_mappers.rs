@@ -1,0 +1,40 @@
+//! Perf bench: mapper latency (placement computation only) per strategy per
+//! workload. DESIGN.md §10 target: NewStrategy well under 10 ms at P=256;
+//! DRB (FM passes) under 10 ms too.
+
+use nicmap::coordinator::MapperKind;
+use nicmap::model::topology::ClusterSpec;
+use nicmap::model::workload::Workload;
+use nicmap::report::stats::Summary;
+
+fn main() {
+    let cluster = ClusterSpec::paper_cluster();
+    println!(
+        "{:<10} {:<8} {:>6} {:>14} {}",
+        "workload", "mapper", "procs", "mean", "detail"
+    );
+    for wname in ["synt1", "synt4", "real1", "real2"] {
+        let w = Workload::builtin(wname).unwrap();
+        for kind in MapperKind::ALL {
+            let mapper = kind.build();
+            // Warm up once, then sample.
+            mapper.map(&w, &cluster).unwrap();
+            let mut samples = Vec::new();
+            for _ in 0..20 {
+                let t0 = std::time::Instant::now();
+                let p = mapper.map(&w, &cluster).unwrap();
+                samples.push(t0.elapsed().as_secs_f64() * 1e3);
+                std::hint::black_box(p);
+            }
+            let s = Summary::of(&samples);
+            println!(
+                "{:<10} {:<8} {:>6} {:>12.3}ms {}",
+                wname,
+                kind.name(),
+                w.total_procs(),
+                s.mean,
+                s.display_with(|v| format!("{v:.3}ms"))
+            );
+        }
+    }
+}

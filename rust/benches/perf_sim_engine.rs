@@ -1,0 +1,39 @@
+//! Perf bench: DES throughput (events/sec) across representative workloads.
+//! The §Perf target in DESIGN.md is ≥ 10 M events/s on the paper workloads.
+
+use nicmap::coordinator::MapperKind;
+use nicmap::model::topology::ClusterSpec;
+use nicmap::model::workload::Workload;
+use nicmap::report::stats::Summary;
+use nicmap::sim::{simulate, SimConfig};
+
+fn main() {
+    let cluster = ClusterSpec::paper_cluster();
+    let cases = [
+        ("synt1/Cyclic", "synt1", MapperKind::Cyclic),
+        ("synt3/New", "synt3", MapperKind::New),
+        ("synt4/Blocked", "synt4", MapperKind::Blocked),
+        ("real2/New", "real2", MapperKind::New),
+        ("real4/Cyclic", "real4", MapperKind::Cyclic),
+    ];
+    println!("{:<16} {:>12} {:>12} {}", "case", "events", "ev/s(mean)", "per-sample");
+    for (label, wname, kind) in cases {
+        let w = Workload::builtin(wname).unwrap();
+        let p = kind.build().map(&w, &cluster).unwrap();
+        let mut rates = Vec::new();
+        let mut events = 0;
+        for _ in 0..3 {
+            let r = simulate(&w, &p, &cluster, &SimConfig::default()).unwrap();
+            rates.push(r.events_per_sec());
+            events = r.events;
+        }
+        let s = Summary::of(&rates);
+        println!(
+            "{:<16} {:>12} {:>12.3e} {}",
+            label,
+            events,
+            s.mean,
+            s.display_with(|v| format!("{v:.2e}"))
+        );
+    }
+}

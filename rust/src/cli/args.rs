@@ -1,0 +1,116 @@
+//! Tiny argument parser: `verb --key value --flag` style.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional token (the verb).
+    pub verb: String,
+    /// Remaining positionals.
+    pub positional: Vec<String>,
+    /// `--key value` options; bare `--flag` maps to `"true"`.
+    options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err(Error::usage("bare `--` not supported"));
+                }
+                // `--key=value` or `--key value` or bare flag.
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.options.insert(key.to_string(), iter.next().unwrap());
+                } else {
+                    out.options.insert(key.to_string(), "true".to_string());
+                }
+            } else if out.verb.is_empty() {
+                out.verb = tok;
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Look up an option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Option with default.
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Required option.
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| Error::usage(format!("missing --{key}")))
+    }
+
+    /// Boolean flag (`--x` or `--x true/false`).
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Parse an option into any `FromStr` type.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| Error::usage(format!("bad value for --{key}: {v:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn verb_and_positionals() {
+        let a = parse(&["simulate", "synt1", "extra"]);
+        assert_eq!(a.verb, "simulate");
+        assert_eq!(a.positional, vec!["synt1", "extra"]);
+    }
+
+    #[test]
+    fn options_all_styles() {
+        let a = parse(&["map", "--workload", "synt2", "--seed=42", "--verbose"]);
+        assert_eq!(a.get("workload"), Some("synt2"));
+        assert_eq!(a.get("seed"), Some("42"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get_or("mapper", "N"), "N");
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--a", "--b", "v"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+
+    #[test]
+    fn require_and_parse() {
+        let a = parse(&["x", "--n", "7"]);
+        assert_eq!(a.require("n").unwrap(), "7");
+        assert!(a.require("missing").is_err());
+        assert_eq!(a.get_parse::<usize>("n").unwrap(), Some(7));
+        assert!(parse(&["x", "--n", "seven"]).get_parse::<usize>("n").is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! Command-line interface (hand-rolled — `clap` is not vendored offline).
+//!
+//! Verbs:
+//! * `map`       — compute a placement and print its per-node layout
+//! * `simulate`  — map + run the DES, print the paper metrics
+//! * `figure`    — regenerate a paper figure (fig2/fig3/fig4/fig5)
+//! * `evaluate`  — score a placement with the cost model (AOT or native)
+//! * `refine`    — cost-model-guided swap refinement of a mapping
+//! * `workload`  — show a builtin workload definition (paper tables)
+//! * `artifacts` — list AOT artifacts and PJRT platform
+
+pub mod args;
+pub mod run;
+
+pub use args::Args;
+pub use run::main_with_args;

@@ -1,0 +1,316 @@
+//! CLI verb dispatch.
+
+use crate::cli::args::Args;
+use crate::coordinator::refine::{refine, Scorer};
+use crate::coordinator::MapperKind;
+use crate::error::{Error, Result};
+use crate::harness::{render_figure, run_real, run_synthetic, run_workload, Metric};
+use crate::model::spec;
+use crate::model::topology::ClusterSpec;
+use crate::model::traffic::TrafficMatrix;
+use crate::model::workload::Workload;
+use crate::report::table::Table;
+use crate::runtime::{ArtifactStore, NativeScorer, PjrtScorer};
+use crate::sim::SimConfig;
+use crate::units::fmt_bytes;
+
+const USAGE: &str = "nicmap — NIC-contention-aware process mapping (Soryani et al. 2012 reproduction)
+
+USAGE: nicmap <verb> [options]
+
+VERBS
+  map        --workload <synt1..4|real1..4> [--mapper B|C|D|N|random|kway] [--spec FILE]
+  simulate   --workload <name>              [--mapper ...|all] [--spec FILE] [--stagger NS]
+  figure     <fig2|fig3|fig4|fig5>          regenerate a paper figure
+  evaluate   --workload <name>              [--mapper ...] [--native] cost-model node loads
+  refine     --workload <name>              [--mapper B] [--native] [--rounds K]
+  workload   <show> <name>                  print a builtin workload table
+  artifacts                                 list AOT artifacts + PJRT platform
+  help                                      this text
+";
+
+/// Entry point given parsed args; returns the process exit code.
+pub fn main_with_args(args: Args) -> Result<()> {
+    match args.verb.as_str() {
+        "map" => cmd_map(&args),
+        "simulate" => cmd_simulate(&args),
+        "figure" => cmd_figure(&args),
+        "evaluate" => cmd_evaluate(&args),
+        "refine" => cmd_refine(&args),
+        "workload" => cmd_workload(&args),
+        "artifacts" => cmd_artifacts(),
+        "" | "help" | "-h" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(Error::usage(format!("unknown verb {other:?}\n{USAGE}"))),
+    }
+}
+
+/// Resolve (cluster, workload) from `--spec` or `--workload`.
+fn load_input(args: &Args) -> Result<(ClusterSpec, Workload)> {
+    if let Some(path) = args.get("spec") {
+        let s = spec::load(std::path::Path::new(path))?;
+        return Ok((s.cluster, s.workload));
+    }
+    let name = args.require("workload")?;
+    Ok((ClusterSpec::paper_cluster(), Workload::builtin(name)?))
+}
+
+fn mappers_from(args: &Args) -> Result<Vec<MapperKind>> {
+    match args.get_or("mapper", "all") {
+        "all" => Ok(MapperKind::PAPER.to_vec()),
+        list => list.split(',').map(MapperKind::parse).collect(),
+    }
+}
+
+fn cmd_map(args: &Args) -> Result<()> {
+    let (cluster, w) = load_input(args)?;
+    let kind = MapperKind::parse(args.get_or("mapper", "N"))?;
+    let t0 = std::time::Instant::now();
+    let placement = kind.build().map(&w, &cluster)?;
+    let dt = t0.elapsed();
+    placement.validate(&w, &cluster)?;
+    println!("workload {} on {} — mapper {} ({dt:?})", w.name, cluster.summary(), kind);
+    let mut table = Table::new(vec!["job", "procs", "nodes used", "per-node counts"]);
+    for (jid, job) in w.jobs.iter().enumerate() {
+        let counts = placement.job_node_counts(&w, jid, &cluster);
+        let used = counts.iter().filter(|&&c| c > 0).count();
+        let compact: Vec<String> = counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(n, c)| format!("n{n}:{c}"))
+            .collect();
+        table.row(vec![
+            job.name.clone(),
+            job.procs.to_string(),
+            used.to_string(),
+            compact.join(" "),
+        ]);
+    }
+    print!("{table}");
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let (cluster, w) = load_input(args)?;
+    let mappers = mappers_from(args)?;
+    let mut cfg = SimConfig::default();
+    if let Some(st) = args.get_parse::<u64>("stagger")? {
+        cfg.stagger_ns = st;
+    }
+    let run = run_workload(&w, &cluster, &mappers, &cfg)?;
+    let mut table = Table::new(vec![
+        "mapper",
+        "waiting (ms)",
+        "workload finish (s)",
+        "total finish (s)",
+        "events",
+        "ev/s",
+    ]);
+    for cell in &run.cells {
+        table.row(vec![
+            cell.mapper.name().to_string(),
+            format!("{:.1}", cell.report.waiting_ms()),
+            format!("{:.3}", cell.report.workload_finish_s()),
+            format!("{:.3}", cell.report.total_finish_s()),
+            cell.report.events.to_string(),
+            format!("{:.2e}", cell.report.events_per_sec()),
+        ]);
+    }
+    println!("workload {} on {}", w.name, cluster.summary());
+    print!("{table}");
+    if mappers.contains(&MapperKind::New) && mappers.len() > 1 {
+        println!(
+            "New vs best other: {:+.1}% (waiting-time metric)",
+            run.new_gain_pct(Metric::WaitingMs)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| Error::usage("figure needs fig2|fig3|fig4|fig5"))?;
+    let cluster = ClusterSpec::paper_cluster();
+    let cfg = SimConfig::default();
+    let (runs, metric, title) = match which {
+        "fig2" => (run_synthetic(&cluster, &cfg)?, Metric::WaitingMs, "Figure 2 (synthetic)"),
+        "fig3" => (
+            run_synthetic(&cluster, &cfg)?,
+            Metric::WorkloadFinishS,
+            "Figure 3 (synthetic)",
+        ),
+        "fig4" => {
+            (run_synthetic(&cluster, &cfg)?, Metric::TotalFinishS, "Figure 4 (synthetic)")
+        }
+        "fig5" => (run_real(&cluster, &cfg)?, Metric::WaitingMs, "Figure 5 (real/NPB)"),
+        other => return Err(Error::usage(format!("unknown figure {other:?}"))),
+    };
+    println!("{}", render_figure(title, &runs, metric));
+    Ok(())
+}
+
+fn cmd_evaluate(args: &Args) -> Result<()> {
+    let (cluster, w) = load_input(args)?;
+    let kind = MapperKind::parse(args.get_or("mapper", "N"))?;
+    let placement = kind.build().map(&w, &cluster)?;
+    let traffic = TrafficMatrix::of_workload(&w);
+
+    let (loads, backend) = if args.flag("native") {
+        (NativeScorer.score(&traffic, &placement, &cluster)?, "native")
+    } else {
+        match ArtifactStore::open_default() {
+            Ok(store) => {
+                let loads = PjrtScorer::new(&store).score(&traffic, &placement, &cluster)?;
+                (loads, "pjrt")
+            }
+            Err(e) => {
+                eprintln!("note: {e}; falling back to native scorer");
+                (NativeScorer.score(&traffic, &placement, &cluster)?, "native-fallback")
+            }
+        }
+    };
+    println!(
+        "cost model ({backend}) — {} mapped by {} on {}",
+        w.name,
+        kind,
+        cluster.summary()
+    );
+    let mut table = Table::new(vec!["node", "nic tx (B/s)", "nic rx (B/s)", "intra (B/s)"]);
+    for n in 0..cluster.nodes {
+        table.row(vec![
+            format!("n{n}"),
+            format!("{:.3e}", loads.nic_tx[n]),
+            format!("{:.3e}", loads.nic_rx[n]),
+            format!("{:.3e}", loads.intra[n]),
+        ]);
+    }
+    print!("{table}");
+    println!(
+        "objective (queueing pressure over NIC sides): {:.4e}",
+        loads.objective(cluster.nic_bw as f64)
+    );
+    Ok(())
+}
+
+fn cmd_refine(args: &Args) -> Result<()> {
+    let (cluster, w) = load_input(args)?;
+    let kind = MapperKind::parse(args.get_or("mapper", "B"))?;
+    let rounds = args.get_parse::<usize>("rounds")?.unwrap_or(8);
+    let placement = kind.build().map(&w, &cluster)?;
+    let traffic = TrafficMatrix::of_workload(&w);
+
+    let report = if args.flag("native") {
+        refine(&NativeScorer, &traffic, &placement, &w, &cluster, rounds)?
+    } else {
+        match ArtifactStore::open_default() {
+            Ok(store) => {
+                let scorer = PjrtScorer::new(&store);
+                refine(&scorer, &traffic, &placement, &w, &cluster, rounds)?
+            }
+            Err(e) => {
+                eprintln!("note: {e}; falling back to native scorer");
+                refine(&NativeScorer, &traffic, &placement, &w, &cluster, rounds)?
+            }
+        }
+    };
+    println!(
+        "refined {} (start={}): objective {:.4e} -> {:.4e} ({} swaps, {} evaluations)",
+        w.name, kind, report.before, report.after, report.swaps, report.evaluations
+    );
+    Ok(())
+}
+
+fn cmd_workload(args: &Args) -> Result<()> {
+    let name = match args.positional.as_slice() {
+        [cmd, name] if cmd == "show" => name,
+        [name] => name,
+        _ => return Err(Error::usage("workload show <name>")),
+    };
+    let w = Workload::builtin(name)?;
+    println!("workload {} — {} jobs, {} processes", w.name, w.jobs.len(), w.total_procs());
+    let mut table = Table::new(vec!["job", "name", "procs", "pattern", "length", "rate", "count", "class"]);
+    for (jid, job) in w.jobs.iter().enumerate() {
+        for f in &job.flows {
+            table.row(vec![
+                jid.to_string(),
+                job.name.clone(),
+                job.procs.to_string(),
+                f.pattern.name().to_string(),
+                fmt_bytes(f.msg_bytes),
+                format!("{}m/s", f.rate),
+                f.count.to_string(),
+                format!("{:?}", job.size_class()),
+            ]);
+        }
+    }
+    print!("{table}");
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<()> {
+    let store = ArtifactStore::open_default()?;
+    println!("PJRT platform: {}", store.platform());
+    let mut table = Table::new(vec!["kind", "batch", "P", "N", "file"]);
+    for m in store.metas() {
+        table.row(vec![
+            m.kind.clone(),
+            m.batch.to_string(),
+            m.p.to_string(),
+            m.n.to_string(),
+            m.file.clone(),
+        ]);
+    }
+    print!("{table}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(tokens: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn help_succeeds() {
+        main_with_args(args(&["help"])).unwrap();
+        main_with_args(args(&[])).unwrap();
+    }
+
+    #[test]
+    fn unknown_verb_fails() {
+        assert!(main_with_args(args(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn workload_show_all_builtins() {
+        for name in Workload::builtin_names() {
+            main_with_args(args(&["workload", "show", name])).unwrap();
+        }
+        assert!(main_with_args(args(&["workload", "show", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn map_verb_runs() {
+        main_with_args(args(&["map", "--workload", "real4", "--mapper", "N"])).unwrap();
+        main_with_args(args(&["map", "--workload", "synt4", "--mapper", "B"])).unwrap();
+    }
+
+    #[test]
+    fn evaluate_native_runs() {
+        main_with_args(args(&["evaluate", "--workload", "real4", "--native"])).unwrap();
+    }
+
+    #[test]
+    fn figure_requires_name() {
+        assert!(main_with_args(args(&["figure"])).is_err());
+        assert!(main_with_args(args(&["figure", "fig9"])).is_err());
+    }
+}

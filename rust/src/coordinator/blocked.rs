@@ -1,0 +1,82 @@
+//! Blocked mapping (paper §3): "the mapping procedure is started by
+//! selecting a computing node and assigning parallel processes to its free
+//! cores one-by-one. When there is no free core in the selected node,
+//! another computing node is selected…" — minimum nodes, maximum cores per
+//! node.
+
+use crate::coordinator::{Mapper, Placement};
+use crate::error::{Error, Result};
+use crate::model::topology::ClusterSpec;
+use crate::model::workload::Workload;
+
+/// Blocked (a.k.a. compact / fill-first) mapping.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Blocked;
+
+impl Mapper for Blocked {
+    fn name(&self) -> &'static str {
+        "Blocked"
+    }
+
+    fn map(&self, w: &Workload, cluster: &ClusterSpec) -> Result<Placement> {
+        let p = w.total_procs();
+        if p > cluster.total_cores() {
+            return Err(Error::mapping(format!(
+                "{p} processes exceed {} cores",
+                cluster.total_cores()
+            )));
+        }
+        // Jobs in table order, ranks in order, cores in order: process g
+        // simply takes core g.
+        Ok(Placement::new((0..p).collect()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::pattern::Pattern;
+    use crate::model::workload::JobSpec;
+
+    #[test]
+    fn fills_minimum_nodes() {
+        let cluster = ClusterSpec::paper_cluster();
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::AllToAll, 40, 1000, 1.0, 10)],
+        )
+        .unwrap();
+        let p = Blocked.map(&w, &cluster).unwrap();
+        p.validate(&w, &cluster).unwrap();
+        // 40 procs on 16-core nodes: nodes 0-1 full, node 2 gets 8.
+        assert_eq!(p.node_counts(&cluster)[..3], [16, 16, 8]);
+        assert_eq!(p.nodes_used(&cluster), 3);
+    }
+
+    #[test]
+    fn consecutive_ranks_share_sockets() {
+        let cluster = ClusterSpec::paper_cluster();
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::Linear, 8, 1000, 1.0, 10)],
+        )
+        .unwrap();
+        let p = Blocked.map(&w, &cluster).unwrap();
+        // Ranks 0-3 in socket 0, 4-7 in socket 1.
+        assert!(cluster.same_socket(p.core_of[0], p.core_of[3]));
+        assert!(!cluster.same_socket(p.core_of[3], p.core_of[4]));
+        assert!(cluster.same_node(p.core_of[0], p.core_of[7]));
+    }
+
+    #[test]
+    fn multi_job_contiguous() {
+        let cluster = ClusterSpec::paper_cluster();
+        let w = Workload::synt_workload_1(); // 4 x 64
+        let p = Blocked.map(&w, &cluster).unwrap();
+        // Job 1 (procs 64..128) occupies nodes 4-7.
+        for proc in w.procs_of_job(1) {
+            let node = p.node_of(proc, &cluster);
+            assert!((4..8).contains(&node), "proc {proc} on node {node}");
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! Cyclic mapping (paper §3): "parallel processes are distributed among
+//! computing nodes in a Round Robin fashion" — maximum nodes, minimum cores
+//! per node.
+
+use crate::coordinator::{Mapper, Placement};
+use crate::error::{Error, Result};
+use crate::model::topology::ClusterSpec;
+use crate::model::workload::Workload;
+
+/// Cyclic (round-robin / scatter) mapping.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Cyclic;
+
+impl Mapper for Cyclic {
+    fn name(&self) -> &'static str {
+        "Cyclic"
+    }
+
+    fn map(&self, w: &Workload, cluster: &ClusterSpec) -> Result<Placement> {
+        let p = w.total_procs();
+        if p > cluster.total_cores() {
+            return Err(Error::mapping(format!(
+                "{p} processes exceed {} cores",
+                cluster.total_cores()
+            )));
+        }
+        // Process g goes to node g % nodes, taking that node's next free
+        // core in socket order. With dense global ids this is core
+        // (node, slot) where slot = g / nodes.
+        let nodes = cluster.nodes;
+        let cores = (0..p)
+            .map(|g| {
+                let node = g % nodes;
+                let slot = g / nodes;
+                cluster.first_core_of_node(node) + slot
+            })
+            .collect();
+        Ok(Placement::new(cores))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::pattern::Pattern;
+    use crate::model::workload::JobSpec;
+
+    #[test]
+    fn spreads_over_all_nodes() {
+        let cluster = ClusterSpec::paper_cluster();
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::AllToAll, 40, 1000, 1.0, 10)],
+        )
+        .unwrap();
+        let p = Cyclic.map(&w, &cluster).unwrap();
+        p.validate(&w, &cluster).unwrap();
+        assert_eq!(p.nodes_used(&cluster), 16);
+        let counts = p.node_counts(&cluster);
+        // 40 over 16 nodes: first 8 nodes get 3, rest get 2.
+        assert_eq!(&counts[..8], &[3; 8]);
+        assert_eq!(&counts[8..], &[2; 8]);
+    }
+
+    #[test]
+    fn adjacent_ranks_on_distinct_nodes() {
+        let cluster = ClusterSpec::paper_cluster();
+        let w = Workload::synt_workload_1();
+        let p = Cyclic.map(&w, &cluster).unwrap();
+        for g in 0..255 {
+            assert_ne!(
+                p.node_of(g, &cluster),
+                p.node_of(g + 1, &cluster),
+                "consecutive procs must not share a node below node count"
+            );
+        }
+    }
+
+    #[test]
+    fn full_cluster_valid() {
+        let cluster = ClusterSpec::paper_cluster();
+        let w = Workload::synt_workload_1(); // 256 = exactly full
+        let p = Cyclic.map(&w, &cluster).unwrap();
+        p.validate(&w, &cluster).unwrap();
+        assert_eq!(p.node_counts(&cluster), vec![16; 16]);
+    }
+}

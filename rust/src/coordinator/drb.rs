@@ -1,0 +1,173 @@
+//! DRB — dual recursive bipartitioning (the Scotch-style baseline, paper §3).
+//!
+//! "In DRB, AG is divided into two subgroups such that processes which
+//! frequently communicate to each other will be grouped in the same
+//! subgroup… The CTG is also divided into two subgroups in the same way…
+//! each subgroup of AG is assigned to the peer subgroup of CTG. This
+//! procedure is repeated… recursively."
+//!
+//! Implementation: the cluster topology graph is a balanced tree (switch →
+//! nodes → sockets → cores), so its recursive bisection is just a balanced
+//! split of the node array; we therefore drive the AG bisection by a
+//! part-size vector computed from node capacities (proportional split —
+//! the same shape Scotch's load-balance constraint produces), then repeat
+//! one level down to pick sockets inside every node.
+
+use crate::coordinator::{placement::Occupancy, Mapper, Placement};
+use crate::error::{Error, Result};
+use crate::graph::{recursive_bisection, Graph};
+use crate::model::topology::ClusterSpec;
+use crate::model::traffic::TrafficMatrix;
+use crate::model::workload::Workload;
+
+/// DRB mapper.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Drb;
+
+/// Distribute `total` items over bins with capacities `caps`, proportionally
+/// with caps respected; remainders go to the lowest-index bins (matches the
+/// leftmost-first recursion of the bisection tree).
+pub(crate) fn proportional_split(total: usize, caps: &[usize]) -> Vec<usize> {
+    let cap_sum: usize = caps.iter().sum();
+    assert!(total <= cap_sum, "overfull: {total} > {cap_sum}");
+    let mut out: Vec<usize> = caps
+        .iter()
+        .map(|&c| total * c / cap_sum) // floor
+        .collect();
+    let mut rem = total - out.iter().sum::<usize>();
+    let mut i = 0;
+    while rem > 0 {
+        if out[i] < caps[i] {
+            out[i] += 1;
+            rem -= 1;
+        }
+        i = (i + 1) % caps.len();
+    }
+    out
+}
+
+impl Mapper for Drb {
+    fn name(&self) -> &'static str {
+        "DRB"
+    }
+
+    fn map(&self, w: &Workload, cluster: &ClusterSpec) -> Result<Placement> {
+        let p = w.total_procs();
+        if p > cluster.total_cores() {
+            return Err(Error::mapping(format!(
+                "{p} processes exceed {} cores",
+                cluster.total_cores()
+            )));
+        }
+        let traffic = TrafficMatrix::of_workload(w);
+        let ag = Graph::from_traffic(&traffic);
+
+        // Level 1: bisect the AG against the node level of the CTG.
+        let node_caps = vec![cluster.cores_per_node(); cluster.nodes];
+        let node_sizes = proportional_split(p, &node_caps);
+        let node_of_proc = recursive_bisection(&ag, &node_sizes);
+
+        // Level 2: inside each node, bisect the per-node subgraph against
+        // the socket level, then hand out cores.
+        let mut occ = Occupancy::new(cluster);
+        let mut core_of = vec![usize::MAX; p];
+        for node in 0..cluster.nodes {
+            let members: Vec<usize> =
+                (0..p).filter(|&v| node_of_proc[v] == node).collect();
+            if members.is_empty() {
+                continue;
+            }
+            let (sub, back) = ag.subgraph(&members);
+            let socket_caps = vec![cluster.cores_per_socket; cluster.sockets_per_node];
+            let socket_sizes = proportional_split(members.len(), &socket_caps);
+            let socket_of_member = recursive_bisection(&sub, &socket_sizes);
+            for (m, &proc) in back.iter().enumerate() {
+                let socket = cluster.sockets_of_node(node).nth(socket_of_member[m]).unwrap();
+                core_of[proc] = occ.claim_in_socket(socket)?;
+            }
+        }
+        Ok(Placement::new(core_of))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::pattern::Pattern;
+    use crate::model::workload::JobSpec;
+
+    #[test]
+    fn proportional_split_exact() {
+        assert_eq!(proportional_split(192, &[16; 16]), vec![12; 16]);
+        assert_eq!(proportional_split(256, &[16; 16]), vec![16; 16]);
+        let s = proportional_split(202, &[16; 16]);
+        assert_eq!(s.iter().sum::<usize>(), 202);
+        assert!(s.iter().all(|&x| x == 12 || x == 13));
+        // Uneven caps.
+        assert_eq!(proportional_split(3, &[2, 1, 2]), vec![2, 0, 1]);
+        assert_eq!(proportional_split(0, &[4, 4]), vec![0, 0]);
+    }
+
+    #[test]
+    fn underfull_cluster_balances_like_scotch() {
+        // One 32-proc all-to-all job alone on the paper cluster: the load
+        // balance constraint dominates (as in Scotch's default strategy)
+        // and every node receives exactly 2 processes.
+        let cluster = ClusterSpec::paper_cluster();
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::AllToAll, 32, 64_000, 10.0, 100)],
+        )
+        .unwrap();
+        let p = Drb.map(&w, &cluster).unwrap();
+        p.validate(&w, &cluster).unwrap();
+        assert_eq!(p.node_counts(&cluster), vec![2; 16]);
+    }
+
+    #[test]
+    fn full_cluster_jobs_pack_blocked_like() {
+        // The paper's observation ("process mapping is done as Blocked") is
+        // about its full-cluster workloads: with 4 x 64 procs on 256 cores,
+        // min-cut keeps each all-to-all clique on exactly 4 nodes.
+        let cluster = ClusterSpec::paper_cluster();
+        let w = Workload::synt_workload_2();
+        let p = Drb.map(&w, &cluster).unwrap();
+        for jid in 0..w.jobs.len() {
+            let counts = p.job_node_counts(&w, jid, &cluster);
+            let used = counts.iter().filter(|&&c| c > 0).count();
+            assert_eq!(used, 4, "job {jid} spread over {used} nodes: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn two_jobs_separate() {
+        // Two 8-proc cliques must land on disjoint cores and mostly whole.
+        let cluster = ClusterSpec::paper_cluster();
+        let w = Workload::new(
+            "t",
+            vec![
+                JobSpec::synthetic(Pattern::AllToAll, 8, 64_000, 10.0, 100),
+                JobSpec::synthetic(Pattern::AllToAll, 8, 64_000, 10.0, 100),
+            ],
+        )
+        .unwrap();
+        let p = Drb.map(&w, &cluster).unwrap();
+        p.validate(&w, &cluster).unwrap();
+        // 16 procs over 16 nodes, proportional: 1 per node. Hmm — with one
+        // proc per node the cut is total. The balance constraint dominates
+        // (as it does in Scotch with default strategy on a 256-core CTG);
+        // what we check is structural validity + determinism.
+        let p2 = Drb.map(&w, &cluster).unwrap();
+        assert_eq!(p, p2);
+    }
+
+    #[test]
+    fn full_cluster_all_jobs() {
+        let cluster = ClusterSpec::paper_cluster();
+        let w = Workload::synt_workload_2();
+        let p = Drb.map(&w, &cluster).unwrap();
+        p.validate(&w, &cluster).unwrap();
+        // Full cluster: every node holds exactly 16.
+        assert_eq!(p.node_counts(&cluster), vec![16; 16]);
+    }
+}

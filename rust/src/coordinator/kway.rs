@@ -1,0 +1,79 @@
+//! K-way partitioning mapper — the second graph-partitioning heuristic the
+//! paper's related work discusses ("K-way graph partitioning is the same as
+//! DRB except that instead of two subgroups, graphs are divided into K
+//! subgroups").
+//!
+//! We partition the AG directly into `nodes` parts (one shot, no hierarchy)
+//! and assign cores within each node in socket order. Differences from DRB
+//! show up in cut quality (no socket-level pass) — exercised by the
+//! ablation bench.
+
+use crate::coordinator::drb::proportional_split;
+use crate::coordinator::placement::Occupancy;
+use crate::coordinator::{Mapper, Placement};
+use crate::error::{Error, Result};
+use crate::graph::{recursive_bisection, Graph};
+use crate::model::topology::ClusterSpec;
+use crate::model::traffic::TrafficMatrix;
+use crate::model::workload::Workload;
+
+/// Direct k-way partitioning at node granularity.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KWay;
+
+impl Mapper for KWay {
+    fn name(&self) -> &'static str {
+        "KWay"
+    }
+
+    fn map(&self, w: &Workload, cluster: &ClusterSpec) -> Result<Placement> {
+        let p = w.total_procs();
+        if p > cluster.total_cores() {
+            return Err(Error::mapping(format!(
+                "{p} processes exceed {} cores",
+                cluster.total_cores()
+            )));
+        }
+        let traffic = TrafficMatrix::of_workload(w);
+        let ag = Graph::from_traffic(&traffic);
+        let sizes = proportional_split(p, &vec![cluster.cores_per_node(); cluster.nodes]);
+        let node_of_proc = recursive_bisection(&ag, &sizes);
+
+        let mut occ = Occupancy::new(cluster);
+        let mut core_of = vec![usize::MAX; p];
+        for proc in 0..p {
+            let node = node_of_proc[proc];
+            let core = occ
+                .free_core_in_node(node)
+                .ok_or_else(|| Error::mapping(format!("node {node} overfull")))?;
+            occ.claim(core)?;
+            core_of[proc] = core;
+        }
+        Ok(Placement::new(core_of))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn valid_on_paper_workloads() {
+        let cluster = ClusterSpec::paper_cluster();
+        for name in ["synt1", "synt4", "real4"] {
+            let w = Workload::builtin(name).unwrap();
+            let p = KWay.map(&w, &cluster).unwrap();
+            p.validate(&w, &cluster).unwrap();
+        }
+    }
+
+    #[test]
+    fn respects_node_capacity() {
+        let cluster = ClusterSpec::paper_cluster();
+        let w = Workload::synt_workload_1();
+        let p = KWay.map(&w, &cluster).unwrap();
+        for &c in p.node_counts(&cluster).iter() {
+            assert!(c <= cluster.cores_per_node());
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! The Layer-3 coordination contribution: process-to-core mapping.
+//!
+//! [`Mapper`] implementations:
+//!
+//! * [`blocked::Blocked`] — fill nodes one by one (paper §3).
+//! * [`cyclic::Cyclic`] — round-robin over nodes (paper §3).
+//! * [`random::RandomMap`] — seeded random placement (sanity baseline).
+//! * [`drb::Drb`] — dual recursive bipartitioning over AG and CTG
+//!   (the Scotch-style baseline; paper §3).
+//! * [`kway::KWay`] — direct k-way partitioning at node granularity.
+//! * [`new_strategy::NewStrategy`] — the paper's contribution (Fig. 1):
+//!   size-class job ordering, CD-sorted anchors, adjacency co-location
+//!   capped by the eq. 2 threshold.
+//! * [`refine`] — cost-model-guided swap refinement that can post-process
+//!   any of the above (paper §7 future work; uses the AOT artifact).
+
+pub mod blocked;
+pub mod cyclic;
+pub mod drb;
+pub mod kway;
+pub mod new_strategy;
+pub mod placement;
+pub mod random;
+pub mod refine;
+pub mod threshold;
+
+use crate::error::{Error, Result};
+use crate::model::topology::ClusterSpec;
+use crate::model::workload::Workload;
+
+pub use placement::Placement;
+
+/// A process-mapping strategy.
+pub trait Mapper {
+    /// Short name used in reports (`"Blocked"`, `"N"`...).
+    fn name(&self) -> &'static str;
+
+    /// Compute a placement of every process of `w` onto `cluster`.
+    fn map(&self, w: &Workload, cluster: &ClusterSpec) -> Result<Placement>;
+}
+
+/// The strategies the paper's figures compare, by their figure letter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MapperKind {
+    /// `B` — Blocked.
+    Blocked,
+    /// `C` — Cyclic.
+    Cyclic,
+    /// `D` — DRB (Scotch-style).
+    Drb,
+    /// `N` — the paper's new strategy.
+    New,
+    /// Extra baseline: random placement.
+    Random,
+    /// Extra baseline: k-way partitioning.
+    KWay,
+}
+
+impl MapperKind {
+    /// The four strategies of Figures 2–5, in figure order.
+    pub const PAPER: [MapperKind; 4] =
+        [MapperKind::Blocked, MapperKind::Cyclic, MapperKind::Drb, MapperKind::New];
+
+    /// All available strategies.
+    pub const ALL: [MapperKind; 6] = [
+        MapperKind::Blocked,
+        MapperKind::Cyclic,
+        MapperKind::Drb,
+        MapperKind::New,
+        MapperKind::Random,
+        MapperKind::KWay,
+    ];
+
+    /// Figure letter (`B`/`C`/`D`/`N`; extras get lowercase letters).
+    pub fn letter(&self) -> &'static str {
+        match self {
+            MapperKind::Blocked => "B",
+            MapperKind::Cyclic => "C",
+            MapperKind::Drb => "D",
+            MapperKind::New => "N",
+            MapperKind::Random => "r",
+            MapperKind::KWay => "k",
+        }
+    }
+
+    /// Full name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MapperKind::Blocked => "Blocked",
+            MapperKind::Cyclic => "Cyclic",
+            MapperKind::Drb => "DRB",
+            MapperKind::New => "New",
+            MapperKind::Random => "Random",
+            MapperKind::KWay => "KWay",
+        }
+    }
+
+    /// Parse a mapper name or letter.
+    pub fn parse(s: &str) -> Result<MapperKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "b" | "blocked" => Ok(MapperKind::Blocked),
+            "c" | "cyclic" => Ok(MapperKind::Cyclic),
+            "d" | "drb" | "scotch" => Ok(MapperKind::Drb),
+            "n" | "new" | "nicmap" => Ok(MapperKind::New),
+            "r" | "random" => Ok(MapperKind::Random),
+            "k" | "kway" | "k-way" => Ok(MapperKind::KWay),
+            other => Err(Error::usage(format!("unknown mapper {other:?}"))),
+        }
+    }
+
+    /// Instantiate the mapper.
+    pub fn build(&self) -> Box<dyn Mapper> {
+        match self {
+            MapperKind::Blocked => Box::new(blocked::Blocked),
+            MapperKind::Cyclic => Box::new(cyclic::Cyclic),
+            MapperKind::Drb => Box::new(drb::Drb::default()),
+            MapperKind::New => Box::new(new_strategy::NewStrategy::default()),
+            MapperKind::Random => Box::new(random::RandomMap::new(0x5eed)),
+            MapperKind::KWay => Box::new(kway::KWay::default()),
+        }
+    }
+}
+
+impl std::fmt::Display for MapperKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::topology::ClusterSpec;
+
+    #[test]
+    fn parse_and_letters() {
+        assert_eq!(MapperKind::parse("B").unwrap(), MapperKind::Blocked);
+        assert_eq!(MapperKind::parse("drb").unwrap(), MapperKind::Drb);
+        assert_eq!(MapperKind::parse("New").unwrap(), MapperKind::New);
+        assert!(MapperKind::parse("??").is_err());
+        for k in MapperKind::ALL {
+            assert_eq!(MapperKind::parse(k.name()).unwrap(), k);
+            assert_eq!(MapperKind::parse(k.letter()).unwrap(), k);
+        }
+    }
+
+    /// Every mapper produces a valid placement on every builtin workload.
+    #[test]
+    fn all_mappers_all_builtins_valid() {
+        let cluster = ClusterSpec::paper_cluster();
+        for name in Workload::builtin_names() {
+            let w = Workload::builtin(name).unwrap();
+            for kind in MapperKind::ALL {
+                let p = kind.build().map(&w, &cluster).unwrap();
+                p.validate(&w, &cluster)
+                    .unwrap_or_else(|e| panic!("{kind} on {name}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn overfull_workload_rejected() {
+        let cluster = ClusterSpec::small_test_cluster(); // 16 cores
+        let w = Workload::synt_workload_1(); // 256 procs
+        for kind in MapperKind::ALL {
+            assert!(kind.build().map(&w, &cluster).is_err(), "{kind} must reject");
+        }
+    }
+}

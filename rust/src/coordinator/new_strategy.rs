@@ -1,0 +1,366 @@
+//! The paper's proposed mapping strategy (§4, Figure 1 pseudocode).
+//!
+//! Steps, following the pseudocode line numbers:
+//!
+//! 1. `select_jobs(high_length)` — partition jobs into Large / Medium /
+//!    Small size classes by largest message; map Large first (steps 4/6
+//!    repeat for Medium and Small).
+//! 2. `sort_jobs` — within a class, jobs with higher average adjacency
+//!    (`Adj_avg`) map earlier.
+//! 3. Per job:
+//!    * 3.2 — threshold decision ([`crate::coordinator::threshold`]).
+//!    * 3.3 — processes sorted by communication demand `CD_i` (eq. 1).
+//!    * 3.4–3.7 — anchor process `A` goes to the node with most free cores,
+//!      socket with most free cores.
+//!    * 3.8 — `A`'s adjacent processes sorted by pairwise demand with `A`.
+//!    * 3.9 — `map_adj_processes(threshold)`: co-locate adjacents with `A`
+//!      until the per-node cap (or the node) is exhausted; leftovers are
+//!      picked up by the next anchor iteration.
+//!
+//! When every node has reached the cap but unmapped processes remain, the
+//! cap is relaxed by one (the paper does not specify this corner; relaxing
+//! preserves the spread while guaranteeing termination — see DESIGN.md).
+
+use crate::coordinator::placement::{Occupancy, Placement};
+use crate::coordinator::threshold::{decide, Threshold};
+use crate::coordinator::Mapper;
+use crate::error::{Error, Result};
+use crate::model::topology::{ClusterSpec, NodeId};
+use crate::model::traffic::TrafficMatrix;
+use crate::model::workload::{JobId, SizeClass, Workload};
+
+/// Tunables for the new strategy (defaults = the paper's algorithm; the
+/// flags exist for the ablation bench).
+#[derive(Debug, Clone, Copy)]
+pub struct NewStrategy {
+    /// Use the size-class job ordering of step 1 (ablation: off = table order).
+    pub order_by_size_class: bool,
+    /// Sort processes by CD within a job (ablation: off = rank order).
+    pub order_by_demand: bool,
+    /// Threshold policy: `None` = paper eq. 2; `Some(k)` = fixed cap k;
+    /// `Some(usize::MAX)` = never cap (pure packing).
+    pub fixed_threshold: Option<usize>,
+}
+
+impl Default for NewStrategy {
+    fn default() -> Self {
+        NewStrategy { order_by_size_class: true, order_by_demand: true, fixed_threshold: None }
+    }
+}
+
+/// Per-job mapping state.
+struct JobState {
+    /// Global proc id of local rank r.
+    offset: usize,
+    traffic: TrafficMatrix,
+    /// Processes of this job placed per node (threshold accounting).
+    per_node: Vec<usize>,
+    /// Local ranks not yet mapped, kept sorted by descending CD.
+    unmapped: Vec<usize>,
+}
+
+impl NewStrategy {
+    /// Order jobs: size class first (Large → Small), then `Adj_avg`
+    /// descending, then table order (stable tie-break).
+    fn job_order(&self, w: &Workload, traffic: &[TrafficMatrix]) -> Vec<JobId> {
+        let mut order: Vec<JobId> = (0..w.jobs.len()).collect();
+        if !self.order_by_size_class {
+            return order;
+        }
+        let class_rank = |j: JobId| match w.jobs[j].size_class() {
+            SizeClass::Large => 0,
+            SizeClass::Medium => 1,
+            SizeClass::Small => 2,
+        };
+        order.sort_by(|&a, &b| {
+            class_rank(a)
+                .cmp(&class_rank(b))
+                .then(
+                    traffic[b]
+                        .avg_adjacency()
+                        .partial_cmp(&traffic[a].avg_adjacency())
+                        .unwrap(),
+                )
+                .then(a.cmp(&b))
+        });
+        order
+    }
+
+    /// Map one job (paper step 3).
+    fn map_job(
+        &self,
+        st: &mut JobState,
+        occ: &mut Occupancy,
+        cluster: &ClusterSpec,
+        core_of: &mut [usize],
+    ) -> Result<()> {
+        // Step 3.2: threshold decision at job start.
+        let threshold = match self.fixed_threshold {
+            Some(k) => {
+                if k == usize::MAX {
+                    Threshold::None
+                } else {
+                    Threshold::PerNode(k)
+                }
+            }
+            None => decide(&st.traffic, occ.avg_free_per_node(), cluster.nodes),
+        };
+        let mut cap = threshold.cap();
+
+        // Step 3.3: ranks by descending CD (stable by rank id).
+        if self.order_by_demand {
+            st.unmapped.sort_by(|&a, &b| {
+                st.traffic
+                    .demand(b)
+                    .partial_cmp(&st.traffic.demand(a))
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+        }
+
+        let mut mapped = vec![false; st.traffic.len()];
+        while let Some(pos) = st.unmapped.iter().position(|&r| !mapped[r]) {
+            let anchor = st.unmapped.remove(pos);
+
+            // Steps 3.5–3.7: anchor node selection. Nodes already hosting
+            // this job (under the cap) are preferred — with no threshold
+            // this makes the job pack Blocked-style, exactly the paper's
+            // "otherwise it acts like Blocked"; with a threshold the cap
+            // forces the spread. Fall back to the node with most free
+            // cores; relax the cap when nothing qualifies.
+            let node = loop {
+                let hosting =
+                    occ.node_with_most_free_where(|n| st.per_node[n] > 0 && st.per_node[n] < cap);
+                match hosting.or_else(|| occ.node_with_most_free_where(|n| st.per_node[n] < cap)) {
+                    Some(n) => break n,
+                    None => {
+                        if occ.total_free() == 0 {
+                            return Err(Error::mapping("cluster full mid-job"));
+                        }
+                        cap = cap.saturating_add(1);
+                    }
+                }
+            };
+            self.place(anchor, node, st, occ, cluster, core_of, &mut mapped)?;
+
+            // Steps 3.8–3.9: adjacents of the anchor by pairwise volume.
+            let mut current = node;
+            for (adj, _vol) in st.traffic.partners_by_volume(anchor) {
+                if mapped[adj] {
+                    continue;
+                }
+                // Stay on the anchor's node while the cap and capacity
+                // allow; otherwise move to the next-best node under cap.
+                if st.per_node[current] >= cap || occ.node_free(current) == 0 {
+                    let hosting = occ
+                        .node_with_most_free_where(|n| st.per_node[n] > 0 && st.per_node[n] < cap);
+                    match hosting.or_else(|| occ.node_with_most_free_where(|n| st.per_node[n] < cap))
+                    {
+                        Some(n) => current = n,
+                        // All nodes at cap: leave the rest to later anchors
+                        // (the cap will be relaxed there if truly needed).
+                        None => break,
+                    }
+                }
+                self.place(adj, current, st, occ, cluster, core_of, &mut mapped)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Place local rank `rank` on `node`, preferring the socket where its
+    /// already-placed job peers sit (cache locality), else the fullest
+    /// non-empty socket, else the emptiest.
+    #[allow(clippy::too_many_arguments)]
+    fn place(
+        &self,
+        rank: usize,
+        node: NodeId,
+        st: &mut JobState,
+        occ: &mut Occupancy,
+        _cluster: &ClusterSpec,
+        core_of: &mut [usize],
+        mapped: &mut [bool],
+    ) -> Result<()> {
+        let socket = occ
+            .socket_with_least_free(node)
+            .ok_or_else(|| Error::mapping(format!("node {node} full")))?;
+        let core = occ.claim_in_socket(socket)?;
+        core_of[st.offset + rank] = core;
+        st.per_node[node] += 1;
+        mapped[rank] = true;
+        // Drop from the unmapped list if still present (anchors are removed
+        // by the caller; adjacents are removed here).
+        if let Some(pos) = st.unmapped.iter().position(|&r| r == rank) {
+            st.unmapped.remove(pos);
+        }
+        Ok(())
+    }
+}
+
+impl Mapper for NewStrategy {
+    fn name(&self) -> &'static str {
+        "New"
+    }
+
+    fn map(&self, w: &Workload, cluster: &ClusterSpec) -> Result<Placement> {
+        let p = w.total_procs();
+        if p > cluster.total_cores() {
+            return Err(Error::mapping(format!(
+                "{p} processes exceed {} cores",
+                cluster.total_cores()
+            )));
+        }
+        let traffic: Vec<TrafficMatrix> =
+            w.jobs.iter().map(TrafficMatrix::of_job).collect();
+        let order = self.job_order(w, &traffic);
+
+        let mut occ = Occupancy::new(cluster);
+        let mut core_of = vec![usize::MAX; p];
+        for jid in order {
+            let mut st = JobState {
+                offset: w.job_offset(jid),
+                traffic: traffic[jid].clone(),
+                per_node: vec![0; cluster.nodes],
+                unmapped: (0..w.jobs[jid].procs).collect(),
+            };
+            self.map_job(&mut st, &mut occ, cluster, &mut core_of)?;
+        }
+        Ok(Placement::new(core_of))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::pattern::Pattern;
+    use crate::model::workload::JobSpec;
+
+    fn strategy() -> NewStrategy {
+        NewStrategy::default()
+    }
+
+    #[test]
+    fn a2a_64_spreads_at_threshold_4() {
+        let cluster = ClusterSpec::paper_cluster();
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::AllToAll, 64, 2_000_000, 10.0, 100)],
+        )
+        .unwrap();
+        let p = strategy().map(&w, &cluster).unwrap();
+        p.validate(&w, &cluster).unwrap();
+        // Threshold 4: exactly 4 procs on each of the 16 nodes.
+        assert_eq!(p.job_node_counts(&w, 0, &cluster), vec![4; 16]);
+    }
+
+    #[test]
+    fn linear_64_packs_like_blocked() {
+        let cluster = ClusterSpec::paper_cluster();
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::Linear, 64, 2_000_000, 10.0, 100)],
+        )
+        .unwrap();
+        let p = strategy().map(&w, &cluster).unwrap();
+        p.validate(&w, &cluster).unwrap();
+        // Adj_avg ≈ 2 ≤ 15 ⇒ no threshold ⇒ minimum nodes (4 of 16 cores).
+        assert_eq!(p.nodes_used(&cluster), 4);
+    }
+
+    #[test]
+    fn a2a_24_spreads_one_per_node_then_relaxes() {
+        let cluster = ClusterSpec::paper_cluster();
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::AllToAll, 24, 2_000_000, 10.0, 100)],
+        )
+        .unwrap();
+        let p = strategy().map(&w, &cluster).unwrap();
+        p.validate(&w, &cluster).unwrap();
+        let counts = p.job_node_counts(&w, 0, &cluster);
+        // Threshold 1, 24 procs, 16 nodes: every node gets ≥1; 8 nodes get
+        // a second after relaxation; none gets 3.
+        assert!(counts.iter().all(|&c| c >= 1 && c <= 2), "{counts:?}");
+        assert_eq!(counts.iter().sum::<usize>(), 24);
+    }
+
+    #[test]
+    fn large_jobs_map_before_small() {
+        // A Large-class job arriving *after* a Small one in table order must
+        // still get first pick of the empty cluster.
+        let cluster = ClusterSpec::paper_cluster();
+        let w = Workload::new(
+            "t",
+            vec![
+                JobSpec::synthetic(Pattern::Linear, 32, 1_000, 10.0, 100), // Small
+                JobSpec::synthetic(Pattern::Linear, 32, 2_000_000, 10.0, 100), // Large
+            ],
+        )
+        .unwrap();
+        let p = strategy().map(&w, &cluster).unwrap();
+        // The Large job packs first: its procs occupy nodes 0-1.
+        let large_nodes: std::collections::BTreeSet<_> =
+            w.procs_of_job(1).map(|g| p.node_of(g, &cluster)).collect();
+        assert_eq!(large_nodes, [0, 1].into_iter().collect());
+    }
+
+    #[test]
+    fn ablation_flags_change_placement() {
+        let cluster = ClusterSpec::paper_cluster();
+        let w = Workload::synt_workload_3();
+        let paper = strategy().map(&w, &cluster).unwrap();
+        let no_thresh = NewStrategy { fixed_threshold: Some(usize::MAX), ..strategy() }
+            .map(&w, &cluster)
+            .unwrap();
+        assert_ne!(paper, no_thresh, "threshold must matter on synt3");
+        let fixed1 = NewStrategy { fixed_threshold: Some(1), ..strategy() }
+            .map(&w, &cluster)
+            .unwrap();
+        fixed1.validate(&w, &cluster).unwrap();
+        no_thresh.validate(&w, &cluster).unwrap();
+    }
+
+    #[test]
+    fn anchor_and_heaviest_partner_colocated() {
+        // Gather/Reduce: the root (rank 0) is the heaviest-CD process; its
+        // top partners should share its node (no threshold here).
+        let cluster = ClusterSpec::paper_cluster();
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::GatherReduce, 16, 500_000, 10.0, 100)],
+        )
+        .unwrap();
+        let p = strategy().map(&w, &cluster).unwrap();
+        let root_node = p.node_of(0, &cluster);
+        let same: usize = (0..16).filter(|&g| p.node_of(g, &cluster) == root_node).count();
+        assert_eq!(same, 16, "whole job fits one node and should stay there");
+    }
+
+    #[test]
+    fn socket_packing_prefers_partial_sockets() {
+        let cluster = ClusterSpec::paper_cluster();
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::AllToAll, 4, 500_000, 10.0, 100)],
+        )
+        .unwrap();
+        let p = strategy().map(&w, &cluster).unwrap();
+        // 4 procs, no threshold (Adj_avg 3 ≤ 15): all in one socket.
+        let s0 = p.socket_of(0, &cluster);
+        for g in 1..4 {
+            assert_eq!(p.socket_of(g, &cluster), s0);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let cluster = ClusterSpec::paper_cluster();
+        for name in Workload::builtin_names() {
+            let w = Workload::builtin(name).unwrap();
+            let a = strategy().map(&w, &cluster).unwrap();
+            let b = strategy().map(&w, &cluster).unwrap();
+            assert_eq!(a, b, "{name}");
+        }
+    }
+}

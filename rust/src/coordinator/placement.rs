@@ -1,0 +1,291 @@
+//! Placement of workload processes onto cluster cores, plus the occupancy
+//! bookkeeping mappers share.
+
+use crate::error::{Error, Result};
+use crate::model::topology::{ClusterSpec, CoreId, NodeId, SocketId};
+use crate::model::workload::{ProcId, Workload};
+
+/// A complete mapping: `core_of[p]` is the core of global process `p`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    /// Core per process.
+    pub core_of: Vec<CoreId>,
+}
+
+impl Placement {
+    /// Build from a core vector.
+    pub fn new(core_of: Vec<CoreId>) -> Self {
+        Placement { core_of }
+    }
+
+    /// Process count.
+    pub fn len(&self) -> usize {
+        self.core_of.len()
+    }
+
+    /// True when no processes are placed.
+    pub fn is_empty(&self) -> bool {
+        self.core_of.is_empty()
+    }
+
+    /// Node of process `p`.
+    pub fn node_of(&self, p: ProcId, cluster: &ClusterSpec) -> NodeId {
+        cluster.node_of_core(self.core_of[p])
+    }
+
+    /// Socket of process `p`.
+    pub fn socket_of(&self, p: ProcId, cluster: &ClusterSpec) -> SocketId {
+        cluster.socket_of_core(self.core_of[p])
+    }
+
+    /// Check structural validity: one process per core, cores in range,
+    /// process count matches the workload.
+    pub fn validate(&self, w: &Workload, cluster: &ClusterSpec) -> Result<()> {
+        if self.core_of.len() != w.total_procs() {
+            return Err(Error::mapping(format!(
+                "placement covers {} processes, workload has {}",
+                self.core_of.len(),
+                w.total_procs()
+            )));
+        }
+        let mut used = vec![false; cluster.total_cores()];
+        for (p, &c) in self.core_of.iter().enumerate() {
+            if c >= cluster.total_cores() {
+                return Err(Error::mapping(format!("process {p} on out-of-range core {c}")));
+            }
+            if used[c] {
+                return Err(Error::mapping(format!("core {c} assigned twice (process {p})")));
+            }
+            used[c] = true;
+        }
+        Ok(())
+    }
+
+    /// Processes per node.
+    pub fn node_counts(&self, cluster: &ClusterSpec) -> Vec<usize> {
+        let mut counts = vec![0usize; cluster.nodes];
+        for &c in &self.core_of {
+            counts[cluster.node_of_core(c)] += 1;
+        }
+        counts
+    }
+
+    /// Number of distinct nodes used.
+    pub fn nodes_used(&self, cluster: &ClusterSpec) -> usize {
+        self.node_counts(cluster).iter().filter(|&&c| c > 0).count()
+    }
+
+    /// Per-node process counts *of one job*.
+    pub fn job_node_counts(&self, w: &Workload, job: usize, cluster: &ClusterSpec) -> Vec<usize> {
+        let mut counts = vec![0usize; cluster.nodes];
+        for p in w.procs_of_job(job) {
+            counts[self.node_of(p, cluster)] += 1;
+        }
+        counts
+    }
+
+    /// One-hot assignment matrix (P × nodes, row-major f32) for the AOT cost
+    /// model; rows beyond `pad_p` processes stay zero.
+    pub fn assignment_matrix(&self, cluster: &ClusterSpec, pad_p: usize, pad_n: usize) -> Vec<f32> {
+        assert!(pad_p >= self.len(), "pad_p {pad_p} < procs {}", self.len());
+        assert!(pad_n >= cluster.nodes, "pad_n {pad_n} < nodes {}", cluster.nodes);
+        let mut a = vec![0.0f32; pad_p * pad_n];
+        for (p, &c) in self.core_of.iter().enumerate() {
+            a[p * pad_n + cluster.node_of_core(c)] = 1.0;
+        }
+        a
+    }
+}
+
+/// Mutable free-core bookkeeping shared by the greedy mappers.
+#[derive(Debug, Clone)]
+pub struct Occupancy<'a> {
+    cluster: &'a ClusterSpec,
+    core_free: Vec<bool>,
+    node_free: Vec<usize>,
+    socket_free: Vec<usize>,
+}
+
+impl<'a> Occupancy<'a> {
+    /// All cores free.
+    pub fn new(cluster: &'a ClusterSpec) -> Self {
+        Occupancy {
+            cluster,
+            core_free: vec![true; cluster.total_cores()],
+            node_free: vec![cluster.cores_per_node(); cluster.nodes],
+            socket_free: vec![cluster.cores_per_socket; cluster.total_sockets()],
+        }
+    }
+
+    /// Total free cores.
+    pub fn total_free(&self) -> usize {
+        self.node_free.iter().sum()
+    }
+
+    /// Free cores on `node`.
+    pub fn node_free(&self, node: NodeId) -> usize {
+        self.node_free[node]
+    }
+
+    /// Free cores on global socket `socket`.
+    pub fn socket_free(&self, socket: SocketId) -> usize {
+        self.socket_free[socket]
+    }
+
+    /// Average free cores per node over **all** nodes — the paper's
+    /// `FreeCores_avg`.
+    pub fn avg_free_per_node(&self) -> f64 {
+        self.total_free() as f64 / self.cluster.nodes as f64
+    }
+
+    /// Node with the most free cores (paper step 3.5 `select_node`);
+    /// ties broken by lowest id. `None` when the cluster is full.
+    pub fn node_with_most_free(&self) -> Option<NodeId> {
+        self.node_free
+            .iter()
+            .enumerate()
+            .filter(|(_, &f)| f > 0)
+            .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+            .map(|(n, _)| n)
+    }
+
+    /// Like [`Self::node_with_most_free`] restricted by a predicate.
+    pub fn node_with_most_free_where(
+        &self,
+        mut pred: impl FnMut(NodeId) -> bool,
+    ) -> Option<NodeId> {
+        self.node_free
+            .iter()
+            .enumerate()
+            .filter(|&(n, &f)| f > 0 && pred(n))
+            .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+            .map(|(n, _)| n)
+    }
+
+    /// Socket of `node` with the most free cores (paper step 3.6).
+    pub fn socket_with_most_free(&self, node: NodeId) -> Option<SocketId> {
+        self.cluster
+            .sockets_of_node(node)
+            .filter(|&s| self.socket_free[s] > 0)
+            .max_by(|&a, &b| self.socket_free[a].cmp(&self.socket_free[b]).then(b.cmp(&a)))
+    }
+
+    /// Socket of `node` with the **fewest** free cores but at least one —
+    /// used to pack adjacent processes tightly into partially-filled sockets
+    /// so they share the intra-socket cache.
+    pub fn socket_with_least_free(&self, node: NodeId) -> Option<SocketId> {
+        self.cluster
+            .sockets_of_node(node)
+            .filter(|&s| self.socket_free[s] > 0)
+            .min_by(|&a, &b| self.socket_free[a].cmp(&self.socket_free[b]).then(a.cmp(&b)))
+    }
+
+    /// First free core of `socket`.
+    pub fn free_core_in_socket(&self, socket: SocketId) -> Option<CoreId> {
+        self.cluster.cores_of_socket(socket).find(|&c| self.core_free[c])
+    }
+
+    /// First free core of `node` (socket order).
+    pub fn free_core_in_node(&self, node: NodeId) -> Option<CoreId> {
+        self.cluster.cores_of_node(node).find(|&c| self.core_free[c])
+    }
+
+    /// Claim a specific core.
+    pub fn claim(&mut self, core: CoreId) -> Result<()> {
+        if !self.core_free[core] {
+            return Err(Error::mapping(format!("core {core} already claimed")));
+        }
+        self.core_free[core] = false;
+        self.node_free[self.cluster.node_of_core(core)] -= 1;
+        self.socket_free[self.cluster.socket_of_core(core)] -= 1;
+        Ok(())
+    }
+
+    /// Claim the first free core of `socket`.
+    pub fn claim_in_socket(&mut self, socket: SocketId) -> Result<CoreId> {
+        let core = self
+            .free_core_in_socket(socket)
+            .ok_or_else(|| Error::mapping(format!("socket {socket} full")))?;
+        self.claim(core)?;
+        Ok(core)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::pattern::Pattern;
+    use crate::model::workload::JobSpec;
+
+    fn wl(procs: usize) -> Workload {
+        Workload::new("t", vec![JobSpec::synthetic(Pattern::Linear, procs, 1000, 1.0, 10)])
+            .unwrap()
+    }
+
+    #[test]
+    fn validate_catches_double_assignment() {
+        let c = ClusterSpec::small_test_cluster();
+        let w = wl(3);
+        assert!(Placement::new(vec![0, 1, 2]).validate(&w, &c).is_ok());
+        assert!(Placement::new(vec![0, 0, 2]).validate(&w, &c).is_err());
+        assert!(Placement::new(vec![0, 1, 999]).validate(&w, &c).is_err());
+        assert!(Placement::new(vec![0, 1]).validate(&w, &c).is_err());
+    }
+
+    #[test]
+    fn node_counts_and_usage() {
+        let c = ClusterSpec::small_test_cluster(); // 4 nodes x 4 cores
+        let p = Placement::new(vec![0, 1, 4, 8]);
+        assert_eq!(p.node_counts(&c), vec![2, 1, 1, 0]);
+        assert_eq!(p.nodes_used(&c), 3);
+    }
+
+    #[test]
+    fn assignment_matrix_one_hot() {
+        let c = ClusterSpec::small_test_cluster();
+        let p = Placement::new(vec![0, 5]);
+        let a = p.assignment_matrix(&c, 4, 8);
+        assert_eq!(a.len(), 32);
+        assert_eq!(a[0], 1.0); // proc 0 -> node 0
+        assert_eq!(a[8 + 1], 1.0); // proc 1 -> node 1
+        let ones: usize = a.iter().filter(|&&v| v == 1.0).count();
+        assert_eq!(ones, 2);
+    }
+
+    #[test]
+    fn occupancy_claim_flow() {
+        let c = ClusterSpec::small_test_cluster();
+        let mut occ = Occupancy::new(&c);
+        assert_eq!(occ.total_free(), 16);
+        assert_eq!(occ.avg_free_per_node(), 4.0);
+        assert_eq!(occ.node_with_most_free(), Some(0));
+        occ.claim(0).unwrap();
+        assert!(occ.claim(0).is_err());
+        assert_eq!(occ.node_free(0), 3);
+        // Now node 1 has the most free cores (ties break to lowest id).
+        assert_eq!(occ.node_with_most_free(), Some(1));
+    }
+
+    #[test]
+    fn socket_selection() {
+        let c = ClusterSpec::small_test_cluster(); // 2 sockets x 2 cores per node
+        let mut occ = Occupancy::new(&c);
+        occ.claim(0).unwrap(); // socket 0 of node 0 now has 1 free
+        assert_eq!(occ.socket_with_most_free(0), Some(1));
+        assert_eq!(occ.socket_with_least_free(0), Some(0));
+        occ.claim(1).unwrap(); // socket 0 full
+        assert_eq!(occ.socket_with_least_free(0), Some(1));
+        occ.claim(2).unwrap();
+        occ.claim(3).unwrap();
+        assert_eq!(occ.socket_with_most_free(0), None);
+        assert_eq!(occ.free_core_in_node(0), None);
+    }
+
+    #[test]
+    fn node_filter_predicate() {
+        let c = ClusterSpec::small_test_cluster();
+        let occ = Occupancy::new(&c);
+        assert_eq!(occ.node_with_most_free_where(|n| n > 1), Some(2));
+        assert_eq!(occ.node_with_most_free_where(|_| false), None);
+    }
+}

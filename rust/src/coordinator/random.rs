@@ -1,0 +1,60 @@
+//! Seeded random mapping — a sanity baseline (not in the paper's figures,
+//! used by tests and ablations as a "no intelligence at all" reference).
+
+use crate::coordinator::{Mapper, Placement};
+use crate::error::{Error, Result};
+use crate::model::topology::ClusterSpec;
+use crate::model::workload::Workload;
+use crate::testkit::rng::SplitMix64;
+
+/// Uniform random placement over free cores, deterministic per seed.
+#[derive(Debug, Clone, Copy)]
+pub struct RandomMap {
+    seed: u64,
+}
+
+impl RandomMap {
+    /// Construct with a seed (same seed ⇒ same placement).
+    pub fn new(seed: u64) -> Self {
+        RandomMap { seed }
+    }
+}
+
+impl Mapper for RandomMap {
+    fn name(&self) -> &'static str {
+        "Random"
+    }
+
+    fn map(&self, w: &Workload, cluster: &ClusterSpec) -> Result<Placement> {
+        let p = w.total_procs();
+        if p > cluster.total_cores() {
+            return Err(Error::mapping(format!(
+                "{p} processes exceed {} cores",
+                cluster.total_cores()
+            )));
+        }
+        let mut rng = SplitMix64::new(self.seed);
+        let mut cores: Vec<usize> = (0..cluster.total_cores()).collect();
+        rng.shuffle(&mut cores);
+        cores.truncate(p);
+        Ok(Placement::new(cores))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cluster = ClusterSpec::paper_cluster();
+        let w = Workload::synt_workload_4();
+        let a = RandomMap::new(7).map(&w, &cluster).unwrap();
+        let b = RandomMap::new(7).map(&w, &cluster).unwrap();
+        let c = RandomMap::new(8).map(&w, &cluster).unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        a.validate(&w, &cluster).unwrap();
+        c.validate(&w, &cluster).unwrap();
+    }
+}

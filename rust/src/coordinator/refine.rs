@@ -1,0 +1,259 @@
+//! Cost-model-guided placement refinement (paper §7 future work, made
+//! concrete): greedy swap descent on the predicted NIC contention score.
+//!
+//! The scorer is abstract: [`crate::runtime::native::NativeScorer`] (pure
+//! Rust) and [`crate::runtime::cost_model::PjrtScorer`] (the AOT JAX/Pallas
+//! artifact on the PJRT CPU client) both implement [`Scorer`]; integration
+//! tests cross-check them, which validates the whole AOT path end-to-end.
+
+use crate::coordinator::Placement;
+use crate::error::Result;
+use crate::model::topology::ClusterSpec;
+use crate::model::traffic::TrafficMatrix;
+use crate::model::workload::Workload;
+
+/// Per-node contention summary of a candidate placement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeLoads {
+    /// Inter-node egress per node, bytes/sec.
+    pub nic_tx: Vec<f64>,
+    /// Inter-node ingress per node, bytes/sec.
+    pub nic_rx: Vec<f64>,
+    /// Intra-node volume per node, bytes/sec.
+    pub intra: Vec<f64>,
+}
+
+impl NodeLoads {
+    /// Scalar objective: estimated queuing pressure over all NIC sides.
+    ///
+    /// Per NIC side with utilization `ρ = load / nic_bw` the penalty is
+    /// `ρ² + 100·max(0, ρ − 0.8)²` — quadratic below saturation (an M/M/1
+    /// waiting-time flavour) and steeply punished past 80 % utilization.
+    /// The nonlinearity is essential: under a *linear* byte objective,
+    /// packing always looks optimal (spreading converts intra-node bytes
+    /// to inter-node bytes), which contradicts the paper's whole point —
+    /// a saturated NIC queues superlinearly, so overloaded nodes must be
+    /// drained even at the cost of more total NIC traffic.
+    pub fn objective(&self, nic_bw: f64) -> f64 {
+        fn penalty(rho: f64) -> f64 {
+            let over = (rho - 0.8).max(0.0);
+            rho * rho + 100.0 * over * over
+        }
+        self.nic_tx
+            .iter()
+            .chain(self.nic_rx.iter())
+            .map(|&load| penalty(load / nic_bw))
+            .sum()
+    }
+}
+
+/// Anything that can score a placement against a traffic matrix.
+pub trait Scorer {
+    /// Compute per-node loads of `placement` under `traffic`.
+    fn score(
+        &self,
+        traffic: &TrafficMatrix,
+        placement: &Placement,
+        cluster: &ClusterSpec,
+    ) -> Result<NodeLoads>;
+}
+
+/// Result of a refinement run.
+#[derive(Debug, Clone)]
+pub struct RefineReport {
+    /// Refined placement.
+    pub placement: Placement,
+    /// Objective before refinement.
+    pub before: f64,
+    /// Objective after refinement.
+    pub after: f64,
+    /// Accepted swaps.
+    pub swaps: usize,
+    /// Scorer invocations (each = one cost-model execution).
+    pub evaluations: usize,
+}
+
+/// Greedy swap refinement: repeatedly try swapping a process from the
+/// hottest node with a process elsewhere (or moving it to a free core) and
+/// keep the best improving move, until no move improves or `max_rounds`
+/// is exhausted.
+pub fn refine(
+    scorer: &dyn Scorer,
+    traffic: &TrafficMatrix,
+    start: &Placement,
+    w: &Workload,
+    cluster: &ClusterSpec,
+    max_rounds: usize,
+) -> Result<RefineReport> {
+    let mut placement = start.clone();
+    let mut evaluations = 0usize;
+    let mut swaps = 0usize;
+    let nic_bw = cluster.nic_bw as f64;
+
+    let mut loads = scorer.score(traffic, &placement, cluster)?;
+    evaluations += 1;
+    let before = loads.objective(nic_bw);
+    let mut current = before;
+
+    for _ in 0..max_rounds {
+        // Hottest node by NIC load.
+        let hot = (0..cluster.nodes)
+            .max_by(|&a, &b| {
+                (loads.nic_tx[a] + loads.nic_rx[a])
+                    .partial_cmp(&(loads.nic_tx[b] + loads.nic_rx[b]))
+                    .unwrap()
+            })
+            .unwrap_or(0);
+        let hot_procs: Vec<usize> = (0..placement.len())
+            .filter(|&p| placement.node_of(p, cluster) == hot)
+            .collect();
+
+        // Candidate moves: (a) swap a hot-node process with a process on
+        // any other node; (b) migrate a hot-node process to a free core.
+        // Evaluate with the scorer; keep the best improvement.
+        #[derive(Clone, Copy)]
+        enum Move {
+            Swap(usize, usize),
+            Migrate(usize, usize), // (proc, target core)
+        }
+        let mut used = vec![false; cluster.total_cores()];
+        for &c in &placement.core_of {
+            used[c] = true;
+        }
+        // One free core per non-hot node is enough — cores of a node are
+        // interchangeable at this granularity.
+        let free_targets: Vec<usize> = (0..cluster.nodes)
+            .filter(|&n| n != hot)
+            .filter_map(|n| cluster.cores_of_node(n).find(|&c| !used[c]))
+            .collect();
+
+        // Swap partners come from the 3 least-loaded nodes only — swapping
+        // two heavily-loaded processes cannot cool the hottest NIC, and the
+        // restriction cuts scorer invocations ~5-10x (each one is a PJRT
+        // execution when the AOT scorer is in use).
+        let mut node_order: Vec<usize> = (0..cluster.nodes).filter(|&n| n != hot).collect();
+        node_order.sort_by(|&a, &b| {
+            (loads.nic_tx[a] + loads.nic_rx[a])
+                .partial_cmp(&(loads.nic_tx[b] + loads.nic_rx[b]))
+                .unwrap()
+        });
+        let cold: std::collections::BTreeSet<usize> =
+            node_order.into_iter().take(3).collect();
+
+        let mut best: Option<(Move, f64, NodeLoads)> = None;
+        let consider =
+            |mv: Move, cand: &Placement, scorer: &dyn Scorer, evaluations: &mut usize|
+             -> Result<Option<(Move, f64, NodeLoads)>> {
+                let l = scorer.score(traffic, cand, cluster)?;
+                *evaluations += 1;
+                let obj = l.objective(nic_bw);
+                Ok(if obj < current - 1e-9 { Some((mv, obj, l)) } else { None })
+            };
+        for &a in &hot_procs {
+            for b in 0..placement.len() {
+                if !cold.contains(&placement.node_of(b, cluster)) {
+                    continue;
+                }
+                let mut cand = placement.clone();
+                cand.core_of.swap(a, b);
+                if let Some(hit) = consider(Move::Swap(a, b), &cand, scorer, &mut evaluations)? {
+                    if best.as_ref().map_or(true, |(_, bo, _)| hit.1 < *bo) {
+                        best = Some(hit);
+                    }
+                }
+            }
+            for &target in &free_targets {
+                let mut cand = placement.clone();
+                cand.core_of[a] = target;
+                if let Some(hit) =
+                    consider(Move::Migrate(a, target), &cand, scorer, &mut evaluations)?
+                {
+                    if best.as_ref().map_or(true, |(_, bo, _)| hit.1 < *bo) {
+                        best = Some(hit);
+                    }
+                }
+            }
+        }
+        match best {
+            Some((mv, obj, l)) => {
+                match mv {
+                    Move::Swap(a, b) => placement.core_of.swap(a, b),
+                    Move::Migrate(a, target) => placement.core_of[a] = target,
+                }
+                current = obj;
+                loads = l;
+                swaps += 1;
+            }
+            None => break,
+        }
+    }
+    // The refined placement must stay structurally valid.
+    placement.validate(w, cluster)?;
+    Ok(RefineReport { placement, before, after: current, swaps, evaluations })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MapperKind;
+    use crate::model::pattern::Pattern;
+    use crate::model::workload::JobSpec;
+    use crate::runtime::native::NativeScorer;
+
+    #[test]
+    fn objective_prefers_balanced_nics() {
+        let balanced = NodeLoads {
+            nic_tx: vec![5.0, 5.0],
+            nic_rx: vec![5.0, 5.0],
+            intra: vec![0.0, 0.0],
+        };
+        let skewed = NodeLoads {
+            nic_tx: vec![10.0, 0.0],
+            nic_rx: vec![0.0, 10.0],
+            intra: vec![0.0, 0.0],
+        };
+        assert!(balanced.objective(10.0) < skewed.objective(10.0));
+    }
+
+    #[test]
+    fn objective_punishes_saturation_hard() {
+        let under = NodeLoads { nic_tx: vec![0.5], nic_rx: vec![0.0], intra: vec![] };
+        let over = NodeLoads { nic_tx: vec![1.5], nic_rx: vec![0.0], intra: vec![] };
+        // 3x the load must cost far more than 9x (the quadratic part alone).
+        assert!(over.objective(1.0) > 15.0 * under.objective(1.0));
+    }
+
+    #[test]
+    fn refine_improves_bad_placement() {
+        // Blocked placement of an all-to-all job is the worst case; the
+        // refiner should strictly reduce the hottest-NIC objective.
+        let cluster = ClusterSpec::small_test_cluster();
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::AllToAll, 8, 64_000, 10.0, 100)],
+        )
+        .unwrap();
+        let traffic = TrafficMatrix::of_workload(&w);
+        let start = MapperKind::Blocked.build().map(&w, &cluster).unwrap();
+        let rep = refine(&NativeScorer, &traffic, &start, &w, &cluster, 8).unwrap();
+        assert!(rep.after <= rep.before);
+        assert!(rep.evaluations > 0);
+        rep.placement.validate(&w, &cluster).unwrap();
+    }
+
+    #[test]
+    fn refine_leaves_good_placement_alone() {
+        // A fully-packed single-node job has zero NIC traffic; nothing beats it.
+        let cluster = ClusterSpec::small_test_cluster();
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::AllToAll, 4, 64_000, 10.0, 100)],
+        )
+        .unwrap();
+        let traffic = TrafficMatrix::of_workload(&w);
+        let start = MapperKind::Blocked.build().map(&w, &cluster).unwrap();
+        let rep = refine(&NativeScorer, &traffic, &start, &w, &cluster, 4).unwrap();
+        assert_eq!(rep.swaps, 0);
+        assert_eq!(rep.placement, start);
+    }
+}

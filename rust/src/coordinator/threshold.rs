@@ -1,0 +1,144 @@
+//! The threshold rule — the heart of the paper's strategy (§4, eq. 2).
+//!
+//! Quoting §4: *"If average adjacency for parallel processes is less than or
+//! equal to the average number of free processing cores … (except one
+//! processing core which is used to map process 'A'), we can say roughly
+//! that 'A' and its adjacent processes can reside in just one node … In this
+//! case, there is no need to fix a threshold value. In contrast, … threshold
+//! is determined by eq. 2"*:
+//!
+//! ```text
+//! Threshold = floor( Σ_{i=1..P} (Adj_pi / Adj_max) / num_of_nodes )
+//! ```
+//!
+//! and *"if the number of computing nodes is more than the number of
+//! parallel processes, the threshold will be equal to 0 which is
+//! meaningless. In this case, we set the threshold value to 1."*
+
+use crate::model::traffic::TrafficMatrix;
+
+/// Outcome of the threshold decision for one job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Threshold {
+    /// `Adj_avg ≤ FreeCores_avg − 1`: the job packs Blocked-style; no cap.
+    None,
+    /// Cap on the number of this job's processes per node.
+    PerNode(usize),
+}
+
+impl Threshold {
+    /// Max processes of the job a single node may take (`usize::MAX` when
+    /// unlimited).
+    pub fn cap(&self) -> usize {
+        match self {
+            Threshold::None => usize::MAX,
+            Threshold::PerNode(t) => *t,
+        }
+    }
+}
+
+/// Decide the threshold for a job with traffic matrix `t`, given the current
+/// average free cores per node (`FreeCores_avg`) and the cluster node count.
+pub fn decide(t: &TrafficMatrix, free_cores_avg: f64, num_nodes: usize) -> Threshold {
+    let adj_avg = t.avg_adjacency();
+    // Paper step 3.2: one core is reserved for the anchor process 'A'.
+    if adj_avg <= free_cores_avg - 1.0 {
+        return Threshold::None;
+    }
+    Threshold::PerNode(eq2(t, num_nodes))
+}
+
+/// Equation 2 with the ≥1 clamp.
+pub fn eq2(t: &TrafficMatrix, num_nodes: usize) -> usize {
+    let adj_max = t.max_adjacency();
+    if adj_max == 0 || num_nodes == 0 {
+        return 1;
+    }
+    let weighted_sum: f64 = (0..t.len())
+        .map(|i| t.adjacency(i) as f64 / adj_max as f64)
+        .sum();
+    let thr = (weighted_sum / num_nodes as f64).floor() as usize;
+    thr.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::pattern::Pattern;
+    use crate::model::traffic::TrafficMatrix;
+    use crate::model::workload::JobSpec;
+
+    fn t_of(pattern: Pattern, procs: usize) -> TrafficMatrix {
+        TrafficMatrix::of_job(&JobSpec::synthetic(pattern, procs, 64_000, 10.0, 100))
+    }
+
+    #[test]
+    fn all_to_all_64_threshold_4() {
+        // Adj_pi = 63 ∀i, Adj_max = 63: Σ = 64; /16 nodes = 4.
+        let t = t_of(Pattern::AllToAll, 64);
+        assert_eq!(eq2(&t, 16), 4);
+        assert_eq!(decide(&t, 16.0, 16), Threshold::PerNode(4));
+    }
+
+    #[test]
+    fn all_to_all_32_threshold_2() {
+        let t = t_of(Pattern::AllToAll, 32);
+        assert_eq!(eq2(&t, 16), 2);
+    }
+
+    #[test]
+    fn all_to_all_24_threshold_1_via_clamp() {
+        // Σ = 24, /16 = 1.5 -> floor 1.
+        let t = t_of(Pattern::AllToAll, 24);
+        assert_eq!(eq2(&t, 16), 1);
+    }
+
+    #[test]
+    fn fewer_procs_than_nodes_clamps_to_1() {
+        // Paper: "if the number of computing nodes is more than the number
+        // of parallel processes, the threshold will be equal to 0 … we set
+        // the threshold value to 1."
+        let t = t_of(Pattern::AllToAll, 8);
+        assert_eq!(eq2(&t, 16), 1);
+    }
+
+    #[test]
+    fn low_adjacency_jobs_get_no_threshold() {
+        for pat in [Pattern::Linear, Pattern::GatherReduce, Pattern::BcastScatter] {
+            let t = t_of(pat, 64);
+            // Adj_avg ≈ 2 ≤ 16 − 1 on an empty paper cluster.
+            assert_eq!(decide(&t, 16.0, 16), Threshold::None, "{pat}");
+        }
+    }
+
+    #[test]
+    fn threshold_activates_when_cluster_fills() {
+        // Same Linear job, but nodes nearly full: FreeCores_avg = 2 means
+        // Adj_avg (≈1.97) > 2 − 1 = 1 ⇒ threshold applies.
+        let t = t_of(Pattern::Linear, 64);
+        match decide(&t, 2.0, 16) {
+            Threshold::PerNode(c) => assert!(c >= 1),
+            Threshold::None => panic!("expected a threshold under pressure"),
+        }
+    }
+
+    #[test]
+    fn gather_weighting_lowers_threshold() {
+        // Gather 64: Adj = {63, 1×63}: Σ(Adj/63) = 1 + 63/63 = 2; /16 -> 0 -> 1.
+        let t = t_of(Pattern::GatherReduce, 64);
+        assert_eq!(eq2(&t, 16), 1);
+    }
+
+    #[test]
+    fn cap_semantics() {
+        assert_eq!(Threshold::None.cap(), usize::MAX);
+        assert_eq!(Threshold::PerNode(3).cap(), 3);
+    }
+
+    #[test]
+    fn empty_traffic_matrix_safe() {
+        let t = TrafficMatrix::zeros(4);
+        assert_eq!(eq2(&t, 16), 1);
+        assert_eq!(decide(&t, 16.0, 16), Threshold::None);
+    }
+}

@@ -1,0 +1,96 @@
+//! Crate-wide error type.
+//!
+//! Every fallible public API in `nicmap` returns [`Result<T>`]. Variants are
+//! deliberately coarse: callers dispatch on *category* (bad spec vs. runtime
+//! vs. simulation), not on individual failure sites.
+
+use thiserror::Error;
+
+/// Crate-wide error enum.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Workload / cluster specification is syntactically or semantically bad.
+    #[error("spec error: {0}")]
+    Spec(String),
+
+    /// A mapping request cannot be satisfied (e.g. more processes than cores).
+    #[error("mapping error: {0}")]
+    Mapping(String),
+
+    /// Simulation-level inconsistency (should indicate a bug, not bad input).
+    #[error("simulation error: {0}")]
+    Sim(String),
+
+    /// PJRT / AOT artifact problems (missing artifacts, shape mismatch, ...).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// CLI argument problems.
+    #[error("usage error: {0}")]
+    Usage(String),
+
+    /// Underlying XLA error surfaced by the `xla` crate.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// I/O while loading specs or artifacts.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build a [`Error::Spec`] from anything displayable.
+    pub fn spec(msg: impl std::fmt::Display) -> Self {
+        Error::Spec(msg.to_string())
+    }
+
+    /// Build a [`Error::Mapping`] from anything displayable.
+    pub fn mapping(msg: impl std::fmt::Display) -> Self {
+        Error::Mapping(msg.to_string())
+    }
+
+    /// Build a [`Error::Sim`] from anything displayable.
+    pub fn sim(msg: impl std::fmt::Display) -> Self {
+        Error::Sim(msg.to_string())
+    }
+
+    /// Build a [`Error::Runtime`] from anything displayable.
+    pub fn runtime(msg: impl std::fmt::Display) -> Self {
+        Error::Runtime(msg.to_string())
+    }
+
+    /// Build a [`Error::Usage`] from anything displayable.
+    pub fn usage(msg: impl std::fmt::Display) -> Self {
+        Error::Usage(msg.to_string())
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_category() {
+        assert!(Error::spec("bad").to_string().starts_with("spec error"));
+        assert!(Error::mapping("x").to_string().starts_with("mapping error"));
+        assert!(Error::sim("x").to_string().starts_with("simulation error"));
+        assert!(Error::runtime("x").to_string().starts_with("runtime error"));
+        assert!(Error::usage("x").to_string().starts_with("usage error"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

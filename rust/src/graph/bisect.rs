@@ -1,0 +1,341 @@
+//! Graph bisection: BFS-grown initial partition + Fiduccia–Mattheyses
+//! refinement, and the recursive driver DRB uses.
+
+use crate::graph::csr::Graph;
+
+/// Tuning knobs for one bisection.
+#[derive(Debug, Clone, Copy)]
+pub struct BisectConfig {
+    /// Target weight fraction of side 0 (0.5 = balanced halves).
+    pub target_frac: f64,
+    /// Allowed imbalance: side-0 weight may deviate from target by this
+    /// fraction of total weight.
+    pub tolerance: f64,
+    /// Max FM refinement passes.
+    pub max_passes: usize,
+}
+
+impl Default for BisectConfig {
+    fn default() -> Self {
+        BisectConfig { target_frac: 0.5, tolerance: 0.02, max_passes: 8 }
+    }
+}
+
+/// BFS-grow an initial side-0 region up to the target weight, starting from
+/// a pseudo-peripheral vertex; unreached vertices (disconnected components)
+/// are appended by index until the target is met.
+fn initial_partition(g: &Graph, cfg: &BisectConfig) -> Vec<u8> {
+    let n = g.len();
+    let total: f64 = (0..n).map(|v| g.vertex_weight(v)).sum();
+    let target = total * cfg.target_frac;
+    let mut side = vec![1u8; n];
+    if n == 0 {
+        return side;
+    }
+
+    // Pseudo-peripheral start: BFS from vertex 0, take the farthest vertex.
+    let start = {
+        let mut seen = vec![false; n];
+        let mut q = std::collections::VecDeque::from([0usize]);
+        seen[0] = true;
+        let mut last = 0;
+        while let Some(v) = q.pop_front() {
+            last = v;
+            for (u, _) in g.neighbors(v) {
+                if !seen[u] {
+                    seen[u] = true;
+                    q.push_back(u);
+                }
+            }
+        }
+        last
+    };
+
+    let mut grown = 0.0;
+    let mut seen = vec![false; n];
+    let mut q = std::collections::VecDeque::from([start]);
+    seen[start] = true;
+    while let Some(v) = q.pop_front() {
+        if grown >= target {
+            break;
+        }
+        side[v] = 0;
+        grown += g.vertex_weight(v);
+        // Visit heaviest edges first so tightly-coupled vertices co-locate.
+        let mut nb: Vec<(usize, f64)> = g.neighbors(v).filter(|&(u, _)| !seen[u]).collect();
+        nb.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        for (u, _) in nb {
+            seen[u] = true;
+            q.push_back(u);
+        }
+    }
+    // Disconnected leftovers.
+    for v in 0..n {
+        if grown >= target {
+            break;
+        }
+        if side[v] == 1 && !seen[v] {
+            side[v] = 0;
+            grown += g.vertex_weight(v);
+        }
+    }
+    side
+}
+
+/// One FM pass: repeatedly move the best-gain movable vertex (respecting the
+/// balance constraint), allowing negative-gain moves to escape local minima,
+/// then roll back to the best prefix. Returns the cut improvement.
+fn fm_pass(g: &Graph, side: &mut [u8], cfg: &BisectConfig) -> f64 {
+    let n = g.len();
+    let total: f64 = (0..n).map(|v| g.vertex_weight(v)).sum();
+    let target0 = total * cfg.target_frac;
+    let tol = total * cfg.tolerance + f64::EPSILON;
+    let mut w0: f64 = (0..n).filter(|&v| side[v] == 0).map(|v| g.vertex_weight(v)).sum();
+
+    // gain[v] = cut reduction if v switches sides.
+    let mut gain = vec![0.0f64; n];
+    for v in 0..n {
+        for (u, w) in g.neighbors(v) {
+            if side[u] != side[v] {
+                gain[v] += w;
+            } else {
+                gain[v] -= w;
+            }
+        }
+    }
+
+    let mut locked = vec![false; n];
+    let mut order: Vec<usize> = Vec::with_capacity(n);
+    let mut cum = 0.0;
+    let mut best_cum = 0.0;
+    let mut best_len = 0;
+
+    for _ in 0..n {
+        // Pick the best movable vertex keeping balance within tolerance.
+        let mut best: Option<(usize, f64)> = None;
+        for v in 0..n {
+            if locked[v] {
+                continue;
+            }
+            let vw = g.vertex_weight(v);
+            let new_w0 = if side[v] == 0 { w0 - vw } else { w0 + vw };
+            if (new_w0 - target0).abs() > tol {
+                continue;
+            }
+            match best {
+                Some((_, bg)) if gain[v] <= bg => {}
+                _ => best = Some((v, gain[v])),
+            }
+        }
+        let Some((v, gv)) = best else { break };
+        // Apply the move.
+        let vw = g.vertex_weight(v);
+        w0 = if side[v] == 0 { w0 - vw } else { w0 + vw };
+        side[v] = 1 - side[v];
+        locked[v] = true;
+        cum += gv;
+        order.push(v);
+        if cum > best_cum + 1e-12 {
+            best_cum = cum;
+            best_len = order.len();
+        }
+        // Update neighbour gains.
+        gain[v] = -gain[v];
+        for (u, w) in g.neighbors(v) {
+            if side[u] == side[v] {
+                gain[u] -= 2.0 * w;
+            } else {
+                gain[u] += 2.0 * w;
+            }
+        }
+    }
+
+    // Roll back past the best prefix.
+    for &v in &order[best_len..] {
+        side[v] = 1 - side[v];
+    }
+    best_cum
+}
+
+/// Bisect `g` into sides {0, 1}. Returns the side assignment.
+pub fn bisect(g: &Graph, cfg: &BisectConfig) -> Vec<u8> {
+    let mut side = initial_partition(g, cfg);
+    for _ in 0..cfg.max_passes {
+        let improved = fm_pass(g, &mut side, cfg);
+        if improved <= 1e-12 {
+            break;
+        }
+    }
+    side
+}
+
+/// Recursive bisection of `g` into `k` parts with sizes `part_sizes`
+/// (in vertices; must sum to `g.len()`). Returns `part[v] in 0..k`.
+///
+/// This is the DRB scheme: split the part-size vector in half, bisect the
+/// graph with the matching weight fraction, recurse on each side. Part ids
+/// are assigned in `part_sizes` order, which lets the caller align them
+/// with a recursive bisection of the topology graph.
+pub fn recursive_bisection(g: &Graph, part_sizes: &[usize]) -> Vec<usize> {
+    assert_eq!(part_sizes.iter().sum::<usize>(), g.len(), "part sizes must cover the graph");
+    let mut part = vec![0usize; g.len()];
+    let verts: Vec<usize> = (0..g.len()).collect();
+    recurse(g, &verts, part_sizes, 0, &mut part);
+    part
+}
+
+fn recurse(g: &Graph, verts: &[usize], sizes: &[usize], first_part: usize, out: &mut [usize]) {
+    if sizes.len() <= 1 {
+        for &v in verts {
+            out[v] = first_part;
+        }
+        return;
+    }
+    let mid = sizes.len() / 2;
+    let left: usize = sizes[..mid].iter().sum();
+    let (sub, back) = g.subgraph(verts);
+    let cfg = BisectConfig {
+        target_frac: left as f64 / verts.len().max(1) as f64,
+        ..Default::default()
+    };
+    let mut side = bisect(&sub, &cfg);
+
+    // Enforce the exact left size (FM tolerance may be off by a vertex or
+    // two): move the lowest-cost vertices across.
+    let count0 = side.iter().filter(|&&s| s == 0).count();
+    fix_exact(&sub, &mut side, count0 as isize - left as isize);
+
+    let lv: Vec<usize> = back.iter().enumerate().filter(|(i, _)| side[*i] == 0).map(|(_, &v)| v).collect();
+    let rv: Vec<usize> = back.iter().enumerate().filter(|(i, _)| side[*i] == 1).map(|(_, &v)| v).collect();
+    debug_assert_eq!(lv.len(), left);
+    recurse(g, &lv, &sizes[..mid], first_part, out);
+    recurse(g, &rv, &sizes[mid..], first_part + mid, out);
+}
+
+/// Move `excess` vertices from side 0 to 1 (or -excess from 1 to 0),
+/// choosing lowest-cut-increase vertices each time.
+fn fix_exact(g: &Graph, side: &mut [u8], mut excess: isize) {
+    while excess != 0 {
+        let from: u8 = if excess > 0 { 0 } else { 1 };
+        let mut best: Option<(usize, f64)> = None;
+        for v in 0..g.len() {
+            if side[v] != from {
+                continue;
+            }
+            let mut gain = 0.0;
+            for (u, w) in g.neighbors(v) {
+                if side[u] != side[v] {
+                    gain += w;
+                } else {
+                    gain -= w;
+                }
+            }
+            match best {
+                Some((_, bg)) if gain <= bg => {}
+                _ => best = Some((v, gain)),
+            }
+        }
+        let Some((v, _)) = best else { break };
+        side[v] = 1 - side[v];
+        excess += if from == 0 { -1 } else { 1 };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::Graph;
+
+    /// Two 4-cliques joined by one weak edge — the classic bisection case.
+    fn two_cliques() -> Graph {
+        let mut edges = Vec::new();
+        for c in 0..2 {
+            let base = c * 4;
+            for i in 0..4 {
+                for j in (i + 1)..4 {
+                    edges.push((base + i, base + j, 10.0));
+                }
+            }
+        }
+        edges.push((3, 4, 1.0));
+        Graph::from_edges(8, &edges)
+    }
+
+    #[test]
+    fn bisect_finds_the_weak_edge() {
+        let g = two_cliques();
+        let side = bisect(&g, &BisectConfig::default());
+        assert_eq!(g.cut_weight(&side), 1.0);
+        // The cliques end up on opposite sides.
+        assert!(side[..4].iter().all(|&s| s == side[0]));
+        assert!(side[4..].iter().all(|&s| s == side[4]));
+        assert_ne!(side[0], side[4]);
+    }
+
+    #[test]
+    fn bisect_respects_balance() {
+        let g = two_cliques();
+        let side = bisect(&g, &BisectConfig::default());
+        let c0 = side.iter().filter(|&&s| s == 0).count();
+        assert_eq!(c0, 4);
+    }
+
+    #[test]
+    fn bisect_unbalanced_target() {
+        // Path of 8; ask for 2/6 split.
+        let edges: Vec<_> = (0..7).map(|i| (i, i + 1, 1.0)).collect();
+        let g = Graph::from_edges(8, &edges);
+        let part = recursive_bisection(&g, &[2, 6]);
+        let c0 = part.iter().filter(|&&p| p == 0).count();
+        assert_eq!(c0, 2);
+        // A contiguous pair costs cut 1; accept <= 2 (FM is a heuristic).
+        let side: Vec<u8> = part.iter().map(|&p| p as u8).collect();
+        assert!(g.cut_weight(&side) <= 2.0);
+    }
+
+    #[test]
+    fn recursive_bisection_exact_sizes() {
+        let g = two_cliques();
+        let part = recursive_bisection(&g, &[3, 3, 2]);
+        let mut counts = [0usize; 3];
+        for &p in &part {
+            counts[p] += 1;
+        }
+        assert_eq!(counts, [3, 3, 2]);
+    }
+
+    #[test]
+    fn recursive_bisection_singletons() {
+        let g = two_cliques();
+        let part = recursive_bisection(&g, &[1; 8]);
+        let mut seen = part.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single_vertex() {
+        let g = Graph::from_edges(0, &[]);
+        assert!(recursive_bisection(&g, &[]).is_empty());
+        let g = Graph::from_edges(1, &[]);
+        assert_eq!(recursive_bisection(&g, &[1]), vec![0]);
+    }
+
+    #[test]
+    fn disconnected_graph_partitions_fully() {
+        let g = Graph::from_edges(6, &[(0, 1, 1.0), (2, 3, 1.0)]); // 4,5 isolated
+        let part = recursive_bisection(&g, &[3, 3]);
+        let c0 = part.iter().filter(|&&p| p == 0).count();
+        assert_eq!(c0, 3);
+    }
+
+    #[test]
+    fn ring_bisection_cut_two() {
+        let n = 16;
+        let edges: Vec<_> = (0..n).map(|i| (i, (i + 1) % n, 1.0)).collect();
+        let g = Graph::from_edges(n, &edges);
+        let side = bisect(&g, &BisectConfig::default());
+        // Optimal ring bisection cuts exactly 2 edges.
+        assert_eq!(g.cut_weight(&side), 2.0);
+    }
+}

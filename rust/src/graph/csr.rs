@@ -1,0 +1,200 @@
+//! Compressed-sparse-row weighted undirected graph.
+
+use crate::model::traffic::TrafficMatrix;
+
+/// Undirected weighted graph in CSR form. Edge weights are f64 (byte rates
+/// when built from a traffic matrix).
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// `offsets[v]..offsets[v+1]` indexes `adj`/`weights` for vertex `v`.
+    offsets: Vec<usize>,
+    /// Neighbour vertex ids.
+    adj: Vec<usize>,
+    /// Edge weights, parallel to `adj`.
+    weights: Vec<f64>,
+    /// Vertex weights (1.0 for process graphs; core counts for CTGs).
+    vwts: Vec<f64>,
+}
+
+impl Graph {
+    /// Build from an edge list; duplicate `(u, v)` contributions accumulate.
+    /// Edges are symmetrized: `(u, v, w)` adds `w` in both directions.
+    pub fn from_edges(n: usize, edges: &[(usize, usize, f64)]) -> Self {
+        let mut acc: Vec<std::collections::BTreeMap<usize, f64>> = vec![Default::default(); n];
+        for &(u, v, w) in edges {
+            if u == v || w <= 0.0 {
+                continue;
+            }
+            *acc[u].entry(v).or_insert(0.0) += w;
+            *acc[v].entry(u).or_insert(0.0) += w;
+        }
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut adj = Vec::new();
+        let mut weights = Vec::new();
+        offsets.push(0);
+        for m in &acc {
+            for (&v, &w) in m {
+                adj.push(v);
+                weights.push(w);
+            }
+            offsets.push(adj.len());
+        }
+        Graph { offsets, adj, weights, vwts: vec![1.0; n] }
+    }
+
+    /// Build the application graph from a traffic matrix (symmetrized byte
+    /// rates as edge weights).
+    pub fn from_traffic(t: &TrafficMatrix) -> Self {
+        let n = t.len();
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let w = t.between(i, j);
+                if w > 0.0 {
+                    edges.push((i, j, w));
+                }
+            }
+        }
+        Self::from_edges(n, &edges)
+    }
+
+    /// Vertex count.
+    pub fn len(&self) -> usize {
+        self.vwts.len()
+    }
+
+    /// True for the empty graph.
+    pub fn is_empty(&self) -> bool {
+        self.vwts.is_empty()
+    }
+
+    /// Neighbours of `v` with weights.
+    pub fn neighbors(&self, v: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let r = self.offsets[v]..self.offsets[v + 1];
+        self.adj[r.clone()].iter().copied().zip(self.weights[r].iter().copied())
+    }
+
+    /// Degree of `v`.
+    pub fn degree(&self, v: usize) -> usize {
+        self.offsets[v + 1] - self.offsets[v]
+    }
+
+    /// Vertex weight.
+    pub fn vertex_weight(&self, v: usize) -> f64 {
+        self.vwts[v]
+    }
+
+    /// Override vertex weights (must match vertex count).
+    pub fn with_vertex_weights(mut self, w: Vec<f64>) -> Self {
+        assert_eq!(w.len(), self.len());
+        self.vwts = w;
+        self
+    }
+
+    /// Total edge weight (each undirected edge counted once).
+    pub fn total_edge_weight(&self) -> f64 {
+        self.weights.iter().sum::<f64>() / 2.0
+    }
+
+    /// Weight of edges crossing a 2-way partition (`side[v]` in {0, 1}).
+    pub fn cut_weight(&self, side: &[u8]) -> f64 {
+        let mut cut = 0.0;
+        for v in 0..self.len() {
+            for (u, w) in self.neighbors(v) {
+                if side[u] != side[v] {
+                    cut += w;
+                }
+            }
+        }
+        cut / 2.0
+    }
+
+    /// Induced subgraph over `verts`; returns the subgraph plus the map from
+    /// subgraph index to original vertex id.
+    pub fn subgraph(&self, verts: &[usize]) -> (Graph, Vec<usize>) {
+        let mut index = vec![usize::MAX; self.len()];
+        for (i, &v) in verts.iter().enumerate() {
+            index[v] = i;
+        }
+        let mut edges = Vec::new();
+        for (i, &v) in verts.iter().enumerate() {
+            for (u, w) in self.neighbors(v) {
+                let j = index[u];
+                if j != usize::MAX && j > i {
+                    edges.push((i, j, w));
+                }
+            }
+        }
+        let mut g = Graph::from_edges(verts.len(), &edges);
+        g.vwts = verts.iter().map(|&v| self.vwts[v]).collect();
+        (g, verts.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::pattern::Pattern;
+    use crate::model::workload::JobSpec;
+
+    fn path4() -> Graph {
+        Graph::from_edges(4, &[(0, 1, 1.0), (1, 2, 2.0), (2, 3, 3.0)])
+    }
+
+    #[test]
+    fn csr_shape() {
+        let g = path4();
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(1), 2);
+        let n1: Vec<_> = g.neighbors(1).collect();
+        assert_eq!(n1, vec![(0, 1.0), (2, 2.0)]);
+        assert_eq!(g.total_edge_weight(), 6.0);
+    }
+
+    #[test]
+    fn duplicate_edges_accumulate() {
+        let g = Graph::from_edges(2, &[(0, 1, 1.0), (1, 0, 2.0)]);
+        let n0: Vec<_> = g.neighbors(0).collect();
+        assert_eq!(n0, vec![(1, 3.0)]);
+    }
+
+    #[test]
+    fn self_loops_and_nonpositive_dropped() {
+        let g = Graph::from_edges(3, &[(0, 0, 5.0), (0, 1, 0.0), (1, 2, -1.0)]);
+        assert_eq!(g.total_edge_weight(), 0.0);
+        assert_eq!(g.degree(0), 0);
+    }
+
+    #[test]
+    fn cut_weight_basics() {
+        let g = path4();
+        assert_eq!(g.cut_weight(&[0, 0, 1, 1]), 2.0);
+        assert_eq!(g.cut_weight(&[0, 1, 0, 1]), 6.0);
+        assert_eq!(g.cut_weight(&[0, 0, 0, 0]), 0.0);
+    }
+
+    #[test]
+    fn from_traffic_symmetrizes() {
+        let j = JobSpec::synthetic(Pattern::Linear, 4, 1000, 2.0, 10);
+        let t = crate::model::traffic::TrafficMatrix::of_job(&j);
+        let g = Graph::from_traffic(&t);
+        // Linear chain: edges (0,1),(1,2),(2,3) each 2000 B/s one-way.
+        assert_eq!(g.degree(1), 2);
+        let w01 = g.neighbors(0).next().unwrap().1;
+        assert_eq!(w01, 2000.0);
+    }
+
+    #[test]
+    fn subgraph_preserves_weights() {
+        let g = path4();
+        let (sub, back) = g.subgraph(&[1, 2, 3]);
+        assert_eq!(sub.len(), 3);
+        assert_eq!(back, vec![1, 2, 3]);
+        // Edge (1,2) w=2 becomes (0,1); (2,3) w=3 becomes (1,2).
+        let n0: Vec<_> = sub.neighbors(0).collect();
+        assert_eq!(n0, vec![(1, 2.0)]);
+        let n1: Vec<_> = sub.neighbors(1).collect();
+        assert_eq!(n1, vec![(0, 2.0), (2, 3.0)]);
+    }
+}

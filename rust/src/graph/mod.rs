@@ -1,0 +1,14 @@
+//! Weighted undirected graphs and partitioning — the substrate for the DRB
+//! (dual recursive bipartitioning) baseline mapper.
+//!
+//! The paper extracts its DRB results from Scotch v5.1; Scotch is not
+//! available offline, so we implement the same algorithm family directly
+//! (DESIGN.md §2): greedy BFS-grown initial bisections refined with a
+//! Fiduccia–Mattheyses pass, applied recursively to the application graph
+//! and the cluster topology graph in lock-step.
+
+pub mod bisect;
+pub mod csr;
+
+pub use bisect::{bisect, recursive_bisection, BisectConfig};
+pub use csr::Graph;

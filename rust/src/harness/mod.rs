@@ -1,0 +1,228 @@
+//! Experiment harness — the code path shared by `cargo bench`, the CLI, and
+//! the examples to regenerate every table and figure of the paper
+//! (DESIGN.md §5 experiment index).
+
+use crate::coordinator::MapperKind;
+use crate::error::Result;
+use crate::model::npb;
+use crate::model::topology::ClusterSpec;
+use crate::model::workload::Workload;
+use crate::report::figure::{bar_chart, gain_pct};
+use crate::report::table::Table;
+use crate::sim::{simulate, SimConfig, SimReport};
+
+/// Which paper metric a figure reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    /// Figs 2/5: Σ message waiting time at NIC+memory queues (ms).
+    WaitingMs,
+    /// Fig 3: workload finish time (s).
+    WorkloadFinishS,
+    /// Fig 4: Σ job finish times (s).
+    TotalFinishS,
+}
+
+impl Metric {
+    /// Extract the metric value from a report.
+    pub fn of(&self, r: &SimReport) -> f64 {
+        match self {
+            Metric::WaitingMs => r.waiting_ms(),
+            Metric::WorkloadFinishS => r.workload_finish_s(),
+            Metric::TotalFinishS => r.total_finish_s(),
+        }
+    }
+
+    /// Axis label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Metric::WaitingMs => "waiting time (ms)",
+            Metric::WorkloadFinishS => "workload finish (s)",
+            Metric::TotalFinishS => "total job finish (s)",
+        }
+    }
+}
+
+/// One (workload × mapper) cell of a figure.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    /// Mapper used.
+    pub mapper: MapperKind,
+    /// Full simulation report (all three metrics extractable).
+    pub report: SimReport,
+    /// Mapper wall time, seconds.
+    pub map_secs: f64,
+}
+
+/// All mappers' results on one workload.
+#[derive(Debug, Clone)]
+pub struct WorkloadRun {
+    /// Workload name.
+    pub workload: String,
+    /// One cell per mapper, in [`MapperKind::PAPER`] order unless overridden.
+    pub cells: Vec<Cell>,
+}
+
+impl WorkloadRun {
+    /// Value of `metric` for `mapper`.
+    pub fn value(&self, mapper: MapperKind, metric: Metric) -> Option<f64> {
+        self.cells.iter().find(|c| c.mapper == mapper).map(|c| metric.of(&c.report))
+    }
+
+    /// Paper-style gain of `New` vs the best other mapper on `metric`.
+    pub fn new_gain_pct(&self, metric: Metric) -> f64 {
+        let new = match self.value(MapperKind::New, metric) {
+            Some(v) => v,
+            None => return 0.0,
+        };
+        let best_other = self
+            .cells
+            .iter()
+            .filter(|c| c.mapper != MapperKind::New)
+            .map(|c| metric.of(&c.report))
+            .fold(f64::INFINITY, f64::min);
+        if best_other.is_finite() {
+            gain_pct(new, best_other)
+        } else {
+            0.0
+        }
+    }
+
+    /// Render this workload as one bar group of a figure.
+    pub fn bar_group(&self, metric: Metric) -> String {
+        let entries: Vec<(String, f64)> = self
+            .cells
+            .iter()
+            .map(|c| (c.mapper.letter().to_string(), metric.of(&c.report)))
+            .collect();
+        bar_chart(&format!("{} — {}", self.workload, metric.label()), &entries, 40)
+    }
+}
+
+/// Simulate one workload under `mappers` on `cluster`.
+pub fn run_workload(
+    w: &Workload,
+    cluster: &ClusterSpec,
+    mappers: &[MapperKind],
+    cfg: &SimConfig,
+) -> Result<WorkloadRun> {
+    let mut cells = Vec::with_capacity(mappers.len());
+    for &kind in mappers {
+        let t0 = std::time::Instant::now();
+        let placement = kind.build().map(w, cluster)?;
+        let map_secs = t0.elapsed().as_secs_f64();
+        let report = simulate(w, &placement, cluster, cfg)?;
+        cells.push(Cell { mapper: kind, report, map_secs });
+    }
+    Ok(WorkloadRun { workload: w.name.clone(), cells })
+}
+
+/// The synthetic-figure driver (Figs 2, 3, 4 share the same runs).
+pub fn run_synthetic(cluster: &ClusterSpec, cfg: &SimConfig) -> Result<Vec<WorkloadRun>> {
+    Workload::all_synthetic()
+        .iter()
+        .map(|w| run_workload(w, cluster, &MapperKind::PAPER, cfg))
+        .collect()
+}
+
+/// The real-workload-figure driver (Fig 5).
+pub fn run_real(cluster: &ClusterSpec, cfg: &SimConfig) -> Result<Vec<WorkloadRun>> {
+    [
+        npb::real_workload_1(),
+        npb::real_workload_2(),
+        npb::real_workload_3(),
+        npb::real_workload_4(),
+    ]
+    .iter()
+    .map(|w| run_workload(w, cluster, &MapperKind::PAPER, cfg))
+    .collect()
+}
+
+/// Render a set of runs as a figure: bar groups + a summary table + gains.
+pub fn render_figure(title: &str, runs: &[WorkloadRun], metric: Metric) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("=== {title} — {} ===\n\n", metric.label()));
+    for run in runs {
+        out.push_str(&run.bar_group(metric));
+        out.push('\n');
+    }
+    let mut table = Table::new(vec![
+        "workload".to_string(),
+        "B".into(),
+        "C".into(),
+        "D".into(),
+        "N".into(),
+        "gain%".into(),
+    ]);
+    for run in runs {
+        let v = |k| run.value(k, metric).map_or("-".into(), |x| format!("{x:.1}"));
+        table.row(vec![
+            run.workload.clone(),
+            v(MapperKind::Blocked),
+            v(MapperKind::Cyclic),
+            v(MapperKind::Drb),
+            v(MapperKind::New),
+            format!("{:+.1}", run.new_gain_pct(metric)),
+        ]);
+    }
+    out.push_str(&table.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::pattern::Pattern;
+    use crate::model::workload::JobSpec;
+    use crate::units::KB;
+
+    fn tiny_run() -> WorkloadRun {
+        let cluster = ClusterSpec::small_test_cluster();
+        let w = Workload::new(
+            "tiny",
+            vec![JobSpec::synthetic(Pattern::AllToAll, 8, 64 * KB, 50.0, 5)],
+        )
+        .unwrap();
+        run_workload(&w, &cluster, &MapperKind::PAPER, &SimConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn run_produces_all_cells() {
+        let run = tiny_run();
+        assert_eq!(run.cells.len(), 4);
+        for kind in MapperKind::PAPER {
+            assert!(run.value(kind, Metric::WaitingMs).is_some());
+            assert!(run.value(kind, Metric::WorkloadFinishS).unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn gain_sign_consistency() {
+        let run = tiny_run();
+        let gain = run.new_gain_pct(Metric::WaitingMs);
+        let new = run.value(MapperKind::New, Metric::WaitingMs).unwrap();
+        let best_other = MapperKind::PAPER[..3]
+            .iter()
+            .map(|&k| run.value(k, Metric::WaitingMs).unwrap())
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(gain > 0.0, new < best_other);
+    }
+
+    #[test]
+    fn figure_renders_all_workloads() {
+        let run = tiny_run();
+        let fig = render_figure("Figure T", &[run], Metric::WaitingMs);
+        assert!(fig.contains("Figure T"));
+        assert!(fig.contains("tiny"));
+        assert!(fig.contains("gain%"));
+    }
+
+    #[test]
+    fn metric_labels_distinct() {
+        let labels: std::collections::BTreeSet<_> =
+            [Metric::WaitingMs, Metric::WorkloadFinishS, Metric::TotalFinishS]
+                .iter()
+                .map(|m| m.label())
+                .collect();
+        assert_eq!(labels.len(), 3);
+    }
+}

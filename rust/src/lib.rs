@@ -1,0 +1,52 @@
+//! # nicmap — NIC-contention-aware process mapping for multi-core clusters
+//!
+//! Production-quality reproduction of *"A Novel Process Mapping Strategy in
+//! Clustered Environments"* (Soryani, Analoui, Zarrinchian — IJGCA 2012),
+//! built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (Rust, this crate)** — the coordination contribution: the
+//!   paper's threshold-based mapping strategy ([`coordinator`]), the
+//!   baselines it is compared against (Blocked, Cyclic, DRB, K-way), a
+//!   deterministic discrete-event simulator of the 16-node InfiniBand
+//!   cluster the paper evaluates on ([`sim`]), and the workload models
+//!   ([`model`]) including an NPB communication characterization.
+//! * **Layer 2 (JAX, `python/compile/model.py`)** — the placement cost
+//!   model `M = AᵀTA` + NIC/demand/adjacency reductions, AOT-lowered once
+//!   to HLO text.
+//! * **Layer 1 (Pallas, `python/compile/kernels/`)** — MXU-tiled matmul and
+//!   reduction kernels inside that model.
+//!
+//! The Rust [`runtime`] loads the AOT artifacts via PJRT and exposes them to
+//! the mapping hot path ([`coordinator::refine`]); Python never runs at
+//! request time.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use nicmap::coordinator::{Mapper, MapperKind};
+//! use nicmap::model::topology::ClusterSpec;
+//! use nicmap::model::workload::Workload;
+//! use nicmap::sim::{simulate, SimConfig};
+//!
+//! let cluster = ClusterSpec::paper_cluster();
+//! let workload = Workload::builtin("synt3").unwrap();
+//! let placement = MapperKind::New.build().map(&workload, &cluster).unwrap();
+//! let report = simulate(&workload, &placement, &cluster, &SimConfig::default()).unwrap();
+//! println!("waiting time: {:.1} ms", report.waiting_ms());
+//! ```
+
+#![warn(missing_docs)]
+
+pub mod cli;
+pub mod coordinator;
+pub mod error;
+pub mod graph;
+pub mod harness;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+pub mod units;
+
+pub use error::{Error, Result};

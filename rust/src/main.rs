@@ -1,0 +1,17 @@
+//! `nicmap` binary — leader entrypoint; see `nicmap help`.
+
+use nicmap::cli::{main_with_args, Args};
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = main_with_args(args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,26 @@
+//! Cluster, workload, and traffic models — the inputs to mapping and
+//! simulation.
+//!
+//! * [`topology`] — the physical cluster: nodes × sockets × cores, NUMA
+//!   memory, per-socket cache, NIC, switch (paper Table 1 defaults).
+//! * [`pattern`] — the four communication patterns of the synthetic
+//!   workloads (§5.2) and their destination schedules.
+//! * [`workload`] — jobs and workloads, incl. builders for paper
+//!   Tables 2–5 (synthetic) and 6–9 (real).
+//! * [`npb`] — communication characterization of the NAS Parallel
+//!   Benchmarks used by the real workloads.
+//! * [`traffic`] — per-job and per-workload traffic matrices (the AG of the
+//!   graph-mapping literature) derived from the specs.
+//! * [`spec`] — a small text format to load custom clusters/workloads.
+
+pub mod npb;
+pub mod pattern;
+pub mod spec;
+pub mod topology;
+pub mod traffic;
+pub mod workload;
+
+pub use pattern::Pattern;
+pub use topology::{ClusterSpec, CoreId, NodeId, SocketId};
+pub use traffic::TrafficMatrix;
+pub use workload::{JobId, JobSpec, ProcId, Workload};

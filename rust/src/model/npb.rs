@@ -1,0 +1,368 @@
+//! Communication characterization of the NAS Parallel Benchmarks (NPB),
+//! used by the paper's real workloads (§5.3, Tables 6–9).
+//!
+//! **Substitution note (DESIGN.md §2):** the paper drives its simulator with
+//! communication *traces* of NPB runs that are not published.  We substitute
+//! a per-(benchmark, class, nprocs) characterization — dominant pattern(s),
+//! message size, send rate, and round count — distilled from the public NPB
+//! communication-behaviour literature (e.g. Faraj & Yuan, ICS'02; Wong et
+//! al., NAS tech. reports).  The paper itself only exploits aggregate
+//! behaviour: which benchmarks are all-to-all heavy (IS, FT), which are
+//! neighbour-dominated (BT, SP, LU, CG, MG) and which barely communicate
+//! (EP) — exactly what the characterization preserves:
+//!
+//! * **IS** — integer sort: bucket redistribution is an all-to-all of key
+//!   blocks every iteration; message size shrinks with P, grows ~4× from
+//!   class B to C.  Communication-dominated.
+//! * **FT** — 3-D FFT: global transpose = all-to-all with large messages,
+//!   the heaviest communicator in the suite.
+//! * **CG** — conjugate gradient: row/column neighbour exchanges (modelled
+//!   Linear), medium messages at high rate.
+//! * **MG** — multigrid: neighbour exchanges across grid levels (Linear)
+//!   plus small reduction traffic (Gather/Reduce).
+//! * **BT**, **SP** — ADI stencil solvers on a square process grid:
+//!   face exchanges with the next rank (modelled Linear), medium messages.
+//! * **LU** — SSOR wavefront: many small neighbour messages (Linear, 2 KB —
+//!   the paper's "small" class).
+//! * **EP** — embarrassingly parallel: a final tiny reduction only.
+
+use crate::error::{Error, Result};
+use crate::model::pattern::Pattern;
+use crate::model::workload::{FlowSpec, JobSpec, Workload};
+use crate::units::{Bytes, KB};
+
+/// NPB benchmark kernels used by the paper's real workloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Benchmark {
+    /// Block tri-diagonal ADI solver (5-point stencil on a square grid).
+    BT,
+    /// Conjugate gradient.
+    CG,
+    /// Embarrassingly parallel.
+    EP,
+    /// 3-D FFT (global transpose all-to-all).
+    FT,
+    /// Integer sort (bucketed all-to-all).
+    IS,
+    /// LU / SSOR wavefront solver.
+    LU,
+    /// Multigrid.
+    MG,
+    /// Scalar penta-diagonal ADI solver.
+    SP,
+}
+
+/// NPB problem classes used by the paper (B and C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Class {
+    /// Class B.
+    B,
+    /// Class C (≈ 4× the data volume of B).
+    C,
+}
+
+impl Benchmark {
+    /// Parse `"IS"`, `"ft"`, ...
+    pub fn parse(s: &str) -> Option<Benchmark> {
+        match s.trim().to_ascii_uppercase().as_str() {
+            "BT" => Some(Benchmark::BT),
+            "CG" => Some(Benchmark::CG),
+            "EP" => Some(Benchmark::EP),
+            "FT" => Some(Benchmark::FT),
+            "IS" => Some(Benchmark::IS),
+            "LU" => Some(Benchmark::LU),
+            "MG" => Some(Benchmark::MG),
+            "SP" => Some(Benchmark::SP),
+            _ => None,
+        }
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Benchmark::BT => "BT",
+            Benchmark::CG => "CG",
+            Benchmark::EP => "EP",
+            Benchmark::FT => "FT",
+            Benchmark::IS => "IS",
+            Benchmark::LU => "LU",
+            Benchmark::MG => "MG",
+            Benchmark::SP => "SP",
+        }
+    }
+}
+
+impl Class {
+    /// Parse `"B"` / `"C"`.
+    pub fn parse(s: &str) -> Option<Class> {
+        match s.trim().to_ascii_uppercase().as_str() {
+            "B" => Some(Class::B),
+            "C" => Some(Class::C),
+            _ => None,
+        }
+    }
+
+    /// Data-volume multiplier relative to class B.
+    pub fn scale(&self) -> u64 {
+        match self {
+            Class::B => 1,
+            Class::C => 4,
+        }
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Class::B => "B",
+            Class::C => "C",
+        }
+    }
+}
+
+/// Reference process count the base message sizes below are quoted at.
+/// Sizes scale ∝ 1/P around this (fixed problem ⇒ smaller pieces per rank).
+const REF_PROCS: usize = 32;
+
+/// Scale a class-B @ 32-rank base message size to (class, nprocs).
+fn scaled(base_b32: Bytes, class: Class, procs: usize) -> Bytes {
+    let v = base_b32 as u128 * class.scale() as u128 * REF_PROCS as u128 / procs.max(1) as u128;
+    (v as u64).max(64)
+}
+
+/// Build the communication flows for one NPB job.
+///
+/// Rates are per-round (DESIGN.md §9 send semantics) and round counts are
+/// chosen so every benchmark runs a comparable simulated span (~20–60 s).
+pub fn flows(bench: Benchmark, class: Class, procs: usize) -> Vec<FlowSpec> {
+    match bench {
+        // FT: heaviest all-to-all (global transpose), ~5 transposes/s.
+        Benchmark::FT => vec![FlowSpec::new(
+            Pattern::AllToAll,
+            scaled(256 * KB, class, procs),
+            5.0,
+            300,
+        )],
+        // IS: all-to-all key redistribution, smaller but more frequent.
+        Benchmark::IS => vec![FlowSpec::new(
+            Pattern::AllToAll,
+            scaled(64 * KB, class, procs),
+            20.0,
+            600,
+        )],
+        // CG: neighbour exchange chain, medium messages, high rate.
+        Benchmark::CG => vec![FlowSpec::new(
+            Pattern::Linear,
+            scaled(128 * KB, class, procs),
+            50.0,
+            2000,
+        )],
+        // MG: neighbour exchanges + small reductions.
+        Benchmark::MG => vec![
+            FlowSpec::new(Pattern::Linear, scaled(64 * KB, class, procs), 20.0, 800),
+            FlowSpec::new(Pattern::GatherReduce, 2 * KB, 20.0, 800),
+        ],
+        // BT: stencil face exchanges.
+        Benchmark::BT => vec![FlowSpec::new(
+            Pattern::Linear,
+            scaled(120 * KB, class, procs),
+            25.0,
+            1500,
+        )],
+        // SP: stencil face exchanges (slightly smaller, faster cadence).
+        Benchmark::SP => vec![FlowSpec::new(
+            Pattern::Linear,
+            scaled(100 * KB, class, procs),
+            30.0,
+            1500,
+        )],
+        // LU: wavefront — many tiny messages (the paper's "small" class).
+        Benchmark::LU => vec![FlowSpec::new(Pattern::Linear, 2 * KB, 150.0, 3000)],
+        // EP: a final tiny reduction; essentially no communication.
+        Benchmark::EP => vec![FlowSpec::new(Pattern::GatherReduce, KB, 5.0, 20)],
+    }
+}
+
+/// Build one NPB job spec (`"IS.C.32"`-style name).
+pub fn job(bench: Benchmark, class: Class, procs: usize) -> JobSpec {
+    JobSpec {
+        name: format!("{}.{}.{}", bench.name(), class.name(), procs),
+        procs,
+        flows: flows(bench, class, procs),
+    }
+}
+
+/// Parse an NPB job from `"IS C 32"` or `"IS.C.32"` notation.
+pub fn parse_job(s: &str) -> Result<JobSpec> {
+    let parts: Vec<&str> = s.split(['.', ' ', '/']).filter(|p| !p.is_empty()).collect();
+    if parts.len() != 3 {
+        return Err(Error::spec(format!("bad NPB job spec {s:?} (want BENCH.CLASS.PROCS)")));
+    }
+    let bench = Benchmark::parse(parts[0])
+        .ok_or_else(|| Error::spec(format!("unknown NPB benchmark {:?}", parts[0])))?;
+    let class = Class::parse(parts[1])
+        .ok_or_else(|| Error::spec(format!("unknown NPB class {:?}", parts[1])))?;
+    let procs: usize = parts[2]
+        .parse()
+        .map_err(|_| Error::spec(format!("bad proc count {:?}", parts[2])))?;
+    Ok(job(bench, class, procs))
+}
+
+/// Paper Table 6.
+pub fn real_workload_1() -> Workload {
+    use Benchmark::*;
+    use Class::*;
+    let rows: [(Benchmark, Class, usize); 9] = [
+        (SP, C, 25),
+        (IS, C, 32),
+        (FT, B, 32),
+        (FT, B, 16),
+        (IS, C, 16),
+        (CG, C, 32),
+        (IS, B, 8),
+        (BT, C, 25),
+        (CG, B, 16),
+    ];
+    Workload {
+        name: "real_workload_1".into(),
+        jobs: rows.iter().map(|&(b, c, p)| job(b, c, p)).collect(),
+    }
+}
+
+/// Paper Table 7.
+pub fn real_workload_2() -> Workload {
+    use Benchmark::*;
+    use Class::*;
+    let rows: [(Benchmark, Class, usize); 9] = [
+        (IS, B, 8),
+        (FT, B, 32),
+        (IS, C, 32),
+        (MG, C, 32),
+        (CG, C, 32),
+        (IS, B, 32),
+        (MG, B, 32),
+        (CG, B, 32),
+        (BT, C, 16),
+    ];
+    Workload {
+        name: "real_workload_2".into(),
+        jobs: rows.iter().map(|&(b, c, p)| job(b, c, p)).collect(),
+    }
+}
+
+/// Paper Table 8 (all class B — the "medium" workload).
+pub fn real_workload_3() -> Workload {
+    use Benchmark::*;
+    use Class::*;
+    let rows: [(Benchmark, Class, usize); 8] = [
+        (BT, B, 25),
+        (CG, B, 32),
+        (EP, B, 32),
+        (FT, B, 32),
+        (IS, B, 32),
+        (LU, B, 25),
+        (MG, B, 32),
+        (SP, B, 25),
+    ];
+    Workload {
+        name: "real_workload_3".into(),
+        jobs: rows.iter().map(|&(b, c, p)| job(b, c, p)).collect(),
+    }
+}
+
+/// Paper Table 9 (light communication).
+pub fn real_workload_4() -> Workload {
+    use Benchmark::*;
+    use Class::*;
+    let rows: [(Benchmark, Class, usize); 4] =
+        [(SP, C, 25), (CG, C, 32), (EP, C, 32), (MG, C, 32)];
+    Workload {
+        name: "real_workload_4".into(),
+        jobs: rows.iter().map(|&(b, c, p)| job(b, c, p)).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::workload::SizeClass;
+
+    #[test]
+    fn parse_round_trips() {
+        let j = parse_job("IS.C.32").unwrap();
+        assert_eq!(j.name, "IS.C.32");
+        assert_eq!(j.procs, 32);
+        let j = parse_job("ft b 16").unwrap();
+        assert_eq!(j.name, "FT.B.16");
+        assert!(parse_job("XX.B.16").is_err());
+        assert!(parse_job("IS.Z.16").is_err());
+        assert!(parse_job("IS.B").is_err());
+    }
+
+    #[test]
+    fn class_c_is_4x_b() {
+        let b = job(Benchmark::FT, Class::B, 32);
+        let c = job(Benchmark::FT, Class::C, 32);
+        assert_eq!(c.largest_msg(), 4 * b.largest_msg());
+    }
+
+    #[test]
+    fn sizes_scale_inverse_with_procs() {
+        let p16 = job(Benchmark::IS, Class::B, 16);
+        let p32 = job(Benchmark::IS, Class::B, 32);
+        assert_eq!(p16.largest_msg(), 2 * p32.largest_msg());
+    }
+
+    #[test]
+    fn is_ft_are_all_to_all() {
+        for b in [Benchmark::IS, Benchmark::FT] {
+            let j = job(b, Class::B, 32);
+            assert!(j.flows.iter().any(|f| f.pattern == Pattern::AllToAll));
+        }
+    }
+
+    #[test]
+    fn ep_is_negligible() {
+        let ep = job(Benchmark::EP, Class::C, 32);
+        let is = job(Benchmark::IS, Class::B, 32);
+        assert!(ep.total_bytes() * 100 < is.total_bytes());
+    }
+
+    #[test]
+    fn lu_is_small_class() {
+        assert_eq!(job(Benchmark::LU, Class::B, 25).size_class(), SizeClass::Small);
+    }
+
+    #[test]
+    fn is_c_large_class_at_16_procs() {
+        // IS.C.16: 64KB * 4 (class C) * 2 (16 vs 32 ranks) = 512KB -> Medium;
+        // IS.C.8 doubles again -> 1MB -> Large.
+        assert_eq!(job(Benchmark::IS, Class::C, 16).size_class(), SizeClass::Medium);
+        assert_eq!(job(Benchmark::IS, Class::C, 8).size_class(), SizeClass::Large);
+    }
+
+    #[test]
+    fn real_workloads_match_tables() {
+        let w1 = real_workload_1();
+        assert_eq!(w1.jobs.len(), 9);
+        assert_eq!(w1.total_procs(), 25 + 32 + 32 + 16 + 16 + 32 + 8 + 25 + 16);
+        let w2 = real_workload_2();
+        assert_eq!(w2.jobs.len(), 9);
+        assert_eq!(w2.total_procs(), 8 + 32 + 32 + 32 + 32 + 32 + 32 + 32 + 16);
+        let w3 = real_workload_3();
+        assert_eq!(w3.jobs.len(), 8);
+        assert_eq!(w3.total_procs(), 25 + 32 + 32 + 32 + 32 + 25 + 32 + 25);
+        let w4 = real_workload_4();
+        assert_eq!(w4.jobs.len(), 4);
+        assert_eq!(w4.total_procs(), 25 + 32 + 32 + 32);
+        for w in [w1, w2, w3, w4] {
+            w.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn heavy_workloads_heavier_than_light() {
+        let heavy: u128 = real_workload_2().jobs.iter().map(|j| j.total_bytes()).sum();
+        let light: u128 = real_workload_4().jobs.iter().map(|j| j.total_bytes()).sum();
+        assert!(heavy > 2 * light, "heavy {heavy} vs light {light}");
+    }
+}

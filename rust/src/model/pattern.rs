@@ -1,0 +1,320 @@
+//! Communication patterns of the synthetic workloads (paper §5.2).
+//!
+//! Four patterns, quoted from the paper:
+//!
+//! * **Gather/Reduce** — "one process as the root process receives messages
+//!   from other processes and other processes are just senders."
+//! * **Bcast/Scatter** — "one process as the root process sends its messages
+//!   to other processes and other processes are just receivers."
+//! * **Linear** — "each process receives messages from a previous process and
+//!   sends its messages to a next process."
+//! * **All-to-All** — "each process sends messages to all other processes."
+//!
+//! Normative send semantics (DESIGN.md §9): the paper's `Message Count` is
+//! the number of messages each *sender* transmits; destinations follow the
+//! pattern's schedule (round-robin over the peer set where the pattern allows
+//! more than one peer).
+
+use crate::model::workload::ProcId;
+
+/// Communication pattern of one parallel job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Pattern {
+    /// Every process sends to every other process (round-robin schedule).
+    AllToAll,
+    /// Rank 0 sends to ranks 1..P (round-robin); others only receive.
+    BcastScatter,
+    /// Ranks 1..P send to rank 0; rank 0 only receives.
+    GatherReduce,
+    /// Rank i sends to rank i+1; the last rank only receives.
+    Linear,
+}
+
+impl Pattern {
+    /// All patterns, in the order the paper's workload tables use them.
+    pub const ALL: [Pattern; 4] = [
+        Pattern::AllToAll,
+        Pattern::BcastScatter,
+        Pattern::GatherReduce,
+        Pattern::Linear,
+    ];
+
+    /// Short display name used in reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pattern::AllToAll => "All-to-All",
+            Pattern::BcastScatter => "Bcast/Scatter",
+            Pattern::GatherReduce => "Gather/Reduce",
+            Pattern::Linear => "Linear",
+        }
+    }
+
+    /// Parse a pattern name (accepts several spellings).
+    pub fn parse(s: &str) -> Option<Pattern> {
+        match s.trim().to_ascii_lowercase().replace(['_', ' '], "-").as_str() {
+            "all-to-all" | "alltoall" | "a2a" => Some(Pattern::AllToAll),
+            "bcast/scatter" | "bcast-scatter" | "bcast" | "scatter" => Some(Pattern::BcastScatter),
+            "gather/reduce" | "gather-reduce" | "gather" | "reduce" => Some(Pattern::GatherReduce),
+            "linear" | "ring" | "chain" => Some(Pattern::Linear),
+            _ => None,
+        }
+    }
+
+    /// Does local rank `rank` (0-based) of a `p`-process job send at all?
+    pub fn is_sender(&self, rank: usize, p: usize) -> bool {
+        match self {
+            Pattern::AllToAll => p > 1,
+            Pattern::BcastScatter => rank == 0 && p > 1,
+            Pattern::GatherReduce => rank != 0,
+            Pattern::Linear => rank + 1 < p,
+        }
+    }
+
+    /// Number of distinct destinations for local rank `rank` in a
+    /// `p`-process job (the rank's out-degree in the pattern graph).
+    pub fn out_degree(&self, rank: usize, p: usize) -> usize {
+        if !self.is_sender(rank, p) {
+            return 0;
+        }
+        match self {
+            Pattern::AllToAll => p - 1,
+            Pattern::BcastScatter => p - 1,
+            Pattern::GatherReduce => 1,
+            Pattern::Linear => 1,
+        }
+    }
+
+    /// Adjacency degree of local rank `rank`: distinct partners it sends to
+    /// *or* receives from — the `Adj_pi` of paper eq. 2.
+    pub fn adjacency(&self, rank: usize, p: usize) -> usize {
+        if p <= 1 {
+            return 0;
+        }
+        match self {
+            Pattern::AllToAll => p - 1,
+            Pattern::BcastScatter | Pattern::GatherReduce => {
+                if rank == 0 {
+                    p - 1
+                } else {
+                    1
+                }
+            }
+            Pattern::Linear => {
+                if p == 2 {
+                    1
+                } else if rank == 0 || rank == p - 1 {
+                    1
+                } else {
+                    2
+                }
+            }
+        }
+    }
+
+    /// Destination (local rank) of the `k`-th message sent by `rank`.
+    ///
+    /// Returns `None` when `rank` is a pure receiver. For multi-peer patterns
+    /// the schedule is round-robin starting at the next higher rank, which
+    /// spreads load evenly and is deterministic.
+    pub fn dest_of(&self, rank: usize, p: usize, k: u64) -> Option<ProcId> {
+        if !self.is_sender(rank, p) {
+            return None;
+        }
+        match self {
+            Pattern::AllToAll => {
+                let peers = p - 1;
+                let off = (k % peers as u64) as usize;
+                // Peers in cyclic order after `rank`, skipping self.
+                Some((rank + 1 + off) % p)
+            }
+            Pattern::BcastScatter => {
+                let peers = p - 1;
+                let off = (k % peers as u64) as usize;
+                Some(1 + off)
+            }
+            Pattern::GatherReduce => Some(0),
+            Pattern::Linear => Some(rank + 1),
+        }
+    }
+
+    /// Destination set (local ranks) rank `rank` sends to **each round**.
+    ///
+    /// Normative send semantics (DESIGN.md §9): a sender emits one message to
+    /// every destination in this set per `1/rate` interval, and finishes
+    /// after `count` rounds.  This is what makes the paper's loads contend:
+    /// an All-to-All process at 100 m/s pushes `(P-1) * 64 KB * 100/s`
+    /// through its node's NIC, not `64 KB * 100/s`.
+    pub fn dests(&self, rank: usize, p: usize) -> Vec<ProcId> {
+        if !self.is_sender(rank, p) {
+            return Vec::new();
+        }
+        match self {
+            Pattern::AllToAll => (0..p).filter(|&d| d != rank).collect(),
+            Pattern::BcastScatter => (1..p).collect(),
+            Pattern::GatherReduce => vec![0],
+            Pattern::Linear => vec![rank + 1],
+        }
+    }
+
+    /// Directed edges `(src, dst)` of the pattern graph over `p` ranks.
+    /// Traffic-matrix construction iterates this.
+    pub fn edges(&self, p: usize) -> Vec<(ProcId, ProcId)> {
+        let mut out = Vec::new();
+        for r in 0..p {
+            for d in self.dests(r, p) {
+                out.push((r, d));
+            }
+        }
+        out
+    }
+
+    /// Average adjacency over all ranks (the `Adj_avg` the mapper sorts by).
+    pub fn avg_adjacency(&self, p: usize) -> f64 {
+        if p == 0 {
+            return 0.0;
+        }
+        let sum: usize = (0..p).map(|r| self.adjacency(r, p)).sum();
+        sum as f64 / p as f64
+    }
+
+    /// Max adjacency over all ranks (`Adj_max` of eq. 2).
+    pub fn max_adjacency(&self, p: usize) -> usize {
+        (0..p).map(|r| self.adjacency(r, p)).max().unwrap_or(0)
+    }
+}
+
+impl std::fmt::Display for Pattern {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips() {
+        for p in Pattern::ALL {
+            assert_eq!(Pattern::parse(p.name()), Some(p));
+        }
+        assert_eq!(Pattern::parse("a2a"), Some(Pattern::AllToAll));
+        assert_eq!(Pattern::parse("nope"), None);
+    }
+
+    #[test]
+    fn all_to_all_cycles_all_peers() {
+        let p = 5;
+        let mut seen = std::collections::BTreeSet::new();
+        for k in 0..4 {
+            let d = Pattern::AllToAll.dest_of(2, p, k).unwrap();
+            assert_ne!(d, 2, "never self-send");
+            seen.insert(d);
+        }
+        assert_eq!(seen.len(), 4, "4 distinct peers in 4 sends");
+        // Schedule repeats with period p-1.
+        assert_eq!(
+            Pattern::AllToAll.dest_of(2, p, 0),
+            Pattern::AllToAll.dest_of(2, p, 4)
+        );
+    }
+
+    #[test]
+    fn bcast_root_only_sender() {
+        let p = 8;
+        assert!(Pattern::BcastScatter.is_sender(0, p));
+        for r in 1..p {
+            assert!(!Pattern::BcastScatter.is_sender(r, p));
+            assert_eq!(Pattern::BcastScatter.dest_of(r, p, 0), None);
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for k in 0..7 {
+            seen.insert(Pattern::BcastScatter.dest_of(0, p, k).unwrap());
+        }
+        assert_eq!(seen, (1..8).collect());
+    }
+
+    #[test]
+    fn gather_all_send_to_root() {
+        let p = 6;
+        assert!(!Pattern::GatherReduce.is_sender(0, p));
+        for r in 1..p {
+            assert_eq!(Pattern::GatherReduce.dest_of(r, p, 3), Some(0));
+        }
+    }
+
+    #[test]
+    fn linear_chain() {
+        let p = 4;
+        assert_eq!(Pattern::Linear.dest_of(0, p, 0), Some(1));
+        assert_eq!(Pattern::Linear.dest_of(2, p, 9), Some(3));
+        assert_eq!(Pattern::Linear.dest_of(3, p, 0), None, "last rank receives only");
+    }
+
+    #[test]
+    fn adjacency_matches_paper_expectations() {
+        // All-to-All 64: everyone adjacent to 63.
+        assert_eq!(Pattern::AllToAll.adjacency(10, 64), 63);
+        assert_eq!(Pattern::AllToAll.avg_adjacency(64), 63.0);
+        assert_eq!(Pattern::AllToAll.max_adjacency(64), 63);
+        // Gather 64: root 63, leaves 1 -> avg just under 2.
+        assert_eq!(Pattern::GatherReduce.adjacency(0, 64), 63);
+        assert_eq!(Pattern::GatherReduce.adjacency(5, 64), 1);
+        let avg = Pattern::GatherReduce.avg_adjacency(64);
+        assert!(avg > 1.9 && avg < 2.0, "avg {avg}");
+        // Linear 64: interior 2, ends 1.
+        assert_eq!(Pattern::Linear.adjacency(0, 64), 1);
+        assert_eq!(Pattern::Linear.adjacency(63, 64), 1);
+        assert_eq!(Pattern::Linear.adjacency(30, 64), 2);
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        for pat in Pattern::ALL {
+            assert_eq!(pat.adjacency(0, 1), 0);
+            assert!(!pat.is_sender(0, 1));
+            assert_eq!(pat.dest_of(0, 1, 0), None);
+        }
+    }
+
+    #[test]
+    fn dests_match_out_degree_and_edges() {
+        for pat in Pattern::ALL {
+            for p in [1, 2, 5, 8] {
+                let mut edge_count = 0;
+                for r in 0..p {
+                    let d = pat.dests(r, p);
+                    assert_eq!(d.len(), pat.out_degree(r, p), "{pat} rank {r} p {p}");
+                    assert!(!d.contains(&r), "no self-sends");
+                    edge_count += d.len();
+                }
+                assert_eq!(pat.edges(p).len(), edge_count);
+            }
+        }
+    }
+
+    #[test]
+    fn edges_all_to_all_complete() {
+        let e = Pattern::AllToAll.edges(4);
+        assert_eq!(e.len(), 12); // 4 * 3 ordered pairs
+        let e = Pattern::Linear.edges(4);
+        assert_eq!(e, vec![(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn out_degree_consistent_with_dest_of() {
+        for pat in Pattern::ALL {
+            let p = 7;
+            for r in 0..p {
+                let deg = pat.out_degree(r, p);
+                let mut seen = std::collections::BTreeSet::new();
+                for k in 0..32 {
+                    if let Some(d) = pat.dest_of(r, p, k) {
+                        seen.insert(d);
+                    }
+                }
+                assert_eq!(seen.len(), deg, "{pat} rank {r}");
+            }
+        }
+    }
+}

@@ -1,0 +1,331 @@
+//! Text spec format for custom clusters and workloads.
+//!
+//! Offline image ⇒ no serde; the format is a deliberately small line-based
+//! `key=value` syntax:
+//!
+//! ```text
+//! # cluster definition (optional; paper cluster if absent)
+//! cluster nodes=16 sockets=4 cores=4 mem_bw=4GB nic_bw=1GB cache_bw=8GB \
+//!         cache_max=1MB remote_pct=110 switch_ns=100
+//!
+//! # one line per job — synthetic…
+//! job procs=64 pattern=all-to-all size=64KB rate=100m/s count=2000
+//! # …or NPB shorthand
+//! job npb=IS.C.32
+//! ```
+//!
+//! `#` starts a comment; a trailing `\` continues a line.
+
+use crate::error::{Error, Result};
+use crate::model::npb;
+use crate::model::pattern::Pattern;
+use crate::model::topology::ClusterSpec;
+use crate::model::workload::{JobSpec, Workload};
+use crate::units::{parse_bytes, parse_rate};
+
+/// Parsed spec file: a cluster (defaulting to the paper's) and a workload.
+#[derive(Debug, Clone)]
+pub struct SpecFile {
+    /// Cluster description.
+    pub cluster: ClusterSpec,
+    /// Workload to map/simulate.
+    pub workload: Workload,
+}
+
+/// Split a physical file into logical lines (comments stripped, `\`
+/// continuations joined).
+fn logical_lines(text: &str) -> Vec<(usize, String)> {
+    let mut out: Vec<(usize, String)> = Vec::new();
+    let mut pending: Option<(usize, String)> = None;
+    for (lineno, raw) in text.lines().enumerate() {
+        let stripped = match raw.find('#') {
+            Some(pos) => &raw[..pos],
+            None => raw,
+        };
+        let stripped = stripped.trim_end();
+        let (cont, body) = match stripped.strip_suffix('\\') {
+            Some(b) => (true, b.trim_end()),
+            None => (false, stripped),
+        };
+        match pending.take() {
+            Some((start, mut acc)) => {
+                acc.push(' ');
+                acc.push_str(body.trim_start());
+                if cont {
+                    pending = Some((start, acc));
+                } else {
+                    out.push((start, acc));
+                }
+            }
+            None => {
+                if body.trim().is_empty() && !cont {
+                    continue;
+                }
+                if cont {
+                    pending = Some((lineno + 1, body.trim_start().to_string()));
+                } else {
+                    out.push((lineno + 1, body.trim().to_string()));
+                }
+            }
+        }
+    }
+    if let Some((start, acc)) = pending {
+        out.push((start, acc));
+    }
+    out.retain(|(_, l)| !l.is_empty());
+    out
+}
+
+/// Parse `key=value` tokens of one logical line.
+fn kv_pairs(line: &str) -> Result<Vec<(String, String)>> {
+    line.split_whitespace()
+        .map(|tok| {
+            let (k, v) = tok
+                .split_once('=')
+                .ok_or_else(|| Error::spec(format!("expected key=value, got {tok:?}")))?;
+            Ok((k.to_ascii_lowercase(), v.to_string()))
+        })
+        .collect()
+}
+
+fn parse_cluster_line(pairs: &[(String, String)]) -> Result<ClusterSpec> {
+    let mut c = ClusterSpec::paper_cluster();
+    for (k, v) in pairs {
+        match k.as_str() {
+            "nodes" => c.nodes = v.parse().map_err(|_| Error::spec("bad nodes"))?,
+            "sockets" => {
+                c.sockets_per_node = v.parse().map_err(|_| Error::spec("bad sockets"))?
+            }
+            "cores" => {
+                c.cores_per_socket = v.parse().map_err(|_| Error::spec("bad cores"))?
+            }
+            "mem_bw" => c.mem_bw = parse_bytes(v)?,
+            "nic_bw" => c.nic_bw = parse_bytes(v)?,
+            "cache_bw" => c.cache_bw = parse_bytes(v)?,
+            "cache_max" => c.cache_max_msg = parse_bytes(v)?,
+            "remote_pct" => {
+                c.remote_mem_pct = v.parse().map_err(|_| Error::spec("bad remote_pct"))?
+            }
+            "switch_ns" => {
+                c.switch_latency = v.parse().map_err(|_| Error::spec("bad switch_ns"))?
+            }
+            other => return Err(Error::spec(format!("unknown cluster key {other:?}"))),
+        }
+    }
+    c.validate()?;
+    Ok(c)
+}
+
+fn parse_job_line(pairs: &[(String, String)]) -> Result<JobSpec> {
+    // NPB shorthand takes the whole line.
+    if let Some((_, v)) = pairs.iter().find(|(k, _)| k == "npb") {
+        if pairs.len() != 1 {
+            return Err(Error::spec("npb= jobs take no other keys"));
+        }
+        return npb::parse_job(v);
+    }
+    let mut procs: Option<usize> = None;
+    let mut pattern: Option<Pattern> = None;
+    let mut size: Option<u64> = None;
+    let mut rate: Option<f64> = None;
+    let mut count: u64 = 2000;
+    let mut name: Option<String> = None;
+    for (k, v) in pairs {
+        match k.as_str() {
+            "procs" => procs = Some(v.parse().map_err(|_| Error::spec("bad procs"))?),
+            "pattern" => {
+                pattern = Some(
+                    Pattern::parse(v)
+                        .ok_or_else(|| Error::spec(format!("unknown pattern {v:?}")))?,
+                )
+            }
+            "size" => size = Some(parse_bytes(v)?),
+            "rate" => rate = Some(parse_rate(v)?),
+            "count" => count = v.parse().map_err(|_| Error::spec("bad count"))?,
+            "name" => name = Some(v.clone()),
+            other => return Err(Error::spec(format!("unknown job key {other:?}"))),
+        }
+    }
+    let procs = procs.ok_or_else(|| Error::spec("job missing procs="))?;
+    let pattern = pattern.ok_or_else(|| Error::spec("job missing pattern="))?;
+    let size = size.ok_or_else(|| Error::spec("job missing size="))?;
+    let rate = rate.ok_or_else(|| Error::spec("job missing rate="))?;
+    let mut job = JobSpec::synthetic(pattern, procs, size, rate, count);
+    if let Some(n) = name {
+        job.name = n;
+    }
+    job.validate()?;
+    Ok(job)
+}
+
+/// Parse a full spec document.
+pub fn parse(text: &str) -> Result<SpecFile> {
+    let mut cluster = ClusterSpec::paper_cluster();
+    let mut saw_cluster = false;
+    let mut jobs = Vec::new();
+    let mut name = "custom".to_string();
+    for (lineno, line) in logical_lines(text) {
+        let (verb, rest) = match line.split_once(char::is_whitespace) {
+            Some((v, r)) => (v, r),
+            None => (line.as_str(), ""),
+        };
+        let result = match verb {
+            "cluster" => {
+                if saw_cluster {
+                    Err(Error::spec("duplicate cluster line"))
+                } else {
+                    saw_cluster = true;
+                    kv_pairs(rest).and_then(|p| parse_cluster_line(&p).map(|c| cluster = c))
+                }
+            }
+            "job" => kv_pairs(rest).and_then(|p| parse_job_line(&p).map(|j| jobs.push(j))),
+            "workload" => {
+                name = rest.trim().to_string();
+                Ok(())
+            }
+            other => Err(Error::spec(format!("unknown verb {other:?}"))),
+        };
+        result.map_err(|e| Error::spec(format!("line {lineno}: {e}")))?;
+    }
+    let workload = Workload::new(name, jobs)?;
+    Ok(SpecFile { cluster, workload })
+}
+
+/// Load and parse a spec file from disk.
+pub fn load(path: &std::path::Path) -> Result<SpecFile> {
+    let text = std::fs::read_to_string(path)?;
+    parse(&text)
+}
+
+/// Serialize a workload back to the spec format (round-trips synthetic
+/// single-flow jobs; NPB jobs are emitted with their `npb=` shorthand when
+/// recognizable by name).
+pub fn to_text(cluster: &ClusterSpec, w: &Workload) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("workload {}\n", w.name));
+    out.push_str(&format!(
+        "cluster nodes={} sockets={} cores={} mem_bw={}B nic_bw={}B cache_bw={}B cache_max={}B remote_pct={} switch_ns={}\n",
+        cluster.nodes,
+        cluster.sockets_per_node,
+        cluster.cores_per_socket,
+        cluster.mem_bw,
+        cluster.nic_bw,
+        cluster.cache_bw,
+        cluster.cache_max_msg,
+        cluster.remote_mem_pct,
+        cluster.switch_latency,
+    ));
+    for j in &w.jobs {
+        let looks_npb = j.name.matches('.').count() == 2 && npb::parse_job(&j.name).is_ok();
+        if looks_npb {
+            out.push_str(&format!("job npb={}\n", j.name));
+        } else {
+            // Multi-flow non-NPB jobs serialize one line per flow (same name).
+            for f in &j.flows {
+                out.push_str(&format!(
+                    "job procs={} pattern={} size={}B rate={}m/s count={}\n",
+                    j.procs,
+                    f.pattern.name().replace(' ', "-"),
+                    f.msg_bytes,
+                    f.rate,
+                    f.count
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::{GB, KB};
+
+    #[test]
+    fn parse_minimal_workload() {
+        let s = parse("job procs=8 pattern=linear size=64KB rate=10m/s count=100").unwrap();
+        assert_eq!(s.cluster, ClusterSpec::paper_cluster());
+        assert_eq!(s.workload.jobs.len(), 1);
+        assert_eq!(s.workload.jobs[0].procs, 8);
+        assert_eq!(s.workload.jobs[0].flows[0].msg_bytes, 64 * KB);
+    }
+
+    #[test]
+    fn parse_cluster_overrides() {
+        let s = parse(
+            "cluster nodes=4 sockets=2 cores=2 nic_bw=2GB\n\
+             job procs=4 pattern=a2a size=1KB rate=1m/s",
+        )
+        .unwrap();
+        assert_eq!(s.cluster.nodes, 4);
+        assert_eq!(s.cluster.nic_bw, 2 * GB);
+        // Unspecified keys keep paper defaults.
+        assert_eq!(s.cluster.mem_bw, 4 * GB);
+    }
+
+    #[test]
+    fn parse_npb_shorthand() {
+        let s = parse("job npb=IS.C.32\njob npb=FT.B.16").unwrap();
+        assert_eq!(s.workload.jobs.len(), 2);
+        assert_eq!(s.workload.jobs[0].name, "IS.C.32");
+        assert_eq!(s.workload.jobs[1].procs, 16);
+    }
+
+    #[test]
+    fn comments_and_continuations() {
+        let s = parse(
+            "# a comment\n\
+             workload demo\n\
+             job procs=4 pattern=linear \\\n\
+                 size=2KB rate=5m/s count=7   # trailing comment\n",
+        )
+        .unwrap();
+        assert_eq!(s.workload.name, "demo");
+        assert_eq!(s.workload.jobs[0].flows[0].count, 7);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse("job procs=4 pattern=linear size=2KB rate=5m/s\nbogus line here")
+            .unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+        let err = parse("job procs=4 pattern=wat size=2KB rate=5m/s").unwrap_err();
+        assert!(err.to_string().contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn missing_required_keys_rejected() {
+        assert!(parse("job pattern=linear size=2KB rate=5m/s").is_err());
+        assert!(parse("job procs=4 size=2KB rate=5m/s").is_err());
+        assert!(parse("job procs=4 pattern=linear rate=5m/s").is_err());
+        assert!(parse("job procs=4 pattern=linear size=2KB").is_err());
+    }
+
+    #[test]
+    fn round_trip_through_text() {
+        let w = Workload::synt_workload_1();
+        let text = to_text(&ClusterSpec::paper_cluster(), &w);
+        let s = parse(&text).unwrap();
+        assert_eq!(s.workload.jobs.len(), 4);
+        assert_eq!(s.workload.name, "synt_workload_1");
+        for (a, b) in s.workload.jobs.iter().zip(&w.jobs) {
+            assert_eq!(a.procs, b.procs);
+            assert_eq!(a.flows[0].pattern, b.flows[0].pattern);
+            assert_eq!(a.flows[0].msg_bytes, b.flows[0].msg_bytes);
+        }
+    }
+
+    #[test]
+    fn npb_round_trip() {
+        let w = crate::model::npb::real_workload_4();
+        let text = to_text(&ClusterSpec::paper_cluster(), &w);
+        let s = parse(&text).unwrap();
+        assert_eq!(s.workload.jobs.len(), 4);
+        assert_eq!(s.workload.jobs[0].name, "SP.C.25");
+    }
+
+    #[test]
+    fn duplicate_cluster_rejected() {
+        assert!(parse("cluster nodes=2\ncluster nodes=3\njob npb=EP.B.32").is_err());
+    }
+}

@@ -1,0 +1,252 @@
+//! Physical cluster description (paper §5.1, Table 1).
+//!
+//! The simulated platform of the paper: 16 computing nodes on one switch,
+//! each node 4 sockets × 4 cores (16 cores/node, 256 total), NUMA memory per
+//! socket, a shared-cache message path inside each socket, and one InfiniBand
+//! NIC per node.
+
+use crate::error::{Error, Result};
+use crate::units::{Bytes, BytesPerSec, Ns, GB, MB};
+
+/// Node index in `0..nodes`.
+pub type NodeId = usize;
+/// Socket index in `0..nodes*sockets_per_node` (global, row-major by node).
+pub type SocketId = usize;
+/// Core index in `0..total_cores()` (global, row-major by node then socket).
+pub type CoreId = usize;
+
+/// Full cluster description. All bandwidth/latency knobs from paper Table 1
+/// are explicit so ablations can vary them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    /// Number of computing nodes.
+    pub nodes: usize,
+    /// Sockets (NUMA domains) per node.
+    pub sockets_per_node: usize,
+    /// Cores per socket.
+    pub cores_per_socket: usize,
+    /// Main-memory bandwidth per NUMA domain (Table 1: 4 GB/s).
+    pub mem_bw: BytesPerSec,
+    /// Extra service latency for remote (cross-socket) memory access,
+    /// percent of local (Table 1: +10 % ⇒ 110).
+    pub remote_mem_pct: u64,
+    /// Intra-socket cache bandwidth for message passing (Table 1:
+    /// "corresponds to AMD Opteron 2352" — we use 8 GB/s, i.e. 2× memory;
+    /// see DESIGN.md §2).
+    pub cache_bw: BytesPerSec,
+    /// Maximum message size transferable through the cache (Table 1: 1 MB);
+    /// larger messages fall back to main memory.
+    pub cache_max_msg: Bytes,
+    /// NIC bandwidth (Table 1: 1 GB/s, InfiniHost MT23108 4x).
+    pub nic_bw: BytesPerSec,
+    /// Switch forwarding latency, independent of message size (Table 1:
+    /// 100 ns).
+    pub switch_latency: Ns,
+}
+
+impl ClusterSpec {
+    /// The exact platform of paper §5.1 / Table 1.
+    pub fn paper_cluster() -> Self {
+        ClusterSpec {
+            nodes: 16,
+            sockets_per_node: 4,
+            cores_per_socket: 4,
+            mem_bw: 4 * GB,
+            remote_mem_pct: 110,
+            cache_bw: 8 * GB,
+            cache_max_msg: MB,
+            nic_bw: GB,
+            switch_latency: 100,
+        }
+    }
+
+    /// A smaller cluster for fast tests: 4 nodes × 2 sockets × 2 cores.
+    pub fn small_test_cluster() -> Self {
+        ClusterSpec {
+            nodes: 4,
+            sockets_per_node: 2,
+            cores_per_socket: 2,
+            ..Self::paper_cluster()
+        }
+    }
+
+    /// Validate the spec (all counts ≥ 1, bandwidths > 0).
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes == 0 || self.sockets_per_node == 0 || self.cores_per_socket == 0 {
+            return Err(Error::spec("cluster dimensions must be >= 1"));
+        }
+        if self.mem_bw == 0 || self.cache_bw == 0 || self.nic_bw == 0 {
+            return Err(Error::spec("bandwidths must be > 0"));
+        }
+        if self.remote_mem_pct < 100 {
+            return Err(Error::spec("remote_mem_pct is a percentage >= 100"));
+        }
+        Ok(())
+    }
+
+    /// Cores per node.
+    pub fn cores_per_node(&self) -> usize {
+        self.sockets_per_node * self.cores_per_socket
+    }
+
+    /// Total cores in the cluster.
+    pub fn total_cores(&self) -> usize {
+        self.nodes * self.cores_per_node()
+    }
+
+    /// Total sockets in the cluster.
+    pub fn total_sockets(&self) -> usize {
+        self.nodes * self.sockets_per_node
+    }
+
+    /// Node owning a global core id.
+    pub fn node_of_core(&self, core: CoreId) -> NodeId {
+        core / self.cores_per_node()
+    }
+
+    /// Global socket id owning a global core id.
+    pub fn socket_of_core(&self, core: CoreId) -> SocketId {
+        core / self.cores_per_socket
+    }
+
+    /// Node owning a global socket id.
+    pub fn node_of_socket(&self, socket: SocketId) -> NodeId {
+        socket / self.sockets_per_node
+    }
+
+    /// First global core id of a node.
+    pub fn first_core_of_node(&self, node: NodeId) -> CoreId {
+        node * self.cores_per_node()
+    }
+
+    /// Iterate the global core ids of `node`.
+    pub fn cores_of_node(&self, node: NodeId) -> std::ops::Range<CoreId> {
+        let base = self.first_core_of_node(node);
+        base..base + self.cores_per_node()
+    }
+
+    /// Iterate the global core ids of global socket `socket`.
+    pub fn cores_of_socket(&self, socket: SocketId) -> std::ops::Range<CoreId> {
+        let base = socket * self.cores_per_socket;
+        base..base + self.cores_per_socket
+    }
+
+    /// Global socket ids of `node`.
+    pub fn sockets_of_node(&self, node: NodeId) -> std::ops::Range<SocketId> {
+        let base = node * self.sockets_per_node;
+        base..base + self.sockets_per_node
+    }
+
+    /// True if both cores share a socket (cache-path candidates).
+    pub fn same_socket(&self, a: CoreId, b: CoreId) -> bool {
+        self.socket_of_core(a) == self.socket_of_core(b)
+    }
+
+    /// True if both cores share a node (memory-path candidates).
+    pub fn same_node(&self, a: CoreId, b: CoreId) -> bool {
+        self.node_of_core(a) == self.node_of_core(b)
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} nodes x {} sockets x {} cores = {} cores ({} per node)",
+            self.nodes,
+            self.sockets_per_node,
+            self.cores_per_socket,
+            self.total_cores(),
+            self.cores_per_node()
+        )
+    }
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        Self::paper_cluster()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_cluster_matches_table1() {
+        let c = ClusterSpec::paper_cluster();
+        assert_eq!(c.nodes, 16);
+        assert_eq!(c.cores_per_node(), 16);
+        assert_eq!(c.total_cores(), 256);
+        assert_eq!(c.mem_bw, 4_000_000_000);
+        assert_eq!(c.nic_bw, 1_000_000_000);
+        assert_eq!(c.switch_latency, 100);
+        assert_eq!(c.cache_max_msg, 1_000_000);
+        assert_eq!(c.remote_mem_pct, 110);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn core_geometry_row_major() {
+        let c = ClusterSpec::paper_cluster();
+        // Core 0 is node 0 socket 0; core 15 is node 0 socket 3; core 16 node 1.
+        assert_eq!(c.node_of_core(0), 0);
+        assert_eq!(c.node_of_core(15), 0);
+        assert_eq!(c.node_of_core(16), 1);
+        assert_eq!(c.socket_of_core(0), 0);
+        assert_eq!(c.socket_of_core(3), 0);
+        assert_eq!(c.socket_of_core(4), 1);
+        assert_eq!(c.socket_of_core(255), 63);
+        assert_eq!(c.node_of_socket(63), 15);
+    }
+
+    #[test]
+    fn ranges_cover_exactly() {
+        let c = ClusterSpec::small_test_cluster();
+        let mut seen = vec![false; c.total_cores()];
+        for n in 0..c.nodes {
+            for core in c.cores_of_node(n) {
+                assert_eq!(c.node_of_core(core), n);
+                assert!(!seen[core]);
+                seen[core] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn socket_ranges_consistent() {
+        let c = ClusterSpec::paper_cluster();
+        for s in 0..c.total_sockets() {
+            for core in c.cores_of_socket(s) {
+                assert_eq!(c.socket_of_core(core), s);
+            }
+        }
+        for n in 0..c.nodes {
+            for s in c.sockets_of_node(n) {
+                assert_eq!(c.node_of_socket(s), n);
+            }
+        }
+    }
+
+    #[test]
+    fn same_socket_implies_same_node() {
+        let c = ClusterSpec::paper_cluster();
+        for (a, b) in [(0, 3), (0, 4), (0, 16), (250, 255)] {
+            if c.same_socket(a, b) {
+                assert!(c.same_node(a, b));
+            }
+        }
+    }
+
+    #[test]
+    fn validation_rejects_degenerate() {
+        let mut c = ClusterSpec::paper_cluster();
+        c.nodes = 0;
+        assert!(c.validate().is_err());
+        let mut c = ClusterSpec::paper_cluster();
+        c.nic_bw = 0;
+        assert!(c.validate().is_err());
+        let mut c = ClusterSpec::paper_cluster();
+        c.remote_mem_pct = 10;
+        assert!(c.validate().is_err());
+    }
+}

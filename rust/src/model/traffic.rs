@@ -1,0 +1,278 @@
+//! Traffic matrices — the Application Graph (AG) of the mapping literature.
+//!
+//! `T[i][j]` is the steady-state byte rate (bytes/sec) from process `i` to
+//! process `j`, built from the job flow specs under the round send semantics
+//! of DESIGN.md §9 (`rate` messages to **each** destination per second).
+//!
+//! The same matrix drives three consumers, which keeps them consistent by
+//! construction:
+//! * the mapper's `CD_i` (paper eq. 1) and adjacency `Adj_pi` (eq. 2 inputs),
+//! * the AOT cost model (the Rust side pads this matrix into the artifact),
+//! * the DRB baseline's application graph.
+
+use crate::model::workload::{JobId, JobSpec, ProcId, Workload};
+
+/// Dense square traffic matrix in bytes/sec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficMatrix {
+    n: usize,
+    /// Row-major `n x n` rates.
+    data: Vec<f64>,
+}
+
+impl TrafficMatrix {
+    /// Zero matrix over `n` processes.
+    pub fn zeros(n: usize) -> Self {
+        TrafficMatrix { n, data: vec![0.0; n * n] }
+    }
+
+    /// Traffic matrix of a single job (indices are local ranks).
+    pub fn of_job(job: &JobSpec) -> Self {
+        let mut t = Self::zeros(job.procs);
+        for flow in &job.flows {
+            let per_edge = flow.msg_bytes as f64 * flow.rate;
+            for (src, dst) in flow.pattern.edges(job.procs) {
+                t.add(src, dst, per_edge);
+            }
+        }
+        t
+    }
+
+    /// Traffic matrix of a whole workload (indices are global proc ids;
+    /// jobs never communicate with each other, so the matrix is block
+    /// diagonal in job order).
+    pub fn of_workload(w: &Workload) -> Self {
+        let mut t = Self::zeros(w.total_procs());
+        for (jid, job) in w.jobs.iter().enumerate() {
+            let off = w.job_offset(jid);
+            let jt = Self::of_job(job);
+            for i in 0..job.procs {
+                for j in 0..job.procs {
+                    let v = jt.get(i, j);
+                    if v > 0.0 {
+                        t.add(off + i, off + j, v);
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Matrix dimension (process count).
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True when tracking zero processes.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Rate from `i` to `j` (bytes/sec).
+    #[inline]
+    pub fn get(&self, i: ProcId, j: ProcId) -> f64 {
+        self.data[i * self.n + j]
+    }
+
+    /// Add to the `i -> j` rate.
+    #[inline]
+    pub fn add(&mut self, i: ProcId, j: ProcId, v: f64) {
+        self.data[i * self.n + j] += v;
+    }
+
+    /// Row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: ProcId) -> &[f64] {
+        &self.data[i * self.n..(i + 1) * self.n]
+    }
+
+    /// Raw row-major data (for padding into the AOT artifact).
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Symmetric volume between `i` and `j` (`i->j` plus `j->i`).
+    #[inline]
+    pub fn between(&self, i: ProcId, j: ProcId) -> f64 {
+        self.get(i, j) + self.get(j, i)
+    }
+
+    /// Communication demand of process `i` — paper eq. 1, counted in both
+    /// directions so pure receivers (e.g. a Gather root) rank high too.
+    pub fn demand(&self, i: ProcId) -> f64 {
+        let mut d = 0.0;
+        for j in 0..self.n {
+            d += self.get(i, j) + self.get(j, i);
+        }
+        d
+    }
+
+    /// Adjacency degree of `i`: distinct partners with nonzero traffic in
+    /// either direction (`Adj_pi` of eq. 2).
+    pub fn adjacency(&self, i: ProcId) -> usize {
+        (0..self.n)
+            .filter(|&j| j != i && (self.get(i, j) > 0.0 || self.get(j, i) > 0.0))
+            .count()
+    }
+
+    /// Partners of `i` sorted by descending symmetric volume (paper step
+    /// 3.8: "adjacent processes of A are sorted based on the communication
+    /// demands between A and them").
+    pub fn partners_by_volume(&self, i: ProcId) -> Vec<(ProcId, f64)> {
+        let mut v: Vec<(ProcId, f64)> = (0..self.n)
+            .filter(|&j| j != i)
+            .map(|j| (j, self.between(i, j)))
+            .filter(|&(_, w)| w > 0.0)
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        v
+    }
+
+    /// Total traffic volume (bytes/sec) over all pairs.
+    pub fn total(&self) -> f64 {
+        self.data.iter().sum()
+    }
+
+    /// Average adjacency over all processes (`Adj_avg`).
+    pub fn avg_adjacency(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let s: usize = (0..self.n).map(|i| self.adjacency(i)).sum();
+        s as f64 / self.n as f64
+    }
+
+    /// Max adjacency over all processes (`Adj_max`), 0 for empty.
+    pub fn max_adjacency(&self) -> usize {
+        (0..self.n).map(|i| self.adjacency(i)).max().unwrap_or(0)
+    }
+}
+
+/// Per-job views over a workload traffic matrix.
+#[derive(Debug, Clone)]
+pub struct JobTraffic {
+    /// Owning job.
+    pub job: JobId,
+    /// Local-rank traffic matrix.
+    pub matrix: TrafficMatrix,
+}
+
+impl JobTraffic {
+    /// Build per-job matrices for the whole workload.
+    pub fn for_workload(w: &Workload) -> Vec<JobTraffic> {
+        w.jobs
+            .iter()
+            .enumerate()
+            .map(|(jid, job)| JobTraffic { job: jid, matrix: TrafficMatrix::of_job(job) })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::pattern::Pattern;
+    use crate::model::workload::JobSpec;
+    use crate::units::KB;
+
+    fn a2a_job(p: usize) -> JobSpec {
+        JobSpec::synthetic(Pattern::AllToAll, p, 64 * KB, 100.0, 2000)
+    }
+
+    #[test]
+    fn all_to_all_uniform_rates() {
+        let t = TrafficMatrix::of_job(&a2a_job(4));
+        let want = 64_000.0 * 100.0; // bytes * rate per edge
+        for i in 0..4 {
+            assert_eq!(t.get(i, i), 0.0);
+            for j in 0..4 {
+                if i != j {
+                    assert_eq!(t.get(i, j), want);
+                }
+            }
+        }
+        assert_eq!(t.total(), want * 12.0);
+    }
+
+    #[test]
+    fn demand_symmetric_both_directions() {
+        let j = JobSpec::synthetic(Pattern::GatherReduce, 4, 1000, 2.0, 10);
+        let t = TrafficMatrix::of_job(&j);
+        // Root receives 3 * 2000 B/s; senders each send 2000 B/s.
+        assert_eq!(t.demand(0), 6000.0);
+        assert_eq!(t.demand(1), 2000.0);
+        assert_eq!(t.adjacency(0), 3);
+        assert_eq!(t.adjacency(1), 1);
+    }
+
+    #[test]
+    fn adjacency_matches_pattern() {
+        for pat in Pattern::ALL {
+            let j = JobSpec::synthetic(pat, 8, 1000, 1.0, 10);
+            let t = TrafficMatrix::of_job(&j);
+            for r in 0..8 {
+                assert_eq!(t.adjacency(r), pat.adjacency(r, 8), "{pat} rank {r}");
+            }
+            assert!((t.avg_adjacency() - pat.avg_adjacency(8)).abs() < 1e-12);
+            assert_eq!(t.max_adjacency(), pat.max_adjacency(8));
+        }
+    }
+
+    #[test]
+    fn workload_matrix_block_diagonal() {
+        let w = Workload::new(
+            "t",
+            vec![a2a_job(3), JobSpec::synthetic(Pattern::Linear, 3, 1000, 1.0, 5)],
+        )
+        .unwrap();
+        let t = TrafficMatrix::of_workload(&w);
+        assert_eq!(t.len(), 6);
+        // No cross-job traffic.
+        for i in 0..3 {
+            for j in 3..6 {
+                assert_eq!(t.get(i, j), 0.0);
+                assert_eq!(t.get(j, i), 0.0);
+            }
+        }
+        // Linear block present at the offset.
+        assert!(t.get(3, 4) > 0.0);
+        assert!(t.get(4, 5) > 0.0);
+        assert_eq!(t.get(5, 3), 0.0);
+    }
+
+    #[test]
+    fn partners_sorted_descending() {
+        let mut t = TrafficMatrix::zeros(4);
+        t.add(0, 1, 5.0);
+        t.add(0, 2, 10.0);
+        t.add(3, 0, 1.0);
+        let p = t.partners_by_volume(0);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p[0].0, 2);
+        assert_eq!(p[1].0, 1);
+        assert_eq!(p[2].0, 3);
+    }
+
+    #[test]
+    fn conservation_total_equals_sum_of_demands_halved() {
+        let w = Workload::synt_workload_1();
+        let t = TrafficMatrix::of_workload(&w);
+        let demand_sum: f64 = (0..t.len()).map(|i| t.demand(i)).sum();
+        // Each byte counted once as send demand, once as receive demand.
+        assert!((demand_sum - 2.0 * t.total()).abs() < 1e-3 * t.total());
+    }
+
+    #[test]
+    fn multi_flow_accumulates() {
+        let job = JobSpec {
+            name: "mix".into(),
+            procs: 3,
+            flows: vec![
+                crate::model::workload::FlowSpec::new(Pattern::Linear, 1000, 1.0, 5),
+                crate::model::workload::FlowSpec::new(Pattern::Linear, 1000, 2.0, 5),
+            ],
+        };
+        let t = TrafficMatrix::of_job(&job);
+        assert_eq!(t.get(0, 1), 3000.0); // 1000*1 + 1000*2
+    }
+}

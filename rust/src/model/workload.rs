@@ -1,0 +1,366 @@
+//! Jobs and workloads (paper §5.2 Tables 2–5, §5.3 Tables 6–9).
+//!
+//! A [`JobSpec`] is one parallel job: `procs` processes plus one or more
+//! communication [`FlowSpec`]s (synthetic jobs have exactly one flow; NPB
+//! jobs from [`crate::model::npb`] may have several, e.g. an all-to-all
+//! transpose phase plus a neighbour-exchange phase).
+//!
+//! A [`Workload`] is the batch of jobs the mapper places at once; global
+//! process ids are assigned contiguously per job, in job order.
+
+use crate::error::{Error, Result};
+use crate::model::pattern::Pattern;
+use crate::units::{fmt_bytes, Bytes, MsgPerSec, KB, MB};
+
+/// Index of a job within its workload.
+pub type JobId = usize;
+/// Global process index within a workload (across all jobs).
+pub type ProcId = usize;
+
+/// Message-size classes of the paper's step 1 (§4): "large messages (1MB or
+/// higher), medium messages (2KB to 1MB), and small messages (2KB or less)".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SizeClass {
+    /// ≥ 1 MB — mapped first.
+    Large,
+    /// (2 KB, 1 MB) — mapped second.
+    Medium,
+    /// ≤ 2 KB — mapped last.
+    Small,
+}
+
+impl SizeClass {
+    /// Classify a message length per the paper's boundaries.
+    pub fn of(bytes: Bytes) -> SizeClass {
+        if bytes >= MB {
+            SizeClass::Large
+        } else if bytes > 2 * KB {
+            SizeClass::Medium
+        } else {
+            SizeClass::Small
+        }
+    }
+
+    /// Mapping order (paper step 1/4/6): Large, then Medium, then Small.
+    pub const ORDER: [SizeClass; 3] = [SizeClass::Large, SizeClass::Medium, SizeClass::Small];
+}
+
+/// One communication flow of a job: a pattern at a message size and rate,
+/// with a per-sender message budget.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlowSpec {
+    /// Communication pattern.
+    pub pattern: Pattern,
+    /// Message length in bytes (paper tables: 64KB / 2MB).
+    pub msg_bytes: Bytes,
+    /// Send rate per sending process, messages per second.
+    pub rate: MsgPerSec,
+    /// Number of messages each sending process transmits before finishing.
+    pub count: u64,
+}
+
+impl FlowSpec {
+    /// Construct a flow.
+    pub fn new(pattern: Pattern, msg_bytes: Bytes, rate: MsgPerSec, count: u64) -> Self {
+        FlowSpec { pattern, msg_bytes, rate, count }
+    }
+}
+
+/// One parallel job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// Display name (e.g. `"All-to-All 64KB@100m/s"` or `"IS.C.32"`).
+    pub name: String,
+    /// Number of parallel processes.
+    pub procs: usize,
+    /// Communication flows (≥ 1).
+    pub flows: Vec<FlowSpec>,
+}
+
+impl JobSpec {
+    /// Single-flow synthetic job (rows of paper Tables 2–5).
+    pub fn synthetic(pattern: Pattern, procs: usize, msg_bytes: Bytes, rate: MsgPerSec, count: u64) -> Self {
+        JobSpec {
+            name: format!("{} {}@{}m/s", pattern.name(), fmt_bytes(msg_bytes), rate),
+            procs,
+            flows: vec![FlowSpec::new(pattern, msg_bytes, rate, count)],
+        }
+    }
+
+    /// Largest message length over all flows — the paper's tie-break:
+    /// "In such cases largest message length is considered for action."
+    pub fn largest_msg(&self) -> Bytes {
+        self.flows.iter().map(|f| f.msg_bytes).max().unwrap_or(0)
+    }
+
+    /// Size class of the job (by largest message).
+    pub fn size_class(&self) -> SizeClass {
+        SizeClass::of(self.largest_msg())
+    }
+
+    /// Validate: ≥1 process, ≥1 flow, positive sizes/rates.
+    pub fn validate(&self) -> Result<()> {
+        if self.procs == 0 {
+            return Err(Error::spec(format!("job {:?}: zero processes", self.name)));
+        }
+        if self.flows.is_empty() {
+            return Err(Error::spec(format!("job {:?}: no flows", self.name)));
+        }
+        for f in &self.flows {
+            if f.msg_bytes == 0 {
+                return Err(Error::spec(format!("job {:?}: zero-byte messages", self.name)));
+            }
+            if !(f.rate > 0.0) {
+                return Err(Error::spec(format!("job {:?}: non-positive rate", self.name)));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total bytes this job will ever push through the system (round send
+    /// semantics: each round a sender emits one message per destination).
+    pub fn total_bytes(&self) -> u128 {
+        self.flows
+            .iter()
+            .map(|f| {
+                let msgs_per_round: usize =
+                    (0..self.procs).map(|r| f.pattern.out_degree(r, self.procs)).sum();
+                msgs_per_round as u128 * f.count as u128 * f.msg_bytes as u128
+            })
+            .sum()
+    }
+}
+
+/// A batch of jobs mapped and simulated together.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Workload {
+    /// Display name (e.g. `"synt_workload_3"`).
+    pub name: String,
+    /// Jobs, in table order. `JobId` indexes this vector.
+    pub jobs: Vec<JobSpec>,
+}
+
+impl Workload {
+    /// Build and validate.
+    pub fn new(name: impl Into<String>, jobs: Vec<JobSpec>) -> Result<Self> {
+        let w = Workload { name: name.into(), jobs };
+        w.validate()?;
+        Ok(w)
+    }
+
+    /// Validate all jobs.
+    pub fn validate(&self) -> Result<()> {
+        if self.jobs.is_empty() {
+            return Err(Error::spec(format!("workload {:?} has no jobs", self.name)));
+        }
+        for j in &self.jobs {
+            j.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Total process count over all jobs.
+    pub fn total_procs(&self) -> usize {
+        self.jobs.iter().map(|j| j.procs).sum()
+    }
+
+    /// Global id of rank 0 of `job`.
+    pub fn job_offset(&self, job: JobId) -> ProcId {
+        self.jobs[..job].iter().map(|j| j.procs).sum()
+    }
+
+    /// Global process-id range of `job`.
+    pub fn procs_of_job(&self, job: JobId) -> std::ops::Range<ProcId> {
+        let off = self.job_offset(job);
+        off..off + self.jobs[job].procs
+    }
+
+    /// Map a global process id back to `(job, local rank)`.
+    pub fn job_of_proc(&self, proc: ProcId) -> (JobId, usize) {
+        let mut off = 0;
+        for (j, job) in self.jobs.iter().enumerate() {
+            if proc < off + job.procs {
+                return (j, proc - off);
+            }
+            off += job.procs;
+        }
+        panic!("proc id {proc} out of range ({} total)", self.total_procs());
+    }
+
+    // ------------------------------------------------------------------
+    // Paper synthetic workloads (Tables 2–5).
+    // ------------------------------------------------------------------
+
+    /// Table 2: 4 jobs × 64 procs, 64 KB @ 100 m/s, 2000 messages.
+    pub fn synt_workload_1() -> Self {
+        let jobs = Pattern::ALL
+            .iter()
+            .map(|&p| JobSpec::synthetic(p, 64, 64 * KB, 100.0, 2000))
+            .collect();
+        Workload { name: "synt_workload_1".into(), jobs }
+    }
+
+    /// Table 3: 4 jobs × 64 procs, 2 MB @ 10 m/s, 2000 messages.
+    pub fn synt_workload_2() -> Self {
+        let jobs = Pattern::ALL
+            .iter()
+            .map(|&p| JobSpec::synthetic(p, 64, 2 * MB, 10.0, 2000))
+            .collect();
+        Workload { name: "synt_workload_2".into(), jobs }
+    }
+
+    /// Table 4: 8 jobs × 32 procs; jobs 0–3 at 2 MB @ 10 m/s, jobs 4–7 at
+    /// 64 KB @ 10 m/s.
+    pub fn synt_workload_3() -> Self {
+        let mut jobs: Vec<JobSpec> = Pattern::ALL
+            .iter()
+            .map(|&p| JobSpec::synthetic(p, 32, 2 * MB, 10.0, 2000))
+            .collect();
+        jobs.extend(
+            Pattern::ALL
+                .iter()
+                .map(|&p| JobSpec::synthetic(p, 32, 64 * KB, 10.0, 2000)),
+        );
+        Workload { name: "synt_workload_3".into(), jobs }
+    }
+
+    /// Table 5: 8 jobs × 24 procs; same size/rate split as Table 4.
+    pub fn synt_workload_4() -> Self {
+        let mut jobs: Vec<JobSpec> = Pattern::ALL
+            .iter()
+            .map(|&p| JobSpec::synthetic(p, 24, 2 * MB, 10.0, 2000))
+            .collect();
+        jobs.extend(
+            Pattern::ALL
+                .iter()
+                .map(|&p| JobSpec::synthetic(p, 24, 64 * KB, 10.0, 2000)),
+        );
+        Workload { name: "synt_workload_4".into(), jobs }
+    }
+
+    /// All four synthetic workloads in paper order.
+    pub fn all_synthetic() -> Vec<Self> {
+        vec![
+            Self::synt_workload_1(),
+            Self::synt_workload_2(),
+            Self::synt_workload_3(),
+            Self::synt_workload_4(),
+        ]
+    }
+
+    /// Look a builtin workload up by name (`synt1..4`, `real1..4`).
+    pub fn builtin(name: &str) -> Result<Self> {
+        use crate::model::npb;
+        match name.trim().to_ascii_lowercase().as_str() {
+            "synt1" | "synt_workload_1" => Ok(Self::synt_workload_1()),
+            "synt2" | "synt_workload_2" => Ok(Self::synt_workload_2()),
+            "synt3" | "synt_workload_3" => Ok(Self::synt_workload_3()),
+            "synt4" | "synt_workload_4" => Ok(Self::synt_workload_4()),
+            "real1" | "real_workload_1" => Ok(npb::real_workload_1()),
+            "real2" | "real_workload_2" => Ok(npb::real_workload_2()),
+            "real3" | "real_workload_3" => Ok(npb::real_workload_3()),
+            "real4" | "real_workload_4" => Ok(npb::real_workload_4()),
+            other => Err(Error::usage(format!(
+                "unknown builtin workload {other:?} (expected synt1..4 or real1..4)"
+            ))),
+        }
+    }
+
+    /// Names of all builtin workloads.
+    pub fn builtin_names() -> [&'static str; 8] {
+        ["synt1", "synt2", "synt3", "synt4", "real1", "real2", "real3", "real4"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_class_boundaries_match_paper() {
+        assert_eq!(SizeClass::of(MB), SizeClass::Large);
+        assert_eq!(SizeClass::of(2 * MB), SizeClass::Large);
+        assert_eq!(SizeClass::of(MB - 1), SizeClass::Medium);
+        assert_eq!(SizeClass::of(2 * KB + 1), SizeClass::Medium);
+        assert_eq!(SizeClass::of(2 * KB), SizeClass::Small);
+        assert_eq!(SizeClass::of(1), SizeClass::Small);
+    }
+
+    #[test]
+    fn synt1_matches_table2() {
+        let w = Workload::synt_workload_1();
+        assert_eq!(w.jobs.len(), 4);
+        assert_eq!(w.total_procs(), 256);
+        for (i, pat) in Pattern::ALL.iter().enumerate() {
+            assert_eq!(w.jobs[i].procs, 64);
+            assert_eq!(w.jobs[i].flows[0].pattern, *pat);
+            assert_eq!(w.jobs[i].flows[0].msg_bytes, 64_000);
+            assert_eq!(w.jobs[i].flows[0].rate, 100.0);
+            assert_eq!(w.jobs[i].flows[0].count, 2000);
+            assert_eq!(w.jobs[i].size_class(), SizeClass::Medium);
+        }
+    }
+
+    #[test]
+    fn synt2_is_large_class() {
+        let w = Workload::synt_workload_2();
+        assert!(w.jobs.iter().all(|j| j.size_class() == SizeClass::Large));
+        assert_eq!(w.total_procs(), 256);
+    }
+
+    #[test]
+    fn synt3_synt4_mixed_classes() {
+        let w3 = Workload::synt_workload_3();
+        assert_eq!(w3.jobs.len(), 8);
+        assert_eq!(w3.total_procs(), 256);
+        assert!(w3.jobs[..4].iter().all(|j| j.size_class() == SizeClass::Large));
+        assert!(w3.jobs[4..].iter().all(|j| j.size_class() == SizeClass::Medium));
+        let w4 = Workload::synt_workload_4();
+        assert_eq!(w4.total_procs(), 192);
+    }
+
+    #[test]
+    fn proc_id_round_trip() {
+        let w = Workload::synt_workload_3();
+        for p in 0..w.total_procs() {
+            let (j, r) = w.job_of_proc(p);
+            assert!(w.procs_of_job(j).contains(&p));
+            assert_eq!(w.job_offset(j) + r, p);
+        }
+    }
+
+    #[test]
+    fn total_bytes_counts_round_fanout() {
+        // Gather/Reduce 4 procs: 3 senders x 1 dest x 10 rounds x 1000 B.
+        let j = JobSpec::synthetic(Pattern::GatherReduce, 4, 1000, 1.0, 10);
+        assert_eq!(j.total_bytes(), 30_000);
+        // Bcast: root sends to 3 peers per round.
+        let j = JobSpec::synthetic(Pattern::BcastScatter, 4, 1000, 1.0, 10);
+        assert_eq!(j.total_bytes(), 30_000);
+        // AllToAll: 4 senders x 3 dests x 10 rounds.
+        let j = JobSpec::synthetic(Pattern::AllToAll, 4, 1000, 1.0, 10);
+        assert_eq!(j.total_bytes(), 120_000);
+    }
+
+    #[test]
+    fn builtin_lookup() {
+        for name in Workload::builtin_names() {
+            let w = Workload::builtin(name).unwrap();
+            w.validate().unwrap();
+        }
+        assert!(Workload::builtin("bogus").is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_jobs() {
+        let mut j = JobSpec::synthetic(Pattern::Linear, 4, 1000, 1.0, 10);
+        j.procs = 0;
+        assert!(j.validate().is_err());
+        let mut j = JobSpec::synthetic(Pattern::Linear, 4, 1000, 1.0, 10);
+        j.flows[0].msg_bytes = 0;
+        assert!(j.validate().is_err());
+        let mut j = JobSpec::synthetic(Pattern::Linear, 4, 1000, 1.0, 10);
+        j.flows.clear();
+        assert!(j.validate().is_err());
+    }
+}

@@ -1,0 +1,84 @@
+//! Minimal CSV writer (RFC-4180 quoting) for bench output files.
+
+/// Incremental CSV document builder.
+#[derive(Debug, Default, Clone)]
+pub struct Csv {
+    buf: String,
+    cols: Option<usize>,
+}
+
+fn quote(field: &str) -> String {
+    if field.contains([',', '"', '\n']) {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+impl Csv {
+    /// New empty document.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a row; arity is locked by the first row.
+    pub fn row<S: AsRef<str>>(&mut self, cells: &[S]) -> &mut Self {
+        match self.cols {
+            None => self.cols = Some(cells.len()),
+            Some(c) => assert_eq!(c, cells.len(), "csv arity mismatch"),
+        }
+        let line: Vec<String> = cells.iter().map(|c| quote(c.as_ref())).collect();
+        self.buf.push_str(&line.join(","));
+        self.buf.push('\n');
+        self
+    }
+
+    /// Document text.
+    pub fn as_str(&self) -> &str {
+        &self.buf
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, &self.buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_rows() {
+        let mut c = Csv::new();
+        c.row(&["a", "b"]).row(&["1", "2"]);
+        assert_eq!(c.as_str(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn quoting() {
+        let mut c = Csv::new();
+        c.row(&["has,comma", "has\"quote", "plain"]);
+        assert_eq!(c.as_str(), "\"has,comma\",\"has\"\"quote\",plain\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "csv arity mismatch")]
+    fn arity_locked() {
+        let mut c = Csv::new();
+        c.row(&["a", "b"]).row(&["only"]);
+    }
+
+    #[test]
+    fn writes_to_disk() {
+        let mut c = Csv::new();
+        c.row(&["x"]);
+        let path = std::env::temp_dir().join("nicmap_csv_test/out.csv");
+        c.write(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "x\n");
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+}

@@ -1,0 +1,80 @@
+//! ASCII bar charts — the terminal rendering of the paper's figures.
+//!
+//! Each figure in the paper (Figs 2–5) is a grouped bar chart of a metric
+//! over the mapping strategies; `bar_chart` renders one group the same way:
+//!
+//! ```text
+//! synt_workload_3 — waiting time (ms)
+//!   B  ████████████████████████████████████████  123456.7
+//!   C  ██████████                                  31245.2
+//!   D  ████████████████████████████████████      118000.9
+//!   N  ███████                                     22000.1
+//! ```
+
+/// Render one labelled bar group. `width` is the max bar width in cells.
+pub fn bar_chart(title: &str, entries: &[(String, f64)], width: usize) -> String {
+    let max = entries.iter().map(|(_, v)| *v).fold(0.0f64, f64::max);
+    let label_w = entries.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (label, v) in entries {
+        let cells = if max > 0.0 {
+            ((v / max) * width as f64).round() as usize
+        } else {
+            0
+        };
+        out.push_str(&format!(
+            "  {:<lw$}  {:<w$}  {v:.1}\n",
+            label,
+            "\u{2588}".repeat(cells),
+            lw = label_w,
+            w = width,
+        ));
+    }
+    out
+}
+
+/// Percentage improvement of `new` over `best_other` (positive = better),
+/// matching the paper's "performance gain is calculated compared to the
+/// best result from the other methods".
+pub fn gain_pct(new: f64, best_other: f64) -> f64 {
+    if best_other <= 0.0 {
+        return 0.0;
+    }
+    (best_other - new) / best_other * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bars_scale_to_max() {
+        let s = bar_chart(
+            "demo",
+            &[("A".into(), 100.0), ("B".into(), 50.0), ("C".into(), 0.0)],
+            10,
+        );
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[1].matches('\u{2588}').count(), 10);
+        assert_eq!(lines[2].matches('\u{2588}').count(), 5);
+        assert_eq!(lines[3].matches('\u{2588}').count(), 0);
+    }
+
+    #[test]
+    fn all_zero_safe() {
+        let s = bar_chart("z", &[("A".into(), 0.0)], 10);
+        assert!(s.contains("A"));
+    }
+
+    #[test]
+    fn gain_matches_paper_definition() {
+        // New = 70, best other = 100 -> 30 % improvement.
+        assert_eq!(gain_pct(70.0, 100.0), 30.0);
+        assert_eq!(gain_pct(100.0, 100.0), 0.0);
+        assert!(gain_pct(130.0, 100.0) < 0.0, "regressions are negative");
+        assert_eq!(gain_pct(1.0, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Reporting: paper-style tables, ASCII bar "figures", CSV, and the small
+//! statistics toolkit the bench harness uses.
+
+pub mod csv;
+pub mod figure;
+pub mod stats;
+pub mod table;
+
+pub use figure::bar_chart;
+pub use stats::Summary;
+pub use table::Table;

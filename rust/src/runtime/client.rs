@@ -1,0 +1,226 @@
+//! Artifact discovery + PJRT compile/execute.
+//!
+//! `make artifacts` writes `artifacts/manifest.txt` with one line per
+//! artifact:
+//!
+//! ```text
+//! cost_model 64 16 cost_model_p64_n16.hlo.txt
+//! cost_model_batched 16 64 16 cost_model_b16_p64_n16.hlo.txt
+//! ```
+//!
+//! The store compiles each HLO-text file on the PJRT CPU client at most once
+//! per process (the compile is the expensive part — DESIGN.md §10) and hands
+//! out references to the loaded executables.
+
+use crate::error::{Error, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// One manifest entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    /// `"cost_model"` or `"cost_model_batched"`.
+    pub kind: String,
+    /// Batch width (1 for unbatched).
+    pub batch: usize,
+    /// Padded process dimension.
+    pub p: usize,
+    /// Padded node dimension.
+    pub n: usize,
+    /// File name inside the artifacts dir.
+    pub file: String,
+}
+
+/// Compiled-executable cache over an artifacts directory.
+///
+/// Not `Send`/`Sync`: the underlying PJRT client is `Rc`-based. Each thread
+/// that needs the cost model opens its own store (compiles are cheap next to
+/// a simulation run; within a thread they are cached here).
+pub struct ArtifactStore {
+    dir: PathBuf,
+    metas: Vec<ArtifactMeta>,
+    client: xla::PjRtClient,
+    compiled: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl std::fmt::Debug for ArtifactStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ArtifactStore")
+            .field("dir", &self.dir)
+            .field("metas", &self.metas)
+            .finish_non_exhaustive()
+    }
+}
+
+/// Default artifacts dir: `$NICMAP_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("NICMAP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Parse a manifest document.
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactMeta>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        let bad = || Error::runtime(format!("manifest line {}: bad entry {line:?}", i + 1));
+        match toks.as_slice() {
+            [kind @ ("cost_model" | "node_loads"), p, n, file] => out.push(ArtifactMeta {
+                kind: kind.to_string(),
+                batch: 1,
+                p: p.parse().map_err(|_| bad())?,
+                n: n.parse().map_err(|_| bad())?,
+                file: file.to_string(),
+            }),
+            ["cost_model_batched", b, p, n, file] => out.push(ArtifactMeta {
+                kind: "cost_model_batched".into(),
+                batch: b.parse().map_err(|_| bad())?,
+                p: p.parse().map_err(|_| bad())?,
+                n: n.parse().map_err(|_| bad())?,
+                file: file.to_string(),
+            }),
+            _ => return Err(bad()),
+        }
+    }
+    Ok(out)
+}
+
+impl ArtifactStore {
+    /// Open a store over `dir`; fails when the manifest is absent
+    /// (callers fall back to [`crate::runtime::native::NativeScorer`]).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest).map_err(|e| {
+            Error::runtime(format!(
+                "no artifacts at {} ({e}); run `make artifacts`",
+                manifest.display()
+            ))
+        })?;
+        let metas = parse_manifest(&text)?;
+        if metas.is_empty() {
+            return Err(Error::runtime("empty artifact manifest"));
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(ArtifactStore { dir: dir.to_path_buf(), metas, client, compiled: RefCell::new(HashMap::new()) })
+    }
+
+    /// Open the default location.
+    pub fn open_default() -> Result<Self> {
+        Self::open(&default_dir())
+    }
+
+    /// All manifest entries.
+    pub fn metas(&self) -> &[ArtifactMeta] {
+        &self.metas
+    }
+
+    /// PJRT platform name (always `"cpu"` on this image).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Smallest variant of `kind` fitting `p` procs × `n` nodes.
+    pub fn best_of_kind(&self, kind: &str, p: usize, n: usize) -> Result<&ArtifactMeta> {
+        self.metas
+            .iter()
+            .filter(|m| m.kind == kind && m.p >= p && m.n >= n)
+            .min_by_key(|m| (m.p, m.n))
+            .ok_or_else(|| Error::runtime(format!("no {kind} artifact fits P={p} N={n}")))
+    }
+
+    /// Smallest unbatched cost-model variant fitting `p` procs × `n` nodes.
+    pub fn best_cost_model(&self, p: usize, n: usize) -> Result<&ArtifactMeta> {
+        self.best_of_kind("cost_model", p, n)
+    }
+
+    /// Load + compile an artifact (cached per store).
+    pub fn executable(&self, meta: &ArtifactMeta) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.compiled.borrow().get(&meta.file) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(&meta.file);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| Error::runtime("non-utf8 artifact path"))?;
+        // HLO *text* interchange — see python/compile/aot.py for why not
+        // serialized protos (xla_extension 0.5.1 rejects 64-bit ids).
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.compiled.borrow_mut().insert(meta.file.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.borrow().len()
+    }
+
+    /// Upload an f32 host buffer to the default device.
+    ///
+    /// Used by the scorer to keep the (large) traffic operand resident on
+    /// the device across refinement iterations instead of re-transferring a
+    /// literal per `execute` call.
+    pub fn buffer_from_host_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let metas = parse_manifest(
+            "cost_model 64 16 a.hlo.txt\n\
+             # comment\n\
+             cost_model_batched 16 64 16 b.hlo.txt\n",
+        )
+        .unwrap();
+        assert_eq!(metas.len(), 2);
+        assert_eq!(metas[0].p, 64);
+        assert_eq!(metas[0].batch, 1);
+        assert_eq!(metas[1].batch, 16);
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(parse_manifest("cost_model x 16 a").is_err());
+        assert!(parse_manifest("who knows").is_err());
+    }
+
+    #[test]
+    fn best_fit_selection_logic() {
+        // Pure-logic test (no PJRT): mimic selection over metas.
+        let metas = parse_manifest(
+            "cost_model 32 16 a\ncost_model 64 16 b\ncost_model 128 16 c\ncost_model 256 32 d\n",
+        )
+        .unwrap();
+        let pick = |p: usize, n: usize| {
+            metas
+                .iter()
+                .filter(|m| m.p >= p && m.n >= n)
+                .min_by_key(|m| (m.p, m.n))
+                .map(|m| m.file.clone())
+        };
+        assert_eq!(pick(20, 16).as_deref(), Some("a"));
+        assert_eq!(pick(33, 16).as_deref(), Some("b"));
+        assert_eq!(pick(100, 16).as_deref(), Some("c"));
+        assert_eq!(pick(129, 17).as_deref(), Some("d"));
+        assert_eq!(pick(300, 16), None);
+    }
+
+    #[test]
+    fn missing_dir_is_runtime_error() {
+        let err = ArtifactStore::open(Path::new("/nonexistent/nowhere")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

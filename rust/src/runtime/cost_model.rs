@@ -1,0 +1,278 @@
+//! PJRT-backed cost-model scorer: pads inputs into the artifact's fixed
+//! shapes, executes the AOT JAX/Pallas module, unpacks the 6-tuple.
+//!
+//! Padding contract (validated by `python/tests/test_model.py` and the
+//! cross-check integration tests): zero traffic rows and zero assignment
+//! rows contribute nothing to any output, so a (P_live, N_live) problem
+//! embedded in a (P_pad, N_pad) artifact yields exact results on the live
+//! prefix.
+
+use crate::coordinator::refine::{NodeLoads, Scorer};
+use crate::coordinator::Placement;
+use crate::error::{Error, Result};
+use crate::model::topology::ClusterSpec;
+use crate::model::traffic::TrafficMatrix;
+use crate::runtime::client::ArtifactStore;
+use crate::runtime::native::CostOutputs;
+
+/// Scorer backed by the AOT artifact.
+pub struct PjrtScorer<'a> {
+    store: &'a ArtifactStore,
+    /// Padded-traffic literal cache. The refinement loop scores thousands
+    /// of placements against the *same* traffic matrix; re-padding and
+    /// re-uploading the (P_pad × P_pad) literal each call dominated the
+    /// scoring latency before this cache (EXPERIMENTS.md §Perf).
+    /// Keyed by (matrix data pointer, live P, padded P) — the pointer makes
+    /// the key cheap while len/pad guard against coincidental reuse.
+    /// Holds a **device-resident** buffer: cache hits skip both the padding
+    /// pass and the host→device transfer of the (P_pad × P_pad) operand.
+    traffic_cache:
+        std::cell::RefCell<Option<(usize, usize, usize, std::rc::Rc<xla::PjRtBuffer>)>>,
+}
+
+impl<'a> PjrtScorer<'a> {
+    /// Wrap a store.
+    pub fn new(store: &'a ArtifactStore) -> Self {
+        PjrtScorer { store, traffic_cache: std::cell::RefCell::new(None) }
+    }
+
+    /// Padded traffic operand as a device buffer, cached across calls with
+    /// the same matrix.
+    fn traffic_buffer(
+        &self,
+        traffic: &TrafficMatrix,
+        pad_p: usize,
+    ) -> Result<std::rc::Rc<xla::PjRtBuffer>> {
+        let key = (traffic.as_slice().as_ptr() as usize, traffic.len(), pad_p);
+        if let Some((p0, p1, p2, buf)) = self.traffic_cache.borrow().as_ref() {
+            if (*p0, *p1, *p2) == key {
+                return Ok(buf.clone());
+            }
+        }
+        let t_buf = Self::pad_traffic(traffic, pad_p);
+        let buf = std::rc::Rc::new(self.store.buffer_from_host_f32(&t_buf, &[pad_p, pad_p])?);
+        *self.traffic_cache.borrow_mut() = Some((key.0, key.1, key.2, buf.clone()));
+        Ok(buf)
+    }
+
+    /// Pad `traffic` to a `pad_p × pad_p` f32 row-major buffer.
+    fn pad_traffic(traffic: &TrafficMatrix, pad_p: usize) -> Vec<f32> {
+        let p = traffic.len();
+        let mut t = vec![0.0f32; pad_p * pad_p];
+        for i in 0..p {
+            let row = traffic.row(i);
+            for (j, &v) in row.iter().enumerate() {
+                t[i * pad_p + j] = v as f32;
+            }
+        }
+        t
+    }
+
+    /// Execute the full cost model and return all six outputs, sliced to
+    /// the live prefix.
+    pub fn evaluate(
+        &self,
+        traffic: &TrafficMatrix,
+        placement: &Placement,
+        cluster: &ClusterSpec,
+    ) -> Result<CostOutputs> {
+        let p_live = traffic.len();
+        if placement.len() != p_live {
+            return Err(Error::runtime(format!(
+                "placement covers {} procs, traffic has {p_live}",
+                placement.len()
+            )));
+        }
+        let n_live = cluster.nodes;
+        let meta = self.store.best_cost_model(p_live, n_live)?;
+        let (pad_p, pad_n) = (meta.p, meta.n);
+        let exe = self.store.executable(meta)?;
+
+        let t_dev = self.traffic_buffer(traffic, pad_p)?;
+        let a_host = placement.assignment_matrix(cluster, pad_p, pad_n);
+        let a_dev = self.store.buffer_from_host_f32(&a_host, &[pad_p, pad_n])?;
+
+        let args: [&xla::PjRtBuffer; 2] = [t_dev.as_ref(), &a_dev];
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != 6 {
+            return Err(Error::runtime(format!(
+                "artifact returned {}-tuple, expected 6",
+                parts.len()
+            )));
+        }
+        let fetch = |lit: &xla::Literal| -> Result<Vec<f32>> { Ok(lit.to_vec::<f32>()?) };
+        let m_pad = fetch(&parts[0])?;
+        let tx_pad = fetch(&parts[1])?;
+        let rx_pad = fetch(&parts[2])?;
+        let intra_pad = fetch(&parts[3])?;
+        let cd_pad = fetch(&parts[4])?;
+        let adj_pad = fetch(&parts[5])?;
+
+        // Slice the live prefix out of the padded outputs.
+        let mut node_traffic = vec![0.0f64; n_live * n_live];
+        for a in 0..n_live {
+            for b in 0..n_live {
+                node_traffic[a * n_live + b] = m_pad[a * pad_n + b] as f64;
+            }
+        }
+        let take = |v: &[f32], k: usize| v[..k].iter().map(|&x| x as f64).collect::<Vec<f64>>();
+        Ok(CostOutputs {
+            node_traffic,
+            nic_tx: take(&tx_pad, n_live),
+            nic_rx: take(&rx_pad, n_live),
+            intra: take(&intra_pad, n_live),
+            cd: take(&cd_pad, p_live),
+            adj: take(&adj_pad, p_live),
+        })
+    }
+}
+
+impl PjrtScorer<'_> {
+    /// Fast scoring path: prefers the `node_loads` artifact (no cd/adj
+    /// reductions — they are placement-independent) and falls back to the
+    /// full cost model for older artifact sets.
+    fn score_fast(
+        &self,
+        traffic: &TrafficMatrix,
+        placement: &Placement,
+        cluster: &ClusterSpec,
+    ) -> Result<NodeLoads> {
+        let p_live = traffic.len();
+        let n_live = cluster.nodes;
+        let meta = match self.store.best_of_kind("node_loads", p_live, n_live) {
+            Ok(m) => m,
+            Err(_) => {
+                let out = self.evaluate(traffic, placement, cluster)?;
+                return Ok(NodeLoads { nic_tx: out.nic_tx, nic_rx: out.nic_rx, intra: out.intra });
+            }
+        };
+        let (pad_p, pad_n) = (meta.p, meta.n);
+        let exe = self.store.executable(meta)?;
+        let t_dev = self.traffic_buffer(traffic, pad_p)?;
+        let a_host = placement.assignment_matrix(cluster, pad_p, pad_n);
+        let a_dev = self.store.buffer_from_host_f32(&a_host, &[pad_p, pad_n])?;
+        let args: [&xla::PjRtBuffer; 2] = [t_dev.as_ref(), &a_dev];
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != 4 {
+            return Err(Error::runtime(format!(
+                "node_loads artifact returned {}-tuple, expected 4",
+                parts.len()
+            )));
+        }
+        let take = |lit: &xla::Literal, k: usize| -> Result<Vec<f64>> {
+            Ok(lit.to_vec::<f32>()?[..k].iter().map(|&x| x as f64).collect())
+        };
+        Ok(NodeLoads {
+            nic_tx: take(&parts[1], n_live)?,
+            nic_rx: take(&parts[2], n_live)?,
+            intra: take(&parts[3], n_live)?,
+        })
+    }
+}
+
+impl PjrtScorer<'_> {
+    /// Score many candidate placements of the same job in one PJRT dispatch
+    /// using the `cost_model_batched` artifact (`B` candidates per call).
+    /// Falls back to sequential scoring when no batched variant fits.
+    ///
+    /// Returns one [`NodeLoads`] per input placement, in order.
+    pub fn score_batch(
+        &self,
+        traffic: &TrafficMatrix,
+        placements: &[&Placement],
+        cluster: &ClusterSpec,
+    ) -> Result<Vec<NodeLoads>> {
+        let p_live = traffic.len();
+        let n_live = cluster.nodes;
+        let meta = match self
+            .store
+            .metas()
+            .iter()
+            .filter(|m| m.kind == "cost_model_batched" && m.p >= p_live && m.n >= n_live)
+            .min_by_key(|m| (m.p, m.n, m.batch))
+        {
+            Some(m) => m.clone(),
+            None => {
+                // No batched artifact fits: sequential fallback.
+                return placements
+                    .iter()
+                    .map(|p| self.score_fast(traffic, p, cluster))
+                    .collect();
+            }
+        };
+        let (b, pad_p, pad_n) = (meta.batch, meta.p, meta.n);
+        let exe = self.store.executable(&meta)?;
+        let t_dev = self.traffic_buffer(traffic, pad_p)?;
+
+        let mut out = Vec::with_capacity(placements.len());
+        for chunk in placements.chunks(b) {
+            // Pack the chunk into a (B, P, N) one-hot stack; unused batch
+            // slots stay zero (zero assignments produce all-zero loads).
+            let mut a_host = vec![0.0f32; b * pad_p * pad_n];
+            for (i, p) in chunk.iter().enumerate() {
+                let one = p.assignment_matrix(cluster, pad_p, pad_n);
+                a_host[i * pad_p * pad_n..(i + 1) * pad_p * pad_n].copy_from_slice(&one);
+            }
+            let a_dev = self.store.buffer_from_host_f32(&a_host, &[b, pad_p, pad_n])?;
+            let args: [&xla::PjRtBuffer; 2] = [t_dev.as_ref(), &a_dev];
+            let result = exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0].to_literal_sync()?;
+            let parts = result.to_tuple()?;
+            if parts.len() != 4 {
+                return Err(Error::runtime(format!(
+                    "batched artifact returned {}-tuple, expected 4 (m, tx, rx, intra)",
+                    parts.len()
+                )));
+            }
+            let tx = parts[1].to_vec::<f32>()?;
+            let rx = parts[2].to_vec::<f32>()?;
+            let intra = parts[3].to_vec::<f32>()?;
+            for i in 0..chunk.len() {
+                let take = |v: &[f32]| -> Vec<f64> {
+                    v[i * pad_n..i * pad_n + n_live].iter().map(|&x| x as f64).collect()
+                };
+                out.push(NodeLoads { nic_tx: take(&tx), nic_rx: take(&rx), intra: take(&intra) });
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Scorer for PjrtScorer<'_> {
+    fn score(
+        &self,
+        traffic: &TrafficMatrix,
+        placement: &Placement,
+        cluster: &ClusterSpec,
+    ) -> Result<NodeLoads> {
+        self.score_fast(traffic, placement, cluster)
+    }
+}
+
+// PJRT-touching tests live in rust/tests/runtime_integration.rs (they need
+// the artifacts directory from `make artifacts`). Unit tests here cover the
+// pure padding logic.
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::pattern::Pattern;
+    use crate::model::workload::{JobSpec, Workload};
+
+    #[test]
+    fn pad_traffic_zero_extends() {
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::Linear, 3, 1000, 1.0, 5)],
+        )
+        .unwrap();
+        let t = TrafficMatrix::of_workload(&w);
+        let buf = PjrtScorer::pad_traffic(&t, 8);
+        assert_eq!(buf.len(), 64);
+        assert_eq!(buf[0 * 8 + 1], 1000.0); // 0 -> 1 live edge
+        assert_eq!(buf[1 * 8 + 2], 1000.0);
+        // Everything beyond the live 3x3 block is zero.
+        let live_sum: f32 = buf.iter().sum();
+        assert_eq!(live_sum, 2000.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Runtime layer: loads the AOT-compiled JAX/Pallas cost model (HLO text →
+//! PJRT CPU executable) and exposes it as a [`crate::coordinator::refine::Scorer`].
+//!
+//! * [`client`] — artifact discovery (manifest), HLO-text loading, PJRT
+//!   compile + execute. One compile per artifact per process, cached.
+//! * [`cost_model`] — [`cost_model::PjrtScorer`]: pads a traffic matrix and
+//!   a placement into the artifact's fixed shapes and unpacks the 6-tuple.
+//! * [`native`] — [`native::NativeScorer`]: the same math in pure Rust.
+//!   Serves as the no-artifact fallback *and* as the oracle the integration
+//!   tests pin the artifact against (rust-vs-JAX cross-check).
+//!
+//! Python never runs here: the HLO text was produced once by
+//! `python/compile/aot.py` (`make artifacts`).
+
+pub mod client;
+pub mod cost_model;
+pub mod native;
+
+pub use client::ArtifactStore;
+pub use cost_model::PjrtScorer;
+pub use native::NativeScorer;

@@ -1,0 +1,147 @@
+//! Pure-Rust reference implementation of the cost model.
+//!
+//! Mirrors `python/compile/kernels/ref.py::cost_model` exactly (same output
+//! order, same both-direction CD definition).  Used as the fallback scorer
+//! when `artifacts/` is missing and as the oracle integration tests compare
+//! the PJRT path against.
+
+use crate::coordinator::refine::{NodeLoads, Scorer};
+use crate::coordinator::Placement;
+use crate::error::Result;
+use crate::model::topology::ClusterSpec;
+use crate::model::traffic::TrafficMatrix;
+
+/// Pure-Rust scorer (no PJRT).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NativeScorer;
+
+/// Full cost-model output (superset of [`NodeLoads`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostOutputs {
+    /// Node-to-node traffic matrix, row-major `nodes × nodes`, bytes/sec.
+    pub node_traffic: Vec<f64>,
+    /// Inter-node egress per node.
+    pub nic_tx: Vec<f64>,
+    /// Inter-node ingress per node.
+    pub nic_rx: Vec<f64>,
+    /// Intra-node volume per node.
+    pub intra: Vec<f64>,
+    /// Communication demand per process (eq. 1, both directions).
+    pub cd: Vec<f64>,
+    /// Adjacency degree per process.
+    pub adj: Vec<f64>,
+}
+
+/// Evaluate the cost model in pure Rust.
+pub fn cost_model(
+    traffic: &TrafficMatrix,
+    placement: &Placement,
+    cluster: &ClusterSpec,
+) -> CostOutputs {
+    let p = traffic.len();
+    let n = cluster.nodes;
+    let node_of: Vec<usize> = (0..p).map(|i| placement.node_of(i, cluster)).collect();
+
+    // M = AᵀTA without materializing A: scatter-accumulate by node pair.
+    let mut m = vec![0.0f64; n * n];
+    for i in 0..p {
+        let row = traffic.row(i);
+        let ni = node_of[i];
+        for (j, &v) in row.iter().enumerate() {
+            if v > 0.0 {
+                m[ni * n + node_of[j]] += v;
+            }
+        }
+    }
+    let mut nic_tx = vec![0.0; n];
+    let mut nic_rx = vec![0.0; n];
+    let mut intra = vec![0.0; n];
+    for a in 0..n {
+        intra[a] = m[a * n + a];
+        for b in 0..n {
+            if a != b {
+                nic_tx[a] += m[a * n + b];
+                nic_rx[a] += m[b * n + a];
+            }
+        }
+    }
+    let cd: Vec<f64> = (0..p).map(|i| traffic.demand(i)).collect();
+    let adj: Vec<f64> = (0..p).map(|i| traffic.adjacency(i) as f64).collect();
+    CostOutputs { node_traffic: m, nic_tx, nic_rx, intra, cd, adj }
+}
+
+impl Scorer for NativeScorer {
+    fn score(
+        &self,
+        traffic: &TrafficMatrix,
+        placement: &Placement,
+        cluster: &ClusterSpec,
+    ) -> Result<NodeLoads> {
+        let out = cost_model(traffic, placement, cluster);
+        Ok(NodeLoads { nic_tx: out.nic_tx, nic_rx: out.nic_rx, intra: out.intra })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::pattern::Pattern;
+    use crate::model::workload::{JobSpec, Workload};
+
+    fn setup(pat: Pattern, procs: usize) -> (TrafficMatrix, Workload, ClusterSpec) {
+        let cluster = ClusterSpec::small_test_cluster();
+        let w =
+            Workload::new("t", vec![JobSpec::synthetic(pat, procs, 1000, 2.0, 5)]).unwrap();
+        (TrafficMatrix::of_workload(&w), w, cluster)
+    }
+
+    #[test]
+    fn single_node_no_nic() {
+        let (t, _w, cluster) = setup(Pattern::AllToAll, 4);
+        let p = Placement::new(vec![0, 1, 2, 3]); // all node 0
+        let out = cost_model(&t, &p, &cluster);
+        assert!(out.nic_tx.iter().all(|&v| v == 0.0));
+        assert!(out.nic_rx.iter().all(|&v| v == 0.0));
+        assert_eq!(out.intra[0], t.total());
+    }
+
+    #[test]
+    fn spread_all_nic() {
+        let (t, _w, cluster) = setup(Pattern::AllToAll, 4);
+        let p = Placement::new(vec![0, 4, 8, 12]); // one per node
+        let out = cost_model(&t, &p, &cluster);
+        assert!(out.intra.iter().all(|&v| v == 0.0));
+        let tx_sum: f64 = out.nic_tx.iter().sum();
+        assert!((tx_sum - t.total()).abs() < 1e-9);
+        let rx_sum: f64 = out.nic_rx.iter().sum();
+        assert!((tx_sum - rx_sum).abs() < 1e-9, "every byte sent is received");
+    }
+
+    #[test]
+    fn conservation_under_random_placements() {
+        use crate::testkit::{forall, gen};
+        forall(0xAB, 30, |rng| {
+            let cluster = gen::cluster(rng);
+            let w = gen::workload(rng, &cluster);
+            let t = TrafficMatrix::of_workload(&w);
+            let p = gen::placement(rng, &w, &cluster);
+            let out = cost_model(&t, &p, &cluster);
+            let m_sum: f64 = out.node_traffic.iter().sum();
+            assert!((m_sum - t.total()).abs() < 1e-6 * t.total().max(1.0));
+            let tx: f64 = out.nic_tx.iter().sum();
+            let rx: f64 = out.nic_rx.iter().sum();
+            assert!((tx - rx).abs() < 1e-6 * tx.max(1.0));
+        });
+    }
+
+    #[test]
+    fn gather_root_demand_highest() {
+        let (t, _w, cluster) = setup(Pattern::GatherReduce, 8);
+        let p = Placement::new((0..8).collect());
+        let out = cost_model(&t, &p, &cluster);
+        let root = out.cd[0];
+        assert!(out.cd[1..].iter().all(|&c| c < root));
+        assert_eq!(out.adj[0], 7.0);
+        assert_eq!(out.adj[1], 1.0);
+    }
+}

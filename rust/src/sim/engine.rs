@@ -1,0 +1,163 @@
+//! Deterministic binary-heap event engine.
+//!
+//! Events are ordered by `(time, seq)` where `seq` is the push order —
+//! simultaneous events fire in insertion order, which makes every run
+//! bit-reproducible regardless of hash seeds or allocation noise.
+
+use crate::units::Ns;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Payload of one scheduled event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// A sender (global proc `proc`, flow `flow` of its job) emits its
+    /// round `round` of messages.
+    SendRound {
+        /// Global process id.
+        proc: u32,
+        /// Flow index within the process's job.
+        flow: u16,
+        /// Round number (0-based).
+        round: u32,
+    },
+    /// The in-service message at `server` finishes service.
+    ///
+    /// Queued messages never sit in the event heap — each server keeps its
+    /// own FIFO and only the head-of-line completion is scheduled, so the
+    /// heap stays O(servers + senders) instead of O(in-flight messages)
+    /// (the key DES optimization, EXPERIMENTS.md §Perf).
+    Completion {
+        /// Server whose service completes.
+        server: u32,
+    },
+}
+
+#[derive(Debug, PartialEq, Eq)]
+struct Entry {
+    time: Ns,
+    seq: u64,
+    ev: Event,
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time.cmp(&other.time).then(self.seq.cmp(&other.seq))
+    }
+}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-heap event queue with a monotonic clock.
+#[derive(Debug, Default)]
+pub struct Engine {
+    heap: BinaryHeap<Reverse<Entry>>,
+    seq: u64,
+    now: Ns,
+    processed: u64,
+}
+
+impl Engine {
+    /// Empty engine at t = 0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `ev` at absolute time `time` (must be ≥ the current clock).
+    #[inline]
+    pub fn schedule(&mut self, time: Ns, ev: Event) {
+        debug_assert!(time >= self.now, "scheduling into the past: {time} < {}", self.now);
+        self.heap.push(Reverse(Entry { time, seq: self.seq, ev }));
+        self.seq += 1;
+    }
+
+    /// Pop the next event, advancing the clock. `None` when drained.
+    #[inline]
+    pub fn pop(&mut self) -> Option<(Ns, Event)> {
+        let Reverse(e) = self.heap.pop()?;
+        debug_assert!(e.time >= self.now, "time went backwards");
+        self.now = e.time;
+        self.processed += 1;
+        Some((e.time, e.ev))
+    }
+
+    /// Current simulation time.
+    pub fn now(&self) -> Ns {
+        self.now
+    }
+
+    /// Events processed so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Events still pending.
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(n: u32) -> Event {
+        Event::SendRound { proc: n, flow: 0, round: 0 }
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut e = Engine::new();
+        e.schedule(30, ev(3));
+        e.schedule(10, ev(1));
+        e.schedule(20, ev(2));
+        let order: Vec<u64> = std::iter::from_fn(|| e.pop().map(|(t, _)| t)).collect();
+        assert_eq!(order, vec![10, 20, 30]);
+        assert_eq!(e.processed(), 3);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut e = Engine::new();
+        e.schedule(5, ev(1));
+        e.schedule(5, ev(2));
+        e.schedule(5, ev(3));
+        let order: Vec<u32> = std::iter::from_fn(|| {
+            e.pop().map(|(_, ev)| match ev {
+                Event::SendRound { proc, .. } => proc,
+                _ => unreachable!(),
+            })
+        })
+        .collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn clock_monotonic() {
+        let mut e = Engine::new();
+        e.schedule(10, ev(1));
+        e.pop();
+        assert_eq!(e.now(), 10);
+        e.schedule(10, ev(2)); // same-time scheduling from a handler is fine
+        e.schedule(15, ev(3));
+        e.pop();
+        assert_eq!(e.now(), 10);
+        e.pop();
+        assert_eq!(e.now(), 15);
+        assert_eq!(e.pending(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduling into the past")]
+    #[cfg(debug_assertions)]
+    fn rejects_past_scheduling() {
+        let mut e = Engine::new();
+        e.schedule(10, ev(1));
+        e.pop();
+        e.schedule(5, ev(2));
+    }
+}

@@ -1,0 +1,269 @@
+//! The cluster fabric: all queuing servers plus message routing.
+//!
+//! Table 1 path semantics (DESIGN.md §9):
+//! * same socket, `bytes ≤ cache_max_msg` → one service at the socket cache;
+//! * same node otherwise → one service at the destination socket's memory,
+//!   +10 % when crossing sockets (NUMA remote access);
+//! * inter-node → source NIC-tx service, switch latency, destination NIC-rx
+//!   service, then a memory deposit at the destination socket's memory.
+
+use crate::model::topology::{ClusterSpec, CoreId};
+use crate::sim::server::Server;
+use crate::sim::{ServerId, ServerKind};
+use crate::units::{scale_pct, service_ns, Bytes, Ns};
+
+/// One hop of a message route: a server, the service time it will consume
+/// there, and a fixed latency added after service completes (the switch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Hop {
+    /// Target server.
+    pub server: ServerId,
+    /// Deterministic service time at this hop.
+    pub service: Ns,
+    /// Latency appended after service (0 except NIC-tx → switch).
+    pub latency_after: Ns,
+}
+
+/// A route is at most three hops (tx, rx, memory deposit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Route {
+    hops: [Hop; 3],
+    len: u8,
+}
+
+impl Route {
+    /// Hops as a slice.
+    pub fn hops(&self) -> &[Hop] {
+        &self.hops[..self.len as usize]
+    }
+
+    /// Hop count.
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    /// Never true — every route has ≥1 hop.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Hop at index.
+    pub fn hop(&self, i: usize) -> Hop {
+        debug_assert!(i < self.len as usize);
+        self.hops[i]
+    }
+}
+
+/// Servers + routing for one cluster.
+#[derive(Debug)]
+pub struct Fabric {
+    cluster: ClusterSpec,
+    /// `[0,S)` caches, `[S,2S)` memories, `[2S,2S+N)` NIC-tx,
+    /// `[2S+N,2S+2N)` NIC-rx.
+    pub servers: Vec<Server>,
+    sockets: u32,
+    nodes: u32,
+}
+
+impl Fabric {
+    /// Build the server set for `cluster`.
+    pub fn new(cluster: &ClusterSpec) -> Self {
+        let sockets = cluster.total_sockets() as u32;
+        let nodes = cluster.nodes as u32;
+        Fabric {
+            cluster: cluster.clone(),
+            servers: vec![Server::default(); (2 * sockets + 2 * nodes) as usize],
+            sockets,
+            nodes,
+        }
+    }
+
+    /// Cache server of global socket `s`.
+    #[inline]
+    pub fn cache_id(&self, s: usize) -> ServerId {
+        s as ServerId
+    }
+
+    /// Memory server of global socket `s`.
+    #[inline]
+    pub fn memory_id(&self, s: usize) -> ServerId {
+        self.sockets + s as ServerId
+    }
+
+    /// NIC-tx server of `node`.
+    #[inline]
+    pub fn nic_tx_id(&self, node: usize) -> ServerId {
+        2 * self.sockets + node as ServerId
+    }
+
+    /// NIC-rx server of `node`.
+    #[inline]
+    pub fn nic_rx_id(&self, node: usize) -> ServerId {
+        2 * self.sockets + self.nodes + node as ServerId
+    }
+
+    /// Category of a server id.
+    pub fn kind(&self, id: ServerId) -> ServerKind {
+        ServerKind::of(id, &self.cluster)
+    }
+
+    /// Compute the route for a `bytes`-long message from `src` to `dst`
+    /// cores. `src == dst` is a caller bug (patterns never self-send).
+    pub fn route(&self, src: CoreId, dst: CoreId, bytes: Bytes) -> Route {
+        debug_assert_ne!(src, dst, "self-send has no route");
+        let c = &self.cluster;
+        let src_socket = c.socket_of_core(src);
+        let dst_socket = c.socket_of_core(dst);
+        let src_node = c.node_of_core(src);
+        let dst_node = c.node_of_core(dst);
+        let nil = Hop { server: 0, service: 0, latency_after: 0 };
+
+        if src_node == dst_node {
+            if src_socket == dst_socket && bytes <= c.cache_max_msg {
+                // Intra-socket cache path.
+                let hop = Hop {
+                    server: self.cache_id(src_socket),
+                    service: service_ns(bytes, c.cache_bw),
+                    latency_after: 0,
+                };
+                return Route { hops: [hop, nil, nil], len: 1 };
+            }
+            // Intra-node memory path; remote NUMA penalty across sockets.
+            let mut service = service_ns(bytes, c.mem_bw);
+            if src_socket != dst_socket {
+                service = scale_pct(service, c.remote_mem_pct);
+            }
+            let hop = Hop {
+                server: self.memory_id(dst_socket),
+                service,
+                latency_after: 0,
+            };
+            return Route { hops: [hop, nil, nil], len: 1 };
+        }
+
+        // Inter-node: tx → switch → rx → memory deposit.
+        let nic_svc = service_ns(bytes, c.nic_bw);
+        let tx = Hop {
+            server: self.nic_tx_id(src_node),
+            service: nic_svc,
+            latency_after: c.switch_latency,
+        };
+        let rx = Hop {
+            server: self.nic_rx_id(dst_node),
+            service: nic_svc,
+            latency_after: 0,
+        };
+        let dep = Hop {
+            server: self.memory_id(dst_socket),
+            service: service_ns(bytes, c.mem_bw),
+            latency_after: 0,
+        };
+        Route { hops: [tx, rx, dep], len: 3 }
+    }
+
+    /// Waiting-time totals bucketed by server kind, in ns:
+    /// `(nic, memory, cache)`.
+    pub fn wait_by_kind(&self) -> (u128, u128, u128) {
+        let mut nic = 0u128;
+        let mut mem = 0u128;
+        let mut cache = 0u128;
+        for (i, s) in self.servers.iter().enumerate() {
+            match self.kind(i as ServerId) {
+                ServerKind::NicTx | ServerKind::NicRx => nic += s.wait_ns,
+                ServerKind::Memory => mem += s.wait_ns,
+                ServerKind::Cache => cache += s.wait_ns,
+            }
+        }
+        (nic, mem, cache)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::{KB, MB};
+
+    fn fabric() -> Fabric {
+        Fabric::new(&ClusterSpec::paper_cluster())
+    }
+
+    #[test]
+    fn server_count_and_ids() {
+        let f = fabric();
+        // 64 sockets x 2 + 16 nodes x 2 = 160 servers.
+        assert_eq!(f.servers.len(), 160);
+        assert_eq!(f.kind(f.cache_id(0)), ServerKind::Cache);
+        assert_eq!(f.kind(f.memory_id(63)), ServerKind::Memory);
+        assert_eq!(f.kind(f.nic_tx_id(0)), ServerKind::NicTx);
+        assert_eq!(f.kind(f.nic_rx_id(15)), ServerKind::NicRx);
+    }
+
+    #[test]
+    fn intra_socket_small_takes_cache() {
+        let f = fabric();
+        // Cores 0 and 1 share socket 0.
+        let r = f.route(0, 1, 64 * KB);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.hop(0).server, f.cache_id(0));
+        // 64 KB at 8 GB/s = 8 µs.
+        assert_eq!(r.hop(0).service, 8_000);
+    }
+
+    #[test]
+    fn intra_socket_large_falls_back_to_memory() {
+        let f = fabric();
+        let r = f.route(0, 1, 2 * MB);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.hop(0).server, f.memory_id(0));
+        // 2 MB at 4 GB/s = 500 µs, no remote penalty (same socket).
+        assert_eq!(r.hop(0).service, 500_000);
+    }
+
+    #[test]
+    fn cross_socket_memory_remote_penalty() {
+        let f = fabric();
+        // Core 0 (socket 0) → core 4 (socket 1), same node.
+        let r = f.route(0, 4, MB);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.hop(0).server, f.memory_id(1), "destination socket's memory");
+        // 1 MB at 4 GB/s = 250 µs, +10 % = 275 µs.
+        assert_eq!(r.hop(0).service, 275_000);
+    }
+
+    #[test]
+    fn inter_node_three_hops() {
+        let f = fabric();
+        // Core 0 (node 0) → core 16 (node 1, socket 4).
+        let r = f.route(0, 16, 64 * KB);
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.hop(0).server, f.nic_tx_id(0));
+        assert_eq!(r.hop(0).service, 64_000); // 64 KB at 1 GB/s
+        assert_eq!(r.hop(0).latency_after, 100); // switch
+        assert_eq!(r.hop(1).server, f.nic_rx_id(1));
+        assert_eq!(r.hop(1).service, 64_000);
+        assert_eq!(r.hop(2).server, f.memory_id(4));
+        assert_eq!(r.hop(2).service, 16_000); // 64 KB at 4 GB/s
+    }
+
+    #[test]
+    fn cache_boundary_exact() {
+        let f = fabric();
+        assert_eq!(f.route(0, 1, MB).hop(0).server, f.cache_id(0), "1 MB still cache");
+        assert_eq!(f.route(0, 1, MB + 1).hop(0).server, f.memory_id(0));
+    }
+
+    #[test]
+    fn wait_buckets_accumulate() {
+        let mut f = fabric();
+        let tx = f.nic_tx_id(0) as usize;
+        f.servers[tx].accept(0, 100);
+        f.servers[tx].accept(10, 100); // waits 90
+        let mem = f.memory_id(0) as usize;
+        f.servers[mem].accept(0, 50);
+        f.servers[mem].accept(20, 50); // waits 30
+        let (nic, memw, cache) = f.wait_by_kind();
+        assert_eq!(nic, 90);
+        assert_eq!(memw, 30);
+        assert_eq!(cache, 0);
+    }
+}

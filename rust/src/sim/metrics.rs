@@ -1,0 +1,100 @@
+//! Simulation outputs — the paper's three evaluation metrics plus the
+//! diagnostics the tests and the perf pass need.
+
+use crate::units::{Ns, NS_PER_SEC};
+
+/// Per-job outcome.
+#[derive(Debug, Clone, Default)]
+pub struct JobReport {
+    /// Last delivery (or send, whichever is later) of this job.
+    pub finish_ns: Ns,
+    /// Messages delivered.
+    pub delivered: u64,
+    /// Bytes delivered.
+    pub bytes: u128,
+    /// Queue waiting accumulated by this job's messages (all server kinds).
+    pub wait_ns: u128,
+}
+
+/// Full simulation report.
+#[derive(Debug, Clone, Default)]
+pub struct SimReport {
+    /// Σ waiting time at NIC servers (tx+rx), ns — the dominant component
+    /// of the paper's Figs 2/5 metric.
+    pub wait_nic_ns: u128,
+    /// Σ waiting time at memory servers, ns.
+    pub wait_mem_ns: u128,
+    /// Σ waiting time at cache servers, ns.
+    pub wait_cache_ns: u128,
+    /// Per-job outcomes.
+    pub jobs: Vec<JobReport>,
+    /// Total messages delivered.
+    pub delivered: u64,
+    /// Total messages sent (must equal `delivered` at drain).
+    pub sent: u64,
+    /// Events processed by the engine.
+    pub events: u64,
+    /// Final simulation clock.
+    pub end_ns: Ns,
+    /// Wall-clock seconds the simulation took (perf accounting).
+    pub wall_secs: f64,
+}
+
+impl SimReport {
+    /// The paper's Figs 2/5 metric: Σ waiting time of messages at the
+    /// server queues (network interface and memory), in milliseconds.
+    pub fn waiting_ms(&self) -> f64 {
+        (self.wait_nic_ns + self.wait_mem_ns + self.wait_cache_ns) as f64 / 1e6
+    }
+
+    /// Fig 3 metric: workload finish time (max job finish), seconds.
+    pub fn workload_finish_s(&self) -> f64 {
+        self.jobs.iter().map(|j| j.finish_ns).max().unwrap_or(0) as f64 / NS_PER_SEC as f64
+    }
+
+    /// Fig 4 metric: total finish time of parallel jobs (Σ job finishes),
+    /// seconds.
+    pub fn total_finish_s(&self) -> f64 {
+        self.jobs.iter().map(|j| j.finish_ns as f64).sum::<f64>() / NS_PER_SEC as f64
+    }
+
+    /// Events per wall-clock second (perf pass headline).
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            0.0
+        } else {
+            self.events as f64 / self.wall_secs
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_conversions() {
+        let r = SimReport {
+            wait_nic_ns: 1_500_000,
+            wait_mem_ns: 500_000,
+            wait_cache_ns: 0,
+            jobs: vec![
+                JobReport { finish_ns: 2 * NS_PER_SEC, ..Default::default() },
+                JobReport { finish_ns: 3 * NS_PER_SEC, ..Default::default() },
+            ],
+            ..Default::default()
+        };
+        assert_eq!(r.waiting_ms(), 2.0);
+        assert_eq!(r.workload_finish_s(), 3.0);
+        assert_eq!(r.total_finish_s(), 5.0);
+    }
+
+    #[test]
+    fn empty_report_is_zero() {
+        let r = SimReport::default();
+        assert_eq!(r.waiting_ms(), 0.0);
+        assert_eq!(r.workload_finish_s(), 0.0);
+        assert_eq!(r.total_finish_s(), 0.0);
+        assert_eq!(r.events_per_sec(), 0.0);
+    }
+}

@@ -1,0 +1,65 @@
+//! Discrete-event simulation of the multi-core cluster (the OMNeT++ v4.1
+//! substitute — DESIGN.md §2, §9).
+//!
+//! * [`engine`] — binary-heap event loop, deterministic, u64-ns clock.
+//! * [`server`] — FIFO single-server queues with waiting-time accounting
+//!   (NICs, memories, caches are all instances).
+//! * [`fabric`] — instantiates the servers for a [`ClusterSpec`] and routes
+//!   messages: cache / memory / NIC-switch-NIC paths per Table 1 semantics.
+//! * [`runner`] — drives a workload + placement through the engine and
+//!   produces a [`metrics::SimReport`].
+//! * [`metrics`] — the paper's three metrics: queue waiting time (Figs 2/5),
+//!   workload finish time (Fig 3), total job finish time (Fig 4).
+
+pub mod engine;
+pub mod fabric;
+pub mod metrics;
+pub mod runner;
+pub mod server;
+
+pub use metrics::SimReport;
+pub use runner::{simulate, SimConfig};
+
+use crate::model::topology::ClusterSpec;
+
+#[cfg(test)]
+mod tests {
+    // Cross-module integration tests live in rust/tests/; unit tests sit in
+    // each submodule.
+}
+
+/// Identifier of a queuing server inside the fabric.
+///
+/// Layout (S = total sockets, N = nodes):
+/// `[0, S)` caches, `[S, 2S)` memories, `[2S, 2S+N)` NIC-tx, `[2S+N, 2S+2N)`
+/// NIC-rx.
+pub type ServerId = u32;
+
+/// Server category, derived from the id layout — used to bucket waiting
+/// time into the paper's "network interface" vs "memory" accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServerKind {
+    /// Intra-socket cache path.
+    Cache,
+    /// NUMA-domain main memory.
+    Memory,
+    /// NIC transmit side.
+    NicTx,
+    /// NIC receive side.
+    NicRx,
+}
+
+impl ServerKind {
+    /// Categorize a server id under the layout above.
+    pub fn of(id: ServerId, cluster: &ClusterSpec) -> ServerKind {
+        let s = cluster.total_sockets() as u32;
+        let n = cluster.nodes as u32;
+        match id {
+            x if x < s => ServerKind::Cache,
+            x if x < 2 * s => ServerKind::Memory,
+            x if x < 2 * s + n => ServerKind::NicTx,
+            x if x < 2 * s + 2 * n => ServerKind::NicRx,
+            _ => panic!("server id {id} out of range"),
+        }
+    }
+}

@@ -1,0 +1,390 @@
+//! Simulation driver: workload + placement + cluster → [`SimReport`].
+//!
+//! Send semantics (DESIGN.md §9): each sending process emits one message to
+//! every destination of its pattern per `1/rate` interval, for `count`
+//! rounds; a per-process start stagger (default 1 µs × global id) breaks the
+//! degenerate all-at-t=0 burst without perturbing steady-state rates.
+
+use crate::coordinator::Placement;
+use crate::error::{Error, Result};
+use crate::model::topology::ClusterSpec;
+use crate::model::workload::Workload;
+use crate::sim::engine::{Engine, Event};
+use crate::sim::fabric::Fabric;
+use crate::sim::metrics::{JobReport, SimReport};
+use crate::units::{interval_ns, Ns};
+
+/// Simulation knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    /// Per-process start offset (global proc id × this), ns.
+    pub stagger_ns: Ns,
+    /// Safety valve: abort after this many events (0 = unlimited). The
+    /// paper workloads run 20–60 M events; the default is far above that.
+    pub max_events: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { stagger_ns: 1_000, max_events: 2_000_000_000 }
+    }
+}
+
+/// Per-flow runtime info, precomputed per sending process.
+struct FlowRt {
+    /// Destination global proc ids (pattern round fan-out).
+    dests: Vec<u32>,
+    interval: Ns,
+    rounds: u32,
+    bytes: u32,
+}
+
+/// Run the discrete-event simulation to drain.
+pub fn simulate(
+    w: &Workload,
+    placement: &Placement,
+    cluster: &ClusterSpec,
+    cfg: &SimConfig,
+) -> Result<SimReport> {
+    placement.validate(w, cluster)?;
+    let wall_start = std::time::Instant::now();
+
+    let total = w.total_procs();
+    // proc → job, proc → core.
+    let mut job_of = vec![0u32; total];
+    for (jid, _) in w.jobs.iter().enumerate() {
+        for g in w.procs_of_job(jid) {
+            job_of[g] = jid as u32;
+        }
+    }
+    let core_of: Vec<u32> = placement.core_of.iter().map(|&c| c as u32).collect();
+
+    // Per (proc, flow) runtime state. Indexed flows_rt[proc][flow].
+    let mut flows_rt: Vec<Vec<FlowRt>> = Vec::with_capacity(total);
+    for g in 0..total {
+        let (jid, rank) = w.job_of_proc(g);
+        let job = &w.jobs[jid];
+        let off = w.job_offset(jid);
+        let mut v = Vec::with_capacity(job.flows.len());
+        for f in &job.flows {
+            let dests: Vec<u32> = f
+                .pattern
+                .dests(rank, job.procs)
+                .into_iter()
+                .map(|local| (off + local) as u32)
+                .collect();
+            if f.msg_bytes > u32::MAX as u64 {
+                return Err(Error::sim(format!("message larger than 4 GiB: {}", f.msg_bytes)));
+            }
+            v.push(FlowRt {
+                dests,
+                interval: interval_ns(f.rate),
+                rounds: f.count.min(u32::MAX as u64) as u32,
+                bytes: f.msg_bytes as u32,
+            });
+        }
+        flows_rt.push(v);
+    }
+
+    let mut fabric = Fabric::new(cluster);
+    let mut engine = Engine::new();
+    let mut jobs: Vec<JobReport> = vec![JobReport::default(); w.jobs.len()];
+    let mut sent = 0u64;
+    let mut delivered = 0u64;
+
+    // Queued-server state (EXPERIMENTS.md §Perf): each server keeps its own
+    // FIFO of waiting messages and at most ONE scheduled event (the
+    // head-of-line completion). The event heap therefore stays
+    // O(servers + senders) instead of O(in-flight messages); on overloaded
+    // workloads that shrinks it from millions of entries to a few hundred.
+    //
+    // Ordering argument for inline arrivals: every path into a given server
+    // class adds the same constant latency (sends and rx-completions reach
+    // memory at the current event time; tx-completions reach NIC-rx at
+    // `now + switch_latency`), so processing events in time order pushes
+    // messages onto each queue in nondecreasing arrival order — FIFO holds
+    // without per-arrival heap events.
+    #[derive(Clone, Copy)]
+    struct QMsg {
+        src: u32,
+        dst: u32,
+        bytes: u32,
+        hop: u8,
+        arrival: Ns,
+        service: Ns,
+    }
+    struct Srv {
+        current: Option<QMsg>,
+        queue: std::collections::VecDeque<QMsg>,
+    }
+    let mut srv: Vec<Srv> = (0..fabric.servers.len())
+        .map(|_| Srv { current: None, queue: std::collections::VecDeque::new() })
+        .collect();
+
+    // Start service immediately if the server is idle, else enqueue.
+    macro_rules! start_or_queue {
+        ($server:expr, $msg:expr) => {{
+            let sid = $server as usize;
+            if srv[sid].current.is_none() {
+                let start = $msg.arrival;
+                fabric.servers[sid].record(0, $msg.service);
+                srv[sid].current = Some($msg);
+                engine.schedule(start + $msg.service, Event::Completion { server: $server });
+            } else {
+                srv[sid].queue.push_back($msg);
+            }
+        }};
+    }
+
+    // Seed the first round of every sending flow.
+    for g in 0..total {
+        let start = cfg.stagger_ns.saturating_mul(g as Ns);
+        for (fi, frt) in flows_rt[g].iter().enumerate() {
+            if !frt.dests.is_empty() && frt.rounds > 0 {
+                engine.schedule(start, Event::SendRound { proc: g as u32, flow: fi as u16, round: 0 });
+            }
+        }
+    }
+
+    // Main loop.
+    while let Some((t, ev)) = engine.pop() {
+        match ev {
+            Event::SendRound { proc, flow, round } => {
+                let frt = &flows_rt[proc as usize][flow as usize];
+                let src_core = core_of[proc as usize] as usize;
+                for &dst in &frt.dests {
+                    sent += 1;
+                    let route =
+                        fabric.route(src_core, core_of[dst as usize] as usize, frt.bytes as u64);
+                    let h = route.hop(0);
+                    let msg = QMsg {
+                        src: proc,
+                        dst,
+                        bytes: frt.bytes,
+                        hop: 0,
+                        arrival: t,
+                        service: h.service,
+                    };
+                    start_or_queue!(h.server, msg);
+                }
+                let jid = job_of[proc as usize] as usize;
+                if jobs[jid].finish_ns < t {
+                    jobs[jid].finish_ns = t;
+                }
+                if round + 1 < frt.rounds {
+                    engine.schedule(
+                        t + frt.interval,
+                        Event::SendRound { proc, flow, round: round + 1 },
+                    );
+                }
+            }
+            Event::Completion { server } => {
+                let sid = server as usize;
+                let done = srv[sid].current.take().expect("completion without service");
+                // Forward the finished message to its next hop (or deliver).
+                let route = fabric.route(
+                    core_of[done.src as usize] as usize,
+                    core_of[done.dst as usize] as usize,
+                    done.bytes as u64,
+                );
+                let h = route.hop(done.hop as usize);
+                let next_t = t + h.latency_after as Ns;
+                let jid = job_of[done.src as usize] as usize;
+                if (done.hop as usize) + 1 < route.len() {
+                    let nh = route.hop(done.hop as usize + 1);
+                    let msg = QMsg {
+                        hop: done.hop + 1,
+                        arrival: next_t,
+                        service: nh.service,
+                        ..done
+                    };
+                    start_or_queue!(nh.server, msg);
+                } else {
+                    delivered += 1;
+                    jobs[jid].delivered += 1;
+                    jobs[jid].bytes += done.bytes as u128;
+                    if jobs[jid].finish_ns < next_t {
+                        jobs[jid].finish_ns = next_t;
+                    }
+                }
+                // Pull the next queued message into service.
+                if let Some(next) = srv[sid].queue.pop_front() {
+                    // `max` covers early-pushed messages whose physical
+                    // arrival (push time + constant latency) is still ahead.
+                    let start = t.max(next.arrival);
+                    let wait = start - next.arrival;
+                    fabric.servers[sid].record(wait, next.service);
+                    jobs[job_of[next.src as usize] as usize].wait_ns += wait as u128;
+                    srv[sid].current = Some(next);
+                    engine.schedule(start + next.service, Event::Completion { server });
+                }
+            }
+        }
+        if cfg.max_events != 0 && engine.processed() > cfg.max_events {
+            return Err(Error::sim(format!(
+                "event budget exceeded ({} events) — runaway workload?",
+                cfg.max_events
+            )));
+        }
+    }
+
+    if sent != delivered {
+        return Err(Error::sim(format!("conservation violated: sent {sent} != delivered {delivered}")));
+    }
+
+    let (nic, mem, cache) = fabric.wait_by_kind();
+    // The last event fires at the final *arrival*; the run ends when its
+    // service completes, i.e. at the latest job finish.
+    let end_ns = jobs.iter().map(|j| j.finish_ns).max().unwrap_or(0).max(engine.now());
+    Ok(SimReport {
+        wait_nic_ns: nic,
+        wait_mem_ns: mem,
+        wait_cache_ns: cache,
+        jobs,
+        delivered,
+        sent,
+        events: engine.processed(),
+        end_ns,
+        wall_secs: wall_start.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MapperKind;
+    use crate::model::pattern::Pattern;
+    use crate::model::workload::JobSpec;
+    use crate::units::{KB, MB};
+
+    fn small() -> ClusterSpec {
+        ClusterSpec::small_test_cluster()
+    }
+
+    fn run(w: &Workload, kind: MapperKind) -> SimReport {
+        let cluster = small();
+        let p = kind.build().map(w, &cluster).unwrap();
+        simulate(w, &p, &cluster, &SimConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn single_message_end_to_end() {
+        // 2 procs, Linear, 1 round: exactly one message.
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::Linear, 2, 64 * KB, 1.0, 1)],
+        )
+        .unwrap();
+        let r = run(&w, MapperKind::Blocked);
+        assert_eq!(r.sent, 1);
+        assert_eq!(r.delivered, 1);
+        // Blocked puts both on socket 0: cache path, no contention.
+        assert_eq!(r.waiting_ms(), 0.0);
+        // Finish = stagger(0) + 8 µs cache service.
+        assert_eq!(r.jobs[0].finish_ns, 8_000);
+    }
+
+    #[test]
+    fn inter_node_latency_accounted() {
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::Linear, 2, 64 * KB, 1.0, 1)],
+        )
+        .unwrap();
+        let cluster = small();
+        // Force ranks onto different nodes.
+        let p = Placement::new(vec![0, 4]);
+        let r = simulate(&w, &p, &cluster, &SimConfig::default()).unwrap();
+        // tx 64 µs + switch 100 ns + rx 64 µs + mem 16 µs = 144.1 µs.
+        assert_eq!(r.jobs[0].finish_ns, 64_000 + 100 + 64_000 + 16_000);
+        assert_eq!(r.wait_nic_ns, 0, "single message never queues");
+    }
+
+    #[test]
+    fn message_counts_match_pattern_budgets() {
+        // AllToAll 4 procs, 3 rounds: 4 * 3 dests * 3 rounds = 36 messages.
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::AllToAll, 4, KB, 100.0, 3)],
+        )
+        .unwrap();
+        let r = run(&w, MapperKind::Cyclic);
+        assert_eq!(r.sent, 36);
+        assert_eq!(r.delivered, 36);
+    }
+
+    #[test]
+    fn contention_raises_waiting() {
+        // 8 procs all-to-all with 2 MB messages on a tiny cluster: heavily
+        // NIC-bound when spread, memory-bound when packed.
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::AllToAll, 8, 2 * MB, 10.0, 20)],
+        )
+        .unwrap();
+        let spread = run(&w, MapperKind::Cyclic);
+        assert!(spread.wait_nic_ns > 0, "a2a over 4 nodes must queue at NICs");
+        let packed_w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::AllToAll, 4, 2 * MB, 10.0, 20)],
+        )
+        .unwrap();
+        let packed = run(&packed_w, MapperKind::Blocked);
+        assert_eq!(packed.wait_nic_ns, 0, "single-node job never touches the NIC");
+        assert!(packed.wait_mem_ns > 0, "2 MB messages contend at memory");
+    }
+
+    #[test]
+    fn deterministic_repeat() {
+        let w = Workload::new(
+            "t",
+            vec![
+                JobSpec::synthetic(Pattern::AllToAll, 6, 512 * KB, 20.0, 10),
+                JobSpec::synthetic(Pattern::GatherReduce, 5, 64 * KB, 50.0, 10),
+            ],
+        )
+        .unwrap();
+        let a = run(&w, MapperKind::Cyclic);
+        let b = run(&w, MapperKind::Cyclic);
+        assert_eq!(a.wait_nic_ns, b.wait_nic_ns);
+        assert_eq!(a.wait_mem_ns, b.wait_mem_ns);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.end_ns, b.end_ns);
+    }
+
+    #[test]
+    fn event_budget_guard() {
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::AllToAll, 8, KB, 100.0, 100)],
+        )
+        .unwrap();
+        let cluster = small();
+        let p = MapperKind::Blocked.build().map(&w, &cluster).unwrap();
+        let cfg = SimConfig { max_events: 10, ..Default::default() };
+        assert!(simulate(&w, &p, &cluster, &cfg).is_err());
+    }
+
+    #[test]
+    fn stagger_shifts_start() {
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::GatherReduce, 3, KB, 10.0, 1)],
+        )
+        .unwrap();
+        let cluster = small();
+        let p = MapperKind::Blocked.build().map(&w, &cluster).unwrap();
+        let r0 = simulate(&w, &p, &cluster, &SimConfig { stagger_ns: 0, ..Default::default() })
+            .unwrap();
+        let r1 = simulate(
+            &w,
+            &p,
+            &cluster,
+            &SimConfig { stagger_ns: 1_000_000, ..Default::default() },
+        )
+        .unwrap();
+        assert!(r1.end_ns > r0.end_ns);
+        // With a large stagger the two senders never collide at the cache.
+        assert!(r1.waiting_ms() <= r0.waiting_ms());
+    }
+}

@@ -1,0 +1,136 @@
+//! FIFO single-server queue with deterministic service and waiting-time
+//! accounting.
+//!
+//! The paper's contention model: "a network interface can service just one
+//! request at a time, other communication requests … must be queued". With
+//! FIFO service and deterministic service times, the queue never needs an
+//! explicit structure — a `busy_until` horizon is sufficient **as long as
+//! arrivals are processed in nondecreasing time order**, which the event
+//! engine guarantees.
+
+use crate::units::Ns;
+
+/// One queuing server (NIC side, memory unit, or cache).
+#[derive(Debug, Clone, Default)]
+pub struct Server {
+    /// Time the server becomes idle.
+    busy_until: Ns,
+    /// Σ queue waiting time over all serviced messages.
+    pub wait_ns: u128,
+    /// Σ service time (busy integral) — utilization accounting.
+    pub busy_ns: u128,
+    /// Messages serviced.
+    pub served: u64,
+    /// Largest single wait observed.
+    pub max_wait_ns: Ns,
+}
+
+impl Server {
+    /// Accept an arrival at `now` needing `service` ns; returns
+    /// `(wait, completion_time)`.
+    #[inline]
+    pub fn accept(&mut self, now: Ns, service: Ns) -> (Ns, Ns) {
+        let start = self.busy_until.max(now);
+        let wait = start - now;
+        let done = start + service;
+        self.busy_until = done;
+        self.wait_ns += wait as u128;
+        self.busy_ns += service as u128;
+        self.served += 1;
+        if wait > self.max_wait_ns {
+            self.max_wait_ns = wait;
+        }
+        (wait, done)
+    }
+
+    /// Record one serviced message without the busy-until bookkeeping —
+    /// used by the queued-server runner, which tracks service order itself
+    /// and only needs the accounting.
+    #[inline]
+    pub fn record(&mut self, wait: Ns, service: Ns) {
+        self.wait_ns += wait as u128;
+        self.busy_ns += service as u128;
+        self.served += 1;
+        if wait > self.max_wait_ns {
+            self.max_wait_ns = wait;
+        }
+    }
+
+    /// Current idle horizon.
+    pub fn busy_until(&self) -> Ns {
+        self.busy_until
+    }
+
+    /// Mean wait per serviced message (ns).
+    pub fn mean_wait(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.wait_ns as f64 / self.served as f64
+        }
+    }
+
+    /// Utilization over `[0, horizon]`.
+    pub fn utilization(&self, horizon: Ns) -> f64 {
+        if horizon == 0 {
+            0.0
+        } else {
+            (self.busy_ns as f64 / horizon as f64).min(1.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_server_no_wait() {
+        let mut s = Server::default();
+        let (wait, done) = s.accept(100, 50);
+        assert_eq!(wait, 0);
+        assert_eq!(done, 150);
+        assert_eq!(s.served, 1);
+        assert_eq!(s.wait_ns, 0);
+    }
+
+    #[test]
+    fn back_to_back_queueing() {
+        let mut s = Server::default();
+        s.accept(0, 100); // busy till 100
+        let (wait, done) = s.accept(10, 100); // arrives while busy
+        assert_eq!(wait, 90);
+        assert_eq!(done, 200);
+        let (wait, done) = s.accept(200, 50); // arrives exactly at idle
+        assert_eq!(wait, 0);
+        assert_eq!(done, 250);
+        assert_eq!(s.wait_ns, 90);
+        assert_eq!(s.max_wait_ns, 90);
+    }
+
+    #[test]
+    fn fifo_growth_under_overload() {
+        // Arrivals every 10 ns, service 100 ns: wait grows by 90 per arrival.
+        let mut s = Server::default();
+        let mut waits = Vec::new();
+        for k in 0..5 {
+            let (w, _) = s.accept(k * 10, 100);
+            waits.push(w);
+        }
+        assert_eq!(waits, vec![0, 90, 180, 270, 360]);
+    }
+
+    #[test]
+    fn accounting_totals() {
+        let mut s = Server::default();
+        for k in 0..10 {
+            s.accept(k, 7);
+        }
+        assert_eq!(s.served, 10);
+        assert_eq!(s.busy_ns, 70);
+        assert!(s.mean_wait() > 0.0);
+        assert!(s.utilization(1000) <= 1.0);
+        assert_eq!(Server::default().mean_wait(), 0.0);
+        assert_eq!(Server::default().utilization(0), 0.0);
+    }
+}

@@ -1,0 +1,111 @@
+//! Random generators for property tests: clusters, jobs, workloads,
+//! placements. All driven by [`super::rng::SplitMix64`] so failures replay.
+
+use crate::coordinator::Placement;
+use crate::model::pattern::Pattern;
+use crate::model::topology::ClusterSpec;
+use crate::model::workload::{FlowSpec, JobSpec, Workload};
+use crate::testkit::rng::SplitMix64;
+use crate::units::{GB, KB, MB};
+
+/// Random small-but-interesting cluster (≥ 2 nodes so inter-node paths
+/// exist; ≤ 256 cores so tests stay fast).
+pub fn cluster(rng: &mut SplitMix64) -> ClusterSpec {
+    let c = ClusterSpec {
+        nodes: rng.range(2, 9),
+        sockets_per_node: rng.range(1, 5),
+        cores_per_socket: rng.range(1, 5),
+        mem_bw: *rng.choose(&[2 * GB, 4 * GB, 8 * GB]),
+        remote_mem_pct: 100 + rng.below(50),
+        cache_bw: *rng.choose(&[4 * GB, 8 * GB, 16 * GB]),
+        cache_max_msg: *rng.choose(&[256 * KB, MB, 4 * MB]),
+        nic_bw: *rng.choose(&[GB, 2 * GB]),
+        switch_latency: rng.below(1000),
+    };
+    debug_assert!(c.validate().is_ok());
+    c
+}
+
+/// Random pattern.
+pub fn pattern(rng: &mut SplitMix64) -> Pattern {
+    *rng.choose(&Pattern::ALL)
+}
+
+/// Random job with ≤ `max_procs` processes.
+pub fn job(rng: &mut SplitMix64, max_procs: usize) -> JobSpec {
+    let procs = rng.range(2, max_procs.max(3));
+    let flows = (0..rng.range(1, 3))
+        .map(|_| {
+            FlowSpec::new(
+                pattern(rng),
+                *rng.choose(&[KB, 2 * KB, 64 * KB, 512 * KB, MB, 2 * MB]),
+                *rng.choose(&[1.0, 10.0, 50.0, 100.0]),
+                rng.below(50) + 1,
+            )
+        })
+        .collect();
+    JobSpec { name: format!("gen-{procs}"), procs, flows }
+}
+
+/// Random workload that fits `cluster` (total procs ≤ total cores).
+pub fn workload(rng: &mut SplitMix64, cluster: &ClusterSpec) -> Workload {
+    let budget = cluster.total_cores();
+    let mut jobs = Vec::new();
+    let mut used = 0;
+    let njobs = rng.range(1, 5);
+    for _ in 0..njobs {
+        let room = budget - used;
+        if room < 2 {
+            break;
+        }
+        let j = job(rng, room.min(24));
+        used += j.procs;
+        jobs.push(j);
+    }
+    if jobs.is_empty() {
+        jobs.push(JobSpec::synthetic(Pattern::Linear, 2, KB, 1.0, 1));
+    }
+    let w = Workload { name: "gen".into(), jobs };
+    debug_assert!(w.validate().is_ok());
+    w
+}
+
+/// Random valid placement of `w` onto `cluster`.
+pub fn placement(rng: &mut SplitMix64, w: &Workload, cluster: &ClusterSpec) -> Placement {
+    let mut cores: Vec<usize> = (0..cluster.total_cores()).collect();
+    rng.shuffle(&mut cores);
+    cores.truncate(w.total_procs());
+    Placement::new(cores)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+
+    #[test]
+    fn generated_clusters_valid() {
+        forall(0xC1u64 << 32, 50, |rng| {
+            cluster(rng).validate().unwrap();
+        });
+    }
+
+    #[test]
+    fn generated_workloads_fit_and_validate() {
+        forall(0xC2u64 << 32, 50, |rng| {
+            let c = cluster(rng);
+            let w = workload(rng, &c);
+            w.validate().unwrap();
+            assert!(w.total_procs() <= c.total_cores());
+        });
+    }
+
+    #[test]
+    fn generated_placements_validate() {
+        forall(0xC3u64 << 32, 50, |rng| {
+            let c = cluster(rng);
+            let w = workload(rng, &c);
+            placement(rng, &w, &c).validate(&w, &c).unwrap();
+        });
+    }
+}

@@ -1,0 +1,225 @@
+//! Physical units used across the model and simulator.
+//!
+//! * time     — [`Ns`] (u64 nanoseconds); the simulator clock is integral so
+//!              runs are bit-for-bit deterministic.
+//! * size     — [`Bytes`] (u64).
+//! * bandwidth— [`BytesPerSec`] (u64).
+//! * rate     — [`MsgPerSec`] (f64 messages per second; paper writes `100m/s`).
+//!
+//! Parsing helpers accept the notations the paper's tables use
+//! (`64KB`, `2MB`, `100m/s`) plus the usual suffixes.
+
+use crate::error::{Error, Result};
+
+/// Nanoseconds (simulator clock domain).
+pub type Ns = u64;
+
+/// Byte count.
+pub type Bytes = u64;
+
+/// Bandwidth in bytes per second (decimal: 1 GB/s = 1e9 B/s, matching the
+/// paper's InfiniHost "1GB/s" figure).
+pub type BytesPerSec = u64;
+
+/// Message rate (messages per second).
+pub type MsgPerSec = f64;
+
+/// Nanoseconds per second.
+pub const NS_PER_SEC: u64 = 1_000_000_000;
+
+/// 1 KB (decimal) — the paper's size-class boundaries are decimal.
+pub const KB: Bytes = 1_000;
+/// 1 MB (decimal).
+pub const MB: Bytes = 1_000_000;
+/// 1 GB (decimal).
+pub const GB: Bytes = 1_000_000_000;
+
+/// 1 KiB, used by the cache-capacity cutoff (Table 1 note says "1MB"; we
+/// interpret decimally like the rest of the paper).
+pub const KIB: Bytes = 1 << 10;
+/// 1 MiB.
+pub const MIB: Bytes = 1 << 20;
+
+/// Service time for `bytes` at `bw` bytes/sec, rounded up to whole ns.
+///
+/// Uses u128 intermediates: 2 MB at 1 GB/s is 2 ms, far below overflow, but a
+/// hostile spec (TB-scale messages) must saturate, not wrap.
+pub fn service_ns(bytes: Bytes, bw: BytesPerSec) -> Ns {
+    if bw == 0 {
+        return Ns::MAX;
+    }
+    let num = bytes as u128 * NS_PER_SEC as u128;
+    let q = (num + bw as u128 - 1) / bw as u128;
+    q.min(Ns::MAX as u128) as Ns
+}
+
+/// Interval between messages for a `rate` msgs/sec sender, in ns (ceil).
+pub fn interval_ns(rate: MsgPerSec) -> Ns {
+    if rate <= 0.0 {
+        return Ns::MAX;
+    }
+    let ns = (NS_PER_SEC as f64 / rate).ceil();
+    if ns >= Ns::MAX as f64 {
+        Ns::MAX
+    } else {
+        ns as Ns
+    }
+}
+
+/// Scale a service time by a percentage (e.g. the paper's "+10 % remote
+/// memory access latency" -> `scale_pct(t, 110)`).
+pub fn scale_pct(t: Ns, pct: u64) -> Ns {
+    ((t as u128 * pct as u128) / 100).min(Ns::MAX as u128) as Ns
+}
+
+/// Render a byte count using the paper's notation (`64KB`, `2MB`, ...).
+pub fn fmt_bytes(b: Bytes) -> String {
+    if b >= GB && b % GB == 0 {
+        format!("{}GB", b / GB)
+    } else if b >= MB && b % MB == 0 {
+        format!("{}MB", b / MB)
+    } else if b >= KB && b % KB == 0 {
+        format!("{}KB", b / KB)
+    } else {
+        format!("{}B", b)
+    }
+}
+
+/// Render nanoseconds as adaptive human time (`1.25ms`, `3.4s`, ...).
+pub fn fmt_ns(t: Ns) -> String {
+    if t >= NS_PER_SEC {
+        format!("{:.3}s", t as f64 / NS_PER_SEC as f64)
+    } else if t >= 1_000_000 {
+        format!("{:.3}ms", t as f64 / 1e6)
+    } else if t >= 1_000 {
+        format!("{:.3}us", t as f64 / 1e3)
+    } else {
+        format!("{}ns", t)
+    }
+}
+
+/// Parse a size with optional suffix: `64KB`, `2MB`, `1GB`, `512B`, `1MiB`.
+pub fn parse_bytes(s: &str) -> Result<Bytes> {
+    let s = s.trim();
+    let (num, mult) = if let Some(p) = s.strip_suffix("KiB") {
+        (p, KIB)
+    } else if let Some(p) = s.strip_suffix("MiB") {
+        (p, MIB)
+    } else if let Some(p) = s.strip_suffix("KB") {
+        (p, KB)
+    } else if let Some(p) = s.strip_suffix("MB") {
+        (p, MB)
+    } else if let Some(p) = s.strip_suffix("GB") {
+        (p, GB)
+    } else if let Some(p) = s.strip_suffix('B') {
+        (p, 1)
+    } else {
+        (s, 1)
+    };
+    let num = num.trim();
+    // Allow fractional prefixes like "1.5MB".
+    if let Ok(v) = num.parse::<u64>() {
+        return Ok(v.saturating_mul(mult));
+    }
+    let v: f64 = num
+        .parse()
+        .map_err(|_| Error::spec(format!("bad size literal {s:?}")))?;
+    if v < 0.0 {
+        return Err(Error::spec(format!("negative size {s:?}")));
+    }
+    Ok((v * mult as f64).round() as Bytes)
+}
+
+/// Parse a message rate: `100m/s`, `10m/s`, `2.5m/s`, or bare `100`.
+pub fn parse_rate(s: &str) -> Result<MsgPerSec> {
+    let s = s.trim();
+    let core = s
+        .strip_suffix("m/s")
+        .or_else(|| s.strip_suffix("msg/s"))
+        .or_else(|| s.strip_suffix("/s"))
+        .unwrap_or(s);
+    let v: f64 = core
+        .trim()
+        .parse()
+        .map_err(|_| Error::spec(format!("bad rate literal {s:?}")))?;
+    if !(v > 0.0) || !v.is_finite() {
+        return Err(Error::spec(format!("rate must be positive: {s:?}")));
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_time_exact() {
+        // 1 GB/s = 1 byte per ns.
+        assert_eq!(service_ns(64 * KB, GB), 64_000);
+        assert_eq!(service_ns(2 * MB, GB), 2_000_000);
+        // 4 GB/s quarter of that, ceil.
+        assert_eq!(service_ns(2 * MB, 4 * GB), 500_000);
+        assert_eq!(service_ns(1, 4 * GB), 1); // ceil(0.25) = 1
+    }
+
+    #[test]
+    fn service_time_zero_bw_saturates() {
+        assert_eq!(service_ns(10, 0), Ns::MAX);
+    }
+
+    #[test]
+    fn service_time_huge_saturates_not_wraps() {
+        assert!(service_ns(u64::MAX, 1) >= Ns::MAX / 2);
+    }
+
+    #[test]
+    fn interval_from_paper_rates() {
+        assert_eq!(interval_ns(100.0), 10_000_000); // 100 m/s -> 10 ms
+        assert_eq!(interval_ns(10.0), 100_000_000); // 10 m/s -> 100 ms
+        assert_eq!(interval_ns(0.0), Ns::MAX);
+    }
+
+    #[test]
+    fn pct_scaling() {
+        assert_eq!(scale_pct(1000, 110), 1100);
+        assert_eq!(scale_pct(0, 110), 0);
+        assert_eq!(scale_pct(3, 110), 3); // floor semantics on tiny values
+    }
+
+    #[test]
+    fn parse_sizes_paper_notation() {
+        assert_eq!(parse_bytes("64KB").unwrap(), 64_000);
+        assert_eq!(parse_bytes("2MB").unwrap(), 2_000_000);
+        assert_eq!(parse_bytes("1GB").unwrap(), 1_000_000_000);
+        assert_eq!(parse_bytes("512B").unwrap(), 512);
+        assert_eq!(parse_bytes("512").unwrap(), 512);
+        assert_eq!(parse_bytes("1.5MB").unwrap(), 1_500_000);
+        assert_eq!(parse_bytes("1MiB").unwrap(), 1 << 20);
+        assert!(parse_bytes("x").is_err());
+    }
+
+    #[test]
+    fn parse_rates_paper_notation() {
+        assert_eq!(parse_rate("100m/s").unwrap(), 100.0);
+        assert_eq!(parse_rate("10m/s").unwrap(), 10.0);
+        assert_eq!(parse_rate("2.5m/s").unwrap(), 2.5);
+        assert_eq!(parse_rate("7").unwrap(), 7.0);
+        assert!(parse_rate("-1m/s").is_err());
+        assert!(parse_rate("zero").is_err());
+    }
+
+    #[test]
+    fn formatting_round_trips() {
+        for b in [64 * KB, 2 * MB, GB, 777] {
+            assert_eq!(parse_bytes(&fmt_bytes(b)).unwrap(), b);
+        }
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(5), "5ns");
+        assert_eq!(fmt_ns(5_000), "5.000us");
+        assert_eq!(fmt_ns(5_000_000), "5.000ms");
+        assert_eq!(fmt_ns(5_000_000_000), "5.000s");
+    }
+}

@@ -1,0 +1,120 @@
+//! Integration: CLI verbs end-to-end and spec-file loading, exercising the
+//! same entry points a user hits.
+
+use nicmap::cli::{main_with_args, Args};
+use nicmap::model::spec;
+
+fn args(tokens: &[&str]) -> Args {
+    Args::parse(tokens.iter().map(|s| s.to_string())).unwrap()
+}
+
+fn write_temp(name: &str, text: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("nicmap_cli_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    std::fs::write(&path, text).unwrap();
+    path
+}
+
+#[test]
+fn simulate_via_spec_file() {
+    let path = write_temp(
+        "tiny.spec",
+        "workload tiny\n\
+         cluster nodes=4 sockets=2 cores=2\n\
+         job procs=8 pattern=a2a size=256KB rate=20m/s count=10\n\
+         job procs=4 pattern=linear size=2KB rate=50m/s count=10\n",
+    );
+    main_with_args(args(&["simulate", "--spec", path.to_str().unwrap()])).unwrap();
+}
+
+#[test]
+fn map_via_spec_file_each_mapper() {
+    let path = write_temp(
+        "map.spec",
+        "cluster nodes=4 sockets=2 cores=2\n\
+         job procs=6 pattern=gather size=1MB rate=5m/s count=5\n",
+    );
+    for mapper in ["B", "C", "D", "N", "random", "kway"] {
+        main_with_args(args(&[
+            "map",
+            "--spec",
+            path.to_str().unwrap(),
+            "--mapper",
+            mapper,
+        ]))
+        .unwrap_or_else(|e| panic!("mapper {mapper}: {e}"));
+    }
+}
+
+#[test]
+fn refine_native_via_cli() {
+    let path = write_temp(
+        "refine.spec",
+        "cluster nodes=4 sockets=2 cores=2\n\
+         job procs=8 pattern=a2a size=2MB rate=10m/s count=5\n",
+    );
+    main_with_args(args(&[
+        "refine",
+        "--spec",
+        path.to_str().unwrap(),
+        "--mapper",
+        "B",
+        "--native",
+        "--rounds",
+        "4",
+    ]))
+    .unwrap();
+}
+
+#[test]
+fn evaluate_pjrt_via_cli_with_artifacts() {
+    // Uses the real artifacts dir (cargo test runs from the crate root).
+    main_with_args(args(&["evaluate", "--workload", "real4", "--mapper", "N"])).unwrap();
+}
+
+#[test]
+fn artifacts_verb_lists_manifest() {
+    main_with_args(args(&["artifacts"])).unwrap();
+}
+
+#[test]
+fn npb_jobs_in_spec_files() {
+    let path = write_temp(
+        "npb.spec",
+        "workload mini_npb\njob npb=EP.B.8\njob npb=IS.B.8\n",
+    );
+    let s = spec::load(&path).unwrap();
+    assert_eq!(s.workload.jobs.len(), 2);
+    main_with_args(args(&["simulate", "--spec", path.to_str().unwrap(), "--mapper", "N,C"]))
+        .unwrap();
+}
+
+#[test]
+fn bad_specs_rejected_with_context() {
+    for (name, text) in [
+        ("empty.spec", ""),
+        ("overfull.spec", "cluster nodes=1 sockets=1 cores=1\njob procs=5 pattern=a2a size=1KB rate=1m/s\n"),
+        ("badkey.spec", "job procs=2 pattern=linear size=1KB rate=1m/s wat=1\n"),
+    ] {
+        let path = write_temp(name, text);
+        let result = main_with_args(args(&["simulate", "--spec", path.to_str().unwrap()]));
+        assert!(result.is_err(), "{name} must fail");
+    }
+}
+
+#[test]
+fn stagger_option_accepted() {
+    let path = write_temp(
+        "stagger.spec",
+        "cluster nodes=2 sockets=1 cores=2\njob procs=3 pattern=linear size=4KB rate=10m/s count=3\n",
+    );
+    main_with_args(args(&[
+        "simulate",
+        "--spec",
+        path.to_str().unwrap(),
+        "--stagger",
+        "5000",
+    ]))
+    .unwrap();
+}

@@ -1,0 +1,152 @@
+//! Property tests (seeded generators from `nicmap::testkit`): invariants
+//! that must hold for every mapper on every workload/cluster combination,
+//! and for the simulator on arbitrary valid inputs.
+
+use nicmap::coordinator::MapperKind;
+use nicmap::model::traffic::TrafficMatrix;
+use nicmap::sim::{simulate, SimConfig};
+use nicmap::testkit::{forall, gen};
+
+#[test]
+fn every_mapper_yields_valid_placements() {
+    forall(0x11_0000, 40, |rng| {
+        let cluster = gen::cluster(rng);
+        let w = gen::workload(rng, &cluster);
+        for kind in MapperKind::ALL {
+            let p = kind
+                .build()
+                .map(&w, &cluster)
+                .unwrap_or_else(|e| panic!("{kind} failed: {e}"));
+            p.validate(&w, &cluster).unwrap_or_else(|e| panic!("{kind}: {e}"));
+        }
+    });
+}
+
+#[test]
+fn mappers_are_deterministic() {
+    forall(0x12_0000, 20, |rng| {
+        let cluster = gen::cluster(rng);
+        let w = gen::workload(rng, &cluster);
+        for kind in MapperKind::ALL {
+            let a = kind.build().map(&w, &cluster).unwrap();
+            let b = kind.build().map(&w, &cluster).unwrap();
+            assert_eq!(a, b, "{kind} nondeterministic");
+        }
+    });
+}
+
+#[test]
+fn simulation_conserves_messages_and_time_is_monotone() {
+    forall(0x13_0000, 25, |rng| {
+        let cluster = gen::cluster(rng);
+        let w = gen::workload(rng, &cluster);
+        let p = gen::placement(rng, &w, &cluster);
+        let r = simulate(&w, &p, &cluster, &SimConfig::default()).unwrap();
+        assert_eq!(r.sent, r.delivered, "conservation");
+        // Expected message budget from the specs.
+        let expect: u64 = w
+            .jobs
+            .iter()
+            .flat_map(|j| j.flows.iter().map(move |f| {
+                (0..j.procs)
+                    .map(|rk| f.pattern.out_degree(rk, j.procs) as u64 * f.count)
+                    .sum::<u64>()
+            }))
+            .sum();
+        assert_eq!(r.sent, expect, "message budget");
+        // Finish times bounded by the global end.
+        for (j, job) in r.jobs.iter().enumerate() {
+            assert!(job.finish_ns <= r.end_ns, "job {j} finishes after end");
+        }
+        assert!(r.workload_finish_s() <= r.end_ns as f64 / 1e9 + 1e-9);
+        // Total finish ≥ workload finish (sum vs max over nonneg values).
+        assert!(r.total_finish_s() >= r.workload_finish_s() - 1e-9);
+    });
+}
+
+#[test]
+fn better_packing_never_increases_nic_bytes() {
+    // Structural invariant linking the cost model to placement shape:
+    // the all-on-one-node placement has zero NIC traffic; any other
+    // placement has ≥ 0. (Sanity for the objective the refiner descends.)
+    forall(0x14_0000, 25, |rng| {
+        let cluster = gen::cluster(rng);
+        let w = gen::workload(rng, &cluster);
+        let t = TrafficMatrix::of_workload(&w);
+        let p = gen::placement(rng, &w, &cluster);
+        let out = nicmap::runtime::native::cost_model(&t, &p, &cluster);
+        let tx_total: f64 = out.nic_tx.iter().sum();
+        let intra_total: f64 = out.intra.iter().sum();
+        assert!(tx_total >= -1e-9);
+        assert!(
+            (tx_total + intra_total - t.total()).abs() <= 1e-6 * t.total().max(1.0),
+            "inter + intra must equal total traffic"
+        );
+    });
+}
+
+#[test]
+fn waiting_time_never_negative_and_scales_with_load() {
+    // Doubling the message rate (halving intervals) cannot reduce total
+    // waiting on the same placement.
+    forall(0x15_0000, 10, |rng| {
+        let cluster = gen::cluster(rng);
+        let mut w = gen::workload(rng, &cluster);
+        // Bound the work so the doubled run stays quick.
+        for j in &mut w.jobs {
+            for f in &mut j.flows {
+                f.count = f.count.min(10);
+            }
+        }
+        let p = gen::placement(rng, &w, &cluster);
+        let base = simulate(&w, &p, &cluster, &SimConfig::default()).unwrap();
+        let mut hot = w.clone();
+        for j in &mut hot.jobs {
+            for f in &mut j.flows {
+                f.rate *= 8.0;
+            }
+        }
+        let loaded = simulate(&hot, &p, &cluster, &SimConfig::default()).unwrap();
+        let base_wait = base.wait_nic_ns + base.wait_mem_ns + base.wait_cache_ns;
+        let hot_wait = loaded.wait_nic_ns + loaded.wait_mem_ns + loaded.wait_cache_ns;
+        assert!(hot_wait >= base_wait, "8x rate lowered waiting: {hot_wait} < {base_wait}");
+    });
+}
+
+#[test]
+fn new_strategy_threshold_cap_respected_for_single_a2a_jobs() {
+    // For a lone all-to-all job the eq. 2 cap must bind exactly (no
+    // relaxation is ever needed when threshold * nodes ≥ procs).
+    use nicmap::coordinator::threshold::eq2;
+    use nicmap::model::pattern::Pattern;
+    use nicmap::model::workload::{JobSpec, Workload};
+    forall(0x16_0000, 20, |rng| {
+        let cluster = gen::cluster(rng);
+        let max_procs = cluster.total_cores().min(64);
+        if max_procs < 4 {
+            return;
+        }
+        let procs = rng.range(3, max_procs.max(4));
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::AllToAll, procs, 4_000_000, 10.0, 10)],
+        )
+        .unwrap();
+        let t = TrafficMatrix::of_workload(&w);
+        let cap = eq2(&t, cluster.nodes);
+        let p = MapperKind::New.build().map(&w, &cluster).unwrap();
+        let counts: Vec<usize> = (0..cluster.nodes)
+            .map(|n| (0..procs).filter(|&g| p.node_of(g, &cluster) == n).count())
+            .collect();
+        if cap * cluster.nodes >= procs && t.avg_adjacency() > cluster.cores_per_node() as f64 - 1.0
+        {
+            for (n, &c) in counts.iter().enumerate() {
+                assert!(
+                    c <= cap.min(cluster.cores_per_node()),
+                    "node {n} holds {c} > cap {cap} (procs={procs}, nodes={}, counts={counts:?})",
+                    cluster.nodes
+                );
+            }
+        }
+    });
+}

@@ -1,0 +1,182 @@
+//! Integration: the AOT JAX/Pallas artifact (via PJRT) against the pure-Rust
+//! oracle — the end-to-end validation of the three-layer stack.
+//!
+//! Requires `artifacts/` (run `make artifacts` first; the Makefile `test`
+//! target guarantees it).
+
+use nicmap::coordinator::refine::{refine, Scorer};
+use nicmap::coordinator::{Mapper, MapperKind, Placement};
+use nicmap::model::pattern::Pattern;
+use nicmap::model::topology::ClusterSpec;
+use nicmap::model::traffic::TrafficMatrix;
+use nicmap::model::workload::{JobSpec, Workload};
+use nicmap::runtime::{ArtifactStore, NativeScorer, PjrtScorer};
+use nicmap::testkit::{forall, gen};
+
+fn store() -> ArtifactStore {
+    // Tests run from the crate root; the artifacts dir sits next to
+    // Cargo.toml. Honour NICMAP_ARTIFACTS overrides.
+    ArtifactStore::open_default().expect("run `make artifacts` before `cargo test`")
+}
+
+fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = x.abs().max(y.abs()).max(1.0);
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "{what}[{i}]: pjrt={x} native={y}"
+        );
+    }
+}
+
+#[test]
+fn artifacts_manifest_complete() {
+    let s = store();
+    assert!(s.metas().iter().any(|m| m.kind == "cost_model" && m.p >= 256));
+    assert!(s.metas().iter().any(|m| m.kind == "cost_model_batched"));
+    assert_eq!(s.platform(), "cpu");
+}
+
+#[test]
+fn pjrt_matches_native_on_paper_workloads() {
+    let s = store();
+    let scorer = PjrtScorer::new(&s);
+    let cluster = ClusterSpec::paper_cluster();
+    for name in ["synt1", "synt4", "real1", "real4"] {
+        let w = Workload::builtin(name).unwrap();
+        let traffic = TrafficMatrix::of_workload(&w);
+        for kind in MapperKind::PAPER {
+            let p = kind.build().map(&w, &cluster).unwrap();
+            let pjrt = scorer.score(&traffic, &p, &cluster).unwrap();
+            let native = NativeScorer.score(&traffic, &p, &cluster).unwrap();
+            // f32 artifact vs f64 native: 1e-4 relative.
+            assert_close(&pjrt.nic_tx, &native.nic_tx, 1e-4, &format!("{name}/{kind} tx"));
+            assert_close(&pjrt.nic_rx, &native.nic_rx, 1e-4, &format!("{name}/{kind} rx"));
+            assert_close(&pjrt.intra, &native.intra, 1e-4, &format!("{name}/{kind} intra"));
+        }
+    }
+}
+
+#[test]
+fn pjrt_full_outputs_match_native() {
+    let s = store();
+    let scorer = PjrtScorer::new(&s);
+    let cluster = ClusterSpec::paper_cluster();
+    let w = Workload::builtin("synt3").unwrap();
+    let traffic = TrafficMatrix::of_workload(&w);
+    let p = MapperKind::New.build().map(&w, &cluster).unwrap();
+    let out = scorer.evaluate(&traffic, &p, &cluster).unwrap();
+    let native = nicmap::runtime::native::cost_model(&traffic, &p, &cluster);
+    assert_close(&out.node_traffic, &native.node_traffic, 1e-4, "M");
+    assert_close(&out.cd, &native.cd, 1e-4, "cd");
+    assert_close(&out.adj, &native.adj, 1e-6, "adj");
+}
+
+#[test]
+fn pjrt_matches_native_on_random_inputs() {
+    let s = store();
+    let scorer = PjrtScorer::new(&s);
+    // Random clusters are capped at 8 nodes / 256 cores by the generator —
+    // inside every artifact variant's padding envelope via best-fit.
+    forall(0x9A17, 10, |rng| {
+        let cluster = gen::cluster(rng);
+        let w = gen::workload(rng, &cluster);
+        let traffic = TrafficMatrix::of_workload(&w);
+        let p = gen::placement(rng, &w, &cluster);
+        let pjrt = scorer.score(&traffic, &p, &cluster).unwrap();
+        let native = NativeScorer.score(&traffic, &p, &cluster).unwrap();
+        assert_close(&pjrt.nic_tx, &native.nic_tx, 1e-3, "tx");
+        assert_close(&pjrt.nic_rx, &native.nic_rx, 1e-3, "rx");
+    });
+}
+
+#[test]
+fn compile_cache_reused_across_calls() {
+    let s = store();
+    let scorer = PjrtScorer::new(&s);
+    let cluster = ClusterSpec::small_test_cluster();
+    let w = Workload::new(
+        "t",
+        vec![JobSpec::synthetic(Pattern::AllToAll, 8, 64_000, 10.0, 10)],
+    )
+    .unwrap();
+    let traffic = TrafficMatrix::of_workload(&w);
+    let p = MapperKind::Blocked.build().map(&w, &cluster).unwrap();
+    scorer.score(&traffic, &p, &cluster).unwrap();
+    let after_first = s.compiled_count();
+    for _ in 0..5 {
+        scorer.score(&traffic, &p, &cluster).unwrap();
+    }
+    assert_eq!(s.compiled_count(), after_first, "one compile per shape variant");
+}
+
+#[test]
+fn refine_with_pjrt_scorer_improves_blocked_a2a() {
+    let s = store();
+    let scorer = PjrtScorer::new(&s);
+    let cluster = ClusterSpec::small_test_cluster();
+    // 2 MB x 100/s per pair saturates the Blocked nodes' NICs (~3.2 GB/s
+    // egress vs 1 GB/s capacity) — exactly the regime the paper targets.
+    let w = Workload::new(
+        "t",
+        vec![JobSpec::synthetic(Pattern::AllToAll, 8, 2_000_000, 100.0, 10)],
+    )
+    .unwrap();
+    let traffic = TrafficMatrix::of_workload(&w);
+    let start = MapperKind::Blocked.build().map(&w, &cluster).unwrap();
+    let rep = refine(&scorer, &traffic, &start, &w, &cluster, 8).unwrap();
+    assert!(rep.after < rep.before, "refinement must improve saturated Blocked a2a");
+    rep.placement.validate(&w, &cluster).unwrap();
+    assert!(rep.placement.nodes_used(&cluster) > 2, "refiner should spread the job");
+
+    // And the refined objective agrees with the native scorer's view.
+    let native_loads = NativeScorer.score(&traffic, &rep.placement, &cluster).unwrap();
+    let native_obj = native_loads.objective(cluster.nic_bw as f64);
+    assert!((native_obj - rep.after).abs() <= 1e-3 * rep.after.max(1.0));
+}
+
+#[test]
+fn batched_scoring_matches_sequential() {
+    let s = store();
+    let scorer = PjrtScorer::new(&s);
+    let cluster = ClusterSpec::paper_cluster();
+    let w = Workload::builtin("synt4").unwrap();
+    let traffic = TrafficMatrix::of_workload(&w);
+    // A mixed bag of candidates, more than one batch worth.
+    let mut placements = Vec::new();
+    for kind in MapperKind::ALL {
+        placements.push(kind.build().map(&w, &cluster).unwrap());
+    }
+    for seed in 0..15 {
+        placements.push(
+            nicmap::coordinator::random::RandomMap::new(seed).map(&w, &cluster).unwrap(),
+        );
+    }
+    let refs: Vec<&Placement> = placements.iter().collect();
+    let batched = scorer.score_batch(&traffic, &refs, &cluster).unwrap();
+    assert_eq!(batched.len(), placements.len());
+    for (i, p) in placements.iter().enumerate() {
+        let single = scorer.score(&traffic, p, &cluster).unwrap();
+        assert_close(&batched[i].nic_tx, &single.nic_tx, 1e-4, &format!("cand {i} tx"));
+        assert_close(&batched[i].nic_rx, &single.nic_rx, 1e-4, &format!("cand {i} rx"));
+        assert_close(&batched[i].intra, &single.intra, 1e-4, &format!("cand {i} intra"));
+    }
+}
+
+#[test]
+fn oversized_problem_rejected_cleanly() {
+    let s = store();
+    let scorer = PjrtScorer::new(&s);
+    // 300 procs exceeds the largest artifact (P=256).
+    let cluster = ClusterSpec { nodes: 20, ..ClusterSpec::paper_cluster() };
+    let w = Workload::new(
+        "t",
+        vec![JobSpec::synthetic(Pattern::Linear, 300, 1000, 1.0, 1)],
+    )
+    .unwrap();
+    let traffic = TrafficMatrix::of_workload(&w);
+    let p = Placement::new((0..300).collect());
+    let err = scorer.score(&traffic, &p, &cluster).unwrap_err();
+    assert!(err.to_string().contains("no cost_model artifact"), "{err}");
+}
