@@ -1,9 +1,10 @@
-//! Perf bench: cost-model scoring latency — the AOT JAX/Pallas artifact on
-//! the PJRT CPU client vs the pure-Rust native scorer, per shape variant.
+//! Perf bench: cost-model scoring latency — the pure-Rust native scorer
+//! always, plus the AOT JAX/Pallas artifact on the PJRT CPU client when the
+//! `pjrt` feature (and `make artifacts`) is available.
 //!
-//! This is the L1/L2 hot path of the refinement loop; DESIGN.md §10 expects
-//! the PJRT call to be dominated by literal creation + dispatch (the compile
-//! is cached). Requires `make artifacts`.
+//! This is the hot path of the refinement loop; DESIGN.md §10 expects the
+//! PJRT call to be dominated by literal creation + dispatch (the compile is
+//! cached).
 
 use nicmap::coordinator::refine::Scorer;
 use nicmap::coordinator::MapperKind;
@@ -11,7 +12,7 @@ use nicmap::model::topology::ClusterSpec;
 use nicmap::model::traffic::TrafficMatrix;
 use nicmap::model::workload::Workload;
 use nicmap::report::stats::Summary;
-use nicmap::runtime::{ArtifactStore, NativeScorer, PjrtScorer};
+use nicmap::runtime::NativeScorer;
 
 fn bench_scorer(
     label: &str,
@@ -35,18 +36,27 @@ fn bench_scorer(
 }
 
 fn main() {
-    let store = ArtifactStore::open_default().expect("run `make artifacts` first");
-    println!("PJRT platform: {}", store.platform());
-    let pjrt = PjrtScorer::new(&store);
     let cluster = ClusterSpec::paper_cluster();
+    #[cfg(feature = "pjrt")]
+    let store = nicmap::runtime::ArtifactStore::open_default().ok();
+    #[cfg(feature = "pjrt")]
+    let pjrt = store.as_ref().map(nicmap::runtime::PjrtScorer::new);
+    #[cfg(not(feature = "pjrt"))]
+    println!("(built without the `pjrt` feature — native scorer only)");
 
     for wname in ["real4", "synt4", "synt1"] {
         let w = Workload::builtin(wname).unwrap();
         let traffic = TrafficMatrix::of_workload(&w);
         let p = MapperKind::New.build().map(&w, &cluster).unwrap();
         println!("--- {wname}: P={} N={}", w.total_procs(), cluster.nodes);
-        bench_scorer(&format!("{wname}/pjrt"), &pjrt, &traffic, &p, &cluster, 50);
         bench_scorer(&format!("{wname}/native"), &NativeScorer, &traffic, &p, &cluster, 50);
+        #[cfg(feature = "pjrt")]
+        if let Some(scorer) = pjrt.as_ref() {
+            bench_scorer(&format!("{wname}/pjrt"), scorer, &traffic, &p, &cluster, 50);
+        }
     }
-    println!("(compiled variants cached: {})", store.compiled_count());
+    #[cfg(feature = "pjrt")]
+    if let Some(s) = store.as_ref() {
+        println!("(compiled variants cached: {})", s.compiled_count());
+    }
 }

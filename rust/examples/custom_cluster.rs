@@ -64,6 +64,6 @@ fn main() -> nicmap::Result<()> {
     }
     println!("Fixed 144-process mixed workload, 256 cores total, 1 GB/s NIC per node:");
     print!("{table}");
-    println!("\nFatter nodes => more cores share one NIC => contention-aware mapping matters more.");
+    println!("\nFatter nodes => more cores per NIC => contention-aware mapping matters more.");
     Ok(())
 }

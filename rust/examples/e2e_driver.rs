@@ -1,17 +1,17 @@
-//! End-to-end driver — proves all three layers compose on a real workload
+//! End-to-end driver — proves the layers compose on a real workload
 //! (the EXPERIMENTS.md §E2E run):
 //!
-//!  1. Layer 1/2: load the AOT JAX/Pallas cost-model artifact via PJRT and
-//!     cross-check it against the pure-Rust oracle on this exact workload.
+//!  1. Pick the cost-model scorer: the AOT JAX/Pallas artifact via PJRT when
+//!     built with the `pjrt` feature and `artifacts/` exists, else the
+//!     pure-Rust native scorer (bit-compatible semantics, cross-checked).
 //!  2. Layer 3: map the paper's Table 4 workload with all four strategies.
-//!  3. Use the AOT cost model *on the request path* to refine the Blocked
-//!     placement (paper §7 future work) — every candidate swap is scored by
-//!     the Pallas-kerneled artifact.
+//!  3. Use the cost model *on the request path* to refine the Blocked
+//!     placement (paper §7 future work) — every candidate swap is scored.
 //!  4. Simulate everything on the Table 1 cluster and report the paper's
 //!     headline metric, including the refined placement.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example e2e_driver
+//! cargo run --release --example e2e_driver
 //! ```
 
 use nicmap::coordinator::refine::{refine, Scorer};
@@ -22,10 +22,31 @@ use nicmap::model::traffic::TrafficMatrix;
 use nicmap::model::workload::Workload;
 use nicmap::report::figure::bar_chart;
 use nicmap::report::table::Table;
-use nicmap::runtime::{ArtifactStore, NativeScorer, PjrtScorer};
+use nicmap::runtime::NativeScorer;
 use nicmap::sim::{simulate, SimConfig};
 
 fn main() -> nicmap::Result<()> {
+    #[cfg(feature = "pjrt")]
+    {
+        use nicmap::runtime::{ArtifactStore, PjrtScorer};
+        match ArtifactStore::open_default() {
+            Ok(store) => {
+                println!(
+                    "[1] scorer: PJRT platform {} — {} artifacts in manifest",
+                    store.platform(),
+                    store.metas().len()
+                );
+                let scorer = PjrtScorer::new(&store);
+                return drive(&scorer);
+            }
+            Err(e) => eprintln!("note: {e}; driving with the native scorer"),
+        }
+    }
+    println!("[1] scorer: native (pure-Rust cost model)");
+    drive(&NativeScorer)
+}
+
+fn drive(scorer: &dyn Scorer) -> nicmap::Result<()> {
     let cluster = ClusterSpec::paper_cluster();
     let w = Workload::builtin("synt4")?; // the paper's 91 %-gain workload
     let traffic = TrafficMatrix::of_workload(&w);
@@ -33,12 +54,9 @@ fn main() -> nicmap::Result<()> {
     println!("cluster:  {}", cluster.summary());
     println!("workload: {} ({} jobs, {} procs)\n", w.name, w.jobs.len(), w.total_procs());
 
-    // --- Step 1: the AOT artifact, cross-checked against the oracle. ----
-    let store = ArtifactStore::open_default()?;
-    println!("[1] PJRT platform {} — {} artifacts in manifest", store.platform(), store.metas().len());
-    let pjrt = PjrtScorer::new(&store);
+    // Cross-check the active scorer against the pure-Rust oracle.
     let probe = MapperKind::Cyclic.build().map(&w, &cluster)?;
-    let a = pjrt.score(&traffic, &probe, &cluster)?;
+    let a = scorer.score(&traffic, &probe, &cluster)?;
     let b = NativeScorer.score(&traffic, &probe, &cluster)?;
     let max_rel = a
         .nic_tx
@@ -46,7 +64,7 @@ fn main() -> nicmap::Result<()> {
         .zip(&b.nic_tx)
         .map(|(x, y)| (x - y).abs() / y.abs().max(1.0))
         .fold(0.0f64, f64::max);
-    println!("    JAX/Pallas artifact vs Rust oracle: max rel err {max_rel:.2e} (must be < 1e-4)");
+    println!("    scorer vs Rust oracle: max rel err {max_rel:.2e} (must be < 1e-4)");
     assert!(max_rel < 1e-4);
 
     // --- Step 2: map with all strategies. --------------------------------
@@ -55,17 +73,22 @@ fn main() -> nicmap::Result<()> {
     for kind in MapperKind::PAPER {
         let t0 = std::time::Instant::now();
         let p = kind.build().map(&w, &cluster)?;
-        println!("    {:<8} {:>8.2?}  nodes used: {}", kind.name(), t0.elapsed(), p.nodes_used(&cluster));
+        println!(
+            "    {:<8} {:>8.2?}  nodes used: {}",
+            kind.name(),
+            t0.elapsed(),
+            p.nodes_used(&cluster)
+        );
         placements.push((kind.name().to_string(), p));
     }
 
-    // --- Step 3: AOT cost model on the hot path — refine Blocked. -------
-    println!("\n[3] refining Blocked with the AOT cost model…");
+    // --- Step 3: the cost model on the hot path — refine Blocked. --------
+    println!("\n[3] refining Blocked with the cost model…");
     let blocked = placements[0].1.clone();
     let t0 = std::time::Instant::now();
-    let rep = refine(&pjrt, &traffic, &blocked, &w, &cluster, 12)?;
+    let rep = refine(scorer, &traffic, &blocked, &w, &cluster, 12)?;
     println!(
-        "    objective {:.3e} -> {:.3e} | {} swaps | {} artifact executions | {:.2?}",
+        "    objective {:.3e} -> {:.3e} | {} swaps | {} scorer executions | {:.2?}",
         rep.before,
         rep.after,
         rep.swaps,
@@ -98,7 +121,8 @@ fn main() -> nicmap::Result<()> {
     }
     print!("{table}");
     println!();
-    println!("{}", bar_chart(&format!("{} — {}", w.name, Metric::WaitingMs.label()), &rows, 40));
+    let title = format!("{} — {}", w.name, Metric::WaitingMs.label());
+    println!("{}", bar_chart(&title, &rows, 40));
 
     let new = rows.iter().find(|(n, _)| n == "New").unwrap().1;
     let best_other = rows
@@ -107,10 +131,11 @@ fn main() -> nicmap::Result<()> {
         .map(|(_, v)| *v)
         .fold(f64::INFINITY, f64::min);
     println!(
-        "headline: New strategy gain vs best other = {:+.1}%  (paper reports ≈91% on this workload)",
+        "headline: New strategy gain vs best other = {:+.1}%  (paper: ≈91% here)",
         (best_other - new) / best_other * 100.0
     );
-    println!("refinement: Blocked {:.3e} -> B+refine {:.3e} ms waiting",
+    println!(
+        "refinement: Blocked {:.3e} -> B+refine {:.3e} ms waiting",
         rows[0].1,
         rows.iter().find(|(n, _)| n == "B+refine").unwrap().1
     );

@@ -51,6 +51,6 @@ fn main() -> nicmap::Result<()> {
         rn.waiting_ms(),
         rb.waiting_ms() / rn.waiting_ms().max(1e-9)
     );
-    println!("(IS/FT all-to-all jobs get spread by the threshold; CG/BT neighbour jobs stay packed)");
+    println!("(IS/FT all-to-all jobs spread via the threshold; CG/BT neighbour jobs stay packed)");
     Ok(())
 }

@@ -21,7 +21,8 @@ fn main() -> nicmap::Result<()> {
     let rate = 10.0;
     let rounds = 300;
 
-    let mut table = Table::new(vec!["msg size", "Blocked (ms)", "Cyclic (ms)", "New (ms)", "winner"]);
+    let mut table =
+        Table::new(vec!["msg size", "Blocked (ms)", "Cyclic (ms)", "New (ms)", "winner"]);
     for &size in &sizes {
         // One 64-proc all-to-all job + one 64-proc linear job sharing the
         // cluster — the mix is what makes placement matter.

@@ -27,7 +27,7 @@ impl Args {
                 // `--key=value` or `--key value` or bare flag.
                 if let Some((k, v)) = key.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
-                } else if iter.peek().map_or(false, |n| !n.starts_with("--")) {
+                } else if iter.peek().is_some_and(|n| !n.starts_with("--")) {
                     out.options.insert(key.to_string(), iter.next().unwrap());
                 } else {
                     out.options.insert(key.to_string(), "true".to_string());

@@ -4,6 +4,8 @@
 //! * `map`       — compute a placement and print its per-node layout
 //! * `simulate`  — map + run the DES, print the paper metrics
 //! * `figure`    — regenerate a paper figure (fig2/fig3/fig4/fig5)
+//! * `bench`     — the full fig 2–5 workload × mapper sweep on worker
+//!   threads, with optional `BENCH_harness.json` output
 //! * `evaluate`  — score a placement with the cost model (AOT or native)
 //! * `refine`    — cost-model-guided swap refinement of a mapping
 //! * `workload`  — show a builtin workload definition (paper tables)

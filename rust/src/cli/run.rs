@@ -1,16 +1,19 @@
 //! CLI verb dispatch.
 
 use crate::cli::args::Args;
-use crate::coordinator::refine::{refine, Scorer};
-use crate::coordinator::MapperKind;
+use crate::coordinator::refine::{NodeLoads, RefineReport, Scorer};
+use crate::coordinator::{MapperKind, Placement};
 use crate::error::{Error, Result};
-use crate::harness::{render_figure, run_real, run_synthetic, run_workload, Metric};
+use crate::harness::{
+    cap_rounds, render_figure, run_real, run_sweep, run_synthetic, run_workload, sweep_to_json,
+    sweeps_identical, Metric,
+};
 use crate::model::spec;
 use crate::model::topology::ClusterSpec;
 use crate::model::traffic::TrafficMatrix;
 use crate::model::workload::Workload;
 use crate::report::table::Table;
-use crate::runtime::{ArtifactStore, NativeScorer, PjrtScorer};
+use crate::runtime::NativeScorer;
 use crate::sim::SimConfig;
 use crate::units::fmt_bytes;
 
@@ -22,6 +25,10 @@ VERBS
   map        --workload <synt1..4|real1..4> [--mapper B|C|D|N|random|kway] [--spec FILE]
   simulate   --workload <name>              [--mapper ...|all] [--spec FILE] [--stagger NS]
   figure     <fig2|fig3|fig4|fig5>          regenerate a paper figure
+  bench      [--json [FILE]] [--threads K] [--workloads n1,n2] [--mappers ...]
+             [--rounds R] [--compare-serial]
+             full fig 2-5 workload x mapper sweep on worker threads;
+             --json writes BENCH_harness.json
   evaluate   --workload <name>              [--mapper ...] [--native] cost-model node loads
   refine     --workload <name>              [--mapper B] [--native] [--rounds K]
   workload   <show> <name>                  print a builtin workload table
@@ -35,6 +42,7 @@ pub fn main_with_args(args: Args) -> Result<()> {
         "map" => cmd_map(&args),
         "simulate" => cmd_simulate(&args),
         "figure" => cmd_figure(&args),
+        "bench" => cmd_bench(&args),
         "evaluate" => cmd_evaluate(&args),
         "refine" => cmd_refine(&args),
         "workload" => cmd_workload(&args),
@@ -57,11 +65,94 @@ fn load_input(args: &Args) -> Result<(ClusterSpec, Workload)> {
     Ok((ClusterSpec::paper_cluster(), Workload::builtin(name)?))
 }
 
-fn mappers_from(args: &Args) -> Result<Vec<MapperKind>> {
-    match args.get_or("mapper", "all") {
+fn mappers_from(args: &Args, key: &str) -> Result<Vec<MapperKind>> {
+    match args.get_or(key, "all") {
         "all" => Ok(MapperKind::PAPER.to_vec()),
         list => list.split(',').map(MapperKind::parse).collect(),
     }
+}
+
+/// Score a placement with the AOT scorer when the `pjrt` feature and the
+/// artifacts are available, the native scorer otherwise.
+#[cfg(feature = "pjrt")]
+fn score_placement(
+    args: &Args,
+    traffic: &TrafficMatrix,
+    placement: &Placement,
+    cluster: &ClusterSpec,
+) -> Result<(NodeLoads, &'static str)> {
+    use crate::runtime::{ArtifactStore, PjrtScorer};
+    if args.flag("native") {
+        return Ok((NativeScorer.score(traffic, placement, cluster)?, "native"));
+    }
+    match ArtifactStore::open_default() {
+        Ok(store) => {
+            let loads = PjrtScorer::new(&store).score(traffic, placement, cluster)?;
+            Ok((loads, "pjrt"))
+        }
+        Err(e) => {
+            eprintln!("note: {e}; falling back to native scorer");
+            Ok((NativeScorer.score(traffic, placement, cluster)?, "native-fallback"))
+        }
+    }
+}
+
+/// Score a placement; built without the `pjrt` feature, so always native.
+#[cfg(not(feature = "pjrt"))]
+fn score_placement(
+    args: &Args,
+    traffic: &TrafficMatrix,
+    placement: &Placement,
+    cluster: &ClusterSpec,
+) -> Result<(NodeLoads, &'static str)> {
+    if !args.flag("native") {
+        eprintln!("note: built without the `pjrt` feature; using the native scorer");
+    }
+    Ok((NativeScorer.score(traffic, placement, cluster)?, "native"))
+}
+
+/// Refine with the AOT scorer when available, native otherwise.
+#[cfg(feature = "pjrt")]
+fn refine_placement(
+    args: &Args,
+    traffic: &TrafficMatrix,
+    placement: &Placement,
+    w: &Workload,
+    cluster: &ClusterSpec,
+    rounds: usize,
+) -> Result<RefineReport> {
+    use crate::coordinator::refine::refine;
+    use crate::runtime::{ArtifactStore, PjrtScorer};
+    if args.flag("native") {
+        return refine(&NativeScorer, traffic, placement, w, cluster, rounds);
+    }
+    match ArtifactStore::open_default() {
+        Ok(store) => {
+            let scorer = PjrtScorer::new(&store);
+            refine(&scorer, traffic, placement, w, cluster, rounds)
+        }
+        Err(e) => {
+            eprintln!("note: {e}; falling back to native scorer");
+            refine(&NativeScorer, traffic, placement, w, cluster, rounds)
+        }
+    }
+}
+
+/// Refine; built without the `pjrt` feature, so always native.
+#[cfg(not(feature = "pjrt"))]
+fn refine_placement(
+    args: &Args,
+    traffic: &TrafficMatrix,
+    placement: &Placement,
+    w: &Workload,
+    cluster: &ClusterSpec,
+    rounds: usize,
+) -> Result<RefineReport> {
+    use crate::coordinator::refine::refine;
+    if !args.flag("native") {
+        eprintln!("note: built without the `pjrt` feature; using the native scorer");
+    }
+    refine(&NativeScorer, traffic, placement, w, cluster, rounds)
 }
 
 fn cmd_map(args: &Args) -> Result<()> {
@@ -95,7 +186,7 @@ fn cmd_map(args: &Args) -> Result<()> {
 
 fn cmd_simulate(args: &Args) -> Result<()> {
     let (cluster, w) = load_input(args)?;
-    let mappers = mappers_from(args)?;
+    let mappers = mappers_from(args, "mapper")?;
     let mut cfg = SimConfig::default();
     if let Some(st) = args.get_parse::<u64>("stagger")? {
         cfg.stagger_ns = st;
@@ -122,10 +213,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     println!("workload {} on {}", w.name, cluster.summary());
     print!("{table}");
     if mappers.contains(&MapperKind::New) && mappers.len() > 1 {
-        println!(
-            "New vs best other: {:+.1}% (waiting-time metric)",
-            run.new_gain_pct(Metric::WaitingMs)
-        );
+        let gain = run.new_gain_pct(Metric::WaitingMs);
+        println!("New vs best other: {gain:+.1}% (waiting-time metric)");
     }
     Ok(())
 }
@@ -155,32 +244,112 @@ fn cmd_figure(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The full fig 2–5 sweep (all builtin workloads × the paper's mappers) on
+/// worker threads, with optional `BENCH_harness.json` output.
+fn cmd_bench(args: &Args) -> Result<()> {
+    // Accept both spellings: `--mappers` (documented) and `--mapper` (the
+    // spelling every other verb uses).
+    let mapper_key = if args.get("mappers").is_some() { "mappers" } else { "mapper" };
+    let mappers = mappers_from(args, mapper_key)?;
+    let names: Vec<String> = match args.get("workloads") {
+        Some(list) => list.split(',').map(|s| s.trim().to_string()).collect(),
+        None => Workload::builtin_names().iter().map(|s| s.to_string()).collect(),
+    };
+    let mut workloads = Vec::with_capacity(names.len());
+    for name in &names {
+        workloads.push(Workload::builtin(name)?);
+    }
+    if let Some(rounds) = args.get_parse::<u64>("rounds")? {
+        for w in &mut workloads {
+            cap_rounds(w, rounds);
+        }
+    }
+    let cluster = ClusterSpec::paper_cluster();
+    let mut cfg = SimConfig::default();
+    if let Some(st) = args.get_parse::<u64>("stagger")? {
+        cfg.stagger_ns = st;
+    }
+    let threads = args.get_parse::<usize>("threads")?.unwrap_or_else(crate::par::default_threads);
+
+    println!(
+        "bench sweep: {} workloads x {} mappers = {} cells on {} threads",
+        workloads.len(),
+        mappers.len(),
+        workloads.len() * mappers.len(),
+        threads
+    );
+    let t0 = std::time::Instant::now();
+    let runs = run_sweep(&workloads, &cluster, &mappers, &cfg, threads)?;
+    let parallel_secs = t0.elapsed().as_secs_f64();
+
+    let serial_secs = if args.flag("compare-serial") {
+        let t1 = std::time::Instant::now();
+        let serial = run_sweep(&workloads, &cluster, &mappers, &cfg, 1)?;
+        let secs = t1.elapsed().as_secs_f64();
+        if !sweeps_identical(&runs, &serial) {
+            return Err(Error::sim(
+                "parallel sweep metrics diverge from the serial sweep (determinism bug)",
+            ));
+        }
+        Some(secs)
+    } else {
+        None
+    };
+
+    let mut table = Table::new(vec![
+        "workload",
+        "mapper",
+        "waiting (ms)",
+        "finish (s)",
+        "total (s)",
+        "map (s)",
+        "sim wall (s)",
+    ]);
+    for run in &runs {
+        for cell in &run.cells {
+            table.row(vec![
+                run.workload.clone(),
+                cell.mapper.name().to_string(),
+                format!("{:.1}", cell.report.waiting_ms()),
+                format!("{:.3}", cell.report.workload_finish_s()),
+                format!("{:.3}", cell.report.total_finish_s()),
+                format!("{:.4}", cell.map_secs),
+                format!("{:.3}", cell.report.wall_secs),
+            ]);
+        }
+    }
+    print!("{table}");
+    match serial_secs {
+        Some(s) => println!(
+            "parallel wall: {parallel_secs:.2}s | serial wall: {s:.2}s | speedup {:.2}x \
+             | metrics bit-identical",
+            s / parallel_secs.max(1e-12)
+        ),
+        None => println!("parallel wall: {parallel_secs:.2}s on {threads} threads"),
+    }
+
+    // `--json` alone writes the default file name; `--json FILE` overrides.
+    let out_path = match args.get("json") {
+        Some("true") => Some("BENCH_harness.json".to_string()),
+        Some(path) => Some(path.to_string()),
+        None => None,
+    };
+    if let Some(path) = out_path {
+        let doc = sweep_to_json(&runs, threads, parallel_secs, serial_secs);
+        std::fs::write(&path, doc)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn cmd_evaluate(args: &Args) -> Result<()> {
     let (cluster, w) = load_input(args)?;
     let kind = MapperKind::parse(args.get_or("mapper", "N"))?;
     let placement = kind.build().map(&w, &cluster)?;
     let traffic = TrafficMatrix::of_workload(&w);
 
-    let (loads, backend) = if args.flag("native") {
-        (NativeScorer.score(&traffic, &placement, &cluster)?, "native")
-    } else {
-        match ArtifactStore::open_default() {
-            Ok(store) => {
-                let loads = PjrtScorer::new(&store).score(&traffic, &placement, &cluster)?;
-                (loads, "pjrt")
-            }
-            Err(e) => {
-                eprintln!("note: {e}; falling back to native scorer");
-                (NativeScorer.score(&traffic, &placement, &cluster)?, "native-fallback")
-            }
-        }
-    };
-    println!(
-        "cost model ({backend}) — {} mapped by {} on {}",
-        w.name,
-        kind,
-        cluster.summary()
-    );
+    let (loads, backend) = score_placement(args, &traffic, &placement, &cluster)?;
+    println!("cost model ({backend}) — {} mapped by {} on {}", w.name, kind, cluster.summary());
     let mut table = Table::new(vec!["node", "nic tx (B/s)", "nic rx (B/s)", "intra (B/s)"]);
     for n in 0..cluster.nodes {
         table.row(vec![
@@ -205,20 +374,7 @@ fn cmd_refine(args: &Args) -> Result<()> {
     let placement = kind.build().map(&w, &cluster)?;
     let traffic = TrafficMatrix::of_workload(&w);
 
-    let report = if args.flag("native") {
-        refine(&NativeScorer, &traffic, &placement, &w, &cluster, rounds)?
-    } else {
-        match ArtifactStore::open_default() {
-            Ok(store) => {
-                let scorer = PjrtScorer::new(&store);
-                refine(&scorer, &traffic, &placement, &w, &cluster, rounds)?
-            }
-            Err(e) => {
-                eprintln!("note: {e}; falling back to native scorer");
-                refine(&NativeScorer, &traffic, &placement, &w, &cluster, rounds)?
-            }
-        }
-    };
+    let report = refine_placement(args, &traffic, &placement, &w, &cluster, rounds)?;
     println!(
         "refined {} (start={}): objective {:.4e} -> {:.4e} ({} swaps, {} evaluations)",
         w.name, kind, report.before, report.after, report.swaps, report.evaluations
@@ -234,7 +390,9 @@ fn cmd_workload(args: &Args) -> Result<()> {
     };
     let w = Workload::builtin(name)?;
     println!("workload {} — {} jobs, {} processes", w.name, w.jobs.len(), w.total_procs());
-    let mut table = Table::new(vec!["job", "name", "procs", "pattern", "length", "rate", "count", "class"]);
+    let mut table = Table::new(vec![
+        "job", "name", "procs", "pattern", "length", "rate", "count", "class",
+    ]);
     for (jid, job) in w.jobs.iter().enumerate() {
         for f in &job.flows {
             table.row(vec![
@@ -253,20 +411,36 @@ fn cmd_workload(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// List AOT artifacts. Degrades to an informative note (not an error) when
+/// the PJRT runtime or the artifacts directory is unavailable, so scripted
+/// callers can always probe.
+#[cfg(feature = "pjrt")]
 fn cmd_artifacts() -> Result<()> {
-    let store = ArtifactStore::open_default()?;
-    println!("PJRT platform: {}", store.platform());
-    let mut table = Table::new(vec!["kind", "batch", "P", "N", "file"]);
-    for m in store.metas() {
-        table.row(vec![
-            m.kind.clone(),
-            m.batch.to_string(),
-            m.p.to_string(),
-            m.n.to_string(),
-            m.file.clone(),
-        ]);
+    use crate::runtime::ArtifactStore;
+    match ArtifactStore::open_default() {
+        Ok(store) => {
+            println!("PJRT platform: {}", store.platform());
+            let mut table = Table::new(vec!["kind", "batch", "P", "N", "file"]);
+            for m in store.metas() {
+                table.row(vec![
+                    m.kind.clone(),
+                    m.batch.to_string(),
+                    m.p.to_string(),
+                    m.n.to_string(),
+                    m.file.clone(),
+                ]);
+            }
+            print!("{table}");
+        }
+        Err(e) => println!("no AOT artifacts available: {e}"),
     }
-    print!("{table}");
+    Ok(())
+}
+
+/// List AOT artifacts; built without the `pjrt` feature, so none exist.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_artifacts() -> Result<()> {
+    println!("no AOT artifacts available: built without the `pjrt` feature (native scorer only)");
     Ok(())
 }
 
@@ -312,5 +486,39 @@ mod tests {
     fn figure_requires_name() {
         assert!(main_with_args(args(&["figure"])).is_err());
         assert!(main_with_args(args(&["figure", "fig9"])).is_err());
+    }
+
+    #[test]
+    fn bench_rejects_unknown_inputs() {
+        assert!(main_with_args(args(&["bench", "--workloads", "nope"])).is_err());
+        assert!(main_with_args(args(&["bench", "--mappers", "zz"])).is_err());
+    }
+
+    #[test]
+    fn bench_small_sweep_writes_json() {
+        let dir = std::env::temp_dir().join("nicmap_bench_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_harness.json");
+        let path_str = path.to_str().unwrap();
+        main_with_args(args(&[
+            "bench",
+            "--workloads",
+            "real4",
+            "--mappers",
+            "B,N",
+            "--rounds",
+            "3",
+            "--threads",
+            "2",
+            "--compare-serial",
+            "--json",
+            path_str,
+        ]))
+        .unwrap();
+        let doc = std::fs::read_to_string(&path).unwrap();
+        assert!(doc.contains("\"schema\":\"nicmap-bench-v1\""));
+        assert!(doc.contains("\"workload\":\"real_workload_4\""));
+        assert!(doc.contains("\"serial_wall_secs\":"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

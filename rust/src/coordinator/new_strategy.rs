@@ -154,8 +154,9 @@ impl NewStrategy {
                 if st.per_node[current] >= cap || occ.node_free(current) == 0 {
                     let hosting = occ
                         .node_with_most_free_where(|n| st.per_node[n] > 0 && st.per_node[n] < cap);
-                    match hosting.or_else(|| occ.node_with_most_free_where(|n| st.per_node[n] < cap))
-                    {
+                    let fallback =
+                        hosting.or_else(|| occ.node_with_most_free_where(|n| st.per_node[n] < cap));
+                    match fallback {
                         Some(n) => current = n,
                         // All nodes at cap: leave the rest to later anchors
                         // (the cap will be relaxed there if truly needed).

@@ -157,7 +157,7 @@ pub fn refine(
                 let mut cand = placement.clone();
                 cand.core_of.swap(a, b);
                 if let Some(hit) = consider(Move::Swap(a, b), &cand, scorer, &mut evaluations)? {
-                    if best.as_ref().map_or(true, |(_, bo, _)| hit.1 < *bo) {
+                    if best.as_ref().map(|(_, bo, _)| hit.1 < *bo).unwrap_or(true) {
                         best = Some(hit);
                     }
                 }
@@ -168,7 +168,7 @@ pub fn refine(
                 if let Some(hit) =
                     consider(Move::Migrate(a, target), &cand, scorer, &mut evaluations)?
                 {
-                    if best.as_ref().map_or(true, |(_, bo, _)| hit.1 < *bo) {
+                    if best.as_ref().map(|(_, bo, _)| hit.1 < *bo).unwrap_or(true) {
                         best = Some(hit);
                     }
                 }

@@ -3,43 +3,73 @@
 //! Every fallible public API in `nicmap` returns [`Result<T>`]. Variants are
 //! deliberately coarse: callers dispatch on *category* (bad spec vs. runtime
 //! vs. simulation), not on individual failure sites.
-
-use thiserror::Error;
+//!
+//! Hand-implemented `Display`/`Error` — `thiserror` is not vendored on this
+//! offline image and the surface is small enough not to miss it.
 
 /// Crate-wide error enum.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Workload / cluster specification is syntactically or semantically bad.
-    #[error("spec error: {0}")]
     Spec(String),
 
     /// A mapping request cannot be satisfied (e.g. more processes than cores).
-    #[error("mapping error: {0}")]
     Mapping(String),
 
     /// Simulation-level inconsistency (should indicate a bug, not bad input).
-    #[error("simulation error: {0}")]
     Sim(String),
 
     /// PJRT / AOT artifact problems (missing artifacts, shape mismatch, ...).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// CLI argument problems.
-    #[error("usage error: {0}")]
     Usage(String),
 
-    /// Underlying XLA error surfaced by the `xla` crate.
-    #[error("xla error: {0}")]
+    /// Underlying XLA error surfaced by the PJRT runtime (`pjrt` feature).
     Xla(String),
 
     /// I/O while loading specs or artifacts.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
 /// Crate-wide result alias.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Spec(m) => write!(f, "spec error: {m}"),
+            Error::Mapping(m) => write!(f, "mapping error: {m}"),
+            Error::Sim(m) => write!(f, "simulation error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Usage(m) => write!(f, "usage error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
 
 impl Error {
     /// Build a [`Error::Spec`] from anything displayable.
@@ -68,12 +98,6 @@ impl Error {
     }
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Xla(e.to_string())
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,5 +116,7 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         let e: Error = io.into();
         assert!(matches!(e, Error::Io(_)));
+        use std::error::Error as _;
+        assert!(e.source().is_some());
     }
 }

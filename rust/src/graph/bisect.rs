@@ -205,8 +205,15 @@ fn recurse(g: &Graph, verts: &[usize], sizes: &[usize], first_part: usize, out: 
     let count0 = side.iter().filter(|&&s| s == 0).count();
     fix_exact(&sub, &mut side, count0 as isize - left as isize);
 
-    let lv: Vec<usize> = back.iter().enumerate().filter(|(i, _)| side[*i] == 0).map(|(_, &v)| v).collect();
-    let rv: Vec<usize> = back.iter().enumerate().filter(|(i, _)| side[*i] == 1).map(|(_, &v)| v).collect();
+    let pick = |want: u8| -> Vec<usize> {
+        back.iter()
+            .enumerate()
+            .filter(|(i, _)| side[*i] == want)
+            .map(|(_, &v)| v)
+            .collect()
+    };
+    let lv = pick(0);
+    let rv = pick(1);
     debug_assert_eq!(lv.len(), left);
     recurse(g, &lv, &sizes[..mid], first_part, out);
     recurse(g, &rv, &sizes[mid..], first_part + mid, out);

@@ -1,6 +1,13 @@
 //! Experiment harness — the code path shared by `cargo bench`, the CLI, and
 //! the examples to regenerate every table and figure of the paper
 //! (DESIGN.md §5 experiment index).
+//!
+//! The sweep over workload × mapper cells runs on worker threads
+//! ([`run_sweep`], via [`crate::par`]): every cell is an independent
+//! deterministic (map, simulate) pair, so the parallel sweep is
+//! bit-identical to the serial one in every reported metric — only
+//! wall-clock time changes. `nicmap bench --json` exposes the sweep from
+//! the CLI and records it as `BENCH_harness.json` ([`sweep_to_json`]).
 
 use crate::coordinator::MapperKind;
 use crate::error::Result;
@@ -8,6 +15,7 @@ use crate::model::npb;
 use crate::model::topology::ClusterSpec;
 use crate::model::workload::Workload;
 use crate::report::figure::{bar_chart, gain_pct};
+use crate::report::json;
 use crate::report::table::Table;
 use crate::sim::{simulate, SimConfig, SimReport};
 
@@ -98,7 +106,22 @@ impl WorkloadRun {
     }
 }
 
-/// Simulate one workload under `mappers` on `cluster`.
+/// Map and simulate one (workload × mapper) cell — the unit of work the
+/// parallel sweep distributes.
+pub fn run_cell(
+    w: &Workload,
+    cluster: &ClusterSpec,
+    kind: MapperKind,
+    cfg: &SimConfig,
+) -> Result<Cell> {
+    let t0 = std::time::Instant::now();
+    let placement = kind.build().map(w, cluster)?;
+    let map_secs = t0.elapsed().as_secs_f64();
+    let report = simulate(w, &placement, cluster, cfg)?;
+    Ok(Cell { mapper: kind, report, map_secs })
+}
+
+/// Simulate one workload under `mappers` on `cluster` (serial).
 pub fn run_workload(
     w: &Workload,
     cluster: &ClusterSpec,
@@ -107,13 +130,110 @@ pub fn run_workload(
 ) -> Result<WorkloadRun> {
     let mut cells = Vec::with_capacity(mappers.len());
     for &kind in mappers {
-        let t0 = std::time::Instant::now();
-        let placement = kind.build().map(w, cluster)?;
-        let map_secs = t0.elapsed().as_secs_f64();
-        let report = simulate(w, &placement, cluster, cfg)?;
-        cells.push(Cell { mapper: kind, report, map_secs });
+        cells.push(run_cell(w, cluster, kind, cfg)?);
     }
     Ok(WorkloadRun { workload: w.name.clone(), cells })
+}
+
+/// Sweep `workloads × mappers`, distributing cells over up to `threads`
+/// worker threads (`<= 1` = serial). Cells are independent and both the
+/// mappers and the simulator are deterministic, so the result is
+/// bit-identical to the serial sweep — in the same order — regardless of
+/// thread count; see [`SimReport::metrics_eq`].
+pub fn run_sweep(
+    workloads: &[Workload],
+    cluster: &ClusterSpec,
+    mappers: &[MapperKind],
+    cfg: &SimConfig,
+    threads: usize,
+) -> Result<Vec<WorkloadRun>> {
+    let cells: Vec<(usize, MapperKind)> = (0..workloads.len())
+        .flat_map(|wi| mappers.iter().map(move |&m| (wi, m)))
+        .collect();
+    let results = crate::par::par_map(cells, threads, |(wi, kind)| {
+        run_cell(&workloads[wi], cluster, kind, cfg)
+    });
+    let mut runs: Vec<WorkloadRun> = workloads
+        .iter()
+        .map(|w| WorkloadRun {
+            workload: w.name.clone(),
+            cells: Vec::with_capacity(mappers.len()),
+        })
+        .collect();
+    let mut it = results.into_iter();
+    for run in &mut runs {
+        for _ in mappers {
+            run.cells.push(it.next().expect("one result per cell")?);
+        }
+    }
+    Ok(runs)
+}
+
+/// True when two sweeps agree on every deterministic metric (wall-clock
+/// times may differ) — the parallel-vs-serial golden check.
+pub fn sweeps_identical(a: &[WorkloadRun], b: &[WorkloadRun]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.workload == y.workload
+                && x.cells.len() == y.cells.len()
+                && x.cells
+                    .iter()
+                    .zip(&y.cells)
+                    .all(|(c, d)| c.mapper == d.mapper && c.report.metrics_eq(&d.report))
+        })
+}
+
+/// Cap every flow's round count — used for CI-scale runs of the full
+/// workloads (the figure sweeps default to 2000 rounds per sender).
+pub fn cap_rounds(w: &mut Workload, rounds: u64) {
+    for j in &mut w.jobs {
+        for f in &mut j.flows {
+            f.count = f.count.min(rounds);
+        }
+    }
+}
+
+/// Render a finished sweep as the machine-readable `BENCH_harness.json`
+/// document: one record per cell (waiting-ms / finish-s / map-secs /
+/// sim-wall-secs / events) plus sweep-level wall times for the repo's perf
+/// trajectory.
+pub fn sweep_to_json(
+    runs: &[WorkloadRun],
+    threads: usize,
+    parallel_wall_secs: f64,
+    serial_wall_secs: Option<f64>,
+) -> String {
+    let mut cells = Vec::new();
+    for run in runs {
+        for cell in &run.cells {
+            cells.push(
+                json::Obj::new()
+                    .str("workload", &run.workload)
+                    .str("mapper", cell.mapper.name())
+                    .num("waiting_ms", cell.report.waiting_ms())
+                    .num("workload_finish_s", cell.report.workload_finish_s())
+                    .num("total_finish_s", cell.report.total_finish_s())
+                    .num("map_secs", cell.map_secs)
+                    .num("sim_wall_secs", cell.report.wall_secs)
+                    .int("events", cell.report.events)
+                    .int("messages", cell.report.delivered)
+                    .build(),
+            );
+        }
+    }
+    let mut doc = json::Obj::new()
+        .str("schema", "nicmap-bench-v1")
+        .int("threads", threads as u64)
+        .num("parallel_wall_secs", parallel_wall_secs);
+    doc = match serial_wall_secs {
+        Some(s) => {
+            doc.num("serial_wall_secs", s).num("speedup", s / parallel_wall_secs.max(1e-12))
+        }
+        None => doc.raw("serial_wall_secs", "null".to_string()),
+    };
+    let mut out = doc.raw("cells", json::array(&cells)).build();
+    out.push('\n');
+    out
 }
 
 /// The synthetic-figure driver (Figs 2, 3, 4 share the same runs).
@@ -214,6 +334,63 @@ mod tests {
         assert!(fig.contains("Figure T"));
         assert!(fig.contains("tiny"));
         assert!(fig.contains("gain%"));
+    }
+
+    #[test]
+    fn sweep_parallel_bit_identical_to_serial() {
+        let cluster = ClusterSpec::small_test_cluster();
+        let workloads = vec![
+            Workload::new(
+                "a",
+                vec![JobSpec::synthetic(Pattern::AllToAll, 8, 64 * KB, 50.0, 8)],
+            )
+            .unwrap(),
+            Workload::new(
+                "b",
+                vec![JobSpec::synthetic(Pattern::GatherReduce, 6, 64 * KB, 50.0, 8)],
+            )
+            .unwrap(),
+        ];
+        let cfg = SimConfig::default();
+        let serial = run_sweep(&workloads, &cluster, &MapperKind::PAPER, &cfg, 1).unwrap();
+        let parallel = run_sweep(&workloads, &cluster, &MapperKind::PAPER, &cfg, 4).unwrap();
+        assert!(sweeps_identical(&serial, &parallel));
+        // And the serial sweep matches the original per-workload driver.
+        for (run, w) in serial.iter().zip(&workloads) {
+            let direct = run_workload(w, &cluster, &MapperKind::PAPER, &cfg).unwrap();
+            for (a, b) in run.cells.iter().zip(&direct.cells) {
+                assert_eq!(a.mapper, b.mapper);
+                assert!(a.report.metrics_eq(&b.report));
+            }
+        }
+    }
+
+    #[test]
+    fn cap_rounds_caps() {
+        let mut w = Workload::synt_workload_1();
+        cap_rounds(&mut w, 7);
+        assert!(w.jobs.iter().all(|j| j.flows.iter().all(|f| f.count == 7)));
+        cap_rounds(&mut w, 100); // never raises
+        assert!(w.jobs.iter().all(|j| j.flows.iter().all(|f| f.count == 7)));
+    }
+
+    #[test]
+    fn sweep_json_has_cells_and_totals() {
+        let run = tiny_run();
+        let doc = sweep_to_json(&[run], 4, 1.5, Some(3.0));
+        assert!(doc.starts_with('{') && doc.ends_with("}\n"), "{doc}");
+        assert!(doc.contains("\"schema\":\"nicmap-bench-v1\""));
+        assert!(doc.contains("\"threads\":4"));
+        assert!(doc.contains("\"speedup\":2"));
+        assert!(doc.contains("\"workload\":\"tiny\""));
+        assert!(doc.contains("\"mapper\":\"Blocked\""));
+        assert!(doc.contains("\"waiting_ms\":"));
+        assert!(doc.contains("\"map_secs\":"));
+        // Without a serial comparison the field is null and speedup absent.
+        let run = tiny_run();
+        let doc = sweep_to_json(&[run], 1, 1.0, None);
+        assert!(doc.contains("\"serial_wall_secs\":null"));
+        assert!(!doc.contains("speedup"));
     }
 
     #[test]

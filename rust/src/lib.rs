@@ -16,9 +16,11 @@
 //! * **Layer 1 (Pallas, `python/compile/kernels/`)** — MXU-tiled matmul and
 //!   reduction kernels inside that model.
 //!
-//! The Rust [`runtime`] loads the AOT artifacts via PJRT and exposes them to
-//! the mapping hot path ([`coordinator::refine`]); Python never runs at
-//! request time.
+//! The Rust [`runtime`] loads the AOT artifacts via PJRT (behind the `pjrt`
+//! feature) and exposes them to the mapping hot path
+//! ([`coordinator::refine`]); Python never runs at request time. Without the
+//! feature — or without artifacts on disk — every consumer degrades to the
+//! pure-Rust native scorer, so the build never requires Python/JAX outputs.
 //!
 //! ## Quickstart
 //!
@@ -43,6 +45,7 @@ pub mod error;
 pub mod graph;
 pub mod harness;
 pub mod model;
+pub mod par;
 pub mod report;
 pub mod runtime;
 pub mod sim;

@@ -79,7 +79,13 @@ pub struct JobSpec {
 
 impl JobSpec {
     /// Single-flow synthetic job (rows of paper Tables 2–5).
-    pub fn synthetic(pattern: Pattern, procs: usize, msg_bytes: Bytes, rate: MsgPerSec, count: u64) -> Self {
+    pub fn synthetic(
+        pattern: Pattern,
+        procs: usize,
+        msg_bytes: Bytes,
+        rate: MsgPerSec,
+        count: u64,
+    ) -> Self {
         JobSpec {
             name: format!("{} {}@{}m/s", pattern.name(), fmt_bytes(msg_bytes), rate),
             procs,

@@ -1,0 +1,105 @@
+//! Minimal scoped-thread parallel map — the crate's stand-in for `rayon`,
+//! which is not vendored on this offline image.
+//!
+//! Results are written into per-item slots and returned in **input order**,
+//! so any deterministic per-item computation yields output bit-identical to
+//! its serial evaluation; only wall-clock time changes. Work distribution is
+//! dynamic (an atomic cursor), which keeps long cells — e.g. the 20–60 M
+//! event simulations of the figure sweep — from serializing behind a static
+//! chunking.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Default worker count: the machine's available parallelism (1 on error).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f` to every item on up to `threads` worker threads; results come
+/// back in input order. `threads <= 1` (or a single item) degrades to a
+/// plain serial map. A panic in `f` propagates to the caller when the scope
+/// joins.
+pub fn par_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = threads.min(n);
+    if workers <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    // One slot per item: (pending input, finished output). Mutex-per-slot
+    // keeps workers contention-free except on the shared cursor.
+    let slots: Vec<_> = items.into_iter().map(|t| Mutex::new((Some(t), None::<R>))).collect();
+    let cursor = AtomicUsize::new(0);
+    let f = &f;
+    let slots_ref = &slots;
+    let cursor_ref = &cursor;
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(move || loop {
+                let i = cursor_ref.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = slots_ref[i].lock().unwrap().0.take().expect("item claimed once");
+                let out = f(item);
+                slots_ref[i].lock().unwrap().1 = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().1.expect("worker filled every slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = par_map(items, 8, |x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_matches_serial_exactly() {
+        let items: Vec<u64> = (0..257).collect();
+        let f = |x: u64| x.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(17);
+        let serial = par_map(items.clone(), 1, f);
+        let parallel = par_map(items, 7, f);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        assert_eq!(par_map(vec![1, 2, 3], 64, |x| x + 1), vec![2, 3, 4]);
+        assert_eq!(par_map(Vec::<u32>::new(), 8, |x| x), Vec::<u32>::new());
+        assert_eq!(par_map(vec![9], 8, |x| x), vec![9]);
+    }
+
+    #[test]
+    fn zero_threads_degrades_to_serial() {
+        assert_eq!(par_map(vec![1, 2], 0, |x| x * 10), vec![10, 20]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn worker_panic_propagates() {
+        par_map(vec![0u32, 1, 2, 3], 2, |x| {
+            assert_ne!(x, 3, "boom");
+            x
+        });
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -1,0 +1,117 @@
+//! Minimal JSON emission (RFC 8259) — `serde_json` is not vendored on this
+//! offline image and the bench harness only needs to *write* one document
+//! shape (`BENCH_harness.json`), so a tiny ordered builder suffices.
+
+/// Quote and escape a string as a JSON string literal.
+pub fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Render a float as a JSON number; non-finite values become `null`
+/// (JSON has no NaN/Infinity).
+pub fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Render a JSON array from already-rendered element strings.
+pub fn array(items: &[String]) -> String {
+    format!("[{}]", items.join(","))
+}
+
+/// Ordered JSON object builder. Keys are emitted in insertion order;
+/// values are pre-rendered JSON fragments.
+#[derive(Debug, Default, Clone)]
+pub struct Obj {
+    fields: Vec<String>,
+}
+
+impl Obj {
+    /// Empty object.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a string field.
+    pub fn str(self, key: &str, value: &str) -> Self {
+        self.raw(key, quote(value))
+    }
+
+    /// Add a float field (`null` when non-finite).
+    pub fn num(self, key: &str, value: f64) -> Self {
+        self.raw(key, num(value))
+    }
+
+    /// Add an unsigned integer field.
+    pub fn int(self, key: &str, value: u64) -> Self {
+        self.raw(key, value.to_string())
+    }
+
+    /// Add a pre-rendered JSON fragment (nested object/array/null).
+    pub fn raw(mut self, key: &str, fragment: String) -> Self {
+        self.fields.push(format!("{}:{}", quote(key), fragment));
+        self
+    }
+
+    /// Render the object.
+    pub fn build(self) -> String {
+        format!("{{{}}}", self.fields.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escapes_specials() {
+        assert_eq!(quote("plain"), "\"plain\"");
+        assert_eq!(quote("a\"b"), "\"a\\\"b\"");
+        assert_eq!(quote("a\\b"), "\"a\\\\b\"");
+        assert_eq!(quote("a\nb\tc"), "\"a\\nb\\tc\"");
+        assert_eq!(quote("\u{1}"), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn numbers() {
+        assert_eq!(num(1.5), "1.5");
+        assert_eq!(num(0.0), "0");
+        assert_eq!(num(f64::NAN), "null");
+        assert_eq!(num(f64::INFINITY), "null");
+    }
+
+    #[test]
+    fn object_shape() {
+        let doc = Obj::new()
+            .str("name", "synt1")
+            .num("waiting_ms", 2.5)
+            .int("events", 42)
+            .raw("serial", "null".to_string())
+            .build();
+        assert_eq!(doc, "{\"name\":\"synt1\",\"waiting_ms\":2.5,\"events\":42,\"serial\":null}");
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let cells = vec![Obj::new().int("i", 0).build(), Obj::new().int("i", 1).build()];
+        let doc = Obj::new().raw("cells", array(&cells)).build();
+        assert_eq!(doc, "{\"cells\":[{\"i\":0},{\"i\":1}]}");
+    }
+}

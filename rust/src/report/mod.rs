@@ -1,8 +1,9 @@
-//! Reporting: paper-style tables, ASCII bar "figures", CSV, and the small
-//! statistics toolkit the bench harness uses.
+//! Reporting: paper-style tables, ASCII bar "figures", CSV, JSON, and the
+//! small statistics toolkit the bench harness uses.
 
 pub mod csv;
 pub mod figure;
+pub mod json;
 pub mod stats;
 pub mod table;
 

@@ -108,7 +108,12 @@ impl ArtifactStore {
             return Err(Error::runtime("empty artifact manifest"));
         }
         let client = xla::PjRtClient::cpu()?;
-        Ok(ArtifactStore { dir: dir.to_path_buf(), metas, client, compiled: RefCell::new(HashMap::new()) })
+        Ok(ArtifactStore {
+            dir: dir.to_path_buf(),
+            metas,
+            client,
+            compiled: RefCell::new(HashMap::new()),
+        })
     }
 
     /// Open the default location.

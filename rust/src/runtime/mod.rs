@@ -1,21 +1,29 @@
 //! Runtime layer: loads the AOT-compiled JAX/Pallas cost model (HLO text →
 //! PJRT CPU executable) and exposes it as a [`crate::coordinator::refine::Scorer`].
 //!
-//! * [`client`] — artifact discovery (manifest), HLO-text loading, PJRT
-//!   compile + execute. One compile per artifact per process, cached.
-//! * [`cost_model`] — [`cost_model::PjrtScorer`]: pads a traffic matrix and
+//! * `client` (`pjrt` feature) — artifact discovery (manifest), HLO-text
+//!   loading, PJRT compile + execute. One compile per artifact per process,
+//!   cached.
+//! * `cost_model` (`pjrt` feature) — `PjrtScorer`: pads a traffic matrix and
 //!   a placement into the artifact's fixed shapes and unpacks the 6-tuple.
 //! * [`native`] — [`native::NativeScorer`]: the same math in pure Rust.
 //!   Serves as the no-artifact fallback *and* as the oracle the integration
 //!   tests pin the artifact against (rust-vs-JAX cross-check).
 //!
-//! Python never runs here: the HLO text was produced once by
-//! `python/compile/aot.py` (`make artifacts`).
+//! The `pjrt` feature needs a vendored `xla` crate, which this offline image
+//! does not ship — it is off by default and every caller must degrade to
+//! [`NativeScorer`] (the CLI and examples do). Python never runs here
+//! either way: the HLO text was produced once by `python/compile/aot.py`
+//! (`make artifacts`).
 
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod cost_model;
 pub mod native;
 
+#[cfg(feature = "pjrt")]
 pub use client::ArtifactStore;
+#[cfg(feature = "pjrt")]
 pub use cost_model::PjrtScorer;
 pub use native::NativeScorer;

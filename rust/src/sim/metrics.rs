@@ -58,6 +58,27 @@ impl SimReport {
         self.jobs.iter().map(|j| j.finish_ns as f64).sum::<f64>() / NS_PER_SEC as f64
     }
 
+    /// True when every *deterministic* metric matches `other` exactly —
+    /// everything except wall-clock timing (`wall_secs`). The golden
+    /// parallel-vs-serial harness tests and `nicmap bench --compare-serial`
+    /// use this to assert bit-identical sweeps.
+    pub fn metrics_eq(&self, other: &SimReport) -> bool {
+        self.wait_nic_ns == other.wait_nic_ns
+            && self.wait_mem_ns == other.wait_mem_ns
+            && self.wait_cache_ns == other.wait_cache_ns
+            && self.delivered == other.delivered
+            && self.sent == other.sent
+            && self.events == other.events
+            && self.end_ns == other.end_ns
+            && self.jobs.len() == other.jobs.len()
+            && self.jobs.iter().zip(&other.jobs).all(|(a, b)| {
+                a.finish_ns == b.finish_ns
+                    && a.delivered == b.delivered
+                    && a.bytes == b.bytes
+                    && a.wait_ns == b.wait_ns
+            })
+    }
+
     /// Events per wall-clock second (perf pass headline).
     pub fn events_per_sec(&self) -> f64 {
         if self.wall_secs <= 0.0 {
@@ -87,6 +108,18 @@ mod tests {
         assert_eq!(r.waiting_ms(), 2.0);
         assert_eq!(r.workload_finish_s(), 3.0);
         assert_eq!(r.total_finish_s(), 5.0);
+    }
+
+    #[test]
+    fn metrics_eq_ignores_wall_clock() {
+        let mut a = SimReport { wait_nic_ns: 5, events: 9, ..Default::default() };
+        let mut b = a.clone();
+        b.wall_secs = a.wall_secs + 123.0;
+        assert!(a.metrics_eq(&b));
+        b.events += 1;
+        assert!(!a.metrics_eq(&b));
+        a.jobs.push(JobReport::default());
+        assert!(!a.metrics_eq(&b));
     }
 
     #[test]

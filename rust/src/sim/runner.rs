@@ -141,7 +141,8 @@ pub fn simulate(
         let start = cfg.stagger_ns.saturating_mul(g as Ns);
         for (fi, frt) in flows_rt[g].iter().enumerate() {
             if !frt.dests.is_empty() && frt.rounds > 0 {
-                engine.schedule(start, Event::SendRound { proc: g as u32, flow: fi as u16, round: 0 });
+                let ev = Event::SendRound { proc: g as u32, flow: fi as u16, round: 0 };
+                engine.schedule(start, ev);
             }
         }
     }
@@ -229,7 +230,9 @@ pub fn simulate(
     }
 
     if sent != delivered {
-        return Err(Error::sim(format!("conservation violated: sent {sent} != delivered {delivered}")));
+        return Err(Error::sim(format!(
+            "conservation violated: sent {sent} != delivered {delivered}"
+        )));
     }
 
     let (nic, mem, cache) = fabric.wait_by_kind();

@@ -49,7 +49,7 @@ pub fn service_ns(bytes: Bytes, bw: BytesPerSec) -> Ns {
         return Ns::MAX;
     }
     let num = bytes as u128 * NS_PER_SEC as u128;
-    let q = (num + bw as u128 - 1) / bw as u128;
+    let q = num.div_ceil(bw as u128);
     q.min(Ns::MAX as u128) as Ns
 }
 

@@ -1,0 +1,74 @@
+//! Golden-value integration tests for the parallel figure-sweep harness:
+//! the worker-thread sweep must produce *identical* `SimReport` metrics to
+//! the serial path (the simulator is deterministic and cells are
+//! independent), and the paper's headline ordering must hold on the
+//! heavy-communication synthetic workload.
+
+use nicmap::coordinator::MapperKind;
+use nicmap::harness::{cap_rounds, run_sweep, run_workload, sweeps_identical, Metric};
+use nicmap::model::topology::ClusterSpec;
+use nicmap::model::workload::Workload;
+use nicmap::sim::SimConfig;
+
+/// Builtin workload with every flow capped to `rounds` rounds.
+fn scaled(name: &str, rounds: u64) -> Workload {
+    let mut w = Workload::builtin(name).unwrap();
+    cap_rounds(&mut w, rounds);
+    w
+}
+
+#[test]
+fn parallel_sweep_golden_vs_serial_synt1_to_synt3() {
+    let cluster = ClusterSpec::paper_cluster();
+    let cfg = SimConfig::default();
+    let workloads: Vec<Workload> =
+        ["synt1", "synt2", "synt3"].iter().map(|n| scaled(n, 10)).collect();
+
+    let serial = run_sweep(&workloads, &cluster, &MapperKind::PAPER, &cfg, 1).unwrap();
+    for threads in [2, 4, 8] {
+        let parallel =
+            run_sweep(&workloads, &cluster, &MapperKind::PAPER, &cfg, threads).unwrap();
+        assert!(
+            sweeps_identical(&serial, &parallel),
+            "parallel sweep with {threads} threads diverged from serial"
+        );
+    }
+
+    // Cross-check against the original per-workload serial driver, metric by
+    // metric (golden equality, not tolerance).
+    for (run, w) in serial.iter().zip(&workloads) {
+        let direct = run_workload(w, &cluster, &MapperKind::PAPER, &cfg).unwrap();
+        assert_eq!(run.workload, direct.workload);
+        for (a, b) in run.cells.iter().zip(&direct.cells) {
+            assert_eq!(a.mapper, b.mapper);
+            assert!(a.report.metrics_eq(&b.report), "{}/{} metrics drift", run.workload, a.mapper);
+            // The figure metrics are derived from the deterministic fields,
+            // so they must match exactly too.
+            assert_eq!(a.report.waiting_ms(), b.report.waiting_ms());
+            assert_eq!(a.report.workload_finish_s(), b.report.workload_finish_s());
+            assert_eq!(a.report.total_finish_s(), b.report.total_finish_s());
+        }
+    }
+}
+
+#[test]
+fn new_beats_blocked_on_heavy_synthetic() {
+    // The paper's headline claim (synt4, ≈91 % gain): the threshold strategy
+    // must clearly beat Blocked on the heavy-communication synthetic, and
+    // the full sweep must agree with the per-workload driver on the winner.
+    let cluster = ClusterSpec::paper_cluster();
+    let cfg = SimConfig::default();
+    let workloads = vec![scaled("synt4", 60)];
+    let runs = run_sweep(&workloads, &cluster, &MapperKind::PAPER, &cfg, 4).unwrap();
+    let run = &runs[0];
+    let blocked = run.value(MapperKind::Blocked, Metric::WaitingMs).unwrap();
+    let new = run.value(MapperKind::New, Metric::WaitingMs).unwrap();
+    assert!(
+        new < 0.5 * blocked,
+        "New ({new:.0} ms) must decisively beat Blocked ({blocked:.0} ms) on synt4"
+    );
+    assert!(
+        run.new_gain_pct(Metric::WaitingMs) > 0.0,
+        "New must beat the best other mapper on synt4"
+    );
+}
