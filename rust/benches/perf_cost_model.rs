@@ -1,13 +1,17 @@
 //! Perf bench: cost-model scoring latency — the pure-Rust native scorer
 //! always, plus the AOT JAX/Pallas artifact on the PJRT CPU client when the
-//! `pjrt` feature (and `make artifacts`) is available.
+//! `pjrt` feature (and `make artifacts`) is available — and the refinement
+//! loop on top of it, where the `LoadLedger` replaces per-candidate full
+//! recomputes with O(P) delta evaluations.
 //!
-//! This is the hot path of the refinement loop; DESIGN.md §10 expects the
-//! PJRT call to be dominated by literal creation + dispatch (the compile is
-//! cached).
+//! The refinement section *asserts* the ledger's complexity contract
+//! (full scorer passes stay constant, candidate evaluations per round stay
+//! O(P)); the CI bench-smoke job runs this bench, so a regression to
+//! O(P²)-per-candidate scoring fails the build.
 
-use nicmap::coordinator::refine::Scorer;
+use nicmap::coordinator::refine::refine;
 use nicmap::coordinator::MapperKind;
+use nicmap::cost::{CountingScorer, Scorer};
 use nicmap::model::topology::ClusterSpec;
 use nicmap::model::traffic::TrafficMatrix;
 use nicmap::model::workload::Workload;
@@ -59,4 +63,57 @@ fn main() {
     if let Some(s) = store.as_ref() {
         println!("(compiled variants cached: {})", s.compiled_count());
     }
+
+    bench_refinement(&cluster);
+}
+
+/// Refinement bench on the 256-process synthetic workload: wall time plus
+/// the ledger's evaluation counters, with the complexity contract asserted
+/// (run by the CI bench-smoke job).
+fn bench_refinement(cluster: &ClusterSpec) {
+    const ROUNDS: usize = 8;
+    let w = Workload::builtin("synt1").unwrap();
+    let traffic = TrafficMatrix::of_workload(&w);
+    let start = MapperKind::Blocked.build().map(&w, cluster).unwrap();
+    let p = w.total_procs();
+    println!("--- refine synt1/Blocked: P={p} N={} rounds={ROUNDS}", cluster.nodes);
+
+    let counting = CountingScorer::new(&NativeScorer);
+    let t0 = std::time::Instant::now();
+    let rep = refine(&counting, &traffic, &start, &w, cluster, ROUNDS).unwrap();
+    let dt = t0.elapsed();
+    println!(
+        "refine/ledger                objective {:.3e} -> {:.3e} | {} moves | \
+         {} full passes | {} O(P) evals | {dt:.2?}",
+        rep.before, rep.after, rep.moves, rep.evaluations, rep.delta_evals
+    );
+
+    // Complexity contract: the full O(P²) scorer runs a constant number of
+    // times (seed + verify), while per-round candidate evaluations stay
+    // O(P) — the pre-ledger code spent one full pass per candidate.
+    assert_eq!(
+        counting.calls(),
+        rep.evaluations,
+        "RefineReport::evaluations must count full scorer passes"
+    );
+    assert!(
+        rep.evaluations <= 2,
+        "full scorer passes regressed to per-candidate recomputes: {}",
+        rep.evaluations
+    );
+    let per_round_bound = cluster.cores_per_node() * (p + cluster.nodes);
+    assert!(
+        rep.delta_evals <= ROUNDS * per_round_bound,
+        "ledger evaluations per round must be O(P): {} > {} over {ROUNDS} rounds",
+        rep.delta_evals,
+        ROUNDS * per_round_bound
+    );
+    assert!(
+        rep.delta_evals >= 10 * rep.evaluations,
+        "candidate evaluation must flow through the ledger, not the full scorer"
+    );
+    println!(
+        "(contract ok: {} full passes for {} candidate evaluations, bound {}/round)",
+        rep.evaluations, rep.delta_evals, per_round_bound
+    );
 }

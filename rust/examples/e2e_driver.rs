@@ -6,7 +6,8 @@
 //!     pure-Rust native scorer (bit-compatible semantics, cross-checked).
 //!  2. Layer 3: map the paper's Table 4 workload with all four strategies.
 //!  3. Use the cost model *on the request path* to refine the Blocked
-//!     placement (paper §7 future work) — every candidate swap is scored.
+//!     placement (paper §7 future work) — candidates are scored through
+//!     the O(P) `LoadLedger`; the full scorer runs only to seed + verify.
 //!  4. Simulate everything on the Table 1 cluster and report the paper's
 //!     headline metric, including the refined placement.
 //!
@@ -14,8 +15,9 @@
 //! cargo run --release --example e2e_driver
 //! ```
 
-use nicmap::coordinator::refine::{refine, Scorer};
+use nicmap::coordinator::refine::refine;
 use nicmap::coordinator::MapperKind;
+use nicmap::cost::Scorer;
 use nicmap::harness::Metric;
 use nicmap::model::topology::ClusterSpec;
 use nicmap::model::traffic::TrafficMatrix;
@@ -88,11 +90,13 @@ fn drive(scorer: &dyn Scorer) -> nicmap::Result<()> {
     let t0 = std::time::Instant::now();
     let rep = refine(scorer, &traffic, &blocked, &w, &cluster, 12)?;
     println!(
-        "    objective {:.3e} -> {:.3e} | {} swaps | {} scorer executions | {:.2?}",
+        "    objective {:.3e} -> {:.3e} | {} moves | {} full scorer passes \
+         | {} O(P) ledger evals | {:.2?}",
         rep.before,
         rep.after,
-        rep.swaps,
+        rep.moves,
         rep.evaluations,
+        rep.delta_evals,
         t0.elapsed()
     );
     placements.push(("B+refine".into(), rep.placement));

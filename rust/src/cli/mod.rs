@@ -5,11 +5,15 @@
 //! * `simulate`  — map + run the DES, print the paper metrics
 //! * `figure`    — regenerate a paper figure (fig2/fig3/fig4/fig5)
 //! * `bench`     — the full fig 2–5 workload × mapper sweep on worker
-//!   threads, with optional `BENCH_harness.json` output
+//!   threads, with optional `BENCH_harness.json` / CSV output
 //! * `evaluate`  — score a placement with the cost model (AOT or native)
-//! * `refine`    — cost-model-guided swap refinement of a mapping
+//! * `refine`    — cost-model-guided refinement of a mapping (incremental
+//!   ledger evaluation; see `nicmap::cost`)
 //! * `workload`  — show a builtin workload definition (paper tables)
 //! * `artifacts` — list AOT artifacts and PJRT platform
+//!
+//! Every verb that takes `--mapper`/`--mappers` accepts `+r` variants
+//! (`B+r`, `N+r`, ..., or `all+r` for the full refined sweep).
 
 pub mod args;
 pub mod run;

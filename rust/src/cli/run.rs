@@ -1,12 +1,13 @@
 //! CLI verb dispatch.
 
 use crate::cli::args::Args;
-use crate::coordinator::refine::{NodeLoads, RefineReport, Scorer};
-use crate::coordinator::{MapperKind, Placement};
+use crate::coordinator::refine::RefineReport;
+use crate::coordinator::{MapperKind, MapperSpec, Placement};
+use crate::cost::{NodeLoads, Scorer};
 use crate::error::{Error, Result};
 use crate::harness::{
-    cap_rounds, render_figure, run_real, run_sweep, run_synthetic, run_workload, sweep_to_json,
-    sweeps_identical, Metric,
+    cap_rounds, render_figure, run_real, run_sweep, run_synthetic, run_workload, sweep_to_csv,
+    sweep_to_json, sweeps_identical, Metric,
 };
 use crate::model::spec;
 use crate::model::topology::ClusterSpec;
@@ -25,15 +26,19 @@ VERBS
   map        --workload <synt1..4|real1..4> [--mapper B|C|D|N|random|kway] [--spec FILE]
   simulate   --workload <name>              [--mapper ...|all] [--spec FILE] [--stagger NS]
   figure     <fig2|fig3|fig4|fig5>          regenerate a paper figure
-  bench      [--json [FILE]] [--threads K] [--workloads n1,n2] [--mappers ...]
-             [--rounds R] [--compare-serial]
+  bench      [--json [FILE]] [--csv [FILE]] [--threads K] [--workloads n1,n2]
+             [--mappers ...] [--rounds R] [--compare-serial]
              full fig 2-5 workload x mapper sweep on worker threads;
-             --json writes BENCH_harness.json
+             --json writes BENCH_harness.json, --csv the CSV sibling
   evaluate   --workload <name>              [--mapper ...] [--native] cost-model node loads
   refine     --workload <name>              [--mapper B] [--native] [--rounds K]
   workload   <show> <name>                  print a builtin workload table
   artifacts                                 list AOT artifacts + PJRT platform
   help                                      this text
+
+Any mapper takes a `+r` suffix (B+r, C+r, D+r, N+r, ...) selecting the
+cost-model refinement stage after the base mapping; `--mappers all` is the
+paper's B,C,D,N and `--mappers all+r` interleaves their +r variants.
 ";
 
 /// Entry point given parsed args; returns the process exit code.
@@ -65,10 +70,11 @@ fn load_input(args: &Args) -> Result<(ClusterSpec, Workload)> {
     Ok((ClusterSpec::paper_cluster(), Workload::builtin(name)?))
 }
 
-fn mappers_from(args: &Args, key: &str) -> Result<Vec<MapperKind>> {
+fn mappers_from(args: &Args, key: &str) -> Result<Vec<MapperSpec>> {
     match args.get_or(key, "all") {
-        "all" => Ok(MapperKind::PAPER.to_vec()),
-        list => list.split(',').map(MapperKind::parse).collect(),
+        "all" => Ok(MapperSpec::PAPER.to_vec()),
+        "all+r" => Ok(MapperSpec::PAPER_REFINED.to_vec()),
+        list => list.split(',').map(MapperSpec::parse).collect(),
     }
 }
 
@@ -157,12 +163,12 @@ fn refine_placement(
 
 fn cmd_map(args: &Args) -> Result<()> {
     let (cluster, w) = load_input(args)?;
-    let kind = MapperKind::parse(args.get_or("mapper", "N"))?;
+    let mapper = MapperSpec::parse(args.get_or("mapper", "N"))?;
     let t0 = std::time::Instant::now();
-    let placement = kind.build().map(&w, &cluster)?;
+    let placement = mapper.build().map(&w, &cluster)?;
     let dt = t0.elapsed();
     placement.validate(&w, &cluster)?;
-    println!("workload {} on {} — mapper {} ({dt:?})", w.name, cluster.summary(), kind);
+    println!("workload {} on {} — mapper {} ({dt:?})", w.name, cluster.summary(), mapper);
     let mut table = Table::new(vec!["job", "procs", "nodes used", "per-node counts"]);
     for (jid, job) in w.jobs.iter().enumerate() {
         let counts = placement.job_node_counts(&w, jid, &cluster);
@@ -202,7 +208,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     ]);
     for cell in &run.cells {
         table.row(vec![
-            cell.mapper.name().to_string(),
+            cell.mapper.name(),
             format!("{:.1}", cell.report.waiting_ms()),
             format!("{:.3}", cell.report.workload_finish_s()),
             format!("{:.3}", cell.report.total_finish_s()),
@@ -212,7 +218,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     }
     println!("workload {} on {}", w.name, cluster.summary());
     print!("{table}");
-    if mappers.contains(&MapperKind::New) && mappers.len() > 1 {
+    if mappers.contains(&MapperSpec::plain(MapperKind::New)) && mappers.len() > 1 {
         let gain = run.new_gain_pct(Metric::WaitingMs);
         println!("New vs best other: {gain:+.1}% (waiting-time metric)");
     }
@@ -309,7 +315,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         for cell in &run.cells {
             table.row(vec![
                 run.workload.clone(),
-                cell.mapper.name().to_string(),
+                cell.mapper.name(),
                 format!("{:.1}", cell.report.waiting_ms()),
                 format!("{:.3}", cell.report.workload_finish_s()),
                 format!("{:.3}", cell.report.total_finish_s()),
@@ -328,15 +334,20 @@ fn cmd_bench(args: &Args) -> Result<()> {
         None => println!("parallel wall: {parallel_secs:.2}s on {threads} threads"),
     }
 
-    // `--json` alone writes the default file name; `--json FILE` overrides.
-    let out_path = match args.get("json") {
-        Some("true") => Some("BENCH_harness.json".to_string()),
+    // `--json`/`--csv` alone write the default file name; `--flag FILE`
+    // overrides (a bare flag parses as the value `"true"`).
+    let output_path = |key: &str, default: &str| match args.get(key) {
+        Some("true") => Some(default.to_string()),
         Some(path) => Some(path.to_string()),
         None => None,
     };
-    if let Some(path) = out_path {
+    if let Some(path) = output_path("json", "BENCH_harness.json") {
         let doc = sweep_to_json(&runs, threads, parallel_secs, serial_secs);
         std::fs::write(&path, doc)?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = output_path("csv", "BENCH_harness.csv") {
+        sweep_to_csv(&runs).write(std::path::Path::new(&path))?;
         println!("wrote {path}");
     }
     Ok(())
@@ -344,12 +355,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
 
 fn cmd_evaluate(args: &Args) -> Result<()> {
     let (cluster, w) = load_input(args)?;
-    let kind = MapperKind::parse(args.get_or("mapper", "N"))?;
-    let placement = kind.build().map(&w, &cluster)?;
+    let mapper = MapperSpec::parse(args.get_or("mapper", "N"))?;
+    let placement = mapper.build().map(&w, &cluster)?;
     let traffic = TrafficMatrix::of_workload(&w);
 
     let (loads, backend) = score_placement(args, &traffic, &placement, &cluster)?;
-    println!("cost model ({backend}) — {} mapped by {} on {}", w.name, kind, cluster.summary());
+    println!("cost model ({backend}) — {} mapped by {} on {}", w.name, mapper, cluster.summary());
     let mut table = Table::new(vec!["node", "nic tx (B/s)", "nic rx (B/s)", "intra (B/s)"]);
     for n in 0..cluster.nodes {
         table.row(vec![
@@ -369,15 +380,30 @@ fn cmd_evaluate(args: &Args) -> Result<()> {
 
 fn cmd_refine(args: &Args) -> Result<()> {
     let (cluster, w) = load_input(args)?;
-    let kind = MapperKind::parse(args.get_or("mapper", "B"))?;
+    let mapper = MapperSpec::parse(args.get_or("mapper", "B"))?;
+    if mapper.refined {
+        return Err(Error::usage(format!(
+            "refine already applies the refinement stage; start from the base mapper \
+             ({} instead of {})",
+            mapper.base.letter(),
+            mapper.letter()
+        )));
+    }
     let rounds = args.get_parse::<usize>("rounds")?.unwrap_or(8);
-    let placement = kind.build().map(&w, &cluster)?;
+    let placement = mapper.build().map(&w, &cluster)?;
     let traffic = TrafficMatrix::of_workload(&w);
 
     let report = refine_placement(args, &traffic, &placement, &w, &cluster, rounds)?;
     println!(
-        "refined {} (start={}): objective {:.4e} -> {:.4e} ({} swaps, {} evaluations)",
-        w.name, kind, report.before, report.after, report.swaps, report.evaluations
+        "refined {} (start={}): objective {:.4e} -> {:.4e} \
+         ({} moves, {} full scorer passes, {} O(P) ledger evaluations)",
+        w.name,
+        mapper,
+        report.before,
+        report.after,
+        report.moves,
+        report.evaluations,
+        report.delta_evals
     );
     Ok(())
 }
@@ -475,6 +501,10 @@ mod tests {
     fn map_verb_runs() {
         main_with_args(args(&["map", "--workload", "real4", "--mapper", "N"])).unwrap();
         main_with_args(args(&["map", "--workload", "synt4", "--mapper", "B"])).unwrap();
+        // Refined variants parse and map through the same verb.
+        main_with_args(args(&["map", "--workload", "real4", "--mapper", "N+r"])).unwrap();
+        assert!(main_with_args(args(&["map", "--workload", "real4", "--mapper", "zz+r"]))
+            .is_err());
     }
 
     #[test]

@@ -11,8 +11,10 @@
 //! * [`new_strategy::NewStrategy`] — the paper's contribution (Fig. 1):
 //!   size-class job ordering, CD-sorted anchors, adjacency co-location
 //!   capped by the eq. 2 threshold.
-//! * [`refine`] — cost-model-guided swap refinement that can post-process
-//!   any of the above (paper §7 future work; uses the AOT artifact).
+//! * [`refine::Refined`] — cost-model-guided refinement stage
+//!   ([`refine::Refiner`], paper §7 future work) composed with any of the
+//!   above; selected as the `+r` variant of a [`MapperSpec`] (`B+r`,
+//!   `C+r`, `D+r`, `N+r`), scored incrementally via [`crate::cost`].
 
 pub mod blocked;
 pub mod cyclic;
@@ -127,6 +129,102 @@ impl std::fmt::Display for MapperKind {
     }
 }
 
+/// A mapper selection the harness, figures, and CLI operate on: a base
+/// strategy, optionally post-processed by the cost-model refinement stage
+/// ([`refine::Refined`]). Written `B+r`, `C+r`, `D+r`, `N+r` in figure
+/// columns and on the command line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MapperSpec {
+    /// Base strategy.
+    pub base: MapperKind,
+    /// Apply the refinement stage after the base mapping.
+    pub refined: bool,
+}
+
+impl MapperSpec {
+    /// The four strategies of Figures 2–5, in figure order (no refinement).
+    pub const PAPER: [MapperSpec; 4] = [
+        MapperSpec::plain(MapperKind::Blocked),
+        MapperSpec::plain(MapperKind::Cyclic),
+        MapperSpec::plain(MapperKind::Drb),
+        MapperSpec::plain(MapperKind::New),
+    ];
+
+    /// The paper's four strategies plus their `+r` refined variants —
+    /// the extended figure sweep (`nicmap bench --mappers all+r`).
+    pub const PAPER_REFINED: [MapperSpec; 8] = [
+        MapperSpec::plain(MapperKind::Blocked),
+        MapperSpec::plus_r(MapperKind::Blocked),
+        MapperSpec::plain(MapperKind::Cyclic),
+        MapperSpec::plus_r(MapperKind::Cyclic),
+        MapperSpec::plain(MapperKind::Drb),
+        MapperSpec::plus_r(MapperKind::Drb),
+        MapperSpec::plain(MapperKind::New),
+        MapperSpec::plus_r(MapperKind::New),
+    ];
+
+    /// A base strategy with no refinement stage.
+    pub const fn plain(base: MapperKind) -> MapperSpec {
+        MapperSpec { base, refined: false }
+    }
+
+    /// A base strategy followed by the refinement stage.
+    pub const fn plus_r(base: MapperKind) -> MapperSpec {
+        MapperSpec { base, refined: true }
+    }
+
+    /// Figure letter (`B` … or `B+r` …).
+    pub fn letter(&self) -> String {
+        if self.refined {
+            format!("{}+r", self.base.letter())
+        } else {
+            self.base.letter().to_string()
+        }
+    }
+
+    /// Full name (`Blocked` … or `Blocked+r` …).
+    pub fn name(&self) -> String {
+        if self.refined {
+            format!("{}+r", self.base.name())
+        } else {
+            self.base.name().to_string()
+        }
+    }
+
+    /// Parse a mapper name or letter, with an optional `+r` suffix
+    /// (`"B"`, `"blocked"`, `"B+r"`, `"New+R"`, ...).
+    pub fn parse(s: &str) -> Result<MapperSpec> {
+        let t = s.trim();
+        let lower = t.to_ascii_lowercase();
+        match lower.strip_suffix("+r") {
+            Some(base) => Ok(MapperSpec::plus_r(MapperKind::parse(base)?)),
+            None => Ok(MapperSpec::plain(MapperKind::parse(t)?)),
+        }
+    }
+
+    /// Instantiate the mapper (base strategy, wrapped in
+    /// [`refine::Refined`] for `+r` specs).
+    pub fn build(&self) -> Box<dyn Mapper> {
+        if self.refined {
+            Box::new(refine::Refined::of_kind(self.base))
+        } else {
+            self.base.build()
+        }
+    }
+}
+
+impl From<MapperKind> for MapperSpec {
+    fn from(base: MapperKind) -> MapperSpec {
+        MapperSpec::plain(base)
+    }
+}
+
+impl std::fmt::Display for MapperSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -164,6 +262,57 @@ mod tests {
         let w = Workload::synt_workload_1(); // 256 procs
         for kind in MapperKind::ALL {
             assert!(kind.build().map(&w, &cluster).is_err(), "{kind} must reject");
+        }
+    }
+
+    #[test]
+    fn mapper_spec_parse_letters_and_refined_suffix() {
+        assert_eq!(MapperSpec::parse("B").unwrap(), MapperSpec::plain(MapperKind::Blocked));
+        assert_eq!(
+            MapperSpec::parse("B+r").unwrap(),
+            MapperSpec::plus_r(MapperKind::Blocked)
+        );
+        assert_eq!(
+            MapperSpec::parse("new+R").unwrap(),
+            MapperSpec::plus_r(MapperKind::New)
+        );
+        assert_eq!(
+            MapperSpec::parse(" drb+r ").unwrap(),
+            MapperSpec::plus_r(MapperKind::Drb)
+        );
+        assert!(MapperSpec::parse("??+r").is_err());
+        assert!(MapperSpec::parse("??").is_err());
+        for kind in MapperKind::ALL {
+            for spec in [MapperSpec::plain(kind), MapperSpec::plus_r(kind)] {
+                assert_eq!(MapperSpec::parse(&spec.letter()).unwrap(), spec);
+                assert_eq!(MapperSpec::parse(&spec.name()).unwrap(), spec);
+            }
+        }
+        assert_eq!(MapperSpec::from(MapperKind::New), MapperSpec::plain(MapperKind::New));
+        assert_eq!(MapperSpec::plus_r(MapperKind::New).to_string(), "New+r");
+        assert_eq!(MapperSpec::plus_r(MapperKind::New).letter(), "N+r");
+    }
+
+    #[test]
+    fn paper_refined_interleaves_base_and_plus_r() {
+        assert_eq!(MapperSpec::PAPER.len(), 4);
+        assert_eq!(MapperSpec::PAPER_REFINED.len(), 8);
+        for pair in MapperSpec::PAPER_REFINED.chunks(2) {
+            assert_eq!(pair[0].base, pair[1].base);
+            assert!(!pair[0].refined && pair[1].refined);
+        }
+    }
+
+    #[test]
+    fn refined_specs_build_valid_mappers() {
+        let cluster = ClusterSpec::paper_cluster();
+        let w = Workload::builtin("real4").unwrap();
+        for spec in MapperSpec::PAPER_REFINED {
+            let p = spec.build().map(&w, &cluster).unwrap();
+            p.validate(&w, &cluster).unwrap_or_else(|e| panic!("{spec}: {e}"));
+            if spec.refined {
+                assert_eq!(spec.build().name(), spec.name());
+            }
         }
     }
 }

@@ -1,62 +1,27 @@
 //! Cost-model-guided placement refinement (paper §7 future work, made
-//! concrete): greedy swap descent on the predicted NIC contention score.
+//! concrete): greedy swap/migrate descent on the predicted NIC contention
+//! score, evaluated incrementally through [`crate::cost::LoadLedger`].
 //!
-//! The scorer is abstract: [`crate::runtime::native::NativeScorer`] (pure
-//! Rust) and [`crate::runtime::cost_model::PjrtScorer`] (the AOT JAX/Pallas
-//! artifact on the PJRT CPU client) both implement [`Scorer`]; integration
-//! tests cross-check them, which validates the whole AOT path end-to-end.
+//! The layer split after the `cost` extraction:
+//!
+//! * [`crate::cost`] owns the load model — [`NodeLoads`], the [`Scorer`]
+//!   abstraction (native + PJRT implementations in [`crate::runtime`]), and
+//!   the O(P) delta evaluator.
+//! * [`Refiner`] (here) is the pluggable search stage: it seeds a ledger
+//!   with **one** full scorer pass, evaluates every candidate move with an
+//!   O(P) `peek`, and re-verifies against one final full pass — where the
+//!   pre-ledger implementation paid a full O(P²) recompute per candidate.
+//! * [`Refined`] composes the stage with any [`Mapper`], giving every
+//!   strategy a `+r` variant ([`crate::coordinator::MapperSpec`]).
 
-use crate::coordinator::Placement;
+use crate::coordinator::{Mapper, MapperKind, Placement};
+pub use crate::cost::{NodeLoads, Scorer};
+use crate::cost::{LoadLedger, Move};
 use crate::error::Result;
 use crate::model::topology::ClusterSpec;
 use crate::model::traffic::TrafficMatrix;
 use crate::model::workload::Workload;
-
-/// Per-node contention summary of a candidate placement.
-#[derive(Debug, Clone, PartialEq)]
-pub struct NodeLoads {
-    /// Inter-node egress per node, bytes/sec.
-    pub nic_tx: Vec<f64>,
-    /// Inter-node ingress per node, bytes/sec.
-    pub nic_rx: Vec<f64>,
-    /// Intra-node volume per node, bytes/sec.
-    pub intra: Vec<f64>,
-}
-
-impl NodeLoads {
-    /// Scalar objective: estimated queuing pressure over all NIC sides.
-    ///
-    /// Per NIC side with utilization `ρ = load / nic_bw` the penalty is
-    /// `ρ² + 100·max(0, ρ − 0.8)²` — quadratic below saturation (an M/M/1
-    /// waiting-time flavour) and steeply punished past 80 % utilization.
-    /// The nonlinearity is essential: under a *linear* byte objective,
-    /// packing always looks optimal (spreading converts intra-node bytes
-    /// to inter-node bytes), which contradicts the paper's whole point —
-    /// a saturated NIC queues superlinearly, so overloaded nodes must be
-    /// drained even at the cost of more total NIC traffic.
-    pub fn objective(&self, nic_bw: f64) -> f64 {
-        fn penalty(rho: f64) -> f64 {
-            let over = (rho - 0.8).max(0.0);
-            rho * rho + 100.0 * over * over
-        }
-        self.nic_tx
-            .iter()
-            .chain(self.nic_rx.iter())
-            .map(|&load| penalty(load / nic_bw))
-            .sum()
-    }
-}
-
-/// Anything that can score a placement against a traffic matrix.
-pub trait Scorer {
-    /// Compute per-node loads of `placement` under `traffic`.
-    fn score(
-        &self,
-        traffic: &TrafficMatrix,
-        placement: &Placement,
-        cluster: &ClusterSpec,
-    ) -> Result<NodeLoads>;
-}
+use crate::runtime::NativeScorer;
 
 /// Result of a refinement run.
 #[derive(Debug, Clone)]
@@ -65,18 +30,135 @@ pub struct RefineReport {
     pub placement: Placement,
     /// Objective before refinement.
     pub before: f64,
-    /// Objective after refinement.
+    /// Objective after refinement (from the verifying full recompute).
     pub after: f64,
-    /// Accepted swaps.
-    pub swaps: usize,
-    /// Scorer invocations (each = one cost-model execution).
+    /// Accepted moves (swaps and migrates).
+    pub moves: usize,
+    /// Full O(P²) scorer passes (ledger seed + final verification — the
+    /// pre-ledger implementation spent one of these per candidate).
     pub evaluations: usize,
+    /// O(P) ledger delta evaluations (one per candidate move considered).
+    pub delta_evals: usize,
 }
 
-/// Greedy swap refinement: repeatedly try swapping a process from the
-/// hottest node with a process elsewhere (or moving it to a free core) and
-/// keep the best improving move, until no move improves or `max_rounds`
-/// is exhausted.
+/// Greedy refinement stage: repeatedly try swapping a process from the
+/// hottest node with a process on a cold node (or migrating it to a free
+/// core) and keep the best improving move, until no move improves or
+/// `max_rounds` is exhausted.
+///
+/// Candidate moves are scored through a [`LoadLedger`] in O(P) each; the
+/// full scorer runs exactly twice (seed + verify) regardless of how many
+/// candidates are considered.
+#[derive(Debug, Clone, Copy)]
+pub struct Refiner {
+    /// Maximum accepted moves (one per round).
+    pub max_rounds: usize,
+    /// Swap partners come from this many least-loaded nodes — swapping two
+    /// heavily-loaded processes cannot cool the hottest NIC, and the
+    /// restriction bounds candidates per round to O(P).
+    pub cold_pool: usize,
+    /// Minimum objective improvement for a move to be accepted.
+    pub min_gain: f64,
+}
+
+impl Default for Refiner {
+    fn default() -> Self {
+        Refiner { max_rounds: 8, cold_pool: 3, min_gain: 1e-9 }
+    }
+}
+
+impl Refiner {
+    /// Default refiner with a custom round budget.
+    pub fn with_rounds(max_rounds: usize) -> Self {
+        Refiner { max_rounds, ..Refiner::default() }
+    }
+
+    /// Refine `start` under `traffic` on `cluster`, scoring with `scorer`.
+    pub fn run(
+        &self,
+        scorer: &dyn Scorer,
+        traffic: &TrafficMatrix,
+        start: &Placement,
+        w: &Workload,
+        cluster: &ClusterSpec,
+    ) -> Result<RefineReport> {
+        let mut ledger = LoadLedger::new(scorer, traffic, start, cluster)?;
+        let mut evaluations = 1usize; // the ledger seed pass
+        let mut delta_evals = 0usize;
+        let mut moves = 0usize;
+        let before = ledger.objective();
+        let mut current = before;
+
+        for _ in 0..self.max_rounds {
+            let hot = ledger.hottest_node();
+            let hot_procs = ledger.procs_on(hot);
+            let cold: std::collections::BTreeSet<usize> =
+                ledger.coldest_nodes(self.cold_pool, hot).into_iter().collect();
+            // One free core per non-hot node is enough — cores of a node
+            // are interchangeable at this granularity. The ledger's free
+            // map is updated on every accepted move (and `apply` rejects
+            // occupied targets outright), so this list can never go stale
+            // against moves accepted in earlier rounds.
+            let free_targets: Vec<usize> = (0..cluster.nodes)
+                .filter(|&n| n != hot)
+                .filter_map(|n| ledger.free_core_on(n))
+                .collect();
+
+            let mut candidates: Vec<Move> = Vec::new();
+            for &a in &hot_procs {
+                for b in 0..ledger.len() {
+                    if b != a && cold.contains(&ledger.node_of(b)) {
+                        candidates.push(Move::Swap(a, b));
+                    }
+                }
+                for &target in &free_targets {
+                    candidates.push(Move::Migrate(a, target));
+                }
+            }
+            let mut best: Option<(Move, f64)> = None;
+            for mv in candidates {
+                // One O(P) delta evaluation per candidate — the pre-ledger
+                // implementation ran the full O(P²) scorer here instead.
+                let obj = ledger.peek(mv)?;
+                delta_evals += 1;
+                if obj < current - self.min_gain
+                    && best.map(|(_, bo)| obj < bo).unwrap_or(true)
+                {
+                    best = Some((mv, obj));
+                }
+            }
+            match best {
+                Some((mv, obj)) => {
+                    ledger.apply(mv)?;
+                    ledger.commit(); // accepted — drop the undo history
+                    current = obj;
+                    moves += 1;
+                }
+                None => break,
+            }
+        }
+
+        // Exact-equivalence guarantee: one verifying full recompute is the
+        // reported objective, so `after` never silently drifts from the
+        // ledger's delta arithmetic (see the invariant in `crate::cost`).
+        let placement = ledger.placement();
+        let full = scorer.score(traffic, &placement, cluster)?;
+        evaluations += 1;
+        let after = full.objective(cluster.nic_bw as f64);
+        debug_assert!(
+            !after.is_finite()
+                || !current.is_finite()
+                || (after - current).abs() <= 1e-6 * current.abs().max(1.0),
+            "ledger objective {current} drifted from full recompute {after}"
+        );
+        // The refined placement must stay structurally valid.
+        placement.validate(w, cluster)?;
+        Ok(RefineReport { placement, before, after, moves, evaluations, delta_evals })
+    }
+}
+
+/// Greedy refinement with default pool/gain settings — the historical entry
+/// point, kept for callers that only choose a round budget.
 pub fn refine(
     scorer: &dyn Scorer,
     traffic: &TrafficMatrix,
@@ -85,175 +167,152 @@ pub fn refine(
     cluster: &ClusterSpec,
     max_rounds: usize,
 ) -> Result<RefineReport> {
-    let mut placement = start.clone();
-    let mut evaluations = 0usize;
-    let mut swaps = 0usize;
-    let nic_bw = cluster.nic_bw as f64;
+    Refiner::with_rounds(max_rounds).run(scorer, traffic, start, w, cluster)
+}
 
-    let mut loads = scorer.score(traffic, &placement, cluster)?;
-    evaluations += 1;
-    let before = loads.objective(nic_bw);
-    let mut current = before;
+/// [`Mapper`] combinator: run a base strategy, then post-process its
+/// placement with the [`Refiner`] (native scorer). This is what `+r`
+/// variants ([`crate::coordinator::MapperSpec`]) build, which makes
+/// refinement reachable from the harness sweep, the figures, and the CLI.
+pub struct Refined {
+    inner: Box<dyn Mapper>,
+    name: &'static str,
+    refiner: Refiner,
+}
 
-    for _ in 0..max_rounds {
-        // Hottest node by NIC load.
-        let hot = (0..cluster.nodes)
-            .max_by(|&a, &b| {
-                (loads.nic_tx[a] + loads.nic_rx[a])
-                    .partial_cmp(&(loads.nic_tx[b] + loads.nic_rx[b]))
-                    .unwrap()
-            })
-            .unwrap_or(0);
-        let hot_procs: Vec<usize> = (0..placement.len())
-            .filter(|&p| placement.node_of(p, cluster) == hot)
-            .collect();
-
-        // Candidate moves: (a) swap a hot-node process with a process on
-        // any other node; (b) migrate a hot-node process to a free core.
-        // Evaluate with the scorer; keep the best improvement.
-        #[derive(Clone, Copy)]
-        enum Move {
-            Swap(usize, usize),
-            Migrate(usize, usize), // (proc, target core)
-        }
-        let mut used = vec![false; cluster.total_cores()];
-        for &c in &placement.core_of {
-            used[c] = true;
-        }
-        // One free core per non-hot node is enough — cores of a node are
-        // interchangeable at this granularity.
-        let free_targets: Vec<usize> = (0..cluster.nodes)
-            .filter(|&n| n != hot)
-            .filter_map(|n| cluster.cores_of_node(n).find(|&c| !used[c]))
-            .collect();
-
-        // Swap partners come from the 3 least-loaded nodes only — swapping
-        // two heavily-loaded processes cannot cool the hottest NIC, and the
-        // restriction cuts scorer invocations ~5-10x (each one is a PJRT
-        // execution when the AOT scorer is in use).
-        let mut node_order: Vec<usize> = (0..cluster.nodes).filter(|&n| n != hot).collect();
-        node_order.sort_by(|&a, &b| {
-            (loads.nic_tx[a] + loads.nic_rx[a])
-                .partial_cmp(&(loads.nic_tx[b] + loads.nic_rx[b]))
-                .unwrap()
-        });
-        let cold: std::collections::BTreeSet<usize> =
-            node_order.into_iter().take(3).collect();
-
-        let mut best: Option<(Move, f64, NodeLoads)> = None;
-        let consider =
-            |mv: Move, cand: &Placement, scorer: &dyn Scorer, evaluations: &mut usize|
-             -> Result<Option<(Move, f64, NodeLoads)>> {
-                let l = scorer.score(traffic, cand, cluster)?;
-                *evaluations += 1;
-                let obj = l.objective(nic_bw);
-                Ok(if obj < current - 1e-9 { Some((mv, obj, l)) } else { None })
-            };
-        for &a in &hot_procs {
-            for b in 0..placement.len() {
-                if !cold.contains(&placement.node_of(b, cluster)) {
-                    continue;
-                }
-                let mut cand = placement.clone();
-                cand.core_of.swap(a, b);
-                if let Some(hit) = consider(Move::Swap(a, b), &cand, scorer, &mut evaluations)? {
-                    if best.as_ref().map(|(_, bo, _)| hit.1 < *bo).unwrap_or(true) {
-                        best = Some(hit);
-                    }
-                }
-            }
-            for &target in &free_targets {
-                let mut cand = placement.clone();
-                cand.core_of[a] = target;
-                if let Some(hit) =
-                    consider(Move::Migrate(a, target), &cand, scorer, &mut evaluations)?
-                {
-                    if best.as_ref().map(|(_, bo, _)| hit.1 < *bo).unwrap_or(true) {
-                        best = Some(hit);
-                    }
-                }
-            }
-        }
-        match best {
-            Some((mv, obj, l)) => {
-                match mv {
-                    Move::Swap(a, b) => placement.core_of.swap(a, b),
-                    Move::Migrate(a, target) => placement.core_of[a] = target,
-                }
-                current = obj;
-                loads = l;
-                swaps += 1;
-            }
-            None => break,
-        }
+impl Refined {
+    /// Refined variant of a builtin strategy (`Blocked` → `"Blocked+r"`).
+    pub fn of_kind(kind: MapperKind) -> Self {
+        let name = match kind {
+            MapperKind::Blocked => "Blocked+r",
+            MapperKind::Cyclic => "Cyclic+r",
+            MapperKind::Drb => "DRB+r",
+            MapperKind::New => "New+r",
+            MapperKind::Random => "Random+r",
+            MapperKind::KWay => "KWay+r",
+        };
+        Refined { inner: kind.build(), name, refiner: Refiner::default() }
     }
-    // The refined placement must stay structurally valid.
-    placement.validate(w, cluster)?;
-    Ok(RefineReport { placement, before, after: current, swaps, evaluations })
+
+    /// Wrap an arbitrary mapper under a display name.
+    pub fn wrapping(inner: Box<dyn Mapper>, name: &'static str) -> Self {
+        Refined { inner, name, refiner: Refiner::default() }
+    }
+
+    /// Override the refinement stage configuration.
+    pub fn with_refiner(mut self, refiner: Refiner) -> Self {
+        self.refiner = refiner;
+        self
+    }
+}
+
+impl Mapper for Refined {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn map(&self, w: &Workload, cluster: &ClusterSpec) -> Result<Placement> {
+        let base = self.inner.map(w, cluster)?;
+        let traffic = TrafficMatrix::of_workload(w);
+        let rep = self.refiner.run(&NativeScorer, &traffic, &base, w, cluster)?;
+        Ok(rep.placement)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::MapperKind;
+    use crate::cost::CountingScorer;
     use crate::model::pattern::Pattern;
     use crate::model::workload::JobSpec;
-    use crate::runtime::native::NativeScorer;
 
-    #[test]
-    fn objective_prefers_balanced_nics() {
-        let balanced = NodeLoads {
-            nic_tx: vec![5.0, 5.0],
-            nic_rx: vec![5.0, 5.0],
-            intra: vec![0.0, 0.0],
-        };
-        let skewed = NodeLoads {
-            nic_tx: vec![10.0, 0.0],
-            nic_rx: vec![0.0, 10.0],
-            intra: vec![0.0, 0.0],
-        };
-        assert!(balanced.objective(10.0) < skewed.objective(10.0));
-    }
-
-    #[test]
-    fn objective_punishes_saturation_hard() {
-        let under = NodeLoads { nic_tx: vec![0.5], nic_rx: vec![0.0], intra: vec![] };
-        let over = NodeLoads { nic_tx: vec![1.5], nic_rx: vec![0.0], intra: vec![] };
-        // 3x the load must cost far more than 9x (the quadratic part alone).
-        assert!(over.objective(1.0) > 15.0 * under.objective(1.0));
+    fn a2a(procs: usize) -> (TrafficMatrix, Workload, ClusterSpec) {
+        let cluster = ClusterSpec::small_test_cluster();
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::AllToAll, procs, 64_000, 10.0, 100)],
+        )
+        .unwrap();
+        (TrafficMatrix::of_workload(&w), w, cluster)
     }
 
     #[test]
     fn refine_improves_bad_placement() {
         // Blocked placement of an all-to-all job is the worst case; the
         // refiner should strictly reduce the hottest-NIC objective.
-        let cluster = ClusterSpec::small_test_cluster();
-        let w = Workload::new(
-            "t",
-            vec![JobSpec::synthetic(Pattern::AllToAll, 8, 64_000, 10.0, 100)],
-        )
-        .unwrap();
-        let traffic = TrafficMatrix::of_workload(&w);
+        let (traffic, w, cluster) = a2a(8);
         let start = MapperKind::Blocked.build().map(&w, &cluster).unwrap();
         let rep = refine(&NativeScorer, &traffic, &start, &w, &cluster, 8).unwrap();
         assert!(rep.after <= rep.before);
         assert!(rep.evaluations > 0);
+        assert!(rep.delta_evals > 0, "candidates must go through the ledger");
         rep.placement.validate(&w, &cluster).unwrap();
     }
 
     #[test]
     fn refine_leaves_good_placement_alone() {
         // A fully-packed single-node job has zero NIC traffic; nothing beats it.
-        let cluster = ClusterSpec::small_test_cluster();
-        let w = Workload::new(
-            "t",
-            vec![JobSpec::synthetic(Pattern::AllToAll, 4, 64_000, 10.0, 100)],
-        )
-        .unwrap();
-        let traffic = TrafficMatrix::of_workload(&w);
+        let (traffic, w, cluster) = a2a(4);
         let start = MapperKind::Blocked.build().map(&w, &cluster).unwrap();
         let rep = refine(&NativeScorer, &traffic, &start, &w, &cluster, 4).unwrap();
-        assert_eq!(rep.swaps, 0);
+        assert_eq!(rep.moves, 0);
         assert_eq!(rep.placement, start);
+    }
+
+    #[test]
+    fn refine_runs_exactly_two_full_scorer_passes() {
+        // The whole point of the ledger: the full O(P²) scorer runs once to
+        // seed and once to verify, no matter how many candidates are tried.
+        let (traffic, w, cluster) = a2a(8);
+        let start = MapperKind::Blocked.build().map(&w, &cluster).unwrap();
+        let counting = CountingScorer::new(&NativeScorer);
+        let rep = refine(&counting, &traffic, &start, &w, &cluster, 8).unwrap();
+        assert_eq!(counting.calls(), 2);
+        assert_eq!(rep.evaluations, 2);
+        assert!(rep.delta_evals >= rep.moves);
+    }
+
+    #[test]
+    fn refined_combinator_never_hurts_the_base_mapper() {
+        let (traffic, w, cluster) = a2a(8);
+        let nic_bw = cluster.nic_bw as f64;
+        let base = MapperKind::Blocked.build().map(&w, &cluster).unwrap();
+        let refined = Refined::of_kind(MapperKind::Blocked).map(&w, &cluster).unwrap();
+        refined.validate(&w, &cluster).unwrap();
+        let obj = |p: &Placement| {
+            NativeScorer.score(&traffic, p, &cluster).unwrap().objective(nic_bw)
+        };
+        assert!(obj(&refined) <= obj(&base) + 1e-9);
+        assert_eq!(Refined::of_kind(MapperKind::Blocked).name(), "Blocked+r");
+    }
+
+    #[test]
+    fn refined_names_cover_all_kinds() {
+        for kind in MapperKind::ALL {
+            let r = Refined::of_kind(kind);
+            assert!(r.name().ends_with("+r"), "{}", r.name());
+            assert!(r.name().starts_with(kind.name()));
+        }
+    }
+
+    #[test]
+    fn refiner_with_rounds_and_custom_config() {
+        let (traffic, w, cluster) = a2a(8);
+        let start = MapperKind::Blocked.build().map(&w, &cluster).unwrap();
+        // Zero rounds: seed + verify only, nothing changes.
+        let rep = Refiner::with_rounds(0)
+            .run(&NativeScorer, &traffic, &start, &w, &cluster)
+            .unwrap();
+        assert_eq!(rep.moves, 0);
+        assert_eq!(rep.placement, start);
+        assert_eq!(rep.delta_evals, 0);
+        // A wider cold pool may only find equal-or-better moves.
+        let wide = Refiner { cold_pool: cluster.nodes, ..Refiner::default() }
+            .run(&NativeScorer, &traffic, &start, &w, &cluster)
+            .unwrap();
+        let narrow = Refiner::default()
+            .run(&NativeScorer, &traffic, &start, &w, &cluster)
+            .unwrap();
+        assert!(wide.after <= narrow.after + 1e-9);
     }
 }

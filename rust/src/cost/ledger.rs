@@ -1,0 +1,515 @@
+//! Incremental cost-model evaluation: apply/revert a placement [`Move`] in
+//! O(P) instead of re-running the O(P²) full scorer per candidate.
+//!
+//! A [`LoadLedger`] materializes per-node tx/rx/intra loads once (one full
+//! [`Scorer`] pass) and then maintains them under moves by re-attributing
+//! only the moved processes' traffic rows: moving process `p` from node `u`
+//! to node `v` touches exactly the entries `p`'s row and column feed —
+//! `nic_tx[u]`/`nic_tx[v]`, `nic_rx` of each partner's node, and the intra
+//! volumes of `u`/`v`. Nothing else changes, so one pass over `p`'s row
+//! suffices (see the delta-evaluation invariant in [`crate::cost`]).
+//!
+//! Reverts are bit-exact: every apply snapshots the O(nodes) load vectors,
+//! so `revert` restores them wholesale rather than replaying deltas.
+
+use crate::coordinator::Placement;
+use crate::cost::{NodeLoads, Scorer};
+use crate::error::{Error, Result};
+use crate::model::topology::{ClusterSpec, CoreId, NodeId};
+use crate::model::traffic::TrafficMatrix;
+use crate::model::workload::ProcId;
+
+/// A candidate placement change the ledger can apply and revert.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Move {
+    /// Exchange the cores of two distinct processes.
+    Swap(ProcId, ProcId),
+    /// Move a process to a currently-free core.
+    Migrate(ProcId, CoreId),
+}
+
+/// Undo record for one applied move: the pre-move load vectors (restored
+/// wholesale, hence bit-exact) plus the touched processes' previous cores.
+struct Frame {
+    loads: NodeLoads,
+    cores: [(ProcId, CoreId); 2],
+    touched: usize,
+}
+
+/// Incremental evaluator over one traffic matrix and cluster.
+///
+/// Owns the working placement (cores + derived nodes + free-core map) so
+/// occupancy bookkeeping can never go stale mid-refinement: a
+/// [`Move::Migrate`] whose target core is occupied is rejected at apply
+/// time, and accepted moves update the free map immediately.
+pub struct LoadLedger<'a> {
+    traffic: &'a TrafficMatrix,
+    cluster: &'a ClusterSpec,
+    nic_bw: f64,
+    core_of: Vec<CoreId>,
+    node_of: Vec<NodeId>,
+    used: Vec<bool>,
+    loads: NodeLoads,
+    undo: Vec<Frame>,
+}
+
+impl<'a> LoadLedger<'a> {
+    /// Seed a ledger from `placement` with one full `scorer` pass.
+    pub fn new(
+        scorer: &dyn Scorer,
+        traffic: &'a TrafficMatrix,
+        placement: &Placement,
+        cluster: &'a ClusterSpec,
+    ) -> Result<Self> {
+        if placement.len() != traffic.len() {
+            return Err(Error::mapping(format!(
+                "ledger: placement covers {} procs, traffic has {}",
+                placement.len(),
+                traffic.len()
+            )));
+        }
+        let mut used = vec![false; cluster.total_cores()];
+        for (p, &c) in placement.core_of.iter().enumerate() {
+            if c >= used.len() {
+                return Err(Error::mapping(format!("ledger: process {p} on bad core {c}")));
+            }
+            if used[c] {
+                return Err(Error::mapping(format!("ledger: core {c} assigned twice")));
+            }
+            used[c] = true;
+        }
+        let node_of: Vec<NodeId> =
+            placement.core_of.iter().map(|&c| cluster.node_of_core(c)).collect();
+        let loads = scorer.score(traffic, placement, cluster)?;
+        Ok(LoadLedger {
+            traffic,
+            cluster,
+            nic_bw: cluster.nic_bw as f64,
+            core_of: placement.core_of.clone(),
+            node_of,
+            used,
+            loads,
+            undo: Vec::new(),
+        })
+    }
+
+    /// Process count.
+    pub fn len(&self) -> usize {
+        self.core_of.len()
+    }
+
+    /// True when tracking zero processes.
+    pub fn is_empty(&self) -> bool {
+        self.core_of.is_empty()
+    }
+
+    /// Current per-node loads.
+    pub fn loads(&self) -> &NodeLoads {
+        &self.loads
+    }
+
+    /// Scalar objective of the current loads (see [`NodeLoads::objective`]).
+    pub fn objective(&self) -> f64 {
+        self.loads.objective(self.nic_bw)
+    }
+
+    /// Node currently hosting process `p`.
+    pub fn node_of(&self, p: ProcId) -> NodeId {
+        self.node_of[p]
+    }
+
+    /// Core currently hosting process `p`.
+    pub fn core_of(&self, p: ProcId) -> CoreId {
+        self.core_of[p]
+    }
+
+    /// True when `core` hosts no process.
+    pub fn is_free(&self, core: CoreId) -> bool {
+        !self.used[core]
+    }
+
+    /// First free core of `node`, if any.
+    pub fn free_core_on(&self, node: NodeId) -> Option<CoreId> {
+        self.cluster.cores_of_node(node).find(|&c| !self.used[c])
+    }
+
+    /// Snapshot of the current placement.
+    pub fn placement(&self) -> Placement {
+        Placement::new(self.core_of.clone())
+    }
+
+    /// Processes hosted on `node`.
+    pub fn procs_on(&self, node: NodeId) -> Vec<ProcId> {
+        (0..self.len()).filter(|&p| self.node_of[p] == node).collect()
+    }
+
+    /// Node with the highest combined NIC load (`tx + rx`); ties break to
+    /// the lowest id. NaN-safe via `total_cmp`.
+    pub fn hottest_node(&self) -> NodeId {
+        (0..self.cluster.nodes)
+            .max_by(|&a, &b| {
+                self.loads
+                    .nic_total(a)
+                    .total_cmp(&self.loads.nic_total(b))
+                    .then(b.cmp(&a))
+            })
+            .unwrap_or(0)
+    }
+
+    /// Up to `k` least-NIC-loaded nodes, excluding `exclude`, coldest
+    /// first. NaN-safe via `total_cmp`.
+    pub fn coldest_nodes(&self, k: usize, exclude: NodeId) -> Vec<NodeId> {
+        let mut order: Vec<NodeId> =
+            (0..self.cluster.nodes).filter(|&n| n != exclude).collect();
+        order.sort_by(|&a, &b| {
+            self.loads.nic_total(a).total_cmp(&self.loads.nic_total(b)).then(a.cmp(&b))
+        });
+        order.truncate(k);
+        order
+    }
+
+    /// Number of applied-but-unreverted moves on the undo stack.
+    pub fn depth(&self) -> usize {
+        self.undo.len()
+    }
+
+    /// Apply `mv`, updating loads in O(P). Errors (leaving the ledger
+    /// untouched) on out-of-range processes, identical swap endpoints, or a
+    /// migrate target that is out of range or already occupied — the latter
+    /// is what keeps free-core bookkeeping sound mid-refinement.
+    pub fn apply(&mut self, mv: Move) -> Result<()> {
+        let mut frame = Frame {
+            loads: self.loads.clone(),
+            cores: [(0, 0); 2],
+            touched: 0,
+        };
+        match mv {
+            Move::Swap(a, b) => {
+                if a >= self.len() || b >= self.len() {
+                    return Err(Error::mapping(format!("ledger: swap({a},{b}) out of range")));
+                }
+                if a == b {
+                    return Err(Error::mapping(format!("ledger: swap of process {a} with itself")));
+                }
+                let (ca, cb) = (self.core_of[a], self.core_of[b]);
+                let (na, nb) = (self.node_of[a], self.node_of[b]);
+                // Relocate one process at a time; each step is an exact
+                // delta against the ledger's current state, so the
+                // composition is exact too (a↔b traffic is re-attributed
+                // consistently at both steps).
+                self.relocate(a, nb);
+                self.relocate(b, na);
+                self.core_of[a] = cb;
+                self.core_of[b] = ca;
+                frame.cores = [(a, ca), (b, cb)];
+                frame.touched = 2;
+            }
+            Move::Migrate(p, core) => {
+                if p >= self.len() {
+                    return Err(Error::mapping(format!("ledger: migrate of bad process {p}")));
+                }
+                if core >= self.used.len() {
+                    return Err(Error::mapping(format!("ledger: migrate to bad core {core}")));
+                }
+                if self.used[core] {
+                    return Err(Error::mapping(format!(
+                        "ledger: migrate target core {core} already occupied"
+                    )));
+                }
+                let prev = self.core_of[p];
+                self.relocate(p, self.cluster.node_of_core(core));
+                self.used[prev] = false;
+                self.used[core] = true;
+                self.core_of[p] = core;
+                frame.cores = [(p, prev), (p, prev)];
+                frame.touched = 1;
+            }
+        }
+        self.undo.push(frame);
+        Ok(())
+    }
+
+    /// Revert the most recent unreverted [`Self::apply`]; the loads are
+    /// restored bit-exactly from the apply-time snapshot.
+    pub fn revert(&mut self) -> Result<()> {
+        let frame = self
+            .undo
+            .pop()
+            .ok_or_else(|| Error::mapping("ledger: nothing to revert"))?;
+        for &(p, _) in &frame.cores[..frame.touched] {
+            self.used[self.core_of[p]] = false;
+        }
+        for &(p, prev) in &frame.cores[..frame.touched] {
+            self.core_of[p] = prev;
+            self.node_of[p] = self.cluster.node_of_core(prev);
+            self.used[prev] = true;
+        }
+        self.loads = frame.loads;
+        Ok(())
+    }
+
+    /// Evaluate `mv` without keeping it: apply, read the objective, revert.
+    /// One O(P) delta evaluation — the refinement inner loop's unit of work.
+    pub fn peek(&mut self, mv: Move) -> Result<f64> {
+        self.apply(mv)?;
+        let obj = self.objective();
+        self.revert()?;
+        Ok(obj)
+    }
+
+    /// Drop undo history (applied moves become permanent). Bounds memory in
+    /// long refinement runs; [`Self::revert`] errors past this point.
+    pub fn commit(&mut self) {
+        self.undo.clear();
+    }
+
+    /// Maximum absolute deviation of the ledger's loads from a fresh full
+    /// `scorer` recompute of the current placement — the exact-equivalence
+    /// guarantee, checked by tests after every accepted move.
+    pub fn max_deviation(&self, scorer: &dyn Scorer) -> Result<f64> {
+        let full = scorer.score(self.traffic, &self.placement(), self.cluster)?;
+        let pair = |a: &[f64], b: &[f64]| {
+            a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f64, f64::max)
+        };
+        Ok(pair(&self.loads.nic_tx, &full.nic_tx)
+            .max(pair(&self.loads.nic_rx, &full.nic_rx))
+            .max(pair(&self.loads.intra, &full.intra)))
+    }
+
+    /// Re-attribute process `p`'s traffic rows from its current node to
+    /// `to`. O(P): one pass over `p`'s row and column.
+    fn relocate(&mut self, p: ProcId, to: NodeId) {
+        let from = self.node_of[p];
+        if from == to {
+            self.node_of[p] = to;
+            return;
+        }
+        let traffic = self.traffic;
+        let row = traffic.row(p);
+        for (j, &out) in row.iter().enumerate() {
+            if j == p {
+                // Self-traffic (zero for every pattern, but stay exact):
+                // always intra on whichever node hosts p.
+                if out > 0.0 {
+                    self.loads.intra[from] -= out;
+                    self.loads.intra[to] += out;
+                }
+                continue;
+            }
+            let inc = traffic.get(j, p);
+            let nj = self.node_of[j];
+            if out > 0.0 {
+                // p -> j leaves `from`'s books...
+                if nj == from {
+                    self.loads.intra[from] -= out;
+                } else {
+                    self.loads.nic_tx[from] -= out;
+                    self.loads.nic_rx[nj] -= out;
+                }
+                // ...and lands on `to`'s.
+                if nj == to {
+                    self.loads.intra[to] += out;
+                } else {
+                    self.loads.nic_tx[to] += out;
+                    self.loads.nic_rx[nj] += out;
+                }
+            }
+            if inc > 0.0 {
+                // j -> p, same bookkeeping with the direction flipped.
+                if nj == from {
+                    self.loads.intra[from] -= inc;
+                } else {
+                    self.loads.nic_tx[nj] -= inc;
+                    self.loads.nic_rx[from] -= inc;
+                }
+                if nj == to {
+                    self.loads.intra[to] += inc;
+                } else {
+                    self.loads.nic_tx[nj] += inc;
+                    self.loads.nic_rx[to] += inc;
+                }
+            }
+        }
+        self.node_of[p] = to;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::pattern::Pattern;
+    use crate::model::workload::{JobSpec, Workload};
+    use crate::runtime::NativeScorer;
+    use crate::testkit::{forall, gen};
+
+    fn setup() -> (TrafficMatrix, Workload, ClusterSpec) {
+        let cluster = ClusterSpec::small_test_cluster();
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::AllToAll, 8, 64_000, 10.0, 100)],
+        )
+        .unwrap();
+        (TrafficMatrix::of_workload(&w), w, cluster)
+    }
+
+    fn assert_loads_bits_eq(a: &NodeLoads, b: &NodeLoads, what: &str) {
+        let eq = |x: &[f64], y: &[f64]| {
+            x.len() == y.len()
+                && x.iter().zip(y).all(|(u, v)| u.to_bits() == v.to_bits())
+        };
+        assert!(
+            eq(&a.nic_tx, &b.nic_tx) && eq(&a.nic_rx, &b.nic_rx) && eq(&a.intra, &b.intra),
+            "{what}: ledger {a:?} != full {b:?}"
+        );
+    }
+
+    #[test]
+    fn seed_matches_scorer_and_validates_occupancy() {
+        let (t, _w, cluster) = setup();
+        let p = Placement::new((0..8).collect());
+        let ledger = LoadLedger::new(&NativeScorer, &t, &p, &cluster).unwrap();
+        let full = NativeScorer.score(&t, &p, &cluster).unwrap();
+        assert_loads_bits_eq(ledger.loads(), &full, "seed");
+        assert_eq!(ledger.len(), 8);
+        assert!(!ledger.is_empty());
+        assert!(!ledger.is_free(0));
+        assert!(ledger.is_free(8));
+        // Double assignment rejected at seed time.
+        let bad = Placement::new(vec![0, 0, 2, 3, 4, 5, 6, 7]);
+        assert!(LoadLedger::new(&NativeScorer, &t, &bad, &cluster).is_err());
+    }
+
+    #[test]
+    fn swap_matches_full_recompute() {
+        let (t, _w, cluster) = setup();
+        let p = Placement::new((0..8).collect()); // nodes 0 and 1
+        let mut ledger = LoadLedger::new(&NativeScorer, &t, &p, &cluster).unwrap();
+        ledger.apply(Move::Swap(0, 7)).unwrap();
+        let full = NativeScorer.score(&t, &ledger.placement(), &cluster).unwrap();
+        assert_loads_bits_eq(ledger.loads(), &full, "after swap");
+        assert_eq!(ledger.core_of(0), 7);
+        assert_eq!(ledger.core_of(7), 0);
+        assert_eq!(ledger.node_of(0), 1);
+    }
+
+    #[test]
+    fn migrate_matches_full_recompute_and_updates_occupancy() {
+        let (t, _w, cluster) = setup();
+        let p = Placement::new((0..8).collect());
+        let mut ledger = LoadLedger::new(&NativeScorer, &t, &p, &cluster).unwrap();
+        ledger.apply(Move::Migrate(0, 12)).unwrap(); // node 0 -> node 3
+        let full = NativeScorer.score(&t, &ledger.placement(), &cluster).unwrap();
+        assert_loads_bits_eq(ledger.loads(), &full, "after migrate");
+        assert!(ledger.is_free(0), "vacated core must free up");
+        assert!(!ledger.is_free(12), "target core must be claimed");
+        // A second migrate onto the now-occupied core must be rejected.
+        assert!(ledger.apply(Move::Migrate(1, 12)).is_err());
+        // ... and the rejection must leave the ledger untouched.
+        let full2 = NativeScorer.score(&t, &ledger.placement(), &cluster).unwrap();
+        assert_loads_bits_eq(ledger.loads(), &full2, "after rejected migrate");
+        assert_eq!(ledger.depth(), 1);
+    }
+
+    #[test]
+    fn revert_is_bit_exact() {
+        let (t, _w, cluster) = setup();
+        let p = Placement::new((0..8).collect());
+        let mut ledger = LoadLedger::new(&NativeScorer, &t, &p, &cluster).unwrap();
+        let baseline = ledger.loads().clone();
+        ledger.apply(Move::Swap(0, 5)).unwrap();
+        ledger.apply(Move::Migrate(3, 13)).unwrap();
+        ledger.revert().unwrap();
+        ledger.revert().unwrap();
+        assert_loads_bits_eq(ledger.loads(), &baseline, "after revert x2");
+        assert_eq!(ledger.placement(), p);
+        assert!(ledger.is_free(13));
+        assert!(ledger.revert().is_err(), "empty undo stack must error");
+    }
+
+    #[test]
+    fn peek_leaves_state_unchanged() {
+        let (t, _w, cluster) = setup();
+        let p = Placement::new((0..8).collect());
+        let mut ledger = LoadLedger::new(&NativeScorer, &t, &p, &cluster).unwrap();
+        let baseline = ledger.loads().clone();
+        let obj0 = ledger.objective();
+        let peeked = ledger.peek(Move::Swap(0, 7)).unwrap();
+        assert_loads_bits_eq(ledger.loads(), &baseline, "after peek");
+        assert_eq!(ledger.objective().to_bits(), obj0.to_bits());
+        // The peeked objective is the applied objective.
+        ledger.apply(Move::Swap(0, 7)).unwrap();
+        assert_eq!(ledger.objective().to_bits(), peeked.to_bits());
+    }
+
+    #[test]
+    fn invalid_moves_rejected() {
+        let (t, _w, cluster) = setup();
+        let p = Placement::new((0..8).collect());
+        let mut ledger = LoadLedger::new(&NativeScorer, &t, &p, &cluster).unwrap();
+        assert!(ledger.apply(Move::Swap(0, 0)).is_err());
+        assert!(ledger.apply(Move::Swap(0, 99)).is_err());
+        assert!(ledger.apply(Move::Migrate(99, 8)).is_err());
+        assert!(ledger.apply(Move::Migrate(0, 999)).is_err());
+        assert!(ledger.apply(Move::Migrate(0, 1)).is_err(), "occupied target");
+        assert_eq!(ledger.depth(), 0);
+    }
+
+    #[test]
+    fn hottest_and_coldest_are_nan_safe_orderings() {
+        let (t, _w, cluster) = setup();
+        let p = Placement::new((0..8).collect()); // all traffic between nodes 0/1
+        let ledger = LoadLedger::new(&NativeScorer, &t, &p, &cluster).unwrap();
+        let hot = ledger.hottest_node();
+        assert!(hot < 2, "hot node must be one of the two loaded nodes");
+        let cold = ledger.coldest_nodes(3, hot);
+        assert_eq!(cold.len(), 3);
+        assert!(!cold.contains(&hot));
+        // Unloaded nodes (2, 3) must rank colder than the loaded peer.
+        assert!(cold[0] == 2 || cold[0] == 3);
+    }
+
+    #[test]
+    fn ledger_tracks_random_move_sequences_bit_for_bit() {
+        // Seeded testkit workloads have integer-valued rates, so the delta
+        // path must agree with the full recompute exactly (crate::cost docs).
+        forall(0x1ED6_E400, 15, |rng| {
+            let cluster = gen::cluster(rng);
+            let w = gen::workload(rng, &cluster);
+            let t = TrafficMatrix::of_workload(&w);
+            let start = gen::placement(rng, &w, &cluster);
+            let mut ledger = LoadLedger::new(&NativeScorer, &t, &start, &cluster).unwrap();
+            let procs = w.total_procs();
+            for _ in 0..12 {
+                let a = rng.below(procs as u64) as usize;
+                let free: Vec<CoreId> =
+                    (0..cluster.total_cores()).filter(|&c| ledger.is_free(c)).collect();
+                let mv = if !free.is_empty() && rng.below(2) == 0 {
+                    Move::Migrate(a, free[rng.below(free.len() as u64) as usize])
+                } else {
+                    let b = rng.below(procs as u64) as usize;
+                    if a == b {
+                        continue;
+                    }
+                    Move::Swap(a, b)
+                };
+                ledger.apply(mv).unwrap();
+                let full =
+                    NativeScorer.score(&t, &ledger.placement(), &cluster).unwrap();
+                assert_loads_bits_eq(ledger.loads(), &full, "random sequence");
+                assert_eq!(
+                    ledger.objective().to_bits(),
+                    full.objective(cluster.nic_bw as f64).to_bits(),
+                    "objective drift"
+                );
+                if rng.below(4) == 0 {
+                    ledger.revert().unwrap();
+                    let full = NativeScorer
+                        .score(&t, &ledger.placement(), &cluster)
+                        .unwrap();
+                    assert_loads_bits_eq(ledger.loads(), &full, "after revert");
+                }
+            }
+            assert!(ledger.max_deviation(&NativeScorer).unwrap() == 0.0);
+        });
+    }
+}

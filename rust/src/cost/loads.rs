@@ -1,0 +1,143 @@
+//! Per-node contention summaries and the scalar objective the refiner
+//! descends (moved here from `coordinator::refine` so the coordinator,
+//! runtime scorers, and harness all share one definition).
+
+/// Per-node contention summary of a candidate placement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeLoads {
+    /// Inter-node egress per node, bytes/sec.
+    pub nic_tx: Vec<f64>,
+    /// Inter-node ingress per node, bytes/sec.
+    pub nic_rx: Vec<f64>,
+    /// Intra-node volume per node, bytes/sec.
+    pub intra: Vec<f64>,
+}
+
+impl NodeLoads {
+    /// All-zero loads over `nodes` nodes.
+    pub fn zeros(nodes: usize) -> Self {
+        NodeLoads {
+            nic_tx: vec![0.0; nodes],
+            nic_rx: vec![0.0; nodes],
+            intra: vec![0.0; nodes],
+        }
+    }
+
+    /// Number of nodes covered.
+    pub fn nodes(&self) -> usize {
+        self.nic_tx.len()
+    }
+
+    /// Combined NIC pressure (tx + rx) of one node — the "heat" the
+    /// refiner ranks nodes by.
+    pub fn nic_total(&self, node: usize) -> f64 {
+        self.nic_tx[node] + self.nic_rx[node]
+    }
+
+    /// Scalar objective: estimated queuing pressure over all NIC sides.
+    ///
+    /// Per NIC side with utilization `ρ = load / nic_bw` the penalty is
+    /// `ρ² + 100·max(0, ρ − 0.8)²` — quadratic below saturation (an M/M/1
+    /// waiting-time flavour) and steeply punished past 80 % utilization.
+    /// The nonlinearity is essential: under a *linear* byte objective,
+    /// packing always looks optimal (spreading converts intra-node bytes
+    /// to inter-node bytes), which contradicts the paper's whole point —
+    /// a saturated NIC queues superlinearly, so overloaded nodes must be
+    /// drained even at the cost of more total NIC traffic.
+    pub fn objective(&self, nic_bw: f64) -> f64 {
+        fn penalty(rho: f64) -> f64 {
+            let over = (rho - 0.8).max(0.0);
+            rho * rho + 100.0 * over * over
+        }
+        self.nic_tx
+            .iter()
+            .chain(self.nic_rx.iter())
+            .map(|&load| penalty(load / nic_bw))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objective_prefers_balanced_nics() {
+        let balanced = NodeLoads {
+            nic_tx: vec![5.0, 5.0],
+            nic_rx: vec![5.0, 5.0],
+            intra: vec![0.0, 0.0],
+        };
+        let skewed = NodeLoads {
+            nic_tx: vec![10.0, 0.0],
+            nic_rx: vec![0.0, 10.0],
+            intra: vec![0.0, 0.0],
+        };
+        assert!(balanced.objective(10.0) < skewed.objective(10.0));
+    }
+
+    #[test]
+    fn objective_punishes_saturation_hard() {
+        let under = NodeLoads { nic_tx: vec![0.5], nic_rx: vec![0.0], intra: vec![] };
+        let over = NodeLoads { nic_tx: vec![1.5], nic_rx: vec![0.0], intra: vec![] };
+        // 3x the load must cost far more than 9x (the quadratic part alone).
+        assert!(over.objective(1.0) > 15.0 * under.objective(1.0));
+    }
+
+    #[test]
+    fn objective_monotone_in_utilization() {
+        // Strictly increasing in ρ over the whole range, saturated or not.
+        let mut prev = -1.0;
+        for step in 0..40 {
+            let rho = step as f64 * 0.05; // 0.0 .. 2.0
+            let l = NodeLoads { nic_tx: vec![rho], nic_rx: vec![0.0], intra: vec![] };
+            let obj = l.objective(1.0);
+            assert!(obj > prev, "objective not monotone at rho={rho}: {obj} <= {prev}");
+            prev = obj;
+        }
+    }
+
+    #[test]
+    fn objective_superlinear_past_saturation_knee() {
+        // Below the 0.8 knee the penalty is exactly quadratic; past it the
+        // growth must outrun the quadratic alone.
+        let at = |rho: f64| {
+            NodeLoads { nic_tx: vec![rho], nic_rx: vec![0.0], intra: vec![] }.objective(1.0)
+        };
+        // Quadratic regime: doubling 0.2 -> 0.4 multiplies by exactly 4.
+        assert!((at(0.4) / at(0.2) - 4.0).abs() < 1e-12);
+        // Saturated regime: doubling 0.8 -> 1.6 must beat the 4x of the
+        // quadratic part by a wide margin (the 100·(ρ−0.8)² term kicks in).
+        assert!(at(1.6) / at(0.8) > 10.0);
+    }
+
+    #[test]
+    fn spreading_beats_packing_on_overloaded_node() {
+        // Packing pushes one NIC to ρ=2.0; spreading the same job over four
+        // nodes costs *more total NIC bytes* (2.4 vs 2.0) yet must win,
+        // because the saturated side queues superlinearly.
+        let packed = NodeLoads {
+            nic_tx: vec![2.0, 0.0, 0.0, 0.0],
+            nic_rx: vec![0.0, 2.0, 0.0, 0.0],
+            intra: vec![0.0; 4],
+        };
+        let spread = NodeLoads {
+            nic_tx: vec![0.6, 0.6, 0.6, 0.6],
+            nic_rx: vec![0.6, 0.6, 0.6, 0.6],
+            intra: vec![0.0; 4],
+        };
+        let tx_sum = |l: &NodeLoads| l.nic_tx.iter().sum::<f64>();
+        assert!(tx_sum(&spread) > tx_sum(&packed), "crafted case must move more bytes");
+        assert!(spread.objective(1.0) < packed.objective(1.0));
+    }
+
+    #[test]
+    fn zeros_and_accessors() {
+        let l = NodeLoads::zeros(3);
+        assert_eq!(l.nodes(), 3);
+        assert_eq!(l.objective(1.0), 0.0);
+        assert_eq!(l.nic_total(0), 0.0);
+        let l = NodeLoads { nic_tx: vec![1.0, 0.0], nic_rx: vec![2.0, 0.0], intra: vec![0.0; 2] };
+        assert_eq!(l.nic_total(0), 3.0);
+    }
+}

@@ -1,0 +1,39 @@
+//! The shared cost-model layer: per-node load summaries, the scoring
+//! abstraction, and the incremental [`LoadLedger`] evaluator.
+//!
+//! Every consumer of the placement cost model meets here:
+//!
+//! * [`NodeLoads`] — per-node NIC tx/rx + intra-node volume, plus the
+//!   saturation-aware scalar [`NodeLoads::objective`] the refiner descends.
+//! * [`Scorer`] — anything that can produce [`NodeLoads`] for a placement:
+//!   [`crate::runtime::NativeScorer`] (pure Rust, always available) and
+//!   `PjrtScorer` (the AOT JAX/Pallas artifact, behind the `pjrt` feature).
+//! * [`LoadLedger`] — the delta evaluator behind fast refinement. One full
+//!   scorer pass materializes the loads; afterwards a candidate
+//!   [`Move`] (swap or migrate) is applied/reverted in O(P) by
+//!   re-attributing only the moved processes' traffic rows, instead of the
+//!   O(P²) full recompute. This is the same insight that makes
+//!   mapping-quality search tractable on large topologies (arXiv:2005.10413)
+//!   and that the multi-core contention model of arXiv:0810.2150 motivates:
+//!   only the traffic rows of moved processes change per move.
+//!
+//! ## Delta-evaluation invariant
+//!
+//! After any sequence of [`LoadLedger::apply`] / [`LoadLedger::revert`]
+//! calls, the ledger's loads equal a full scorer recompute of its current
+//! placement, exactly up to floating-point associativity — and **bit for
+//! bit** whenever all traffic rates are integer-valued doubles below 2⁵³
+//! (true for every builtin and `testkit`-generated workload, where rates
+//! are integral messages/sec times integral byte counts). `revert` is
+//! bit-exact unconditionally: each apply snapshots the O(nodes) load
+//! vectors it touches. The invariant is enforced by the property tests in
+//! `tests/property_invariants.rs` and the acceptance test in
+//! `tests/refine_equivalence.rs`.
+
+pub mod ledger;
+pub mod loads;
+pub mod scorer;
+
+pub use ledger::{LoadLedger, Move};
+pub use loads::NodeLoads;
+pub use scorer::{CountingScorer, Scorer};

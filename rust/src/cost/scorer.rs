@@ -1,0 +1,90 @@
+//! The scoring abstraction (moved here from `coordinator::refine`): anything
+//! that can evaluate a placement's per-node loads implements [`Scorer`].
+
+use crate::coordinator::Placement;
+use crate::cost::NodeLoads;
+use crate::error::Result;
+use crate::model::topology::ClusterSpec;
+use crate::model::traffic::TrafficMatrix;
+
+/// Anything that can score a placement against a traffic matrix.
+///
+/// Implementations: [`crate::runtime::NativeScorer`] (pure Rust) and
+/// `PjrtScorer` (the AOT JAX/Pallas artifact on the PJRT CPU client, behind
+/// the `pjrt` feature); integration tests cross-check them, which validates
+/// the whole AOT path end-to-end.
+pub trait Scorer {
+    /// Compute per-node loads of `placement` under `traffic`.
+    ///
+    /// This is the *full* O(P²) recompute — every traffic row is walked.
+    /// Hot loops should evaluate candidates through
+    /// [`crate::cost::LoadLedger`] instead and call this only to seed or
+    /// re-verify the ledger.
+    fn score(
+        &self,
+        traffic: &TrafficMatrix,
+        placement: &Placement,
+        cluster: &ClusterSpec,
+    ) -> Result<NodeLoads>;
+}
+
+/// Wraps a scorer and counts full-recompute invocations.
+///
+/// Tests and benches use it to prove the ledger spares the O(P²) path:
+/// a refinement run that evaluates thousands of candidate moves must still
+/// show only a handful of [`Scorer::score`] calls here.
+pub struct CountingScorer<'a> {
+    inner: &'a dyn Scorer,
+    calls: std::cell::Cell<usize>,
+}
+
+impl<'a> CountingScorer<'a> {
+    /// Wrap `inner`, starting the counter at zero.
+    pub fn new(inner: &'a dyn Scorer) -> Self {
+        CountingScorer { inner, calls: std::cell::Cell::new(0) }
+    }
+
+    /// Full scorer passes observed so far.
+    pub fn calls(&self) -> usize {
+        self.calls.get()
+    }
+}
+
+impl Scorer for CountingScorer<'_> {
+    fn score(
+        &self,
+        traffic: &TrafficMatrix,
+        placement: &Placement,
+        cluster: &ClusterSpec,
+    ) -> Result<NodeLoads> {
+        self.calls.set(self.calls.get() + 1);
+        self.inner.score(traffic, placement, cluster)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::pattern::Pattern;
+    use crate::model::workload::{JobSpec, Workload};
+    use crate::runtime::NativeScorer;
+
+    #[test]
+    fn counting_scorer_counts_and_delegates() {
+        let cluster = ClusterSpec::small_test_cluster();
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::AllToAll, 4, 1000, 2.0, 5)],
+        )
+        .unwrap();
+        let t = TrafficMatrix::of_workload(&w);
+        let p = Placement::new(vec![0, 4, 8, 12]);
+        let counting = CountingScorer::new(&NativeScorer);
+        assert_eq!(counting.calls(), 0);
+        let a = counting.score(&t, &p, &cluster).unwrap();
+        let b = counting.score(&t, &p, &cluster).unwrap();
+        assert_eq!(counting.calls(), 2);
+        assert_eq!(a, b);
+        assert_eq!(a, NativeScorer.score(&t, &p, &cluster).unwrap());
+    }
+}

@@ -9,11 +9,12 @@
 //! wall-clock time changes. `nicmap bench --json` exposes the sweep from
 //! the CLI and records it as `BENCH_harness.json` ([`sweep_to_json`]).
 
-use crate::coordinator::MapperKind;
+use crate::coordinator::{MapperKind, MapperSpec};
 use crate::error::Result;
 use crate::model::npb;
 use crate::model::topology::ClusterSpec;
 use crate::model::workload::Workload;
+use crate::report::csv::Csv;
 use crate::report::figure::{bar_chart, gain_pct};
 use crate::report::json;
 use crate::report::table::Table;
@@ -53,11 +54,12 @@ impl Metric {
 /// One (workload × mapper) cell of a figure.
 #[derive(Debug, Clone)]
 pub struct Cell {
-    /// Mapper used.
-    pub mapper: MapperKind,
+    /// Mapper used (base strategy, optionally with the `+r` refinement
+    /// stage — see [`MapperSpec`]).
+    pub mapper: MapperSpec,
     /// Full simulation report (all three metrics extractable).
     pub report: SimReport,
-    /// Mapper wall time, seconds.
+    /// Mapper wall time, seconds (includes refinement for `+r` variants).
     pub map_secs: f64,
 }
 
@@ -66,26 +68,32 @@ pub struct Cell {
 pub struct WorkloadRun {
     /// Workload name.
     pub workload: String,
-    /// One cell per mapper, in [`MapperKind::PAPER`] order unless overridden.
+    /// One cell per mapper, in [`MapperSpec::PAPER`] order unless overridden.
     pub cells: Vec<Cell>,
 }
 
 impl WorkloadRun {
-    /// Value of `metric` for `mapper`.
-    pub fn value(&self, mapper: MapperKind, metric: Metric) -> Option<f64> {
+    /// Value of `metric` for `mapper` (a [`MapperSpec`] or bare
+    /// [`MapperKind`]).
+    pub fn value(&self, mapper: impl Into<MapperSpec>, metric: Metric) -> Option<f64> {
+        let mapper = mapper.into();
         self.cells.iter().find(|c| c.mapper == mapper).map(|c| metric.of(&c.report))
     }
 
-    /// Paper-style gain of `New` vs the best other mapper on `metric`.
+    /// Paper-style gain of (plain) `New` vs the best other mapper on
+    /// `metric`. Refined columns count as "other" mappers, so sweeping
+    /// `+r` variants can push this negative — that is the point of the
+    /// comparison.
     pub fn new_gain_pct(&self, metric: Metric) -> f64 {
-        let new = match self.value(MapperKind::New, metric) {
+        let new_spec = MapperSpec::plain(MapperKind::New);
+        let new = match self.value(new_spec, metric) {
             Some(v) => v,
             None => return 0.0,
         };
         let best_other = self
             .cells
             .iter()
-            .filter(|c| c.mapper != MapperKind::New)
+            .filter(|c| c.mapper != new_spec)
             .map(|c| metric.of(&c.report))
             .fold(f64::INFINITY, f64::min);
         if best_other.is_finite() {
@@ -100,7 +108,7 @@ impl WorkloadRun {
         let entries: Vec<(String, f64)> = self
             .cells
             .iter()
-            .map(|c| (c.mapper.letter().to_string(), metric.of(&c.report)))
+            .map(|c| (c.mapper.letter(), metric.of(&c.report)))
             .collect();
         bar_chart(&format!("{} — {}", self.workload, metric.label()), &entries, 40)
     }
@@ -111,21 +119,21 @@ impl WorkloadRun {
 pub fn run_cell(
     w: &Workload,
     cluster: &ClusterSpec,
-    kind: MapperKind,
+    mapper: MapperSpec,
     cfg: &SimConfig,
 ) -> Result<Cell> {
     let t0 = std::time::Instant::now();
-    let placement = kind.build().map(w, cluster)?;
+    let placement = mapper.build().map(w, cluster)?;
     let map_secs = t0.elapsed().as_secs_f64();
     let report = simulate(w, &placement, cluster, cfg)?;
-    Ok(Cell { mapper: kind, report, map_secs })
+    Ok(Cell { mapper, report, map_secs })
 }
 
 /// Simulate one workload under `mappers` on `cluster` (serial).
 pub fn run_workload(
     w: &Workload,
     cluster: &ClusterSpec,
-    mappers: &[MapperKind],
+    mappers: &[MapperSpec],
     cfg: &SimConfig,
 ) -> Result<WorkloadRun> {
     let mut cells = Vec::with_capacity(mappers.len());
@@ -143,15 +151,15 @@ pub fn run_workload(
 pub fn run_sweep(
     workloads: &[Workload],
     cluster: &ClusterSpec,
-    mappers: &[MapperKind],
+    mappers: &[MapperSpec],
     cfg: &SimConfig,
     threads: usize,
 ) -> Result<Vec<WorkloadRun>> {
-    let cells: Vec<(usize, MapperKind)> = (0..workloads.len())
+    let cells: Vec<(usize, MapperSpec)> = (0..workloads.len())
         .flat_map(|wi| mappers.iter().map(move |&m| (wi, m)))
         .collect();
-    let results = crate::par::par_map(cells, threads, |(wi, kind)| {
-        run_cell(&workloads[wi], cluster, kind, cfg)
+    let results = crate::par::par_map(cells, threads, |(wi, mapper)| {
+        run_cell(&workloads[wi], cluster, mapper, cfg)
     });
     let mut runs: Vec<WorkloadRun> = workloads
         .iter()
@@ -209,7 +217,7 @@ pub fn sweep_to_json(
             cells.push(
                 json::Obj::new()
                     .str("workload", &run.workload)
-                    .str("mapper", cell.mapper.name())
+                    .str("mapper", &cell.mapper.name())
                     .num("waiting_ms", cell.report.waiting_ms())
                     .num("workload_finish_s", cell.report.workload_finish_s())
                     .num("total_finish_s", cell.report.total_finish_s())
@@ -240,7 +248,7 @@ pub fn sweep_to_json(
 pub fn run_synthetic(cluster: &ClusterSpec, cfg: &SimConfig) -> Result<Vec<WorkloadRun>> {
     Workload::all_synthetic()
         .iter()
-        .map(|w| run_workload(w, cluster, &MapperKind::PAPER, cfg))
+        .map(|w| run_workload(w, cluster, &MapperSpec::PAPER, cfg))
         .collect()
 }
 
@@ -253,11 +261,13 @@ pub fn run_real(cluster: &ClusterSpec, cfg: &SimConfig) -> Result<Vec<WorkloadRu
         npb::real_workload_4(),
     ]
     .iter()
-    .map(|w| run_workload(w, cluster, &MapperKind::PAPER, cfg))
+    .map(|w| run_workload(w, cluster, &MapperSpec::PAPER, cfg))
     .collect()
 }
 
 /// Render a set of runs as a figure: bar groups + a summary table + gains.
+/// Columns follow the swept mappers (so `+r` variants show up as their own
+/// `B+r`/`N+r`/... columns), taken from the first run's cell order.
 pub fn render_figure(title: &str, runs: &[WorkloadRun], metric: Metric) -> String {
     let mut out = String::new();
     out.push_str(&format!("=== {title} — {} ===\n\n", metric.label()));
@@ -265,27 +275,58 @@ pub fn render_figure(title: &str, runs: &[WorkloadRun], metric: Metric) -> Strin
         out.push_str(&run.bar_group(metric));
         out.push('\n');
     }
-    let mut table = Table::new(vec![
-        "workload".to_string(),
-        "B".into(),
-        "C".into(),
-        "D".into(),
-        "N".into(),
-        "gain%".into(),
-    ]);
+    let columns: Vec<MapperSpec> = match runs.first() {
+        Some(run) => run.cells.iter().map(|c| c.mapper).collect(),
+        None => return out,
+    };
+    let mut header: Vec<String> = vec!["workload".into()];
+    header.extend(columns.iter().map(|m| m.letter()));
+    header.push("gain%".into());
+    let mut table = Table::new(header);
     for run in runs {
-        let v = |k| run.value(k, metric).map_or("-".into(), |x| format!("{x:.1}"));
-        table.row(vec![
-            run.workload.clone(),
-            v(MapperKind::Blocked),
-            v(MapperKind::Cyclic),
-            v(MapperKind::Drb),
-            v(MapperKind::New),
-            format!("{:+.1}", run.new_gain_pct(metric)),
-        ]);
+        let mut row = vec![run.workload.clone()];
+        row.extend(columns.iter().map(|&m| {
+            run.value(m, metric).map_or("-".into(), |x| format!("{x:.1}"))
+        }));
+        row.push(format!("{:+.1}", run.new_gain_pct(metric)));
+        table.row(row);
     }
     out.push_str(&table.render());
     out
+}
+
+/// Render a finished sweep as a CSV document (one row per cell, same
+/// fields as [`sweep_to_json`]'s cell records) — the spreadsheet-friendly
+/// sibling of `BENCH_harness.json`, written by `nicmap bench --csv`.
+pub fn sweep_to_csv(runs: &[WorkloadRun]) -> Csv {
+    let mut csv = Csv::new();
+    csv.row(&[
+        "workload",
+        "mapper",
+        "waiting_ms",
+        "workload_finish_s",
+        "total_finish_s",
+        "map_secs",
+        "sim_wall_secs",
+        "events",
+        "messages",
+    ]);
+    for run in runs {
+        for cell in &run.cells {
+            csv.row(&[
+                run.workload.clone(),
+                cell.mapper.name(),
+                format!("{}", cell.report.waiting_ms()),
+                format!("{}", cell.report.workload_finish_s()),
+                format!("{}", cell.report.total_finish_s()),
+                format!("{}", cell.map_secs),
+                format!("{}", cell.report.wall_secs),
+                format!("{}", cell.report.events),
+                format!("{}", cell.report.delivered),
+            ]);
+        }
+    }
+    csv
 }
 
 #[cfg(test)]
@@ -302,7 +343,7 @@ mod tests {
             vec![JobSpec::synthetic(Pattern::AllToAll, 8, 64 * KB, 50.0, 5)],
         )
         .unwrap();
-        run_workload(&w, &cluster, &MapperKind::PAPER, &SimConfig::default()).unwrap()
+        run_workload(&w, &cluster, &MapperSpec::PAPER, &SimConfig::default()).unwrap()
     }
 
     #[test]
@@ -352,12 +393,12 @@ mod tests {
             .unwrap(),
         ];
         let cfg = SimConfig::default();
-        let serial = run_sweep(&workloads, &cluster, &MapperKind::PAPER, &cfg, 1).unwrap();
-        let parallel = run_sweep(&workloads, &cluster, &MapperKind::PAPER, &cfg, 4).unwrap();
+        let serial = run_sweep(&workloads, &cluster, &MapperSpec::PAPER, &cfg, 1).unwrap();
+        let parallel = run_sweep(&workloads, &cluster, &MapperSpec::PAPER, &cfg, 4).unwrap();
         assert!(sweeps_identical(&serial, &parallel));
         // And the serial sweep matches the original per-workload driver.
         for (run, w) in serial.iter().zip(&workloads) {
-            let direct = run_workload(w, &cluster, &MapperKind::PAPER, &cfg).unwrap();
+            let direct = run_workload(w, &cluster, &MapperSpec::PAPER, &cfg).unwrap();
             for (a, b) in run.cells.iter().zip(&direct.cells) {
                 assert_eq!(a.mapper, b.mapper);
                 assert!(a.report.metrics_eq(&b.report));
@@ -391,6 +432,57 @@ mod tests {
         let doc = sweep_to_json(&[run], 1, 1.0, None);
         assert!(doc.contains("\"serial_wall_secs\":null"));
         assert!(!doc.contains("speedup"));
+    }
+
+    #[test]
+    fn refined_variants_sweep_as_their_own_columns() {
+        let cluster = ClusterSpec::small_test_cluster();
+        let w = Workload::new(
+            "tiny",
+            vec![JobSpec::synthetic(Pattern::AllToAll, 8, 64 * KB, 50.0, 5)],
+        )
+        .unwrap();
+        let mappers = [
+            MapperSpec::plain(MapperKind::Blocked),
+            MapperSpec::plus_r(MapperKind::Blocked),
+            MapperSpec::plain(MapperKind::New),
+            MapperSpec::plus_r(MapperKind::New),
+        ];
+        let run = run_workload(&w, &cluster, &mappers, &SimConfig::default()).unwrap();
+        assert_eq!(run.cells.len(), 4);
+        // Plain and refined cells are distinct columns with their own values.
+        let b = run.value(MapperKind::Blocked, Metric::WaitingMs).unwrap();
+        let br = run
+            .value(MapperSpec::plus_r(MapperKind::Blocked), Metric::WaitingMs)
+            .unwrap();
+        // Cost-model objective is a proxy for simulated waiting; tiny slack.
+        assert!(br <= b * 1.05, "refined Blocked ({br}) waits longer than Blocked ({b})");
+        // Rendering shows the +r letters.
+        let fig = render_figure("Figure R", &[run.clone()], Metric::WaitingMs);
+        assert!(fig.contains("B+r"), "{fig}");
+        assert!(fig.contains("N+r"), "{fig}");
+        // And the +r sweep stays deterministic across worker threads.
+        let serial =
+            run_sweep(&[w.clone()], &cluster, &mappers, &SimConfig::default(), 1).unwrap();
+        let parallel =
+            run_sweep(&[w], &cluster, &mappers, &SimConfig::default(), 4).unwrap();
+        assert!(sweeps_identical(&serial, &parallel));
+    }
+
+    #[test]
+    fn sweep_csv_has_header_and_mapper_names() {
+        let run = tiny_run();
+        let csv = sweep_to_csv(&[run]);
+        let text = csv.as_str();
+        let mut lines = text.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "workload,mapper,waiting_ms,workload_finish_s,total_finish_s,map_secs,\
+             sim_wall_secs,events,messages"
+        );
+        assert_eq!(text.lines().count(), 1 + 4, "header + one row per cell");
+        assert!(text.contains("tiny,Blocked,"));
+        assert!(text.contains("tiny,New,"));
     }
 
     #[test]

@@ -6,10 +6,12 @@
 //!
 //! * **Layer 3 (Rust, this crate)** — the coordination contribution: the
 //!   paper's threshold-based mapping strategy ([`coordinator`]), the
-//!   baselines it is compared against (Blocked, Cyclic, DRB, K-way), a
-//!   deterministic discrete-event simulator of the 16-node InfiniBand
-//!   cluster the paper evaluates on ([`sim`]), and the workload models
-//!   ([`model`]) including an NPB communication characterization.
+//!   baselines it is compared against (Blocked, Cyclic, DRB, K-way), the
+//!   cost layer with its incremental refinement ledger ([`cost`]) behind
+//!   the `+r` mapper variants, a deterministic discrete-event simulator of
+//!   the 16-node InfiniBand cluster the paper evaluates on ([`sim`]), and
+//!   the workload models ([`model`]) including an NPB communication
+//!   characterization.
 //! * **Layer 2 (JAX, `python/compile/model.py`)** — the placement cost
 //!   model `M = AᵀTA` + NIC/demand/adjacency reductions, AOT-lowered once
 //!   to HLO text.
@@ -41,6 +43,7 @@
 
 pub mod cli;
 pub mod coordinator;
+pub mod cost;
 pub mod error;
 pub mod graph;
 pub mod harness;

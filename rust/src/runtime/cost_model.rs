@@ -7,8 +7,8 @@
 //! embedded in a (P_pad, N_pad) artifact yields exact results on the live
 //! prefix.
 
-use crate::coordinator::refine::{NodeLoads, Scorer};
 use crate::coordinator::Placement;
+use crate::cost::{NodeLoads, Scorer};
 use crate::error::{Error, Result};
 use crate::model::topology::ClusterSpec;
 use crate::model::traffic::TrafficMatrix;

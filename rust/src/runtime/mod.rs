@@ -1,5 +1,5 @@
 //! Runtime layer: loads the AOT-compiled JAX/Pallas cost model (HLO text →
-//! PJRT CPU executable) and exposes it as a [`crate::coordinator::refine::Scorer`].
+//! PJRT CPU executable) and exposes it as a [`crate::cost::Scorer`].
 //!
 //! * `client` (`pjrt` feature) — artifact discovery (manifest), HLO-text
 //!   loading, PJRT compile + execute. One compile per artifact per process,

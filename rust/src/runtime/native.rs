@@ -5,8 +5,8 @@
 //! when `artifacts/` is missing and as the oracle integration tests compare
 //! the PJRT path against.
 
-use crate::coordinator::refine::{NodeLoads, Scorer};
 use crate::coordinator::Placement;
+use crate::cost::{NodeLoads, Scorer};
 use crate::error::Result;
 use crate::model::topology::ClusterSpec;
 use crate::model::traffic::TrafficMatrix;

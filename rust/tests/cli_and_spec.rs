@@ -65,6 +65,16 @@ fn refine_native_via_cli() {
         "4",
     ]))
     .unwrap();
+    // Refining an already-refined variant is redundant and rejected.
+    assert!(main_with_args(args(&[
+        "refine",
+        "--spec",
+        path.to_str().unwrap(),
+        "--mapper",
+        "B+r",
+        "--native",
+    ]))
+    .is_err());
 }
 
 #[test]
@@ -93,6 +103,58 @@ fn bench_via_cli_small_sweep() {
         "2",
         "--threads",
         "3",
+    ]))
+    .unwrap();
+}
+
+#[test]
+fn refined_mappers_via_cli_and_csv_json_outputs() {
+    // `+r` variants flow through map, simulate, and the bench sweep, and
+    // land in both machine-readable outputs under their own names.
+    main_with_args(args(&["map", "--workload", "real4", "--mapper", "B+r"])).unwrap();
+    main_with_args(args(&["simulate", "--workload", "real4", "--mapper", "N,N+r"])).unwrap();
+
+    let dir = std::env::temp_dir().join("nicmap_cli_refined_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let json_path = dir.join("BENCH_harness.json");
+    let csv_path = dir.join("BENCH_harness.csv");
+    main_with_args(args(&[
+        "bench",
+        "--workloads",
+        "real4",
+        "--mappers",
+        "B,B+r",
+        "--rounds",
+        "2",
+        "--threads",
+        "2",
+        "--json",
+        json_path.to_str().unwrap(),
+        "--csv",
+        csv_path.to_str().unwrap(),
+    ]))
+    .unwrap();
+    let json = std::fs::read_to_string(&json_path).unwrap();
+    assert!(json.contains("\"mapper\":\"Blocked\""));
+    assert!(json.contains("\"mapper\":\"Blocked+r\""));
+    let csv = std::fs::read_to_string(&csv_path).unwrap();
+    assert!(csv.starts_with("workload,mapper,"));
+    assert!(csv.contains(",Blocked+r,"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn all_plus_r_sweep_accepted() {
+    main_with_args(args(&[
+        "bench",
+        "--workloads",
+        "real4",
+        "--mappers",
+        "all+r",
+        "--rounds",
+        "1",
+        "--threads",
+        "4",
     ]))
     .unwrap();
 }

@@ -4,7 +4,7 @@
 //! independent), and the paper's headline ordering must hold on the
 //! heavy-communication synthetic workload.
 
-use nicmap::coordinator::MapperKind;
+use nicmap::coordinator::{MapperKind, MapperSpec};
 use nicmap::harness::{cap_rounds, run_sweep, run_workload, sweeps_identical, Metric};
 use nicmap::model::topology::ClusterSpec;
 use nicmap::model::workload::Workload;
@@ -24,10 +24,10 @@ fn parallel_sweep_golden_vs_serial_synt1_to_synt3() {
     let workloads: Vec<Workload> =
         ["synt1", "synt2", "synt3"].iter().map(|n| scaled(n, 10)).collect();
 
-    let serial = run_sweep(&workloads, &cluster, &MapperKind::PAPER, &cfg, 1).unwrap();
+    let serial = run_sweep(&workloads, &cluster, &MapperSpec::PAPER, &cfg, 1).unwrap();
     for threads in [2, 4, 8] {
         let parallel =
-            run_sweep(&workloads, &cluster, &MapperKind::PAPER, &cfg, threads).unwrap();
+            run_sweep(&workloads, &cluster, &MapperSpec::PAPER, &cfg, threads).unwrap();
         assert!(
             sweeps_identical(&serial, &parallel),
             "parallel sweep with {threads} threads diverged from serial"
@@ -37,7 +37,7 @@ fn parallel_sweep_golden_vs_serial_synt1_to_synt3() {
     // Cross-check against the original per-workload serial driver, metric by
     // metric (golden equality, not tolerance).
     for (run, w) in serial.iter().zip(&workloads) {
-        let direct = run_workload(w, &cluster, &MapperKind::PAPER, &cfg).unwrap();
+        let direct = run_workload(w, &cluster, &MapperSpec::PAPER, &cfg).unwrap();
         assert_eq!(run.workload, direct.workload);
         for (a, b) in run.cells.iter().zip(&direct.cells) {
             assert_eq!(a.mapper, b.mapper);
@@ -59,7 +59,7 @@ fn new_beats_blocked_on_heavy_synthetic() {
     let cluster = ClusterSpec::paper_cluster();
     let cfg = SimConfig::default();
     let workloads = vec![scaled("synt4", 60)];
-    let runs = run_sweep(&workloads, &cluster, &MapperKind::PAPER, &cfg, 4).unwrap();
+    let runs = run_sweep(&workloads, &cluster, &MapperSpec::PAPER, &cfg, 4).unwrap();
     let run = &runs[0];
     let blocked = run.value(MapperKind::Blocked, Metric::WaitingMs).unwrap();
     let new = run.value(MapperKind::New, Metric::WaitingMs).unwrap();
@@ -70,5 +70,34 @@ fn new_beats_blocked_on_heavy_synthetic() {
     assert!(
         run.new_gain_pct(Metric::WaitingMs) > 0.0,
         "New must beat the best other mapper on synt4"
+    );
+}
+
+#[test]
+fn refined_sweep_deterministic_and_never_hurts_blocked() {
+    // The +r columns ride the same parallel harness: bit-identical across
+    // thread counts, and refined Blocked must not wait longer than Blocked
+    // on a heavy-communication workload (refinement drains hot NICs).
+    let cluster = ClusterSpec::paper_cluster();
+    let cfg = SimConfig::default();
+    let workloads = vec![scaled("synt4", 20)];
+    let mappers = [
+        MapperSpec::plain(MapperKind::Blocked),
+        MapperSpec::plus_r(MapperKind::Blocked),
+        MapperSpec::plain(MapperKind::New),
+        MapperSpec::plus_r(MapperKind::New),
+    ];
+    let serial = run_sweep(&workloads, &cluster, &mappers, &cfg, 1).unwrap();
+    let parallel = run_sweep(&workloads, &cluster, &mappers, &cfg, 4).unwrap();
+    assert!(sweeps_identical(&serial, &parallel), "+r sweep must stay deterministic");
+    let run = &serial[0];
+    let blocked = run.value(MapperKind::Blocked, Metric::WaitingMs).unwrap();
+    let blocked_r =
+        run.value(MapperSpec::plus_r(MapperKind::Blocked), Metric::WaitingMs).unwrap();
+    // The refiner descends the cost-model objective, which is a proxy for
+    // (not identical to) simulated waiting — allow a sliver of slack.
+    assert!(
+        blocked_r <= blocked * 1.05,
+        "B+r ({blocked_r:.0} ms) regressed vs Blocked ({blocked:.0} ms)"
     );
 }

@@ -2,8 +2,9 @@
 //! that must hold for every mapper on every workload/cluster combination,
 //! and for the simulator on arbitrary valid inputs.
 
-use nicmap::coordinator::MapperKind;
+use nicmap::coordinator::{MapperKind, MapperSpec};
 use nicmap::model::traffic::TrafficMatrix;
+use nicmap::runtime::NativeScorer;
 use nicmap::sim::{simulate, SimConfig};
 use nicmap::testkit::{forall, gen};
 
@@ -110,6 +111,37 @@ fn waiting_time_never_negative_and_scales_with_load() {
         let base_wait = base.wait_nic_ns + base.wait_mem_ns + base.wait_cache_ns;
         let hot_wait = loaded.wait_nic_ns + loaded.wait_mem_ns + loaded.wait_cache_ns;
         assert!(hot_wait >= base_wait, "8x rate lowered waiting: {hot_wait} < {base_wait}");
+    });
+}
+
+// NOTE: the random-move bitwise-equivalence property test for `LoadLedger`
+// lives next to the implementation (rust/src/cost/ledger.rs,
+// `ledger_tracks_random_move_sequences_bit_for_bit`) — not duplicated here.
+
+#[test]
+fn refined_mappers_yield_valid_placements_and_never_worse_objectives() {
+    // The +r combinator must keep every structural invariant of its base
+    // mapper and can only improve (or match) the cost-model objective.
+    use nicmap::cost::Scorer;
+    forall(0x18_0000, 10, |rng| {
+        let cluster = gen::cluster(rng);
+        let w = gen::workload(rng, &cluster);
+        let t = TrafficMatrix::of_workload(&w);
+        let nic_bw = cluster.nic_bw as f64;
+        for base in [MapperKind::Blocked, MapperKind::Cyclic, MapperKind::New] {
+            let plain = base.build().map(&w, &cluster).unwrap();
+            let refined = MapperSpec::plus_r(base).build().map(&w, &cluster).unwrap();
+            refined
+                .validate(&w, &cluster)
+                .unwrap_or_else(|e| panic!("{base}+r invalid: {e}"));
+            let obj = |p: &nicmap::coordinator::Placement| {
+                NativeScorer.score(&t, p, &cluster).unwrap().objective(nic_bw)
+            };
+            assert!(
+                obj(&refined) <= obj(&plain) + 1e-9,
+                "{base}+r worsened the objective"
+            );
+        }
     });
 }
 
