@@ -13,6 +13,7 @@
 
 use nicmap::coordinator::new_strategy::NewStrategy;
 use nicmap::coordinator::Mapper;
+use nicmap::ctx::MapCtx;
 use nicmap::model::topology::ClusterSpec;
 use nicmap::model::workload::Workload;
 use nicmap::report::csv::Csv;
@@ -48,10 +49,12 @@ fn main() {
 
     for wname in ["synt3", "synt4"] {
         let w = Workload::builtin(wname).unwrap();
+        // One shared ctx serves every ablation variant of the workload.
+        let ctx = MapCtx::build(&w);
         println!("=== {wname} ===");
         let mut rows: Vec<(String, f64)> = Vec::new();
         for (label, strat) in variants() {
-            let p = strat.map(&w, &cluster).unwrap();
+            let p = strat.map(&ctx, &cluster).unwrap();
             let r = simulate(&w, &p, &cluster, &cfg).unwrap();
             println!(
                 "  {:<14} waiting {:>14.3e} ms   finish {:>8.2} s",

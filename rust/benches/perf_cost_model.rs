@@ -2,18 +2,21 @@
 //! always, plus the AOT JAX/Pallas artifact on the PJRT CPU client when the
 //! `pjrt` feature (and `make artifacts`) is available — and the refinement
 //! loop on top of it, where the `LoadLedger` replaces per-candidate full
-//! recomputes with O(P) delta evaluations.
+//! recomputes with O(P) delta evaluations and `peek_batch` amortizes one
+//! traffic-row pass over all of a hot process's candidates.
 //!
-//! The refinement section *asserts* the ledger's complexity contract
-//! (full scorer passes stay constant, candidate evaluations per round stay
-//! O(P)); the CI bench-smoke job runs this bench, so a regression to
-//! O(P²)-per-candidate scoring fails the build.
+//! The refinement and peek-batch sections *assert* the ledger's complexity
+//! and equivalence contracts (full scorer passes stay constant, candidate
+//! evaluations per round stay O(P), batched objectives bit-equal sequential
+//! peeks); the CI bench-smoke job runs this bench, so a regression to
+//! O(P²)-per-candidate scoring — or a batched path that drifts from the
+//! sequential one — fails the build.
 
 use nicmap::coordinator::refine::refine;
 use nicmap::coordinator::MapperKind;
-use nicmap::cost::{CountingScorer, Scorer};
+use nicmap::cost::{CountingScorer, LoadLedger, Move, Scorer};
+use nicmap::ctx::MapCtx;
 use nicmap::model::topology::ClusterSpec;
-use nicmap::model::traffic::TrafficMatrix;
 use nicmap::model::workload::Workload;
 use nicmap::report::stats::Summary;
 use nicmap::runtime::NativeScorer;
@@ -21,7 +24,7 @@ use nicmap::runtime::NativeScorer;
 fn bench_scorer(
     label: &str,
     scorer: &dyn Scorer,
-    traffic: &TrafficMatrix,
+    traffic: &nicmap::model::traffic::TrafficMatrix,
     placement: &nicmap::coordinator::Placement,
     cluster: &ClusterSpec,
     iters: usize,
@@ -50,13 +53,15 @@ fn main() {
 
     for wname in ["real4", "synt4", "synt1"] {
         let w = Workload::builtin(wname).unwrap();
-        let traffic = TrafficMatrix::of_workload(&w);
-        let p = MapperKind::New.build().map(&w, &cluster).unwrap();
+        // One shared ctx per workload — the scorer and the mapper see the
+        // same traffic artifacts, as in the harness sweep.
+        let ctx = MapCtx::build(&w);
+        let p = MapperKind::New.build().map(&ctx, &cluster).unwrap();
         println!("--- {wname}: P={} N={}", w.total_procs(), cluster.nodes);
-        bench_scorer(&format!("{wname}/native"), &NativeScorer, &traffic, &p, &cluster, 50);
+        bench_scorer(&format!("{wname}/native"), &NativeScorer, ctx.traffic(), &p, &cluster, 50);
         #[cfg(feature = "pjrt")]
         if let Some(scorer) = pjrt.as_ref() {
-            bench_scorer(&format!("{wname}/pjrt"), scorer, &traffic, &p, &cluster, 50);
+            bench_scorer(&format!("{wname}/pjrt"), scorer, ctx.traffic(), &p, &cluster, 50);
         }
     }
     #[cfg(feature = "pjrt")]
@@ -65,6 +70,7 @@ fn main() {
     }
 
     bench_refinement(&cluster);
+    bench_peek_batch(&cluster);
 }
 
 /// Refinement bench on the 256-process synthetic workload: wall time plus
@@ -73,14 +79,14 @@ fn main() {
 fn bench_refinement(cluster: &ClusterSpec) {
     const ROUNDS: usize = 8;
     let w = Workload::builtin("synt1").unwrap();
-    let traffic = TrafficMatrix::of_workload(&w);
-    let start = MapperKind::Blocked.build().map(&w, cluster).unwrap();
+    let ctx = MapCtx::build(&w);
+    let start = MapperKind::Blocked.build().map(&ctx, cluster).unwrap();
     let p = w.total_procs();
     println!("--- refine synt1/Blocked: P={p} N={} rounds={ROUNDS}", cluster.nodes);
 
     let counting = CountingScorer::new(&NativeScorer);
     let t0 = std::time::Instant::now();
-    let rep = refine(&counting, &traffic, &start, &w, cluster, ROUNDS).unwrap();
+    let rep = refine(&counting, ctx.traffic(), &start, &w, cluster, ROUNDS).unwrap();
     let dt = t0.elapsed();
     println!(
         "refine/ledger                objective {:.3e} -> {:.3e} | {} moves | \
@@ -116,4 +122,70 @@ fn bench_refinement(cluster: &ClusterSpec) {
         "(contract ok: {} full passes for {} candidate evaluations, bound {}/round)",
         rep.evaluations, rep.delta_evals, per_round_bound
     );
+}
+
+/// Batched-peek bench on the same 256-process workload: all candidates of
+/// each hot-node process scored in one `peek_batch` call vs one `peek` per
+/// candidate — asserting the objectives agree bit for bit (integer-valued
+/// builtin rates; the crate::cost invariant).
+fn bench_peek_batch(cluster: &ClusterSpec) {
+    let w = Workload::builtin("synt1").unwrap();
+    let ctx = MapCtx::build(&w);
+    let start = MapperKind::Blocked.build().map(&ctx, cluster).unwrap();
+    let mut ledger = LoadLedger::new(&NativeScorer, ctx.traffic(), &start, cluster).unwrap();
+
+    // The refiner's candidate shape: every hot-node process against the
+    // cold pool plus one free core per other node.
+    let hot = ledger.hottest_node();
+    let cold: std::collections::BTreeSet<usize> =
+        ledger.coldest_nodes(3, hot).into_iter().collect();
+    let free_targets: Vec<usize> = (0..cluster.nodes)
+        .filter(|&n| n != hot)
+        .filter_map(|n| ledger.free_core_on(n))
+        .collect();
+    let batches: Vec<Vec<Move>> = ledger
+        .procs_on(hot)
+        .into_iter()
+        .map(|a| {
+            let mut cands: Vec<Move> = (0..ledger.len())
+                .filter(|&b| b != a && cold.contains(&ledger.node_of(b)))
+                .map(|b| Move::Swap(a, b))
+                .collect();
+            cands.extend(free_targets.iter().map(|&t| Move::Migrate(a, t)));
+            cands
+        })
+        .collect();
+    let total: usize = batches.iter().map(Vec::len).sum();
+
+    let t0 = std::time::Instant::now();
+    let batched: Vec<Vec<f64>> = batches.iter().map(|b| ledger.peek_batch(b).unwrap()).collect();
+    let batch_secs = t0.elapsed().as_secs_f64();
+
+    let t1 = std::time::Instant::now();
+    let mut mismatches = 0usize;
+    for (cands, objs) in batches.iter().zip(&batched) {
+        for (mv, obj) in cands.iter().zip(objs) {
+            let seq = ledger.peek(*mv).unwrap();
+            if seq.to_bits() != obj.to_bits() {
+                mismatches += 1;
+            }
+        }
+    }
+    let seq_secs = t1.elapsed().as_secs_f64();
+
+    println!(
+        "--- peek_batch synt1/Blocked: {} candidates over {} hot procs | \
+         batched {:.2}ms | sequential {:.2}ms ({:.2}x)",
+        total,
+        batches.len(),
+        batch_secs * 1e3,
+        seq_secs * 1e3,
+        seq_secs / batch_secs.max(1e-12)
+    );
+    assert!(total > 0, "the hot Blocked node must expose candidates");
+    assert_eq!(
+        mismatches, 0,
+        "peek_batch must be bit-identical to sequential peeks on integer-rate workloads"
+    );
+    println!("(contract ok: {total} batched objectives bit-equal to sequential peeks)");
 }

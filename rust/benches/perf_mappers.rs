@@ -3,6 +3,7 @@
 //! DRB (FM passes) under 10 ms too.
 
 use nicmap::coordinator::MapperKind;
+use nicmap::ctx::MapCtx;
 use nicmap::model::topology::ClusterSpec;
 use nicmap::model::workload::Workload;
 use nicmap::report::stats::Summary;
@@ -15,14 +16,17 @@ fn main() {
     );
     for wname in ["synt1", "synt4", "real1", "real2"] {
         let w = Workload::builtin(wname).unwrap();
+        // The shared artifacts are built once per workload (as in the
+        // sweep); the samples time the placement computation alone.
+        let ctx = MapCtx::build(&w);
         for kind in MapperKind::ALL {
             let mapper = kind.build();
             // Warm up once, then sample.
-            mapper.map(&w, &cluster).unwrap();
+            mapper.map(&ctx, &cluster).unwrap();
             let mut samples = Vec::new();
             for _ in 0..20 {
                 let t0 = std::time::Instant::now();
-                let p = mapper.map(&w, &cluster).unwrap();
+                let p = mapper.map(&ctx, &cluster).unwrap();
                 samples.push(t0.elapsed().as_secs_f64() * 1e3);
                 std::hint::black_box(p);
             }

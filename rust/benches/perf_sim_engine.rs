@@ -19,7 +19,7 @@ fn main() {
     println!("{:<16} {:>12} {:>12} {}", "case", "events", "ev/s(mean)", "per-sample");
     for (label, wname, kind) in cases {
         let w = Workload::builtin(wname).unwrap();
-        let p = kind.build().map(&w, &cluster).unwrap();
+        let p = kind.build().map_workload(&w, &cluster).unwrap();
         let mut rates = Vec::new();
         let mut events = 0;
         for _ in 0..3 {

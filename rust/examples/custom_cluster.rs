@@ -48,7 +48,7 @@ fn main() -> nicmap::Result<()> {
         )?;
         let mut vals = Vec::new();
         for kind in [MapperKind::Blocked, MapperKind::Cyclic, MapperKind::New] {
-            let p = kind.build().map(&w, &cluster)?;
+            let p = kind.build().map_workload(&w, &cluster)?;
             let r = simulate(&w, &p, &cluster, &SimConfig::default())?;
             vals.push(r.waiting_ms());
         }

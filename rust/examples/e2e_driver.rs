@@ -18,9 +18,9 @@
 use nicmap::coordinator::refine::refine;
 use nicmap::coordinator::MapperKind;
 use nicmap::cost::Scorer;
+use nicmap::ctx::MapCtx;
 use nicmap::harness::Metric;
 use nicmap::model::topology::ClusterSpec;
-use nicmap::model::traffic::TrafficMatrix;
 use nicmap::model::workload::Workload;
 use nicmap::report::figure::bar_chart;
 use nicmap::report::table::Table;
@@ -51,15 +51,18 @@ fn main() -> nicmap::Result<()> {
 fn drive(scorer: &dyn Scorer) -> nicmap::Result<()> {
     let cluster = ClusterSpec::paper_cluster();
     let w = Workload::builtin("synt4")?; // the paper's 91 %-gain workload
-    let traffic = TrafficMatrix::of_workload(&w);
+    // Shared artifact layer: one ctx build covers every mapper, the
+    // refinement stage, and the scorer cross-check below.
+    let ctx = MapCtx::build(&w);
+    let traffic = ctx.traffic();
     println!("=== nicmap end-to-end driver ===");
     println!("cluster:  {}", cluster.summary());
     println!("workload: {} ({} jobs, {} procs)\n", w.name, w.jobs.len(), w.total_procs());
 
     // Cross-check the active scorer against the pure-Rust oracle.
-    let probe = MapperKind::Cyclic.build().map(&w, &cluster)?;
-    let a = scorer.score(&traffic, &probe, &cluster)?;
-    let b = NativeScorer.score(&traffic, &probe, &cluster)?;
+    let probe = MapperKind::Cyclic.build().map(&ctx, &cluster)?;
+    let a = scorer.score(traffic, &probe, &cluster)?;
+    let b = NativeScorer.score(traffic, &probe, &cluster)?;
     let max_rel = a
         .nic_tx
         .iter()
@@ -74,7 +77,7 @@ fn drive(scorer: &dyn Scorer) -> nicmap::Result<()> {
     let mut placements = Vec::new();
     for kind in MapperKind::PAPER {
         let t0 = std::time::Instant::now();
-        let p = kind.build().map(&w, &cluster)?;
+        let p = kind.build().map(&ctx, &cluster)?;
         println!(
             "    {:<8} {:>8.2?}  nodes used: {}",
             kind.name(),
@@ -88,7 +91,7 @@ fn drive(scorer: &dyn Scorer) -> nicmap::Result<()> {
     println!("\n[3] refining Blocked with the cost model…");
     let blocked = placements[0].1.clone();
     let t0 = std::time::Instant::now();
-    let rep = refine(scorer, &traffic, &blocked, &w, &cluster, 12)?;
+    let rep = refine(scorer, traffic, &blocked, &w, &cluster, 12)?;
     println!(
         "    objective {:.3e} -> {:.3e} | {} moves | {} full scorer passes \
          | {} O(P) ledger evals | {:.2?}",

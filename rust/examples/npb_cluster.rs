@@ -16,8 +16,8 @@ fn main() -> nicmap::Result<()> {
     let w = Workload::builtin("real1")?; // paper Table 6
     println!("workload {} — {} jobs / {} processes\n", w.name, w.jobs.len(), w.total_procs());
 
-    let blocked = MapperKind::Blocked.build().map(&w, &cluster)?;
-    let new = MapperKind::New.build().map(&w, &cluster)?;
+    let blocked = MapperKind::Blocked.build().map_workload(&w, &cluster)?;
+    let new = MapperKind::New.build().map_workload(&w, &cluster)?;
     let rb = simulate(&w, &blocked, &cluster, &SimConfig::default())?;
     let rn = simulate(&w, &new, &cluster, &SimConfig::default())?;
 

@@ -22,7 +22,7 @@ fn main() -> nicmap::Result<()> {
 
     // Map with the paper's threshold strategy, then with Cyclic for contrast.
     for kind in [MapperKind::New, MapperKind::Cyclic] {
-        let placement = kind.build().map(&workload, &cluster)?;
+        let placement = kind.build().map_workload(&workload, &cluster)?;
         let report = simulate(&workload, &placement, &cluster, &SimConfig::default())?;
         println!(
             "{:<7}: waiting {:>13.3e} ms | workload finish {:>8.2} s | {} messages",

@@ -4,6 +4,7 @@ use crate::cli::args::Args;
 use crate::coordinator::refine::RefineReport;
 use crate::coordinator::{MapperKind, MapperSpec, Placement};
 use crate::cost::{NodeLoads, Scorer};
+use crate::ctx::MapCtx;
 use crate::error::{Error, Result};
 use crate::harness::{
     cap_rounds, render_figure, run_real, run_sweep, run_synthetic, run_workload, sweep_to_csv,
@@ -68,6 +69,15 @@ fn load_input(args: &Args) -> Result<(ClusterSpec, Workload)> {
     }
     let name = args.require("workload")?;
     Ok((ClusterSpec::paper_cluster(), Workload::builtin(name)?))
+}
+
+/// Resolve the input and build its shared [`MapCtx`] — the single
+/// traffic-artifact construction every placement-consuming verb (`map`,
+/// `evaluate`, `refine`) goes through, so the CLI paths cannot drift apart
+/// on how the matrix is derived.
+fn load_ctx(args: &Args) -> Result<(ClusterSpec, MapCtx)> {
+    let (cluster, w) = load_input(args)?;
+    Ok((cluster, MapCtx::build(&w)))
 }
 
 fn mappers_from(args: &Args, key: &str) -> Result<Vec<MapperSpec>> {
@@ -162,16 +172,17 @@ fn refine_placement(
 }
 
 fn cmd_map(args: &Args) -> Result<()> {
-    let (cluster, w) = load_input(args)?;
+    let (cluster, ctx) = load_ctx(args)?;
+    let w = ctx.workload();
     let mapper = MapperSpec::parse(args.get_or("mapper", "N"))?;
     let t0 = std::time::Instant::now();
-    let placement = mapper.build().map(&w, &cluster)?;
+    let placement = mapper.build().map(&ctx, &cluster)?;
     let dt = t0.elapsed();
-    placement.validate(&w, &cluster)?;
+    placement.validate(w, &cluster)?;
     println!("workload {} on {} — mapper {} ({dt:?})", w.name, cluster.summary(), mapper);
     let mut table = Table::new(vec!["job", "procs", "nodes used", "per-node counts"]);
     for (jid, job) in w.jobs.iter().enumerate() {
-        let counts = placement.job_node_counts(&w, jid, &cluster);
+        let counts = placement.job_node_counts(w, jid, &cluster);
         let used = counts.iter().filter(|&&c| c > 0).count();
         let compact: Vec<String> = counts
             .iter()
@@ -354,13 +365,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
 }
 
 fn cmd_evaluate(args: &Args) -> Result<()> {
-    let (cluster, w) = load_input(args)?;
+    // One shared ctx: the mapper and the scorer see the same traffic matrix
+    // (previously two independent `of_workload` builds that could drift).
+    let (cluster, ctx) = load_ctx(args)?;
     let mapper = MapperSpec::parse(args.get_or("mapper", "N"))?;
-    let placement = mapper.build().map(&w, &cluster)?;
-    let traffic = TrafficMatrix::of_workload(&w);
+    let placement = mapper.build().map(&ctx, &cluster)?;
 
-    let (loads, backend) = score_placement(args, &traffic, &placement, &cluster)?;
-    println!("cost model ({backend}) — {} mapped by {} on {}", w.name, mapper, cluster.summary());
+    let (loads, backend) = score_placement(args, ctx.traffic(), &placement, &cluster)?;
+    println!(
+        "cost model ({backend}) — {} mapped by {} on {}",
+        ctx.workload().name,
+        mapper,
+        cluster.summary()
+    );
     let mut table = Table::new(vec!["node", "nic tx (B/s)", "nic rx (B/s)", "intra (B/s)"]);
     for n in 0..cluster.nodes {
         table.row(vec![
@@ -379,7 +396,8 @@ fn cmd_evaluate(args: &Args) -> Result<()> {
 }
 
 fn cmd_refine(args: &Args) -> Result<()> {
-    let (cluster, w) = load_input(args)?;
+    // Same shared-ctx path as `evaluate` — one traffic build for both verbs.
+    let (cluster, ctx) = load_ctx(args)?;
     let mapper = MapperSpec::parse(args.get_or("mapper", "B"))?;
     if mapper.refined {
         return Err(Error::usage(format!(
@@ -390,14 +408,14 @@ fn cmd_refine(args: &Args) -> Result<()> {
         )));
     }
     let rounds = args.get_parse::<usize>("rounds")?.unwrap_or(8);
-    let placement = mapper.build().map(&w, &cluster)?;
-    let traffic = TrafficMatrix::of_workload(&w);
+    let placement = mapper.build().map(&ctx, &cluster)?;
 
-    let report = refine_placement(args, &traffic, &placement, &w, &cluster, rounds)?;
+    let report =
+        refine_placement(args, ctx.traffic(), &placement, ctx.workload(), &cluster, rounds)?;
     println!(
         "refined {} (start={}): objective {:.4e} -> {:.4e} \
          ({} moves, {} full scorer passes, {} O(P) ledger evaluations)",
-        w.name,
+        ctx.workload().name,
         mapper,
         report.before,
         report.after,

@@ -5,9 +5,9 @@
 //! node.
 
 use crate::coordinator::{Mapper, Placement};
+use crate::ctx::MapCtx;
 use crate::error::{Error, Result};
 use crate::model::topology::ClusterSpec;
-use crate::model::workload::Workload;
 
 /// Blocked (a.k.a. compact / fill-first) mapping.
 #[derive(Debug, Clone, Copy, Default)]
@@ -18,8 +18,8 @@ impl Mapper for Blocked {
         "Blocked"
     }
 
-    fn map(&self, w: &Workload, cluster: &ClusterSpec) -> Result<Placement> {
-        let p = w.total_procs();
+    fn map(&self, ctx: &MapCtx, cluster: &ClusterSpec) -> Result<Placement> {
+        let p = ctx.len();
         if p > cluster.total_cores() {
             return Err(Error::mapping(format!(
                 "{p} processes exceed {} cores",
@@ -36,7 +36,7 @@ impl Mapper for Blocked {
 mod tests {
     use super::*;
     use crate::model::pattern::Pattern;
-    use crate::model::workload::JobSpec;
+    use crate::model::workload::{JobSpec, Workload};
 
     #[test]
     fn fills_minimum_nodes() {
@@ -46,7 +46,7 @@ mod tests {
             vec![JobSpec::synthetic(Pattern::AllToAll, 40, 1000, 1.0, 10)],
         )
         .unwrap();
-        let p = Blocked.map(&w, &cluster).unwrap();
+        let p = Blocked.map_workload(&w, &cluster).unwrap();
         p.validate(&w, &cluster).unwrap();
         // 40 procs on 16-core nodes: nodes 0-1 full, node 2 gets 8.
         assert_eq!(p.node_counts(&cluster)[..3], [16, 16, 8]);
@@ -61,7 +61,7 @@ mod tests {
             vec![JobSpec::synthetic(Pattern::Linear, 8, 1000, 1.0, 10)],
         )
         .unwrap();
-        let p = Blocked.map(&w, &cluster).unwrap();
+        let p = Blocked.map_workload(&w, &cluster).unwrap();
         // Ranks 0-3 in socket 0, 4-7 in socket 1.
         assert!(cluster.same_socket(p.core_of[0], p.core_of[3]));
         assert!(!cluster.same_socket(p.core_of[3], p.core_of[4]));
@@ -72,7 +72,7 @@ mod tests {
     fn multi_job_contiguous() {
         let cluster = ClusterSpec::paper_cluster();
         let w = Workload::synt_workload_1(); // 4 x 64
-        let p = Blocked.map(&w, &cluster).unwrap();
+        let p = Blocked.map_workload(&w, &cluster).unwrap();
         // Job 1 (procs 64..128) occupies nodes 4-7.
         for proc in w.procs_of_job(1) {
             let node = p.node_of(proc, &cluster);

@@ -3,9 +3,9 @@
 //! per node.
 
 use crate::coordinator::{Mapper, Placement};
+use crate::ctx::MapCtx;
 use crate::error::{Error, Result};
 use crate::model::topology::ClusterSpec;
-use crate::model::workload::Workload;
 
 /// Cyclic (round-robin / scatter) mapping.
 #[derive(Debug, Clone, Copy, Default)]
@@ -16,8 +16,8 @@ impl Mapper for Cyclic {
         "Cyclic"
     }
 
-    fn map(&self, w: &Workload, cluster: &ClusterSpec) -> Result<Placement> {
-        let p = w.total_procs();
+    fn map(&self, ctx: &MapCtx, cluster: &ClusterSpec) -> Result<Placement> {
+        let p = ctx.len();
         if p > cluster.total_cores() {
             return Err(Error::mapping(format!(
                 "{p} processes exceed {} cores",
@@ -43,7 +43,7 @@ impl Mapper for Cyclic {
 mod tests {
     use super::*;
     use crate::model::pattern::Pattern;
-    use crate::model::workload::JobSpec;
+    use crate::model::workload::{JobSpec, Workload};
 
     #[test]
     fn spreads_over_all_nodes() {
@@ -53,7 +53,7 @@ mod tests {
             vec![JobSpec::synthetic(Pattern::AllToAll, 40, 1000, 1.0, 10)],
         )
         .unwrap();
-        let p = Cyclic.map(&w, &cluster).unwrap();
+        let p = Cyclic.map_workload(&w, &cluster).unwrap();
         p.validate(&w, &cluster).unwrap();
         assert_eq!(p.nodes_used(&cluster), 16);
         let counts = p.node_counts(&cluster);
@@ -66,7 +66,7 @@ mod tests {
     fn adjacent_ranks_on_distinct_nodes() {
         let cluster = ClusterSpec::paper_cluster();
         let w = Workload::synt_workload_1();
-        let p = Cyclic.map(&w, &cluster).unwrap();
+        let p = Cyclic.map_workload(&w, &cluster).unwrap();
         for g in 0..255 {
             assert_ne!(
                 p.node_of(g, &cluster),
@@ -80,7 +80,7 @@ mod tests {
     fn full_cluster_valid() {
         let cluster = ClusterSpec::paper_cluster();
         let w = Workload::synt_workload_1(); // 256 = exactly full
-        let p = Cyclic.map(&w, &cluster).unwrap();
+        let p = Cyclic.map_workload(&w, &cluster).unwrap();
         p.validate(&w, &cluster).unwrap();
         assert_eq!(p.node_counts(&cluster), vec![16; 16]);
     }

@@ -11,11 +11,10 @@
 use crate::coordinator::drb::proportional_split;
 use crate::coordinator::placement::Occupancy;
 use crate::coordinator::{Mapper, Placement};
+use crate::ctx::MapCtx;
 use crate::error::{Error, Result};
-use crate::graph::{recursive_bisection, Graph};
+use crate::graph::recursive_bisection;
 use crate::model::topology::ClusterSpec;
-use crate::model::traffic::TrafficMatrix;
-use crate::model::workload::Workload;
 
 /// Direct k-way partitioning at node granularity.
 #[derive(Debug, Clone, Copy, Default)]
@@ -26,18 +25,17 @@ impl Mapper for KWay {
         "KWay"
     }
 
-    fn map(&self, w: &Workload, cluster: &ClusterSpec) -> Result<Placement> {
-        let p = w.total_procs();
+    fn map(&self, ctx: &MapCtx, cluster: &ClusterSpec) -> Result<Placement> {
+        let p = ctx.len();
         if p > cluster.total_cores() {
             return Err(Error::mapping(format!(
                 "{p} processes exceed {} cores",
                 cluster.total_cores()
             )));
         }
-        let traffic = TrafficMatrix::of_workload(w);
-        let ag = Graph::from_traffic(&traffic);
+        // Shared-context AG: the same CSR view DRB cuts, built once.
         let sizes = proportional_split(p, &vec![cluster.cores_per_node(); cluster.nodes]);
-        let node_of_proc = recursive_bisection(&ag, &sizes);
+        let node_of_proc = recursive_bisection(ctx.graph(), &sizes);
 
         let mut occ = Occupancy::new(cluster);
         let mut core_of = vec![usize::MAX; p];
@@ -56,13 +54,14 @@ impl Mapper for KWay {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::workload::Workload;
 
     #[test]
     fn valid_on_paper_workloads() {
         let cluster = ClusterSpec::paper_cluster();
         for name in ["synt1", "synt4", "real4"] {
             let w = Workload::builtin(name).unwrap();
-            let p = KWay.map(&w, &cluster).unwrap();
+            let p = KWay.map_workload(&w, &cluster).unwrap();
             p.validate(&w, &cluster).unwrap();
         }
     }
@@ -71,7 +70,7 @@ mod tests {
     fn respects_node_capacity() {
         let cluster = ClusterSpec::paper_cluster();
         let w = Workload::synt_workload_1();
-        let p = KWay.map(&w, &cluster).unwrap();
+        let p = KWay.map_workload(&w, &cluster).unwrap();
         for &c in p.node_counts(&cluster).iter() {
             assert!(c <= cluster.cores_per_node());
         }

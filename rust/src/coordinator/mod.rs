@@ -26,6 +26,7 @@ pub mod random;
 pub mod refine;
 pub mod threshold;
 
+use crate::ctx::MapCtx;
 use crate::error::{Error, Result};
 use crate::model::topology::ClusterSpec;
 use crate::model::workload::Workload;
@@ -33,12 +34,26 @@ use crate::model::workload::Workload;
 pub use placement::Placement;
 
 /// A process-mapping strategy.
+///
+/// Strategies consume a prebuilt [`MapCtx`] — the traffic/topology artifact
+/// layer constructed **once per workload** — so a sweep over many mappers
+/// never re-derives the O(P²) traffic matrix, the per-job matrices, or the
+/// CSR adjacency graph per cell. Callers that hold only a workload use
+/// [`Mapper::map_workload`], which builds a throwaway context.
 pub trait Mapper {
     /// Short name used in reports (`"Blocked"`, `"N"`...).
     fn name(&self) -> &'static str;
 
-    /// Compute a placement of every process of `w` onto `cluster`.
-    fn map(&self, w: &Workload, cluster: &ClusterSpec) -> Result<Placement>;
+    /// Compute a placement of every process of `ctx`'s workload onto
+    /// `cluster`, reusing the context's shared artifacts.
+    fn map(&self, ctx: &MapCtx, cluster: &ClusterSpec) -> Result<Placement>;
+
+    /// Convenience for one-shot callers: build a [`MapCtx`] for `w` and
+    /// map it. Sweeps and anything mapping the same workload more than once
+    /// should build the context once and call [`Mapper::map`] instead.
+    fn map_workload(&self, w: &Workload, cluster: &ClusterSpec) -> Result<Placement> {
+        self.map(&MapCtx::build(w), cluster)
+    }
 }
 
 /// The strategies the paper's figures compare, by their figure letter.
@@ -242,16 +257,20 @@ mod tests {
         }
     }
 
-    /// Every mapper produces a valid placement on every builtin workload.
+    /// Every mapper produces a valid placement on every builtin workload —
+    /// and the ctx-taking path agrees with the one-shot convenience.
     #[test]
     fn all_mappers_all_builtins_valid() {
         let cluster = ClusterSpec::paper_cluster();
         for name in Workload::builtin_names() {
             let w = Workload::builtin(name).unwrap();
+            let ctx = crate::ctx::MapCtx::build(&w);
             for kind in MapperKind::ALL {
-                let p = kind.build().map(&w, &cluster).unwrap();
+                let p = kind.build().map(&ctx, &cluster).unwrap();
                 p.validate(&w, &cluster)
                     .unwrap_or_else(|e| panic!("{kind} on {name}: {e}"));
+                let q = kind.build().map_workload(&w, &cluster).unwrap();
+                assert_eq!(p, q, "{kind} on {name}: ctx path diverged from map_workload");
             }
         }
     }
@@ -261,7 +280,7 @@ mod tests {
         let cluster = ClusterSpec::small_test_cluster(); // 16 cores
         let w = Workload::synt_workload_1(); // 256 procs
         for kind in MapperKind::ALL {
-            assert!(kind.build().map(&w, &cluster).is_err(), "{kind} must reject");
+            assert!(kind.build().map_workload(&w, &cluster).is_err(), "{kind} must reject");
         }
     }
 
@@ -308,7 +327,7 @@ mod tests {
         let cluster = ClusterSpec::paper_cluster();
         let w = Workload::builtin("real4").unwrap();
         for spec in MapperSpec::PAPER_REFINED {
-            let p = spec.build().map(&w, &cluster).unwrap();
+            let p = spec.build().map_workload(&w, &cluster).unwrap();
             p.validate(&w, &cluster).unwrap_or_else(|e| panic!("{spec}: {e}"));
             if spec.refined {
                 assert_eq!(spec.build().name(), spec.name());

@@ -22,12 +22,13 @@
 //! preserves the spread while guaranteeing termination — see DESIGN.md).
 
 use crate::coordinator::placement::{Occupancy, Placement};
-use crate::coordinator::threshold::{decide, Threshold};
+use crate::coordinator::threshold::{decide_with_avg, Threshold};
 use crate::coordinator::Mapper;
+use crate::ctx::MapCtx;
 use crate::error::{Error, Result};
 use crate::model::topology::{ClusterSpec, NodeId};
 use crate::model::traffic::TrafficMatrix;
-use crate::model::workload::{JobId, SizeClass, Workload};
+use crate::model::workload::{JobId, SizeClass};
 
 /// Tunables for the new strategy (defaults = the paper's algorithm; the
 /// flags exist for the ablation bench).
@@ -48,11 +49,14 @@ impl Default for NewStrategy {
     }
 }
 
-/// Per-job mapping state.
-struct JobState {
+/// Per-job mapping state; the traffic matrix is borrowed from the shared
+/// [`MapCtx`] (one per-job build per workload, not per map call).
+struct JobState<'a> {
     /// Global proc id of local rank r.
     offset: usize,
-    traffic: TrafficMatrix,
+    traffic: &'a TrafficMatrix,
+    /// Cached `Adj_avg` of this job (from the ctx — eq. 2 input).
+    adj_avg: f64,
     /// Processes of this job placed per node (threshold accounting).
     per_node: Vec<usize>,
     /// Local ranks not yet mapped, kept sorted by descending CD.
@@ -62,7 +66,8 @@ struct JobState {
 impl NewStrategy {
     /// Order jobs: size class first (Large → Small), then `Adj_avg`
     /// descending, then table order (stable tie-break).
-    fn job_order(&self, w: &Workload, traffic: &[TrafficMatrix]) -> Vec<JobId> {
+    fn job_order(&self, ctx: &MapCtx) -> Vec<JobId> {
+        let w = ctx.workload();
         let mut order: Vec<JobId> = (0..w.jobs.len()).collect();
         if !self.order_by_size_class {
             return order;
@@ -75,12 +80,7 @@ impl NewStrategy {
         order.sort_by(|&a, &b| {
             class_rank(a)
                 .cmp(&class_rank(b))
-                .then(
-                    traffic[b]
-                        .avg_adjacency()
-                        .partial_cmp(&traffic[a].avg_adjacency())
-                        .unwrap(),
-                )
+                .then(ctx.job_adj_avg(b).partial_cmp(&ctx.job_adj_avg(a)).unwrap())
                 .then(a.cmp(&b))
         });
         order
@@ -89,12 +89,13 @@ impl NewStrategy {
     /// Map one job (paper step 3).
     fn map_job(
         &self,
-        st: &mut JobState,
+        st: &mut JobState<'_>,
         occ: &mut Occupancy,
         cluster: &ClusterSpec,
         core_of: &mut [usize],
     ) -> Result<()> {
-        // Step 3.2: threshold decision at job start.
+        // Step 3.2: threshold decision at job start (Adj_avg comes cached
+        // from the shared ctx; eq. 2 still reads the job matrix).
         let threshold = match self.fixed_threshold {
             Some(k) => {
                 if k == usize::MAX {
@@ -103,7 +104,7 @@ impl NewStrategy {
                     Threshold::PerNode(k)
                 }
             }
-            None => decide(&st.traffic, occ.avg_free_per_node(), cluster.nodes),
+            None => decide_with_avg(st.adj_avg, st.traffic, occ.avg_free_per_node(), cluster.nodes),
         };
         let mut cap = threshold.cap();
 
@@ -177,7 +178,7 @@ impl NewStrategy {
         &self,
         rank: usize,
         node: NodeId,
-        st: &mut JobState,
+        st: &mut JobState<'_>,
         occ: &mut Occupancy,
         _cluster: &ClusterSpec,
         core_of: &mut [usize],
@@ -204,24 +205,24 @@ impl Mapper for NewStrategy {
         "New"
     }
 
-    fn map(&self, w: &Workload, cluster: &ClusterSpec) -> Result<Placement> {
-        let p = w.total_procs();
+    fn map(&self, ctx: &MapCtx, cluster: &ClusterSpec) -> Result<Placement> {
+        let w = ctx.workload();
+        let p = ctx.len();
         if p > cluster.total_cores() {
             return Err(Error::mapping(format!(
                 "{p} processes exceed {} cores",
                 cluster.total_cores()
             )));
         }
-        let traffic: Vec<TrafficMatrix> =
-            w.jobs.iter().map(TrafficMatrix::of_job).collect();
-        let order = self.job_order(w, &traffic);
+        let order = self.job_order(ctx);
 
         let mut occ = Occupancy::new(cluster);
         let mut core_of = vec![usize::MAX; p];
         for jid in order {
             let mut st = JobState {
                 offset: w.job_offset(jid),
-                traffic: traffic[jid].clone(),
+                traffic: ctx.job_traffic(jid),
+                adj_avg: ctx.job_adj_avg(jid),
                 per_node: vec![0; cluster.nodes],
                 unmapped: (0..w.jobs[jid].procs).collect(),
             };
@@ -235,7 +236,7 @@ impl Mapper for NewStrategy {
 mod tests {
     use super::*;
     use crate::model::pattern::Pattern;
-    use crate::model::workload::JobSpec;
+    use crate::model::workload::{JobSpec, Workload};
 
     fn strategy() -> NewStrategy {
         NewStrategy::default()
@@ -249,7 +250,7 @@ mod tests {
             vec![JobSpec::synthetic(Pattern::AllToAll, 64, 2_000_000, 10.0, 100)],
         )
         .unwrap();
-        let p = strategy().map(&w, &cluster).unwrap();
+        let p = strategy().map_workload(&w, &cluster).unwrap();
         p.validate(&w, &cluster).unwrap();
         // Threshold 4: exactly 4 procs on each of the 16 nodes.
         assert_eq!(p.job_node_counts(&w, 0, &cluster), vec![4; 16]);
@@ -263,7 +264,7 @@ mod tests {
             vec![JobSpec::synthetic(Pattern::Linear, 64, 2_000_000, 10.0, 100)],
         )
         .unwrap();
-        let p = strategy().map(&w, &cluster).unwrap();
+        let p = strategy().map_workload(&w, &cluster).unwrap();
         p.validate(&w, &cluster).unwrap();
         // Adj_avg ≈ 2 ≤ 15 ⇒ no threshold ⇒ minimum nodes (4 of 16 cores).
         assert_eq!(p.nodes_used(&cluster), 4);
@@ -277,7 +278,7 @@ mod tests {
             vec![JobSpec::synthetic(Pattern::AllToAll, 24, 2_000_000, 10.0, 100)],
         )
         .unwrap();
-        let p = strategy().map(&w, &cluster).unwrap();
+        let p = strategy().map_workload(&w, &cluster).unwrap();
         p.validate(&w, &cluster).unwrap();
         let counts = p.job_node_counts(&w, 0, &cluster);
         // Threshold 1, 24 procs, 16 nodes: every node gets ≥1; 8 nodes get
@@ -299,7 +300,7 @@ mod tests {
             ],
         )
         .unwrap();
-        let p = strategy().map(&w, &cluster).unwrap();
+        let p = strategy().map_workload(&w, &cluster).unwrap();
         // The Large job packs first: its procs occupy nodes 0-1.
         let large_nodes: std::collections::BTreeSet<_> =
             w.procs_of_job(1).map(|g| p.node_of(g, &cluster)).collect();
@@ -310,13 +311,13 @@ mod tests {
     fn ablation_flags_change_placement() {
         let cluster = ClusterSpec::paper_cluster();
         let w = Workload::synt_workload_3();
-        let paper = strategy().map(&w, &cluster).unwrap();
+        let paper = strategy().map_workload(&w, &cluster).unwrap();
         let no_thresh = NewStrategy { fixed_threshold: Some(usize::MAX), ..strategy() }
-            .map(&w, &cluster)
+            .map_workload(&w, &cluster)
             .unwrap();
         assert_ne!(paper, no_thresh, "threshold must matter on synt3");
         let fixed1 = NewStrategy { fixed_threshold: Some(1), ..strategy() }
-            .map(&w, &cluster)
+            .map_workload(&w, &cluster)
             .unwrap();
         fixed1.validate(&w, &cluster).unwrap();
         no_thresh.validate(&w, &cluster).unwrap();
@@ -332,7 +333,7 @@ mod tests {
             vec![JobSpec::synthetic(Pattern::GatherReduce, 16, 500_000, 10.0, 100)],
         )
         .unwrap();
-        let p = strategy().map(&w, &cluster).unwrap();
+        let p = strategy().map_workload(&w, &cluster).unwrap();
         let root_node = p.node_of(0, &cluster);
         let same: usize = (0..16).filter(|&g| p.node_of(g, &cluster) == root_node).count();
         assert_eq!(same, 16, "whole job fits one node and should stay there");
@@ -346,7 +347,7 @@ mod tests {
             vec![JobSpec::synthetic(Pattern::AllToAll, 4, 500_000, 10.0, 100)],
         )
         .unwrap();
-        let p = strategy().map(&w, &cluster).unwrap();
+        let p = strategy().map_workload(&w, &cluster).unwrap();
         // 4 procs, no threshold (Adj_avg 3 ≤ 15): all in one socket.
         let s0 = p.socket_of(0, &cluster);
         for g in 1..4 {
@@ -359,8 +360,8 @@ mod tests {
         let cluster = ClusterSpec::paper_cluster();
         for name in Workload::builtin_names() {
             let w = Workload::builtin(name).unwrap();
-            let a = strategy().map(&w, &cluster).unwrap();
-            let b = strategy().map(&w, &cluster).unwrap();
+            let a = strategy().map_workload(&w, &cluster).unwrap();
+            let b = strategy().map_workload(&w, &cluster).unwrap();
             assert_eq!(a, b, "{name}");
         }
     }

@@ -2,9 +2,9 @@
 //! used by tests and ablations as a "no intelligence at all" reference).
 
 use crate::coordinator::{Mapper, Placement};
+use crate::ctx::MapCtx;
 use crate::error::{Error, Result};
 use crate::model::topology::ClusterSpec;
-use crate::model::workload::Workload;
 use crate::testkit::rng::SplitMix64;
 
 /// Uniform random placement over free cores, deterministic per seed.
@@ -25,8 +25,8 @@ impl Mapper for RandomMap {
         "Random"
     }
 
-    fn map(&self, w: &Workload, cluster: &ClusterSpec) -> Result<Placement> {
-        let p = w.total_procs();
+    fn map(&self, ctx: &MapCtx, cluster: &ClusterSpec) -> Result<Placement> {
+        let p = ctx.len();
         if p > cluster.total_cores() {
             return Err(Error::mapping(format!(
                 "{p} processes exceed {} cores",
@@ -44,14 +44,15 @@ impl Mapper for RandomMap {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::workload::Workload;
 
     #[test]
     fn deterministic_per_seed() {
         let cluster = ClusterSpec::paper_cluster();
         let w = Workload::synt_workload_4();
-        let a = RandomMap::new(7).map(&w, &cluster).unwrap();
-        let b = RandomMap::new(7).map(&w, &cluster).unwrap();
-        let c = RandomMap::new(8).map(&w, &cluster).unwrap();
+        let a = RandomMap::new(7).map_workload(&w, &cluster).unwrap();
+        let b = RandomMap::new(7).map_workload(&w, &cluster).unwrap();
+        let c = RandomMap::new(8).map_workload(&w, &cluster).unwrap();
         assert_eq!(a, b);
         assert_ne!(a, c);
         a.validate(&w, &cluster).unwrap();

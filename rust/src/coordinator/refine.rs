@@ -8,15 +8,18 @@
 //!   abstraction (native + PJRT implementations in [`crate::runtime`]), and
 //!   the O(P) delta evaluator.
 //! * [`Refiner`] (here) is the pluggable search stage: it seeds a ledger
-//!   with **one** full scorer pass, evaluates every candidate move with an
-//!   O(P) `peek`, and re-verifies against one final full pass — where the
+//!   with **one** full scorer pass, evaluates each hot process's candidate
+//!   moves through one batched [`LoadLedger::peek_batch`] pass over its
+//!   traffic rows, and re-verifies against one final full pass — where the
 //!   pre-ledger implementation paid a full O(P²) recompute per candidate.
 //! * [`Refined`] composes the stage with any [`Mapper`], giving every
-//!   strategy a `+r` variant ([`crate::coordinator::MapperSpec`]).
+//!   strategy a `+r` variant ([`crate::coordinator::MapperSpec`]); it reuses
+//!   the shared [`MapCtx`] traffic matrix instead of rebuilding it.
 
 use crate::coordinator::{Mapper, MapperKind, Placement};
 pub use crate::cost::{NodeLoads, Scorer};
 use crate::cost::{LoadLedger, Move};
+use crate::ctx::MapCtx;
 use crate::error::Result;
 use crate::model::topology::ClusterSpec;
 use crate::model::traffic::TrafficMatrix;
@@ -46,7 +49,8 @@ pub struct RefineReport {
 /// core) and keep the best improving move, until no move improves or
 /// `max_rounds` is exhausted.
 ///
-/// Candidate moves are scored through a [`LoadLedger`] in O(P) each; the
+/// Candidate moves are scored through [`LoadLedger::peek_batch`] — one pass
+/// over each hot process's traffic rows covers all of its candidates; the
 /// full scorer runs exactly twice (seed + verify) regardless of how many
 /// candidates are considered.
 #[derive(Debug, Clone, Copy)]
@@ -104,27 +108,34 @@ impl Refiner {
                 .filter_map(|n| ledger.free_core_on(n))
                 .collect();
 
-            let mut candidates: Vec<Move> = Vec::new();
+            let mut best: Option<(Move, f64)> = None;
             for &a in &hot_procs {
+                // All of one hot process's candidates go through a single
+                // batched evaluation: `peek_batch` walks `a`'s traffic rows
+                // once and shares the aggregates across every move (swap
+                // partners still cost one row walk each; migrates become
+                // O(nodes)) — the pre-batch loop re-walked `a`'s rows and
+                // cloned the load vectors per candidate, and the pre-ledger
+                // implementation ran a full O(P²) scorer pass. Candidate
+                // order is unchanged: swaps by ascending partner id, then
+                // migrates in free-target order.
+                let mut cands: Vec<Move> = Vec::new();
                 for b in 0..ledger.len() {
                     if b != a && cold.contains(&ledger.node_of(b)) {
-                        candidates.push(Move::Swap(a, b));
+                        cands.push(Move::Swap(a, b));
                     }
                 }
                 for &target in &free_targets {
-                    candidates.push(Move::Migrate(a, target));
+                    cands.push(Move::Migrate(a, target));
                 }
-            }
-            let mut best: Option<(Move, f64)> = None;
-            for mv in candidates {
-                // One O(P) delta evaluation per candidate — the pre-ledger
-                // implementation ran the full O(P²) scorer here instead.
-                let obj = ledger.peek(mv)?;
-                delta_evals += 1;
-                if obj < current - self.min_gain
-                    && best.map(|(_, bo)| obj < bo).unwrap_or(true)
-                {
-                    best = Some((mv, obj));
+                let objs = ledger.peek_batch(&cands)?;
+                delta_evals += cands.len();
+                for (&mv, obj) in cands.iter().zip(objs) {
+                    if obj < current - self.min_gain
+                        && best.map(|(_, bo)| obj < bo).unwrap_or(true)
+                    {
+                        best = Some((mv, obj));
+                    }
                 }
             }
             match best {
@@ -211,10 +222,12 @@ impl Mapper for Refined {
         self.name
     }
 
-    fn map(&self, w: &Workload, cluster: &ClusterSpec) -> Result<Placement> {
-        let base = self.inner.map(w, cluster)?;
-        let traffic = TrafficMatrix::of_workload(w);
-        let rep = self.refiner.run(&NativeScorer, &traffic, &base, w, cluster)?;
+    fn map(&self, ctx: &MapCtx, cluster: &ClusterSpec) -> Result<Placement> {
+        let base = self.inner.map(ctx, cluster)?;
+        // The sweep's shared traffic matrix drives refinement directly —
+        // the pre-ctx implementation rebuilt the O(P²) matrix here even
+        // though the base mapper had just derived its own copy.
+        let rep = self.refiner.run(&NativeScorer, ctx.traffic(), &base, ctx.workload(), cluster)?;
         Ok(rep.placement)
     }
 }
@@ -241,7 +254,7 @@ mod tests {
         // Blocked placement of an all-to-all job is the worst case; the
         // refiner should strictly reduce the hottest-NIC objective.
         let (traffic, w, cluster) = a2a(8);
-        let start = MapperKind::Blocked.build().map(&w, &cluster).unwrap();
+        let start = MapperKind::Blocked.build().map_workload(&w, &cluster).unwrap();
         let rep = refine(&NativeScorer, &traffic, &start, &w, &cluster, 8).unwrap();
         assert!(rep.after <= rep.before);
         assert!(rep.evaluations > 0);
@@ -253,7 +266,7 @@ mod tests {
     fn refine_leaves_good_placement_alone() {
         // A fully-packed single-node job has zero NIC traffic; nothing beats it.
         let (traffic, w, cluster) = a2a(4);
-        let start = MapperKind::Blocked.build().map(&w, &cluster).unwrap();
+        let start = MapperKind::Blocked.build().map_workload(&w, &cluster).unwrap();
         let rep = refine(&NativeScorer, &traffic, &start, &w, &cluster, 4).unwrap();
         assert_eq!(rep.moves, 0);
         assert_eq!(rep.placement, start);
@@ -264,7 +277,7 @@ mod tests {
         // The whole point of the ledger: the full O(P²) scorer runs once to
         // seed and once to verify, no matter how many candidates are tried.
         let (traffic, w, cluster) = a2a(8);
-        let start = MapperKind::Blocked.build().map(&w, &cluster).unwrap();
+        let start = MapperKind::Blocked.build().map_workload(&w, &cluster).unwrap();
         let counting = CountingScorer::new(&NativeScorer);
         let rep = refine(&counting, &traffic, &start, &w, &cluster, 8).unwrap();
         assert_eq!(counting.calls(), 2);
@@ -276,8 +289,8 @@ mod tests {
     fn refined_combinator_never_hurts_the_base_mapper() {
         let (traffic, w, cluster) = a2a(8);
         let nic_bw = cluster.nic_bw as f64;
-        let base = MapperKind::Blocked.build().map(&w, &cluster).unwrap();
-        let refined = Refined::of_kind(MapperKind::Blocked).map(&w, &cluster).unwrap();
+        let base = MapperKind::Blocked.build().map_workload(&w, &cluster).unwrap();
+        let refined = Refined::of_kind(MapperKind::Blocked).map_workload(&w, &cluster).unwrap();
         refined.validate(&w, &cluster).unwrap();
         let obj = |p: &Placement| {
             NativeScorer.score(&traffic, p, &cluster).unwrap().objective(nic_bw)
@@ -298,7 +311,7 @@ mod tests {
     #[test]
     fn refiner_with_rounds_and_custom_config() {
         let (traffic, w, cluster) = a2a(8);
-        let start = MapperKind::Blocked.build().map(&w, &cluster).unwrap();
+        let start = MapperKind::Blocked.build().map_workload(&w, &cluster).unwrap();
         // Zero rounds: seed + verify only, nothing changes.
         let rep = Refiner::with_rounds(0)
             .run(&NativeScorer, &traffic, &start, &w, &cluster)

@@ -36,6 +36,17 @@ struct Frame {
     touched: usize,
 }
 
+/// Per-node aggregates of one process's traffic row and column — the
+/// one-pass artifact behind [`LoadLedger::peek_batch`]. `out[n]`/`inc[n]`
+/// are the byte rates process `p` sends to / receives from processes hosted
+/// on node `n` (self-traffic excluded; it never touches a NIC).
+struct RowVols {
+    out: Vec<f64>,
+    inc: Vec<f64>,
+    out_tot: f64,
+    inc_tot: f64,
+}
+
 /// Incremental evaluator over one traffic matrix and cluster.
 ///
 /// Owns the working placement (cores + derived nodes + free-core map) so
@@ -257,6 +268,156 @@ impl<'a> LoadLedger<'a> {
         Ok(obj)
     }
 
+    /// Evaluate a batch of candidate moves without mutating the ledger,
+    /// returning one objective per move in input order.
+    ///
+    /// Candidates that share a primary process — all swaps/migrates of one
+    /// hot process, the shape the [`crate::coordinator::refine::Refiner`]
+    /// produces — amortize a **single pass** over that process's traffic
+    /// row/column into per-node aggregates. A migrate candidate is then an
+    /// O(nodes) delta; a swap candidate still walks its *partner's* row
+    /// once (the partner differs per candidate), so batching saves the
+    /// primary's row walk and the per-[`Self::peek`] load-vector
+    /// clone/snapshot — about half the row traffic of sequential peeks on
+    /// swap-heavy batches, not an asymptotic win. The per-primary
+    /// aggregates are the designated seam for a future SIMD/PJRT batched
+    /// cost artifact: a dense `2 × nodes` tensor per hot process of which
+    /// candidate evaluation is a pure function.
+    ///
+    /// Results equal sequential [`Self::peek`] calls exactly up to FP
+    /// associativity — and **bit for bit** for the integer-valued rates of
+    /// every builtin and testkit workload (the delta-evaluation invariant of
+    /// [`crate::cost`]); asserted by the ledger property tests and the
+    /// `perf_cost_model` bench. Invalid moves error exactly where the
+    /// sequential loop would (same checks, same messages, no partial state).
+    pub fn peek_batch(&self, moves: &[Move]) -> Result<Vec<f64>> {
+        let base_obj = self.objective();
+        let mut scratch = self.loads.clone();
+        let mut cached: Option<(ProcId, RowVols)> = None;
+        let mut objs = Vec::with_capacity(moves.len());
+        for &mv in moves {
+            let obj = match mv {
+                Move::Swap(a, b) => {
+                    if a >= self.len() || b >= self.len() {
+                        return Err(Error::mapping(format!("ledger: swap({a},{b}) out of range")));
+                    }
+                    if a == b {
+                        return Err(Error::mapping(format!(
+                            "ledger: swap of process {a} with itself"
+                        )));
+                    }
+                    let (na, nb) = (self.node_of[a], self.node_of[b]);
+                    if na == nb {
+                        base_obj
+                    } else {
+                        let va = self.primary_vols(&mut cached, a);
+                        Self::shift_vols(&mut scratch, va, na, nb);
+                        // The second relocation of the swap sees `a` already
+                        // on b's node — mirror it in b's aggregates.
+                        let vb = self.row_vols(b, Some((a, nb)));
+                        Self::shift_vols(&mut scratch, &vb, nb, na);
+                        let obj = scratch.objective(self.nic_bw);
+                        self.restore(&mut scratch, na, nb);
+                        obj
+                    }
+                }
+                Move::Migrate(p, core) => {
+                    if p >= self.len() {
+                        return Err(Error::mapping(format!("ledger: migrate of bad process {p}")));
+                    }
+                    if core >= self.used.len() {
+                        return Err(Error::mapping(format!("ledger: migrate to bad core {core}")));
+                    }
+                    if self.used[core] {
+                        return Err(Error::mapping(format!(
+                            "ledger: migrate target core {core} already occupied"
+                        )));
+                    }
+                    let (u, t) = (self.node_of[p], self.cluster.node_of_core(core));
+                    if u == t {
+                        base_obj
+                    } else {
+                        let vp = self.primary_vols(&mut cached, p);
+                        Self::shift_vols(&mut scratch, vp, u, t);
+                        let obj = scratch.objective(self.nic_bw);
+                        self.restore(&mut scratch, u, t);
+                        obj
+                    }
+                }
+            };
+            objs.push(obj);
+        }
+        Ok(objs)
+    }
+
+    /// Aggregates of the batch's primary process, computed once per process
+    /// and reused across its candidates.
+    fn primary_vols<'v>(
+        &self,
+        cached: &'v mut Option<(ProcId, RowVols)>,
+        p: ProcId,
+    ) -> &'v RowVols {
+        if cached.as_ref().map(|(q, _)| *q != p).unwrap_or(true) {
+            *cached = Some((p, self.row_vols(p, None)));
+        }
+        &cached.as_ref().expect("cache filled above").1
+    }
+
+    /// One pass over process `p`'s traffic row and column, bucketed by the
+    /// partner's node. `moved` temporarily re-homes one partner (the swap
+    /// peer mid-evaluation).
+    fn row_vols(&self, p: ProcId, moved: Option<(ProcId, NodeId)>) -> RowVols {
+        let nodes = self.cluster.nodes;
+        let mut v = RowVols {
+            out: vec![0.0; nodes],
+            inc: vec![0.0; nodes],
+            out_tot: 0.0,
+            inc_tot: 0.0,
+        };
+        for (j, &out) in self.traffic.row(p).iter().enumerate() {
+            if j == p {
+                continue; // self-traffic stays intra wherever p lands
+            }
+            let inc = self.traffic.get(j, p);
+            let mut nj = self.node_of[j];
+            if let Some((q, nq)) = moved {
+                if j == q {
+                    nj = nq;
+                }
+            }
+            if out > 0.0 {
+                v.out[nj] += out;
+                v.out_tot += out;
+            }
+            if inc > 0.0 {
+                v.inc[nj] += inc;
+                v.inc_tot += inc;
+            }
+        }
+        v
+    }
+
+    /// Apply the NIC-side effect of relocating the aggregated process from
+    /// node `u` to node `t` (`u != t`) onto `loads`. Matches the final values
+    /// of [`Self::relocate`]'s per-partner walk: traffic to/from partners on
+    /// `u` turns inter-node, traffic with partners on `t` turns intra-node,
+    /// everything else just changes endpoint. `intra` is left untouched — the
+    /// objective reads only the NIC sides.
+    fn shift_vols(loads: &mut NodeLoads, v: &RowVols, u: NodeId, t: NodeId) {
+        loads.nic_tx[u] = loads.nic_tx[u] - (v.out_tot - v.out[u]) + v.inc[u];
+        loads.nic_rx[u] = loads.nic_rx[u] - (v.inc_tot - v.inc[u]) + v.out[u];
+        loads.nic_tx[t] = loads.nic_tx[t] + (v.out_tot - v.out[t]) - v.inc[t];
+        loads.nic_rx[t] = loads.nic_rx[t] + (v.inc_tot - v.inc[t]) - v.out[t];
+    }
+
+    /// Reset the two touched nodes of `scratch` to the ledger's loads.
+    fn restore(&self, scratch: &mut NodeLoads, a: NodeId, b: NodeId) {
+        for n in [a, b] {
+            scratch.nic_tx[n] = self.loads.nic_tx[n];
+            scratch.nic_rx[n] = self.loads.nic_rx[n];
+        }
+    }
+
     /// Drop undo history (applied moves become permanent). Bounds memory in
     /// long refinement runs; [`Self::revert`] errors past this point.
     pub fn commit(&mut self) {
@@ -439,6 +600,55 @@ mod tests {
         // The peeked objective is the applied objective.
         ledger.apply(Move::Swap(0, 7)).unwrap();
         assert_eq!(ledger.objective().to_bits(), peeked.to_bits());
+    }
+
+    #[test]
+    fn peek_batch_matches_sequential_peeks_bitwise() {
+        let (t, _w, cluster) = setup();
+        let p = Placement::new((0..8).collect());
+        let mut ledger = LoadLedger::new(&NativeScorer, &t, &p, &cluster).unwrap();
+        // One hot process' worth of candidates: swaps (incl. a same-node
+        // partner) then migrates (incl. a same-node free core — none here,
+        // so a cross-node one), exactly the shape the refiner batches.
+        let moves = vec![
+            Move::Swap(0, 1), // same node: objective unchanged
+            Move::Swap(0, 4),
+            Move::Swap(0, 7),
+            Move::Migrate(0, 12),
+            Move::Migrate(0, 9),
+            Move::Swap(3, 6), // primary switch mid-batch
+        ];
+        let batch = ledger.peek_batch(&moves).unwrap();
+        assert_eq!(batch.len(), moves.len());
+        for (mv, obj) in moves.iter().zip(&batch) {
+            let seq = ledger.peek(*mv).unwrap();
+            assert_eq!(obj.to_bits(), seq.to_bits(), "{mv:?} diverged from peek");
+        }
+        // The batch is read-only: loads and occupancy are untouched.
+        let full = NativeScorer.score(&t, &ledger.placement(), &cluster).unwrap();
+        assert_loads_bits_eq(ledger.loads(), &full, "after peek_batch");
+        assert_eq!(ledger.depth(), 0);
+        // Empty batch is a no-op.
+        assert!(ledger.peek_batch(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn peek_batch_rejects_invalid_moves_like_apply() {
+        let (t, _w, cluster) = setup();
+        let p = Placement::new((0..8).collect());
+        let ledger = LoadLedger::new(&NativeScorer, &t, &p, &cluster).unwrap();
+        for bad in [
+            Move::Swap(0, 0),
+            Move::Swap(0, 99),
+            Move::Migrate(99, 8),
+            Move::Migrate(0, 999),
+            Move::Migrate(0, 1), // occupied target
+        ] {
+            assert!(
+                ledger.peek_batch(&[Move::Swap(0, 7), bad]).is_err(),
+                "{bad:?} must abort the batch"
+            );
+        }
     }
 
     #[test]

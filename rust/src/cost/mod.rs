@@ -12,10 +12,14 @@
 //!   scorer pass materializes the loads; afterwards a candidate
 //!   [`Move`] (swap or migrate) is applied/reverted in O(P) by
 //!   re-attributing only the moved processes' traffic rows, instead of the
-//!   O(P²) full recompute. This is the same insight that makes
-//!   mapping-quality search tractable on large topologies (arXiv:2005.10413)
-//!   and that the multi-core contention model of arXiv:0810.2150 motivates:
-//!   only the traffic rows of moved processes change per move.
+//!   O(P²) full recompute. [`LoadLedger::peek_batch`] goes one step
+//!   further: all candidates of one hot process are scored off a single
+//!   pass over its traffic rows (per-node aggregates), which is both the
+//!   refiner's inner loop and the seam for a future SIMD/PJRT batched
+//!   artifact. This is the same insight that makes mapping-quality search
+//!   tractable on large topologies (arXiv:2005.10413) and that the
+//!   multi-core contention model of arXiv:0810.2150 motivates: only the
+//!   traffic rows of moved processes change per move.
 //!
 //! ## Delta-evaluation invariant
 //!

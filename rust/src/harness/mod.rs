@@ -6,10 +6,19 @@
 //! ([`run_sweep`], via [`crate::par`]): every cell is an independent
 //! deterministic (map, simulate) pair, so the parallel sweep is
 //! bit-identical to the serial one in every reported metric — only
-//! wall-clock time changes. `nicmap bench --json` exposes the sweep from
-//! the CLI and records it as `BENCH_harness.json` ([`sweep_to_json`]).
+//! wall-clock time changes. Each workload's traffic/topology artifacts are
+//! built **once** into a shared [`MapCtx`] (`Arc`-shared across that row's
+//! cells and worker threads), so the sweep runs exactly one O(P²)
+//! traffic-matrix construction per workload no matter how many mappers are
+//! swept — asserted by `tests/mapctx_sweep.rs` via
+//! [`crate::model::traffic::TrafficMatrix::workload_builds`]. `nicmap bench
+//! --json` exposes the sweep from the CLI and records it as
+//! `BENCH_harness.json` ([`sweep_to_json`]).
+
+use std::sync::Arc;
 
 use crate::coordinator::{MapperKind, MapperSpec};
+use crate::ctx::MapCtx;
 use crate::error::Result;
 use crate::model::npb;
 use crate::model::topology::ClusterSpec;
@@ -115,39 +124,45 @@ impl WorkloadRun {
 }
 
 /// Map and simulate one (workload × mapper) cell — the unit of work the
-/// parallel sweep distributes.
+/// parallel sweep distributes. The cell *consumes* a prebuilt [`MapCtx`];
+/// building one here would defeat the sweep's one-construction-per-workload
+/// guarantee, so only the per-workload drivers build contexts.
 pub fn run_cell(
-    w: &Workload,
+    ctx: &MapCtx,
     cluster: &ClusterSpec,
     mapper: MapperSpec,
     cfg: &SimConfig,
 ) -> Result<Cell> {
     let t0 = std::time::Instant::now();
-    let placement = mapper.build().map(w, cluster)?;
+    let placement = mapper.build().map(ctx, cluster)?;
     let map_secs = t0.elapsed().as_secs_f64();
-    let report = simulate(w, &placement, cluster, cfg)?;
+    let report = simulate(ctx.workload(), &placement, cluster, cfg)?;
     Ok(Cell { mapper, report, map_secs })
 }
 
-/// Simulate one workload under `mappers` on `cluster` (serial).
+/// Simulate one workload under `mappers` on `cluster` (serial). Builds the
+/// workload's [`MapCtx`] once and reuses it for every mapper cell.
 pub fn run_workload(
     w: &Workload,
     cluster: &ClusterSpec,
     mappers: &[MapperSpec],
     cfg: &SimConfig,
 ) -> Result<WorkloadRun> {
+    let ctx = MapCtx::build(w);
     let mut cells = Vec::with_capacity(mappers.len());
     for &kind in mappers {
-        cells.push(run_cell(w, cluster, kind, cfg)?);
+        cells.push(run_cell(&ctx, cluster, kind, cfg)?);
     }
     Ok(WorkloadRun { workload: w.name.clone(), cells })
 }
 
 /// Sweep `workloads × mappers`, distributing cells over up to `threads`
-/// worker threads (`<= 1` = serial). Cells are independent and both the
-/// mappers and the simulator are deterministic, so the result is
-/// bit-identical to the serial sweep — in the same order — regardless of
-/// thread count; see [`SimReport::metrics_eq`].
+/// worker threads (`<= 1` = serial). One shared [`MapCtx`] is built per
+/// workload row and `Arc`-shared across all of that row's cells and worker
+/// threads. Cells are independent and both the mappers and the simulator
+/// are deterministic, so the result is bit-identical to the serial sweep —
+/// in the same order — regardless of thread count; see
+/// [`SimReport::metrics_eq`].
 pub fn run_sweep(
     workloads: &[Workload],
     cluster: &ClusterSpec,
@@ -155,11 +170,13 @@ pub fn run_sweep(
     cfg: &SimConfig,
     threads: usize,
 ) -> Result<Vec<WorkloadRun>> {
+    let ctxs: Vec<Arc<MapCtx>> = workloads.iter().map(MapCtx::shared).collect();
     let cells: Vec<(usize, MapperSpec)> = (0..workloads.len())
         .flat_map(|wi| mappers.iter().map(move |&m| (wi, m)))
         .collect();
     let results = crate::par::par_map(cells, threads, |(wi, mapper)| {
-        run_cell(&workloads[wi], cluster, mapper, cfg)
+        let ctx = Arc::clone(&ctxs[wi]);
+        run_cell(&ctx, cluster, mapper, cfg)
     });
     let mut runs: Vec<WorkloadRun> = workloads
         .iter()

@@ -7,7 +7,8 @@
 //! * **Layer 3 (Rust, this crate)** — the coordination contribution: the
 //!   paper's threshold-based mapping strategy ([`coordinator`]), the
 //!   baselines it is compared against (Blocked, Cyclic, DRB, K-way), the
-//!   cost layer with its incremental refinement ledger ([`cost`]) behind
+//!   shared per-workload artifact layer ([`ctx`]) every mapper consumes,
+//!   the cost layer with its incremental refinement ledger ([`cost`]) behind
 //!   the `+r` mapper variants, a deterministic discrete-event simulator of
 //!   the 16-node InfiniBand cluster the paper evaluates on ([`sim`]), and
 //!   the workload models ([`model`]) including an NPB communication
@@ -28,13 +29,16 @@
 //!
 //! ```no_run
 //! use nicmap::coordinator::{Mapper, MapperKind};
+//! use nicmap::ctx::MapCtx;
 //! use nicmap::model::topology::ClusterSpec;
 //! use nicmap::model::workload::Workload;
 //! use nicmap::sim::{simulate, SimConfig};
 //!
 //! let cluster = ClusterSpec::paper_cluster();
 //! let workload = Workload::builtin("synt3").unwrap();
-//! let placement = MapperKind::New.build().map(&workload, &cluster).unwrap();
+//! // Build the shared traffic/topology artifacts once, then map.
+//! let ctx = MapCtx::build(&workload);
+//! let placement = MapperKind::New.build().map(&ctx, &cluster).unwrap();
 //! let report = simulate(&workload, &placement, &cluster, &SimConfig::default()).unwrap();
 //! println!("waiting time: {:.1} ms", report.waiting_ms());
 //! ```
@@ -44,6 +48,7 @@
 pub mod cli;
 pub mod coordinator;
 pub mod cost;
+pub mod ctx;
 pub mod error;
 pub mod graph;
 pub mod harness;

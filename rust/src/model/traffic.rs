@@ -10,7 +10,18 @@
 //! * the AOT cost model (the Rust side pads this matrix into the artifact),
 //! * the DRB baseline's application graph.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::model::workload::{JobId, JobSpec, ProcId, Workload};
+
+/// Process-wide count of [`TrafficMatrix::of_workload`] constructions.
+///
+/// The full workload matrix is the single most expensive model artifact
+/// (O(P²)); the [`crate::ctx::MapCtx`] layer exists to build it exactly once
+/// per workload. This counter is the instrumentation that lets tests *prove*
+/// that guarantee (one increment per workload per sweep) instead of assuming
+/// it — see `tests/mapctx_sweep.rs`.
+static WORKLOAD_BUILDS: AtomicU64 = AtomicU64::new(0);
 
 /// Dense square traffic matrix in bytes/sec.
 #[derive(Debug, Clone, PartialEq)]
@@ -42,6 +53,7 @@ impl TrafficMatrix {
     /// jobs never communicate with each other, so the matrix is block
     /// diagonal in job order).
     pub fn of_workload(w: &Workload) -> Self {
+        WORKLOAD_BUILDS.fetch_add(1, Ordering::Relaxed);
         let mut t = Self::zeros(w.total_procs());
         for (jid, job) in w.jobs.iter().enumerate() {
             let off = w.job_offset(jid);
@@ -56,6 +68,15 @@ impl TrafficMatrix {
             }
         }
         t
+    }
+
+    /// Process-wide number of [`Self::of_workload`] constructions so far.
+    ///
+    /// Monotone counter for the one-build-per-workload guarantee of
+    /// [`crate::ctx::MapCtx`]; tests snapshot it around a sweep and assert
+    /// the delta. Per-job ([`Self::of_job`]) builds are not counted.
+    pub fn workload_builds() -> u64 {
+        WORKLOAD_BUILDS.load(Ordering::Relaxed)
     }
 
     /// Matrix dimension (process count).

@@ -3,7 +3,10 @@
 //! Mirrors `python/compile/kernels/ref.py::cost_model` exactly (same output
 //! order, same both-direction CD definition).  Used as the fallback scorer
 //! when `artifacts/` is missing and as the oracle integration tests compare
-//! the PJRT path against.
+//! the PJRT path against. Consumers hand it the shared
+//! [`crate::ctx::MapCtx`] traffic matrix (`ctx.traffic()`) — the scorer
+//! never derives its own copy, which is what keeps the evaluate/refine
+//! paths on exactly one matrix build per workload.
 
 use crate::coordinator::Placement;
 use crate::cost::{NodeLoads, Scorer};

@@ -266,7 +266,7 @@ mod tests {
 
     fn run(w: &Workload, kind: MapperKind) -> SimReport {
         let cluster = small();
-        let p = kind.build().map(w, &cluster).unwrap();
+        let p = kind.build().map_workload(w, &cluster).unwrap();
         simulate(w, &p, &cluster, &SimConfig::default()).unwrap()
     }
 
@@ -363,7 +363,7 @@ mod tests {
         )
         .unwrap();
         let cluster = small();
-        let p = MapperKind::Blocked.build().map(&w, &cluster).unwrap();
+        let p = MapperKind::Blocked.build().map_workload(&w, &cluster).unwrap();
         let cfg = SimConfig { max_events: 10, ..Default::default() };
         assert!(simulate(&w, &p, &cluster, &cfg).is_err());
     }
@@ -376,7 +376,7 @@ mod tests {
         )
         .unwrap();
         let cluster = small();
-        let p = MapperKind::Blocked.build().map(&w, &cluster).unwrap();
+        let p = MapperKind::Blocked.build().map_workload(&w, &cluster).unwrap();
         let r0 = simulate(&w, &p, &cluster, &SimConfig { stagger_ns: 0, ..Default::default() })
             .unwrap();
         let r1 = simulate(

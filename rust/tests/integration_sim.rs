@@ -22,7 +22,7 @@ fn scaled(mut w: Workload, rounds: u64) -> Workload {
 
 fn run(w: &Workload, kind: MapperKind) -> SimReport {
     let cluster = ClusterSpec::paper_cluster();
-    let p = kind.build().map(w, &cluster).unwrap();
+    let p = kind.build().map_workload(w, &cluster).unwrap();
     simulate(w, &p, &cluster, &SimConfig::default()).unwrap()
 }
 
@@ -89,7 +89,7 @@ fn finish_time_shape_synt4() {
     let w = scaled(Workload::synt_workload_4(), 60);
     let cluster = ClusterSpec::paper_cluster();
     let finish = |kind: MapperKind| {
-        let p = kind.build().map(&w, &cluster).unwrap();
+        let p = kind.build().map_workload(&w, &cluster).unwrap();
         simulate(&w, &p, &cluster, &SimConfig::default()).unwrap().workload_finish_s()
     };
     let b = finish(MapperKind::Blocked);
@@ -132,7 +132,7 @@ fn single_node_cluster_never_uses_nic() {
         vec![JobSpec::synthetic(Pattern::AllToAll, 4, 2 * MB, 50.0, 20)],
     )
     .unwrap();
-    let p = MapperKind::Blocked.build().map(&w, &cluster).unwrap();
+    let p = MapperKind::Blocked.build().map_workload(&w, &cluster).unwrap();
     let r = simulate(&w, &p, &cluster, &SimConfig::default()).unwrap();
     assert_eq!(r.wait_nic_ns, 0);
     assert!(r.wait_mem_ns > 0, "2 MB messages must contend at memory");
@@ -147,7 +147,7 @@ fn cache_path_used_for_small_intra_socket() {
     )
     .unwrap();
     // Blocked puts ranks 0,1 in the same socket.
-    let p = MapperKind::Blocked.build().map(&w, &cluster).unwrap();
+    let p = MapperKind::Blocked.build().map_workload(&w, &cluster).unwrap();
     let r = simulate(&w, &p, &cluster, &SimConfig::default()).unwrap();
     assert_eq!(r.wait_nic_ns + r.wait_mem_ns, 0, "pure cache traffic");
 }

@@ -1,0 +1,191 @@
+//! Acceptance tests for the shared `MapCtx` artifact layer (ISSUE 3):
+//!
+//! * the harness sweep builds **exactly one** full workload traffic matrix
+//!   per workload, no matter how many mappers are swept or how many worker
+//!   threads run (counting-constructor assertion via
+//!   [`TrafficMatrix::workload_builds`]);
+//! * per-job matrices in the ctx sum bitwise to the full workload matrix
+//!   over seeded testkit workloads (block-diagonal property);
+//! * the ctx-threaded sweep is metric-bit-identical to the per-workload
+//!   driver and to one-shot `map_workload` cells, serial and threaded — the
+//!   goldens `tests/harness_parallel.rs` pins are reproduced through the
+//!   new path.
+//!
+//! Every test that (transitively) constructs a workload matrix serializes
+//! on one mutex: `workload_builds` is a process-wide counter and this file
+//! is its own test binary, so the lock is all the isolation the counting
+//! assertions need.
+
+use std::sync::Mutex;
+
+use nicmap::coordinator::{MapperKind, MapperSpec};
+use nicmap::ctx::MapCtx;
+use nicmap::harness::{run_cell, run_sweep, run_workload, sweeps_identical};
+use nicmap::model::topology::ClusterSpec;
+use nicmap::model::traffic::TrafficMatrix;
+use nicmap::model::workload::Workload;
+use nicmap::sim::SimConfig;
+use nicmap::testkit::{forall, gen};
+
+static COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+fn counter_guard() -> std::sync::MutexGuard<'static, ()> {
+    COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Builtin workload with every flow capped to `rounds` rounds.
+fn scaled(name: &str, rounds: u64) -> Workload {
+    let mut w = Workload::builtin(name).unwrap();
+    nicmap::harness::cap_rounds(&mut w, rounds);
+    w
+}
+
+#[test]
+fn sweep_builds_exactly_one_traffic_matrix_per_workload() {
+    let _guard = counter_guard();
+    let cluster = ClusterSpec::paper_cluster();
+    let cfg = SimConfig::default();
+    let workloads = vec![scaled("synt4", 5), scaled("real4", 5)];
+
+    // The full 8-column sweep (4 base mappers + their `+r` variants, which
+    // additionally run the traffic-hungry refinement stage), threaded.
+    let before = TrafficMatrix::workload_builds();
+    let runs = run_sweep(&workloads, &cluster, &MapperSpec::PAPER_REFINED, &cfg, 4).unwrap();
+    let delta = TrafficMatrix::workload_builds() - before;
+    assert_eq!(runs.len(), 2);
+    assert_eq!(runs[0].cells.len(), 8);
+    assert_eq!(
+        delta,
+        workloads.len() as u64,
+        "a sweep must build the workload matrix exactly once per workload"
+    );
+
+    // The serial per-workload driver holds the same guarantee.
+    let before = TrafficMatrix::workload_builds();
+    let run = run_workload(&workloads[0], &cluster, &MapperSpec::PAPER_REFINED, &cfg).unwrap();
+    assert_eq!(run.cells.len(), 8);
+    assert_eq!(TrafficMatrix::workload_builds() - before, 1);
+}
+
+#[test]
+fn mappers_and_refiner_reuse_the_ctx_matrix() {
+    let _guard = counter_guard();
+    let cluster = ClusterSpec::paper_cluster();
+    let w = scaled("real4", 5);
+    let ctx = MapCtx::build(&w);
+
+    // Once a ctx exists, no mapper — including every `+r` variant, whose
+    // refinement stage is the heaviest traffic consumer — may rebuild the
+    // workload matrix.
+    let before = TrafficMatrix::workload_builds();
+    for spec in MapperSpec::PAPER_REFINED {
+        let p = spec.build().map(&ctx, &cluster).unwrap();
+        p.validate(&w, &cluster).unwrap();
+    }
+    assert_eq!(
+        TrafficMatrix::workload_builds(),
+        before,
+        "mapping through a shared ctx must not rebuild the traffic matrix"
+    );
+
+    // And a cell driven through the harness on that ctx stays build-free.
+    let before = TrafficMatrix::workload_builds();
+    run_cell(&ctx, &cluster, MapperSpec::plus_r(MapperKind::New), &SimConfig::default()).unwrap();
+    assert_eq!(TrafficMatrix::workload_builds(), before);
+}
+
+#[test]
+fn per_job_matrices_sum_bitwise_to_full_matrix() {
+    let _guard = counter_guard();
+    forall(0x3C7_0000, 25, |rng| {
+        let cluster = gen::cluster(rng);
+        let w = gen::workload(rng, &cluster);
+        let ctx = MapCtx::build(&w);
+        let full = ctx.traffic();
+        let procs = w.total_procs();
+        // Reassemble the block diagonal from the per-job views; every entry
+        // must match the full matrix bit for bit (same `of_job` arithmetic,
+        // same accumulation order).
+        let mut seen = vec![false; procs * procs];
+        for (jid, job) in w.jobs.iter().enumerate() {
+            let off = w.job_offset(jid);
+            let jt = ctx.job_traffic(jid);
+            assert_eq!(jt.len(), job.procs);
+            for i in 0..job.procs {
+                for j in 0..job.procs {
+                    assert_eq!(
+                        jt.get(i, j).to_bits(),
+                        full.get(off + i, off + j).to_bits(),
+                        "job {jid} entry ({i},{j}) drifted from the workload matrix"
+                    );
+                    seen[(off + i) * procs + off + j] = true;
+                }
+            }
+        }
+        // Everything outside the blocks is exactly zero (jobs never
+        // communicate across job boundaries).
+        for i in 0..procs {
+            for j in 0..procs {
+                if !seen[i * procs + j] {
+                    assert_eq!(full.get(i, j), 0.0, "cross-job entry ({i},{j}) nonzero");
+                }
+            }
+        }
+        // The cached per-process rates and job index agree with the matrix.
+        for p in 0..procs {
+            let row_sum: f64 = full.row(p).iter().sum();
+            assert_eq!(ctx.tx_rate(p).to_bits(), row_sum.to_bits());
+            let col_sum: f64 = (0..procs).map(|j| full.get(j, p)).sum();
+            assert_eq!(ctx.rx_rate(p).to_bits(), col_sum.to_bits());
+            assert_eq!(ctx.job_of(p), w.job_of_proc(p).0);
+        }
+    });
+}
+
+#[test]
+fn ctx_sweep_metrics_bit_identical_serial_threaded_and_one_shot() {
+    let _guard = counter_guard();
+    let cluster = ClusterSpec::paper_cluster();
+    let cfg = SimConfig::default();
+    let workloads: Vec<Workload> =
+        ["synt1", "synt3", "real4"].iter().map(|n| scaled(n, 8)).collect();
+    let mappers = [
+        MapperSpec::plain(MapperKind::Blocked),
+        MapperSpec::plus_r(MapperKind::Blocked),
+        MapperSpec::plain(MapperKind::Drb),
+        MapperSpec::plain(MapperKind::New),
+        MapperSpec::plus_r(MapperKind::New),
+    ];
+
+    let serial = run_sweep(&workloads, &cluster, &mappers, &cfg, 1).unwrap();
+    for threads in [2, 8] {
+        let parallel = run_sweep(&workloads, &cluster, &mappers, &cfg, threads).unwrap();
+        assert!(
+            sweeps_identical(&serial, &parallel),
+            "ctx sweep with {threads} threads diverged from serial"
+        );
+    }
+
+    // Golden cross-check against two independent routes: the per-workload
+    // driver (its own ctx per call) and hand-built one-shot map_workload
+    // cells (a throwaway ctx per cell). All three must agree on every
+    // deterministic metric, bit for bit.
+    for (run, w) in serial.iter().zip(&workloads) {
+        let direct = run_workload(w, &cluster, &mappers, &cfg).unwrap();
+        assert_eq!(run.workload, direct.workload);
+        for (a, b) in run.cells.iter().zip(&direct.cells) {
+            assert_eq!(a.mapper, b.mapper);
+            assert!(a.report.metrics_eq(&b.report), "{}/{} drifted", run.workload, a.mapper);
+        }
+        for cell in &run.cells {
+            let placement = cell.mapper.build().map_workload(w, &cluster).unwrap();
+            let report = nicmap::sim::simulate(w, &placement, &cluster, &cfg).unwrap();
+            assert!(
+                cell.report.metrics_eq(&report),
+                "{}/{}: shared-ctx cell drifted from one-shot map_workload",
+                run.workload,
+                cell.mapper
+            );
+        }
+    }
+}

@@ -16,7 +16,7 @@ fn every_mapper_yields_valid_placements() {
         for kind in MapperKind::ALL {
             let p = kind
                 .build()
-                .map(&w, &cluster)
+                .map_workload(&w, &cluster)
                 .unwrap_or_else(|e| panic!("{kind} failed: {e}"));
             p.validate(&w, &cluster).unwrap_or_else(|e| panic!("{kind}: {e}"));
         }
@@ -29,8 +29,8 @@ fn mappers_are_deterministic() {
         let cluster = gen::cluster(rng);
         let w = gen::workload(rng, &cluster);
         for kind in MapperKind::ALL {
-            let a = kind.build().map(&w, &cluster).unwrap();
-            let b = kind.build().map(&w, &cluster).unwrap();
+            let a = kind.build().map_workload(&w, &cluster).unwrap();
+            let b = kind.build().map_workload(&w, &cluster).unwrap();
             assert_eq!(a, b, "{kind} nondeterministic");
         }
     });
@@ -119,6 +119,52 @@ fn waiting_time_never_negative_and_scales_with_load() {
 // `ledger_tracks_random_move_sequences_bit_for_bit`) — not duplicated here.
 
 #[test]
+fn peek_batch_bitwise_equals_sequential_peeks_over_seeded_moves() {
+    // The batched evaluator must agree with one `peek` per candidate bit
+    // for bit on integer-rate testkit workloads (crate::cost invariant),
+    // across varied ledger states: refiner-shaped single-primary batches,
+    // mixed-primary batches, and batches taken after applied moves.
+    use nicmap::cost::{LoadLedger, Move};
+    forall(0x17_0000, 15, |rng| {
+        let cluster = gen::cluster(rng);
+        let w = gen::workload(rng, &cluster);
+        let t = TrafficMatrix::of_workload(&w);
+        let start = gen::placement(rng, &w, &cluster);
+        let mut ledger = LoadLedger::new(&NativeScorer, &t, &start, &cluster).unwrap();
+        let procs = w.total_procs();
+        for _round in 0..4 {
+            let a = rng.below(procs as u64) as usize;
+            let c = rng.below(procs as u64) as usize;
+            let free: Vec<usize> =
+                (0..cluster.total_cores()).filter(|&core| ledger.is_free(core)).collect();
+            // All of `a`'s swaps and migrates (the refiner's batch shape),
+            // then a second primary's swaps (mid-batch primary switch).
+            let mut moves: Vec<Move> =
+                (0..procs).filter(|&b| b != a).map(|b| Move::Swap(a, b)).collect();
+            moves.extend(free.iter().map(|&core| Move::Migrate(a, core)));
+            moves.extend((0..procs).filter(|&b| b != c).map(|b| Move::Swap(c, b)));
+            let batch = ledger.peek_batch(&moves).unwrap();
+            assert_eq!(batch.len(), moves.len());
+            for (mv, obj) in moves.iter().zip(&batch) {
+                let seq = ledger.peek(*mv).unwrap();
+                assert_eq!(
+                    obj.to_bits(),
+                    seq.to_bits(),
+                    "{mv:?}: batched objective diverged from sequential peek"
+                );
+            }
+            // Shift the ledger state before the next round.
+            let b = rng.below(procs as u64) as usize;
+            if b != a {
+                ledger.apply(Move::Swap(a, b)).unwrap();
+            } else if let Some(&core) = free.first() {
+                ledger.apply(Move::Migrate(a, core)).unwrap();
+            }
+        }
+    });
+}
+
+#[test]
 fn refined_mappers_yield_valid_placements_and_never_worse_objectives() {
     // The +r combinator must keep every structural invariant of its base
     // mapper and can only improve (or match) the cost-model objective.
@@ -129,8 +175,8 @@ fn refined_mappers_yield_valid_placements_and_never_worse_objectives() {
         let t = TrafficMatrix::of_workload(&w);
         let nic_bw = cluster.nic_bw as f64;
         for base in [MapperKind::Blocked, MapperKind::Cyclic, MapperKind::New] {
-            let plain = base.build().map(&w, &cluster).unwrap();
-            let refined = MapperSpec::plus_r(base).build().map(&w, &cluster).unwrap();
+            let plain = base.build().map_workload(&w, &cluster).unwrap();
+            let refined = MapperSpec::plus_r(base).build().map_workload(&w, &cluster).unwrap();
             refined
                 .validate(&w, &cluster)
                 .unwrap_or_else(|e| panic!("{base}+r invalid: {e}"));
@@ -166,7 +212,7 @@ fn new_strategy_threshold_cap_respected_for_single_a2a_jobs() {
         .unwrap();
         let t = TrafficMatrix::of_workload(&w);
         let cap = eq2(&t, cluster.nodes);
-        let p = MapperKind::New.build().map(&w, &cluster).unwrap();
+        let p = MapperKind::New.build().map_workload(&w, &cluster).unwrap();
         let counts: Vec<usize> = (0..cluster.nodes)
             .map(|n| (0..procs).filter(|&g| p.node_of(g, &cluster) == n).count())
             .collect();

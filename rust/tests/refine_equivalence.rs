@@ -104,7 +104,7 @@ fn seeded_256() -> (TrafficMatrix, Workload, ClusterSpec, Placement) {
     let w = Workload::builtin("synt1").unwrap(); // 256 processes, Table 4
     assert_eq!(w.total_procs(), 256);
     let traffic = TrafficMatrix::of_workload(&w);
-    let start = MapperKind::Blocked.build().map(&w, &cluster).unwrap();
+    let start = MapperKind::Blocked.build().map_workload(&w, &cluster).unwrap();
     (traffic, w, cluster, start)
 }
 
@@ -246,7 +246,7 @@ fn refine_survives_nan_scoring_without_panicking() {
     )
     .unwrap();
     let traffic = TrafficMatrix::of_workload(&w);
-    let start = MapperKind::Blocked.build().map(&w, &cluster).unwrap();
+    let start = MapperKind::Blocked.build().map_workload(&w, &cluster).unwrap();
     let rep = refine(&NanScorer, &traffic, &start, &w, &cluster, 4).unwrap();
     assert_eq!(rep.moves, 0, "NaN objectives must never be accepted as improvements");
     assert_eq!(rep.placement, start);

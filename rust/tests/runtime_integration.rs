@@ -49,7 +49,7 @@ fn pjrt_matches_native_on_paper_workloads() {
         let w = Workload::builtin(name).unwrap();
         let traffic = TrafficMatrix::of_workload(&w);
         for kind in MapperKind::PAPER {
-            let p = kind.build().map(&w, &cluster).unwrap();
+            let p = kind.build().map_workload(&w, &cluster).unwrap();
             let pjrt = scorer.score(&traffic, &p, &cluster).unwrap();
             let native = NativeScorer.score(&traffic, &p, &cluster).unwrap();
             // f32 artifact vs f64 native: 1e-4 relative.
@@ -67,7 +67,7 @@ fn pjrt_full_outputs_match_native() {
     let cluster = ClusterSpec::paper_cluster();
     let w = Workload::builtin("synt3").unwrap();
     let traffic = TrafficMatrix::of_workload(&w);
-    let p = MapperKind::New.build().map(&w, &cluster).unwrap();
+    let p = MapperKind::New.build().map_workload(&w, &cluster).unwrap();
     let out = scorer.evaluate(&traffic, &p, &cluster).unwrap();
     let native = nicmap::runtime::native::cost_model(&traffic, &p, &cluster);
     assert_close(&out.node_traffic, &native.node_traffic, 1e-4, "M");
@@ -104,7 +104,7 @@ fn compile_cache_reused_across_calls() {
     )
     .unwrap();
     let traffic = TrafficMatrix::of_workload(&w);
-    let p = MapperKind::Blocked.build().map(&w, &cluster).unwrap();
+    let p = MapperKind::Blocked.build().map_workload(&w, &cluster).unwrap();
     scorer.score(&traffic, &p, &cluster).unwrap();
     let after_first = s.compiled_count();
     for _ in 0..5 {
@@ -126,7 +126,7 @@ fn refine_with_pjrt_scorer_improves_blocked_a2a() {
     )
     .unwrap();
     let traffic = TrafficMatrix::of_workload(&w);
-    let start = MapperKind::Blocked.build().map(&w, &cluster).unwrap();
+    let start = MapperKind::Blocked.build().map_workload(&w, &cluster).unwrap();
     let rep = refine(&scorer, &traffic, &start, &w, &cluster, 8).unwrap();
     assert!(rep.after < rep.before, "refinement must improve saturated Blocked a2a");
     rep.placement.validate(&w, &cluster).unwrap();
@@ -148,11 +148,11 @@ fn batched_scoring_matches_sequential() {
     // A mixed bag of candidates, more than one batch worth.
     let mut placements = Vec::new();
     for kind in MapperKind::ALL {
-        placements.push(kind.build().map(&w, &cluster).unwrap());
+        placements.push(kind.build().map_workload(&w, &cluster).unwrap());
     }
     for seed in 0..15 {
         placements.push(
-            nicmap::coordinator::random::RandomMap::new(seed).map(&w, &cluster).unwrap(),
+            nicmap::coordinator::random::RandomMap::new(seed).map_workload(&w, &cluster).unwrap(),
         );
     }
     let refs: Vec<&Placement> = placements.iter().collect();
