@@ -1,0 +1,64 @@
+//! Perf pass for the online mapping service: replay churn-heavy scenarios
+//! across mappers, report events/sec and time-to-place, and **assert** the
+//! serial-vs-threaded determinism contract and the one-build-per-admitted-
+//! job invariant while we are here (plain main — criterion is not vendored
+//! offline).
+
+use std::time::Instant;
+
+use nicmap::coordinator::{MapperKind, MapperSpec};
+use nicmap::harness::{replays_identical, run_replay};
+use nicmap::model::topology::ClusterSpec;
+use nicmap::model::traffic::TrafficMatrix;
+use nicmap::online::{ArrivalTrace, ReplayConfig};
+
+fn main() {
+    let cluster = ClusterSpec::paper_cluster();
+    let mappers = [
+        MapperSpec::plain(MapperKind::Blocked),
+        MapperSpec::plain(MapperKind::Cyclic),
+        MapperSpec::plain(MapperKind::New),
+        MapperSpec::plus_r(MapperKind::New),
+    ];
+    let cfg = ReplayConfig::default();
+
+    println!("perf_online_replay: {} mappers, scenarios smoke/steady/churn/burst", mappers.len());
+    for scenario in ArrivalTrace::builtin_names() {
+        let trace = ArrivalTrace::builtin(scenario).expect("builtin scenario");
+        let admitted_bound = trace.arrivals() as u64;
+
+        let before = TrafficMatrix::workload_builds();
+        let t0 = Instant::now();
+        let threaded = run_replay(&trace, &cluster, &mappers, &cfg, 4).expect("threaded replay");
+        let threaded_secs = t0.elapsed().as_secs_f64();
+        let builds = TrafficMatrix::workload_builds() - before;
+
+        let t1 = Instant::now();
+        let serial = run_replay(&trace, &cluster, &mappers, &cfg, 1).expect("serial replay");
+        let serial_secs = t1.elapsed().as_secs_f64();
+
+        assert!(
+            replays_identical(&serial, &threaded),
+            "{scenario}: threaded churn metrics diverged from serial"
+        );
+        // One workload-matrix build per admitted job per mapper cell, and
+        // never more (departures/refinement build nothing).
+        let admitted: u64 = threaded.iter().map(|r| r.placed() as u64).sum();
+        assert_eq!(
+            builds, admitted,
+            "{scenario}: workload-matrix builds ({builds}) != admitted jobs ({admitted})"
+        );
+        assert!(admitted <= admitted_bound * mappers.len() as u64);
+
+        let events: usize = threaded.iter().map(|r| r.events.len()).sum();
+        let migrations: usize = threaded.iter().map(|r| r.total_migrations()).sum();
+        let place_secs: f64 = threaded.iter().map(|r| r.time_to_place_secs()).sum();
+        println!(
+            "{scenario:>7}: {events} events | {migrations} migrations | \
+             place {place_secs:.4}s | 4-thread {threaded_secs:.3}s vs serial {serial_secs:.3}s \
+             ({:.0} events/s threaded)",
+            events as f64 / threaded_secs.max(1e-9)
+        );
+    }
+    println!("determinism + build-count invariants held on all scenarios");
+}

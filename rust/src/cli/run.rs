@@ -7,13 +7,14 @@ use crate::cost::{NodeLoads, Scorer};
 use crate::ctx::MapCtx;
 use crate::error::{Error, Result};
 use crate::harness::{
-    cap_rounds, render_figure, run_real, run_sweep, run_synthetic, run_workload, sweep_to_csv,
-    sweep_to_json, sweeps_identical, Metric,
+    cap_rounds, render_figure, replays_identical, run_real, run_replay, run_sweep,
+    run_synthetic, run_workload, sweep_to_csv, sweep_to_json, sweeps_identical, Metric,
 };
 use crate::model::spec;
 use crate::model::topology::ClusterSpec;
 use crate::model::traffic::TrafficMatrix;
 use crate::model::workload::Workload;
+use crate::online::{report as churn_report, ArrivalTrace, ReplayConfig};
 use crate::report::table::Table;
 use crate::runtime::NativeScorer;
 use crate::sim::SimConfig;
@@ -33,13 +34,23 @@ VERBS
              --json writes BENCH_harness.json, --csv the CSV sibling
   evaluate   --workload <name>              [--mapper ...] [--native] cost-model node loads
   refine     --workload <name>              [--mapper B] [--native] [--rounds K]
+  replay     --trace <smoke|steady|churn|burst|poisson:SEED:JOBS>
+             [--mappers N,N+r|all|all+r] [--threads K] [--compare-serial]
+             [--csv [FILE]] [--json [FILE]] [--sim-every K] [--sim-rounds R]
+             [--refine-rounds K] [--events]
+             stream job arrivals/departures through the online mapping
+             service; --csv/--json write CHURN_replay.{csv,json}; `all`
+             expands to the incremental strategies B,C,N (DRB/K-way have
+             no restricted variant)
   workload   <show> <name>                  print a builtin workload table
   artifacts                                 list AOT artifacts + PJRT platform
   help                                      this text
 
 Any mapper takes a `+r` suffix (B+r, C+r, D+r, N+r, ...) selecting the
 cost-model refinement stage after the base mapping; `--mappers all` is the
-paper's B,C,D,N and `--mappers all+r` interleaves their +r variants.
+paper's B,C,D,N and `--mappers all+r` interleaves their +r variants. For
+`replay`, `+r` selects a bounded per-event refinement pass instead, and the
+base must be an incremental strategy (B, C, N, or random).
 ";
 
 /// Entry point given parsed args; returns the process exit code.
@@ -51,6 +62,7 @@ pub fn main_with_args(args: Args) -> Result<()> {
         "bench" => cmd_bench(&args),
         "evaluate" => cmd_evaluate(&args),
         "refine" => cmd_refine(&args),
+        "replay" => cmd_replay(&args),
         "workload" => cmd_workload(&args),
         "artifacts" => cmd_artifacts(),
         "" | "help" | "-h" | "--help" => {
@@ -426,6 +438,130 @@ fn cmd_refine(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Stream an arrival trace through the online mapping service — the
+/// elastic sibling of `bench`: one full replay per mapper spec fanned out
+/// over worker threads, with an optional serial cross-check and churn
+/// CSV/JSON outputs.
+fn cmd_replay(args: &Args) -> Result<()> {
+    let trace = ArrivalTrace::builtin(args.require("trace")?)?;
+    let mapper_key = if args.get("mappers").is_some() { "mappers" } else { "mapper" };
+    // `all`/`all+r` expand to the *incremental* strategies only — DRB has
+    // no free-core-restricted variant, so the batch sweep's B,C,D,N set
+    // would make every `all` replay fail at service construction.
+    const INCREMENTAL: [MapperKind; 3] =
+        [MapperKind::Blocked, MapperKind::Cyclic, MapperKind::New];
+    let mappers: Vec<MapperSpec> = match args.get(mapper_key) {
+        // The online default: the paper strategy with and without the
+        // per-event refinement pass.
+        None => vec![MapperSpec::plain(MapperKind::New), MapperSpec::plus_r(MapperKind::New)],
+        Some("all") => INCREMENTAL.iter().map(|&k| MapperSpec::plain(k)).collect(),
+        Some("all+r") => INCREMENTAL
+            .iter()
+            .flat_map(|&k| [MapperSpec::plain(k), MapperSpec::plus_r(k)])
+            .collect(),
+        Some(list) => list.split(',').map(MapperSpec::parse).collect::<Result<Vec<_>>>()?,
+    };
+    let mut cfg = ReplayConfig::default();
+    if let Some(r) = args.get_parse::<usize>("refine-rounds")? {
+        cfg.refine_rounds = r;
+    }
+    if let Some(k) = args.get_parse::<usize>("sim-every")? {
+        cfg.sim_every = k;
+    }
+    if let Some(r) = args.get_parse::<u64>("sim-rounds")? {
+        cfg.sim_rounds = r;
+    }
+    let cluster = ClusterSpec::paper_cluster();
+    let threads = args.get_parse::<usize>("threads")?.unwrap_or_else(crate::par::default_threads);
+
+    println!(
+        "replay {}: {} events ({} arrivals) x {} mappers on {} threads",
+        trace.name,
+        trace.len(),
+        trace.arrivals(),
+        mappers.len(),
+        threads
+    );
+    let t0 = std::time::Instant::now();
+    let reports = run_replay(&trace, &cluster, &mappers, &cfg, threads)?;
+    let wall_secs = t0.elapsed().as_secs_f64();
+
+    if args.flag("compare-serial") {
+        let serial = run_replay(&trace, &cluster, &mappers, &cfg, 1)?;
+        if !replays_identical(&reports, &serial) {
+            return Err(Error::sim(
+                "threaded replay churn metrics diverge from the serial replay \
+                 (determinism bug)",
+            ));
+        }
+        println!("serial cross-check: churn metrics bit-identical");
+    }
+
+    let mut table = Table::new(vec![
+        "mapper",
+        "placed",
+        "rejected",
+        "departed",
+        "migrations",
+        "peak obj",
+        "final obj",
+        "place (s)",
+    ]);
+    for rep in &reports {
+        table.row(vec![
+            rep.mapper.clone(),
+            rep.placed().to_string(),
+            rep.rejected().to_string(),
+            rep.departed().to_string(),
+            rep.total_migrations().to_string(),
+            format!("{:.4e}", rep.peak_objective()),
+            format!("{:.4e}", rep.final_objective()),
+            format!("{:.4}", rep.time_to_place_secs()),
+        ]);
+    }
+    print!("{table}");
+    println!("replay wall: {wall_secs:.2}s on {threads} threads");
+
+    if args.flag("events") {
+        let mut ev_table = Table::new(vec![
+            "mapper", "seq", "at", "action", "job", "procs", "migr", "objective", "live",
+            "free",
+        ]);
+        for rep in &reports {
+            for e in &rep.events {
+                ev_table.row(vec![
+                    rep.mapper.clone(),
+                    e.seq.to_string(),
+                    crate::units::fmt_ns(e.at_ns),
+                    e.action.name().to_string(),
+                    e.job.clone(),
+                    e.procs.to_string(),
+                    e.migrations.to_string(),
+                    format!("{:.4e}", e.objective),
+                    e.live_procs.to_string(),
+                    e.free_cores.to_string(),
+                ]);
+            }
+        }
+        print!("{ev_table}");
+    }
+
+    let output_path = |key: &str, default: &str| match args.get(key) {
+        Some("true") => Some(default.to_string()),
+        Some(path) => Some(path.to_string()),
+        None => None,
+    };
+    if let Some(path) = output_path("csv", "CHURN_replay.csv") {
+        churn_report::churn_to_csv(&reports).write(std::path::Path::new(&path))?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = output_path("json", "CHURN_replay.json") {
+        std::fs::write(&path, churn_report::churn_to_json(&reports, threads, wall_secs))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn cmd_workload(args: &Args) -> Result<()> {
     let name = match args.positional.as_slice() {
         [cmd, name] if cmd == "show" => name,
@@ -567,6 +703,68 @@ mod tests {
         assert!(doc.contains("\"schema\":\"nicmap-bench-v1\""));
         assert!(doc.contains("\"workload\":\"real_workload_4\""));
         assert!(doc.contains("\"serial_wall_secs\":"));
+        // Satellite: run metadata makes the JSON self-describing.
+        assert!(doc.contains("\"mappers\":[\"Blocked\",\"New\"]"));
+        assert!(doc.contains("\"workloads\":[\"real_workload_4\"]"));
+        assert!(doc.contains("\"seed\":"));
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replay_verb_runs_and_writes_churn_outputs() {
+        let dir = std::env::temp_dir().join("nicmap_replay_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let csv_path = dir.join("CHURN_replay.csv");
+        let json_path = dir.join("CHURN_replay.json");
+        main_with_args(args(&[
+            "replay",
+            "--trace",
+            "poisson:5:4",
+            "--mappers",
+            "B,N+r",
+            "--threads",
+            "2",
+            "--compare-serial",
+            "--events",
+            "--sim-every",
+            "3",
+            "--csv",
+            csv_path.to_str().unwrap(),
+            "--json",
+            json_path.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let csv = std::fs::read_to_string(&csv_path).unwrap();
+        assert!(csv.starts_with("trace,mapper,seq,"));
+        assert!(csv.contains(",Blocked,"));
+        assert!(csv.contains(",New+r,"));
+        let doc = std::fs::read_to_string(&json_path).unwrap();
+        assert!(doc.contains("\"schema\":\"nicmap-replay-v1\""));
+        assert!(doc.contains("\"trace\":\"poisson:5:4\""));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replay_all_expands_to_incremental_strategies() {
+        // `all`/`all+r` must not include DRB/K-way (no incremental variant);
+        // both expansions have to run clean end to end.
+        main_with_args(args(&["replay", "--trace", "poisson:7:3", "--mappers", "all"])).unwrap();
+        main_with_args(args(&["replay", "--trace", "poisson:7:3", "--mappers", "all+r"]))
+            .unwrap();
+    }
+
+    #[test]
+    fn replay_verb_rejects_bad_inputs() {
+        assert!(main_with_args(args(&["replay"])).is_err(), "missing --trace");
+        assert!(main_with_args(args(&["replay", "--trace", "bogus"])).is_err());
+        assert!(
+            main_with_args(args(&["replay", "--trace", "poisson:5:3", "--mappers", "zz"]))
+                .is_err()
+        );
+        // DRB has no incremental variant: clean error, not a panic.
+        assert!(
+            main_with_args(args(&["replay", "--trace", "poisson:5:3", "--mappers", "D"]))
+                .is_err()
+        );
     }
 }

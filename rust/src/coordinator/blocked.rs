@@ -4,7 +4,8 @@
 //! another computing node is selected…" — minimum nodes, maximum cores per
 //! node.
 
-use crate::coordinator::{Mapper, Placement};
+use crate::coordinator::placement::Occupancy;
+use crate::coordinator::{IncrementalMapper, Mapper, Placement};
 use crate::ctx::MapCtx;
 use crate::error::{Error, Result};
 use crate::model::topology::ClusterSpec;
@@ -29,6 +30,38 @@ impl Mapper for Blocked {
         // Jobs in table order, ranks in order, cores in order: process g
         // simply takes core g.
         Ok(Placement::new((0..p).collect()))
+    }
+}
+
+impl IncrementalMapper for Blocked {
+    /// Restricted Blocked: take free cores in core order — on a live
+    /// cluster this fills the holes left by departed jobs first, then the
+    /// untouched tail, preserving the fill-first shape. Equal to
+    /// [`Mapper::map`] on an all-free occupancy.
+    fn map_into(
+        &self,
+        ctx: &MapCtx,
+        cluster: &ClusterSpec,
+        occ: &mut Occupancy<'_>,
+    ) -> Result<Placement> {
+        let p = ctx.len();
+        if p > occ.total_free() {
+            return Err(Error::mapping(format!(
+                "{p} processes exceed {} free cores",
+                occ.total_free()
+            )));
+        }
+        let mut core_of = Vec::with_capacity(p);
+        for core in 0..cluster.total_cores() {
+            if core_of.len() == p {
+                break;
+            }
+            if occ.is_free(core) {
+                occ.claim(core)?;
+                core_of.push(core);
+            }
+        }
+        Ok(Placement::new(core_of))
     }
 }
 

@@ -2,7 +2,8 @@
 //! computing nodes in a Round Robin fashion" — maximum nodes, minimum cores
 //! per node.
 
-use crate::coordinator::{Mapper, Placement};
+use crate::coordinator::placement::Occupancy;
+use crate::coordinator::{IncrementalMapper, Mapper, Placement};
 use crate::ctx::MapCtx;
 use crate::error::{Error, Result};
 use crate::model::topology::ClusterSpec;
@@ -36,6 +37,43 @@ impl Mapper for Cyclic {
             })
             .collect();
         Ok(Placement::new(cores))
+    }
+}
+
+impl IncrementalMapper for Cyclic {
+    /// Restricted Cyclic: round-robin over nodes, skipping nodes with no
+    /// free core, taking each visited node's first free core. Equal to
+    /// [`Mapper::map`] on an all-free occupancy.
+    fn map_into(
+        &self,
+        ctx: &MapCtx,
+        cluster: &ClusterSpec,
+        occ: &mut Occupancy<'_>,
+    ) -> Result<Placement> {
+        let p = ctx.len();
+        if p > occ.total_free() {
+            return Err(Error::mapping(format!(
+                "{p} processes exceed {} free cores",
+                occ.total_free()
+            )));
+        }
+        let nodes = cluster.nodes;
+        let mut core_of = Vec::with_capacity(p);
+        let mut cursor = 0usize;
+        while core_of.len() < p {
+            // p <= total_free guarantees some node still has a free core.
+            while occ.node_free(cursor % nodes) == 0 {
+                cursor += 1;
+            }
+            let node = cursor % nodes;
+            let core = occ
+                .free_core_in_node(node)
+                .ok_or_else(|| Error::mapping(format!("node {node} unexpectedly full")))?;
+            occ.claim(core)?;
+            core_of.push(core);
+            cursor += 1;
+        }
+        Ok(Placement::new(core_of))
     }
 }
 

@@ -31,7 +31,12 @@ use crate::error::{Error, Result};
 use crate::model::topology::ClusterSpec;
 use crate::model::workload::Workload;
 
-pub use placement::Placement;
+pub use placement::{Occupancy, Placement};
+
+/// Seed of the builtin [`random::RandomMap`] baseline (the `random` mapper
+/// of the CLI and figures) — stamped into `BENCH_harness.json` so bench
+/// trajectories are self-describing.
+pub const DEFAULT_RANDOM_SEED: u64 = 0x5eed;
 
 /// A process-mapping strategy.
 ///
@@ -54,6 +59,27 @@ pub trait Mapper {
     fn map_workload(&self, w: &Workload, cluster: &ClusterSpec) -> Result<Placement> {
         self.map(&MapCtx::build(w), cluster)
     }
+}
+
+/// A strategy that can place a workload onto a **partially occupied**
+/// cluster — the free-core-restricted entry point the online mapping
+/// service ([`crate::online`]) drives on every job arrival.
+///
+/// `map_into` must place every process of `ctx`'s workload on cores that
+/// are free in `occ`, claiming them as it goes; already-claimed cores (the
+/// live jobs' cores) are never touched. On an all-free occupancy the result
+/// must equal [`Mapper::map`] so the batch and streaming paths cannot
+/// drift. Implemented by Blocked, Cyclic, the paper strategy, and Random;
+/// the graph-partitioning baselines (DRB, K-way) have no restricted form
+/// and return a clean error from [`MapperKind::build_incremental`].
+pub trait IncrementalMapper: Mapper {
+    /// Place `ctx`'s processes on free cores of `occ`, claiming them.
+    fn map_into(
+        &self,
+        ctx: &MapCtx,
+        cluster: &ClusterSpec,
+        occ: &mut Occupancy<'_>,
+    ) -> Result<Placement>;
 }
 
 /// The strategies the paper's figures compare, by their figure letter.
@@ -132,8 +158,26 @@ impl MapperKind {
             MapperKind::Cyclic => Box::new(cyclic::Cyclic),
             MapperKind::Drb => Box::new(drb::Drb::default()),
             MapperKind::New => Box::new(new_strategy::NewStrategy::default()),
-            MapperKind::Random => Box::new(random::RandomMap::new(0x5eed)),
+            MapperKind::Random => Box::new(random::RandomMap::new(DEFAULT_RANDOM_SEED)),
             MapperKind::KWay => Box::new(kway::KWay::default()),
+        }
+    }
+
+    /// Instantiate the free-core-restricted (incremental) variant, used by
+    /// the online mapping service on job arrivals. The graph-partitioning
+    /// baselines repartition the whole application graph and therefore have
+    /// no restricted form — they error cleanly here.
+    pub fn build_incremental(&self) -> Result<Box<dyn IncrementalMapper>> {
+        match self {
+            MapperKind::Blocked => Ok(Box::new(blocked::Blocked)),
+            MapperKind::Cyclic => Ok(Box::new(cyclic::Cyclic)),
+            MapperKind::New => Ok(Box::new(new_strategy::NewStrategy::default())),
+            MapperKind::Random => Ok(Box::new(random::RandomMap::new(DEFAULT_RANDOM_SEED))),
+            MapperKind::Drb | MapperKind::KWay => Err(Error::mapping(format!(
+                "mapper {} has no incremental (free-core-restricted) variant; \
+                 use B, C, N, or random",
+                self.name()
+            ))),
         }
     }
 }
@@ -319,6 +363,167 @@ mod tests {
         for pair in MapperSpec::PAPER_REFINED.chunks(2) {
             assert_eq!(pair[0].base, pair[1].base);
             assert!(!pair[0].refined && pair[1].refined);
+        }
+    }
+
+    /// On an all-free cluster the incremental entry point must reproduce
+    /// the batch mapper exactly — the no-drift contract of
+    /// [`IncrementalMapper`].
+    #[test]
+    fn incremental_equals_batch_on_empty_occupancy() {
+        let cluster = ClusterSpec::paper_cluster();
+        for name in ["synt3", "real4"] {
+            let w = Workload::builtin(name).unwrap();
+            let ctx = crate::ctx::MapCtx::build(&w);
+            for kind in [
+                MapperKind::Blocked,
+                MapperKind::Cyclic,
+                MapperKind::New,
+                MapperKind::Random,
+            ] {
+                let batch = kind.build().map(&ctx, &cluster).unwrap();
+                let mut occ = Occupancy::new(&cluster);
+                let inc = kind
+                    .build_incremental()
+                    .unwrap()
+                    .map_into(&ctx, &cluster, &mut occ)
+                    .unwrap();
+                assert_eq!(batch, inc, "{kind} on {name}: restricted path drifted");
+                assert_eq!(
+                    occ.total_free(),
+                    cluster.total_cores() - w.total_procs(),
+                    "{kind} on {name}: claimed-core accounting"
+                );
+            }
+        }
+    }
+
+    /// Restricted mapping never touches claimed cores and errors cleanly
+    /// when the free pool is too small.
+    #[test]
+    fn incremental_respects_occupied_cores() {
+        let cluster = ClusterSpec::small_test_cluster(); // 16 cores
+        let w = Workload::new(
+            "t",
+            vec![crate::model::workload::JobSpec::synthetic(
+                crate::model::pattern::Pattern::AllToAll,
+                6,
+                64_000,
+                10.0,
+                100,
+            )],
+        )
+        .unwrap();
+        let ctx = crate::ctx::MapCtx::build(&w);
+        let taken = [0usize, 1, 5, 9, 13];
+        for kind in [
+            MapperKind::Blocked,
+            MapperKind::Cyclic,
+            MapperKind::New,
+            MapperKind::Random,
+        ] {
+            let mut occ = Occupancy::new(&cluster);
+            for &c in &taken {
+                occ.claim(c).unwrap();
+            }
+            let p = kind
+                .build_incremental()
+                .unwrap()
+                .map_into(&ctx, &cluster, &mut occ)
+                .unwrap();
+            assert_eq!(p.len(), 6, "{kind}");
+            let mut seen = std::collections::BTreeSet::new();
+            for &c in &p.core_of {
+                assert!(!taken.contains(&c), "{kind} placed on claimed core {c}");
+                assert!(seen.insert(c), "{kind} double-used core {c}");
+            }
+            // 11 free cores, 12 processes: must error, not panic.
+            let w12 = Workload::new(
+                "t12",
+                vec![crate::model::workload::JobSpec::synthetic(
+                    crate::model::pattern::Pattern::Linear,
+                    12,
+                    1000,
+                    1.0,
+                    10,
+                )],
+            )
+            .unwrap();
+            let ctx12 = crate::ctx::MapCtx::build(&w12);
+            let mut occ = Occupancy::new(&cluster);
+            for &c in &taken {
+                occ.claim(c).unwrap();
+            }
+            assert!(
+                kind.build_incremental()
+                    .unwrap()
+                    .map_into(&ctx12, &cluster, &mut occ)
+                    .is_err(),
+                "{kind} must reject an overfull restricted mapping"
+            );
+        }
+    }
+
+    #[test]
+    fn partitioners_have_no_incremental_variant() {
+        for kind in [MapperKind::Drb, MapperKind::KWay] {
+            let err = kind.build_incremental().err().expect("must error");
+            assert!(err.to_string().contains("no incremental"), "{err}");
+        }
+        for kind in
+            [MapperKind::Blocked, MapperKind::Cyclic, MapperKind::New, MapperKind::Random]
+        {
+            assert!(kind.build_incremental().is_ok(), "{kind}");
+        }
+    }
+
+    /// Degenerate inputs must produce clean results or clean errors, never
+    /// index panics: an empty workload, a single-node cluster, and a
+    /// workload larger than the cluster.
+    #[test]
+    fn degenerate_inputs_never_panic() {
+        // Empty workload (constructible directly; `Workload::new` rejects it
+        // but mappers must still not panic on one).
+        let empty = Workload { name: "empty".into(), jobs: vec![] };
+        let ctx = crate::ctx::MapCtx::build(&empty);
+        let cluster = ClusterSpec::small_test_cluster();
+        for kind in MapperKind::ALL {
+            match kind.build().map(&ctx, &cluster) {
+                Ok(p) => assert!(p.is_empty(), "{kind}"),
+                Err(e) => assert!(!e.to_string().is_empty(), "{kind}"),
+            }
+        }
+        // Single-node cluster: everything lands on node 0.
+        let one = ClusterSpec { nodes: 1, ..ClusterSpec::small_test_cluster() };
+        one.validate().unwrap();
+        let w = Workload::new(
+            "t",
+            vec![crate::model::workload::JobSpec::synthetic(
+                crate::model::pattern::Pattern::AllToAll,
+                4,
+                64_000,
+                10.0,
+                100,
+            )],
+        )
+        .unwrap();
+        let ctx1 = crate::ctx::MapCtx::build(&w);
+        for kind in MapperKind::ALL {
+            let p = kind.build().map(&ctx1, &one).unwrap_or_else(|e| panic!("{kind}: {e}"));
+            p.validate(&w, &one).unwrap();
+        }
+        // More processes than cores: clean error everywhere (also checked by
+        // `overfull_workload_rejected` for the batch path; here the
+        // incremental one).
+        let big = Workload::synt_workload_1();
+        let ctx_big = crate::ctx::MapCtx::build(&big);
+        for kind in [MapperKind::Blocked, MapperKind::Cyclic, MapperKind::New] {
+            let mut occ = Occupancy::new(&one);
+            assert!(kind
+                .build_incremental()
+                .unwrap()
+                .map_into(&ctx_big, &one, &mut occ)
+                .is_err());
         }
     }
 

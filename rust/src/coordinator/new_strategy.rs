@@ -23,7 +23,7 @@
 
 use crate::coordinator::placement::{Occupancy, Placement};
 use crate::coordinator::threshold::{decide_with_avg, Threshold};
-use crate::coordinator::Mapper;
+use crate::coordinator::{IncrementalMapper, Mapper};
 use crate::ctx::MapCtx;
 use crate::error::{Error, Result};
 use crate::model::topology::{ClusterSpec, NodeId};
@@ -200,23 +200,27 @@ impl NewStrategy {
     }
 }
 
-impl Mapper for NewStrategy {
-    fn name(&self) -> &'static str {
-        "New"
-    }
-
-    fn map(&self, ctx: &MapCtx, cluster: &ClusterSpec) -> Result<Placement> {
+impl NewStrategy {
+    /// Map every job of `ctx` into the provided occupancy — the shared core
+    /// of the batch [`Mapper::map`] path (fresh occupancy) and the online
+    /// free-core-restricted path (live occupancy with claimed cores). The
+    /// paper's per-job state (threshold, CD order, anchors) is computed the
+    /// same way in both; `FreeCores_avg` naturally reads the live free map.
+    fn map_with_occ(
+        &self,
+        ctx: &MapCtx,
+        cluster: &ClusterSpec,
+        occ: &mut Occupancy<'_>,
+    ) -> Result<Placement> {
         let w = ctx.workload();
         let p = ctx.len();
-        if p > cluster.total_cores() {
+        if p > occ.total_free() {
             return Err(Error::mapping(format!(
-                "{p} processes exceed {} cores",
-                cluster.total_cores()
+                "{p} processes exceed {} free cores",
+                occ.total_free()
             )));
         }
         let order = self.job_order(ctx);
-
-        let mut occ = Occupancy::new(cluster);
         let mut core_of = vec![usize::MAX; p];
         for jid in order {
             let mut st = JobState {
@@ -226,9 +230,30 @@ impl Mapper for NewStrategy {
                 per_node: vec![0; cluster.nodes],
                 unmapped: (0..w.jobs[jid].procs).collect(),
             };
-            self.map_job(&mut st, &mut occ, cluster, &mut core_of)?;
+            self.map_job(&mut st, occ, cluster, &mut core_of)?;
         }
         Ok(Placement::new(core_of))
+    }
+}
+
+impl Mapper for NewStrategy {
+    fn name(&self) -> &'static str {
+        "New"
+    }
+
+    fn map(&self, ctx: &MapCtx, cluster: &ClusterSpec) -> Result<Placement> {
+        self.map_with_occ(ctx, cluster, &mut Occupancy::new(cluster))
+    }
+}
+
+impl IncrementalMapper for NewStrategy {
+    fn map_into(
+        &self,
+        ctx: &MapCtx,
+        cluster: &ClusterSpec,
+        occ: &mut Occupancy<'_>,
+    ) -> Result<Placement> {
+        self.map_with_occ(ctx, cluster, occ)
     }
 }
 

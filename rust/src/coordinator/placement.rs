@@ -209,6 +209,23 @@ impl<'a> Occupancy<'a> {
         self.claim(core)?;
         Ok(core)
     }
+
+    /// Release a previously-claimed core (a job departing the online
+    /// service). Errors if the core is already free.
+    pub fn release(&mut self, core: CoreId) -> Result<()> {
+        if self.core_free[core] {
+            return Err(Error::mapping(format!("core {core} already free")));
+        }
+        self.core_free[core] = true;
+        self.node_free[self.cluster.node_of_core(core)] += 1;
+        self.socket_free[self.cluster.socket_of_core(core)] += 1;
+        Ok(())
+    }
+
+    /// True when `core` is free.
+    pub fn is_free(&self, core: CoreId) -> bool {
+        self.core_free[core]
+    }
 }
 
 #[cfg(test)]
@@ -264,6 +281,20 @@ mod tests {
         assert_eq!(occ.node_free(0), 3);
         // Now node 1 has the most free cores (ties break to lowest id).
         assert_eq!(occ.node_with_most_free(), Some(1));
+    }
+
+    #[test]
+    fn occupancy_release_round_trips() {
+        let c = ClusterSpec::small_test_cluster();
+        let mut occ = Occupancy::new(&c);
+        occ.claim(5).unwrap();
+        assert!(!occ.is_free(5));
+        assert_eq!(occ.node_free(1), 3);
+        occ.release(5).unwrap();
+        assert!(occ.is_free(5));
+        assert_eq!(occ.node_free(1), 4);
+        assert_eq!(occ.total_free(), 16);
+        assert!(occ.release(5).is_err(), "double release must error");
     }
 
     #[test]

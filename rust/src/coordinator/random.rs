@@ -1,7 +1,8 @@
 //! Seeded random mapping — a sanity baseline (not in the paper's figures,
 //! used by tests and ablations as a "no intelligence at all" reference).
 
-use crate::coordinator::{Mapper, Placement};
+use crate::coordinator::placement::Occupancy;
+use crate::coordinator::{IncrementalMapper, Mapper, Placement};
 use crate::ctx::MapCtx;
 use crate::error::{Error, Result};
 use crate::model::topology::ClusterSpec;
@@ -37,6 +38,35 @@ impl Mapper for RandomMap {
         let mut cores: Vec<usize> = (0..cluster.total_cores()).collect();
         rng.shuffle(&mut cores);
         cores.truncate(p);
+        Ok(Placement::new(cores))
+    }
+}
+
+impl IncrementalMapper for RandomMap {
+    /// Restricted Random: shuffle the free-core list with the same seed.
+    /// Equal to [`Mapper::map`] on an all-free occupancy (identical list,
+    /// identical shuffle).
+    fn map_into(
+        &self,
+        ctx: &MapCtx,
+        cluster: &ClusterSpec,
+        occ: &mut Occupancy<'_>,
+    ) -> Result<Placement> {
+        let p = ctx.len();
+        if p > occ.total_free() {
+            return Err(Error::mapping(format!(
+                "{p} processes exceed {} free cores",
+                occ.total_free()
+            )));
+        }
+        let mut rng = SplitMix64::new(self.seed);
+        let mut cores: Vec<usize> =
+            (0..cluster.total_cores()).filter(|&c| occ.is_free(c)).collect();
+        rng.shuffle(&mut cores);
+        cores.truncate(p);
+        for &c in &cores {
+            occ.claim(c)?;
+        }
         Ok(Placement::new(cores))
     }
 }

@@ -308,6 +308,38 @@ mod tests {
         }
     }
 
+    /// Degenerate inputs: a single-node cluster (no migrate targets, no
+    /// cold pool) and an empty workload must come back clean — no index
+    /// panics anywhere in the hot/cold selection or candidate generation.
+    #[test]
+    fn refiner_degenerate_inputs_clean() {
+        // Single-node cluster: every process already shares the only NIC;
+        // there is nothing to move and nothing to crash on.
+        let one = ClusterSpec { nodes: 1, ..ClusterSpec::small_test_cluster() };
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::AllToAll, 4, 64_000, 10.0, 100)],
+        )
+        .unwrap();
+        let traffic = TrafficMatrix::of_workload(&w);
+        let start = MapperKind::Blocked.build().map_workload(&w, &one).unwrap();
+        let rep = refine(&NativeScorer, &traffic, &start, &w, &one, 8).unwrap();
+        assert_eq!(rep.moves, 0, "one node: no move can help");
+        assert_eq!(rep.placement, start);
+
+        // Empty workload: seed + verify over zero processes, zero moves.
+        let empty = Workload { name: "empty".into(), jobs: vec![] };
+        let t0 = TrafficMatrix::zeros(0);
+        let p0 = Placement::new(vec![]);
+        let cluster = ClusterSpec::small_test_cluster();
+        let rep = refine(&NativeScorer, &t0, &p0, &empty, &cluster, 4).unwrap();
+        assert_eq!(rep.moves, 0);
+        assert!(rep.placement.is_empty());
+
+        // Placement/traffic disagreement is an error, not a panic.
+        assert!(refine(&NativeScorer, &traffic, &p0, &w, &cluster, 1).is_err());
+    }
+
     #[test]
     fn refiner_with_rounds_and_custom_config() {
         let (traffic, w, cluster) = a2a(8);

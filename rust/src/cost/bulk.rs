@@ -1,0 +1,318 @@
+//! Job-granularity bulk moves over [`NodeLoads`] — the cost-layer piece of
+//! the online mapping service ([`crate::online`]).
+//!
+//! The per-process [`crate::cost::LoadLedger`] answers "what if this one
+//! process moved"; a streaming service needs the coarser question "what if
+//! this whole job arrived / departed". Because workload traffic matrices are
+//! **block diagonal in job order** (jobs never communicate with each other —
+//! [`crate::model::traffic::TrafficMatrix::of_workload`]), one job's
+//! contribution to every node's tx/rx/intra load is independent of every
+//! other live job: admitting or retiring a job is a pure add/subtract of a
+//! precomputed per-node [`JobDelta`], O(nodes) per event instead of the
+//! O(P²) full rescore.
+//!
+//! ## Bulk-move invariant (the PR-2 invariant, lifted to jobs)
+//!
+//! After any sequence of [`BulkLedger::apply`] / [`BulkLedger::revert`]
+//! calls, the ledger's loads equal a full scorer recompute of the live
+//! placement (the concatenation of every applied job's assignment), exactly
+//! up to floating-point associativity — and **bit for bit** whenever all
+//! traffic rates are integer-valued doubles below 2⁵³ (every builtin and
+//! testkit workload). `revert` is bit-exact unconditionally: each apply
+//! snapshots the O(nodes) load vectors, mirroring
+//! [`crate::cost::LoadLedger`]'s frame discipline. Enforced by the in-module
+//! property tests and `tests/online_replay.rs`.
+
+use crate::cost::NodeLoads;
+use crate::error::{Error, Result};
+use crate::model::topology::{ClusterSpec, CoreId};
+use crate::model::traffic::TrafficMatrix;
+
+/// Per-node load contribution of **one job** under a concrete core
+/// assignment of its local ranks — the unit the [`BulkLedger`] adds and
+/// removes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobDelta {
+    /// Per-node loads this job contributes on its own.
+    pub loads: NodeLoads,
+    /// Number of processes covered (the job's local rank count).
+    pub procs: usize,
+}
+
+impl JobDelta {
+    /// Compute the contribution of a job with local-rank `traffic` whose
+    /// rank `r` sits on `cores[r]`. Same scatter-by-node-pair arithmetic as
+    /// the native scorer restricted to this job's block, so summing deltas
+    /// over live jobs reproduces a full recompute (bit-for-bit on
+    /// integer-valued rates).
+    pub fn compute(
+        traffic: &TrafficMatrix,
+        cores: &[CoreId],
+        cluster: &ClusterSpec,
+    ) -> Result<JobDelta> {
+        if cores.len() != traffic.len() {
+            return Err(Error::mapping(format!(
+                "job delta: {} cores for {} ranks",
+                cores.len(),
+                traffic.len()
+            )));
+        }
+        let total = cluster.total_cores();
+        for (r, &c) in cores.iter().enumerate() {
+            if c >= total {
+                return Err(Error::mapping(format!("job delta: rank {r} on bad core {c}")));
+            }
+        }
+        let node_of: Vec<usize> = cores.iter().map(|&c| cluster.node_of_core(c)).collect();
+        let mut loads = NodeLoads::zeros(cluster.nodes);
+        for i in 0..traffic.len() {
+            let ni = node_of[i];
+            for (j, &v) in traffic.row(i).iter().enumerate() {
+                if v > 0.0 {
+                    let nj = node_of[j];
+                    if ni == nj {
+                        loads.intra[ni] += v;
+                    } else {
+                        loads.nic_tx[ni] += v;
+                        loads.nic_rx[nj] += v;
+                    }
+                }
+            }
+        }
+        Ok(JobDelta { loads, procs: cores.len() })
+    }
+}
+
+/// A bulk placement change at job granularity.
+#[derive(Debug, Clone, Copy)]
+pub enum JobMove<'a> {
+    /// A job arrives: add its delta to the live loads.
+    Add(&'a JobDelta),
+    /// A job departs: subtract its delta from the live loads.
+    Remove(&'a JobDelta),
+}
+
+/// Owned incremental evaluator over the **live** per-node loads of a
+/// streaming placement. Unlike [`crate::cost::LoadLedger`] it borrows no
+/// traffic matrix — the live workload changes per event, so the ledger
+/// owns its loads and consumes precomputed [`JobDelta`]s.
+#[derive(Debug, Clone)]
+pub struct BulkLedger {
+    loads: NodeLoads,
+    nic_bw: f64,
+    procs: usize,
+    undo: Vec<(NodeLoads, usize)>,
+}
+
+impl BulkLedger {
+    /// Empty ledger (no live jobs) over `cluster`'s nodes.
+    pub fn new(cluster: &ClusterSpec) -> BulkLedger {
+        BulkLedger {
+            loads: NodeLoads::zeros(cluster.nodes),
+            nic_bw: cluster.nic_bw as f64,
+            procs: 0,
+            undo: Vec::new(),
+        }
+    }
+
+    /// Current live loads.
+    pub fn loads(&self) -> &NodeLoads {
+        &self.loads
+    }
+
+    /// Live process count (sum of applied job sizes).
+    pub fn procs(&self) -> usize {
+        self.procs
+    }
+
+    /// Scalar objective of the live loads (see [`NodeLoads::objective`]).
+    pub fn objective(&self) -> f64 {
+        self.loads.objective(self.nic_bw)
+    }
+
+    /// Number of applied-but-unreverted bulk moves on the undo stack.
+    pub fn depth(&self) -> usize {
+        self.undo.len()
+    }
+
+    /// Apply a bulk job move in O(nodes). Errors (leaving the ledger
+    /// untouched) when the delta's node count disagrees with the ledger's or
+    /// a removal would drop the live process count below zero.
+    pub fn apply(&mut self, mv: JobMove<'_>) -> Result<()> {
+        let delta = match mv {
+            JobMove::Add(d) | JobMove::Remove(d) => d,
+        };
+        if delta.loads.nodes() != self.loads.nodes() {
+            return Err(Error::mapping(format!(
+                "bulk ledger: delta covers {} nodes, ledger has {}",
+                delta.loads.nodes(),
+                self.loads.nodes()
+            )));
+        }
+        if matches!(mv, JobMove::Remove(_)) && delta.procs > self.procs {
+            return Err(Error::mapping(format!(
+                "bulk ledger: removing {} procs from {} live",
+                delta.procs, self.procs
+            )));
+        }
+        self.undo.push((self.loads.clone(), self.procs));
+        let n = self.loads.nodes();
+        match mv {
+            JobMove::Add(d) => {
+                for i in 0..n {
+                    self.loads.nic_tx[i] += d.loads.nic_tx[i];
+                    self.loads.nic_rx[i] += d.loads.nic_rx[i];
+                    self.loads.intra[i] += d.loads.intra[i];
+                }
+                self.procs += d.procs;
+            }
+            JobMove::Remove(d) => {
+                for i in 0..n {
+                    self.loads.nic_tx[i] -= d.loads.nic_tx[i];
+                    self.loads.nic_rx[i] -= d.loads.nic_rx[i];
+                    self.loads.intra[i] -= d.loads.intra[i];
+                }
+                self.procs -= d.procs;
+            }
+        }
+        Ok(())
+    }
+
+    /// Revert the most recent unreverted [`Self::apply`]; bit-exact — the
+    /// loads are restored wholesale from the apply-time snapshot.
+    pub fn revert(&mut self) -> Result<()> {
+        let (loads, procs) = self
+            .undo
+            .pop()
+            .ok_or_else(|| Error::mapping("bulk ledger: nothing to revert"))?;
+        self.loads = loads;
+        self.procs = procs;
+        Ok(())
+    }
+
+    /// Drop undo history (applied moves become permanent); bounds memory in
+    /// long replays. [`Self::revert`] errors past this point.
+    pub fn commit(&mut self) {
+        self.undo.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Placement;
+    use crate::cost::Scorer;
+    use crate::model::pattern::Pattern;
+    use crate::model::workload::{JobSpec, Workload};
+    use crate::runtime::NativeScorer;
+    use crate::testkit::loads_bits_eq as bits_eq;
+
+    #[test]
+    fn job_delta_matches_single_job_full_score() {
+        let cluster = ClusterSpec::small_test_cluster();
+        let job = JobSpec::synthetic(Pattern::AllToAll, 6, 64_000, 10.0, 100);
+        let t = TrafficMatrix::of_job(&job);
+        let cores: Vec<usize> = vec![0, 1, 4, 5, 8, 12]; // spans 4 nodes
+        let delta = JobDelta::compute(&t, &cores, &cluster).unwrap();
+        // A one-job workload scored in full must agree exactly.
+        let w = Workload::new("t", vec![job]).unwrap();
+        let full = NativeScorer
+            .score(&TrafficMatrix::of_workload(&w), &Placement::new(cores), &cluster)
+            .unwrap();
+        assert!(bits_eq(&delta.loads, &full), "{delta:?} != {full:?}");
+        assert_eq!(delta.procs, 6);
+    }
+
+    #[test]
+    fn job_delta_rejects_bad_shapes() {
+        let cluster = ClusterSpec::small_test_cluster();
+        let job = JobSpec::synthetic(Pattern::Linear, 3, 1000, 1.0, 5);
+        let t = TrafficMatrix::of_job(&job);
+        assert!(JobDelta::compute(&t, &[0, 1], &cluster).is_err(), "rank/core mismatch");
+        assert!(JobDelta::compute(&t, &[0, 1, 999], &cluster).is_err(), "core out of range");
+    }
+
+    #[test]
+    fn add_remove_jobs_tracks_full_recompute_bitwise() {
+        // Two jobs with integer rates: the live loads after add/add/remove
+        // must equal a full recompute of the remaining placement bit for bit.
+        let cluster = ClusterSpec::small_test_cluster();
+        let a = JobSpec::synthetic(Pattern::AllToAll, 4, 64_000, 10.0, 100);
+        let b = JobSpec::synthetic(Pattern::GatherReduce, 5, 2_000, 50.0, 100);
+        let ta = TrafficMatrix::of_job(&a);
+        let tb = TrafficMatrix::of_job(&b);
+        let cores_a: Vec<usize> = vec![0, 4, 8, 12];
+        let cores_b: Vec<usize> = vec![1, 2, 5, 9, 13];
+        let da = JobDelta::compute(&ta, &cores_a, &cluster).unwrap();
+        let db = JobDelta::compute(&tb, &cores_b, &cluster).unwrap();
+
+        let mut ledger = BulkLedger::new(&cluster);
+        ledger.apply(JobMove::Add(&da)).unwrap();
+        ledger.apply(JobMove::Add(&db)).unwrap();
+        assert_eq!(ledger.procs(), 9);
+        let w_ab = Workload::new("ab", vec![a.clone(), b.clone()]).unwrap();
+        let mut cores_ab = cores_a.clone();
+        cores_ab.extend(&cores_b);
+        let full_ab = NativeScorer
+            .score(
+                &TrafficMatrix::of_workload(&w_ab),
+                &Placement::new(cores_ab),
+                &cluster,
+            )
+            .unwrap();
+        assert!(bits_eq(ledger.loads(), &full_ab), "after two adds");
+        assert_eq!(
+            ledger.objective().to_bits(),
+            full_ab.objective(cluster.nic_bw as f64).to_bits()
+        );
+
+        // Retire job a; what is left must equal a full score of b alone.
+        ledger.apply(JobMove::Remove(&da)).unwrap();
+        let w_b = Workload::new("b", vec![b]).unwrap();
+        let full_b = NativeScorer
+            .score(
+                &TrafficMatrix::of_workload(&w_b),
+                &Placement::new(cores_b),
+                &cluster,
+            )
+            .unwrap();
+        assert!(bits_eq(ledger.loads(), &full_b), "after removing job a");
+        assert_eq!(ledger.procs(), 5);
+    }
+
+    #[test]
+    fn revert_is_bit_exact() {
+        let cluster = ClusterSpec::small_test_cluster();
+        let job = JobSpec::synthetic(Pattern::AllToAll, 4, 64_000, 10.0, 100);
+        let t = TrafficMatrix::of_job(&job);
+        let delta = JobDelta::compute(&t, &[0, 4, 8, 12], &cluster).unwrap();
+        let mut ledger = BulkLedger::new(&cluster);
+        ledger.apply(JobMove::Add(&delta)).unwrap();
+        let baseline = ledger.loads().clone();
+        ledger.apply(JobMove::Add(&delta)).unwrap();
+        ledger.apply(JobMove::Remove(&delta)).unwrap();
+        ledger.revert().unwrap();
+        ledger.revert().unwrap();
+        assert!(bits_eq(ledger.loads(), &baseline), "revert x2 must restore bits");
+        assert_eq!(ledger.depth(), 1);
+        ledger.commit();
+        assert!(ledger.revert().is_err(), "empty undo stack must error");
+    }
+
+    #[test]
+    fn apply_rejects_mismatched_and_underflowing_moves() {
+        let small = ClusterSpec::small_test_cluster();
+        let paper = ClusterSpec::paper_cluster();
+        let job = JobSpec::synthetic(Pattern::Linear, 2, 1000, 1.0, 5);
+        let t = TrafficMatrix::of_job(&job);
+        let delta_paper = JobDelta::compute(&t, &[0, 1], &paper).unwrap();
+        let delta_small = JobDelta::compute(&t, &[0, 1], &small).unwrap();
+        let mut ledger = BulkLedger::new(&small);
+        assert!(ledger.apply(JobMove::Add(&delta_paper)).is_err(), "node-count mismatch");
+        assert!(
+            ledger.apply(JobMove::Remove(&delta_small)).is_err(),
+            "removing from an empty ledger"
+        );
+        assert_eq!(ledger.depth(), 0, "rejected moves leave no frames");
+    }
+}

@@ -514,12 +514,8 @@ mod tests {
     }
 
     fn assert_loads_bits_eq(a: &NodeLoads, b: &NodeLoads, what: &str) {
-        let eq = |x: &[f64], y: &[f64]| {
-            x.len() == y.len()
-                && x.iter().zip(y).all(|(u, v)| u.to_bits() == v.to_bits())
-        };
         assert!(
-            eq(&a.nic_tx, &b.nic_tx) && eq(&a.nic_rx, &b.nic_rx) && eq(&a.intra, &b.intra),
+            crate::testkit::loads_bits_eq(a, b),
             "{what}: ledger {a:?} != full {b:?}"
         );
     }
@@ -630,6 +626,88 @@ mod tests {
         assert_eq!(ledger.depth(), 0);
         // Empty batch is a no-op.
         assert!(ledger.peek_batch(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn peek_batch_hot_process_with_all_zero_traffic_row() {
+        // A 1-process job never communicates: its traffic row and column
+        // are all zeros, so every move of it must evaluate to exactly the
+        // base objective — and bit-equal to sequential peeks.
+        let cluster = ClusterSpec::small_test_cluster();
+        let w = Workload::new(
+            "t",
+            vec![
+                JobSpec::synthetic(Pattern::AllToAll, 4, 64_000, 10.0, 100),
+                JobSpec::synthetic(Pattern::Linear, 1, 1_000, 1.0, 10), // isolated
+            ],
+        )
+        .unwrap();
+        let t = TrafficMatrix::of_workload(&w);
+        assert!(t.row(4).iter().all(|&v| v == 0.0), "singleton row must be zero");
+        assert!((0..5).all(|i| t.get(i, 4) == 0.0), "singleton column must be zero");
+        let p = Placement::new(vec![0, 1, 4, 5, 8]);
+        let mut ledger = LoadLedger::new(&NativeScorer, &t, &p, &cluster).unwrap();
+        let base = ledger.objective();
+        let moves = vec![
+            Move::Swap(4, 0),      // zero-row primary, cross-node partner
+            Move::Swap(4, 3),      // zero-row primary, other node
+            Move::Migrate(4, 12),  // cross-node migrate
+            Move::Migrate(4, 9),   // same-node migrate
+        ];
+        let batch = ledger.peek_batch(&moves).unwrap();
+        for (mv, obj) in moves.iter().zip(&batch) {
+            let seq = ledger.peek(*mv).unwrap();
+            assert_eq!(obj.to_bits(), seq.to_bits(), "{mv:?} diverged from peek");
+        }
+        // Moving a process that talks to nobody cannot change NIC loads.
+        // (Swapping it *with a communicating partner* can — only the pure
+        // migrates are guaranteed base-objective.)
+        assert_eq!(batch[2].to_bits(), base.to_bits());
+        assert_eq!(batch[3].to_bits(), base.to_bits());
+    }
+
+    #[test]
+    fn peek_batch_same_node_swaps_are_base_objective() {
+        let (t, _w, cluster) = setup();
+        let p = Placement::new((0..8).collect()); // nodes 0 and 1
+        let mut ledger = LoadLedger::new(&NativeScorer, &t, &p, &cluster).unwrap();
+        let base = ledger.objective();
+        // All candidate pairs share a node: NIC-visible loads cannot change.
+        let moves =
+            vec![Move::Swap(0, 1), Move::Swap(0, 2), Move::Swap(0, 3), Move::Swap(4, 7)];
+        let batch = ledger.peek_batch(&moves).unwrap();
+        for (mv, obj) in moves.iter().zip(&batch) {
+            assert_eq!(obj.to_bits(), base.to_bits(), "{mv:?} must be a NIC no-op");
+            let seq = ledger.peek(*mv).unwrap();
+            assert_eq!(obj.to_bits(), seq.to_bits(), "{mv:?} diverged from peek");
+        }
+    }
+
+    #[test]
+    fn peek_batch_single_node_cluster_has_no_valid_migrates() {
+        // One node: every core shares the NIC, so no move can change the
+        // objective and there is no cross-node migrate target at all.
+        let cluster = ClusterSpec { nodes: 1, ..ClusterSpec::small_test_cluster() };
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::AllToAll, 3, 64_000, 10.0, 100)],
+        )
+        .unwrap();
+        let t = TrafficMatrix::of_workload(&w);
+        let p = Placement::new(vec![0, 1, 2]);
+        let mut ledger = LoadLedger::new(&NativeScorer, &t, &p, &cluster).unwrap();
+        let base = ledger.objective();
+        assert_eq!(ledger.hottest_node(), 0);
+        assert!(ledger.coldest_nodes(3, 0).is_empty(), "no node besides the hot one");
+        let moves = vec![Move::Swap(0, 2), Move::Migrate(1, 3)];
+        let batch = ledger.peek_batch(&moves).unwrap();
+        for (mv, obj) in moves.iter().zip(&batch) {
+            assert_eq!(obj.to_bits(), base.to_bits(), "{mv:?} on one node is a no-op");
+            let seq = ledger.peek(*mv).unwrap();
+            assert_eq!(obj.to_bits(), seq.to_bits());
+        }
+        // Occupied targets are still rejected, even on one node.
+        assert!(ledger.peek_batch(&[Move::Migrate(0, 1)]).is_err());
     }
 
     #[test]

@@ -33,11 +33,26 @@
 //! vectors it touches. The invariant is enforced by the property tests in
 //! `tests/property_invariants.rs` and the acceptance test in
 //! `tests/refine_equivalence.rs`.
+//!
+//! ## Bulk-move invariant (jobs, not processes)
+//!
+//! The online mapping service ([`crate::online`]) admits and retires whole
+//! jobs. Workload matrices are block diagonal in job order, so a job's
+//! per-node load contribution ([`bulk::JobDelta`]) is independent of every
+//! other live job; [`bulk::BulkLedger`] adds/removes those deltas in
+//! O(nodes) per event. After any apply/revert sequence its loads equal a
+//! full scorer recompute of the live placement under the same conditions as
+//! the delta-evaluation invariant above (exact up to FP associativity;
+//! bit-for-bit on integer-valued rates), and reverts are snapshot-restored,
+//! hence bit-exact unconditionally. Enforced by the `bulk` module tests and
+//! `tests/online_replay.rs`.
 
+pub mod bulk;
 pub mod ledger;
 pub mod loads;
 pub mod scorer;
 
+pub use bulk::{BulkLedger, JobDelta, JobMove};
 pub use ledger::{LoadLedger, Move};
 pub use loads::NodeLoads;
 pub use scorer::{CountingScorer, Scorer};

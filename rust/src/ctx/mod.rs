@@ -94,6 +94,19 @@ impl MapCtx {
         Arc::new(Self::build(w))
     }
 
+    /// Context for **one arriving job** — the online service's admission
+    /// path ([`crate::online`]). Wraps the job in a single-job workload and
+    /// builds its artifacts, so admitting a job costs exactly one
+    /// [`TrafficMatrix::of_workload`] construction of the *job's* size, never
+    /// a rebuild of the whole live world. This extends the
+    /// counting-constructor invariant to churn: the build counter grows by
+    /// exactly one per admitted job and never on departures or refinement
+    /// (asserted by `tests/online_replay.rs`).
+    pub fn for_job(job: &crate::model::workload::JobSpec) -> crate::error::Result<MapCtx> {
+        let w = Workload::new(job.name.clone(), vec![job.clone()])?;
+        Ok(Self::build(&w))
+    }
+
     /// The workload this context was built from.
     pub fn workload(&self) -> &Workload {
         &self.workload
@@ -215,6 +228,26 @@ mod tests {
             assert_eq!(ctx.demand(p), ctx.traffic().demand(p));
             assert_eq!(ctx.job_of(p), w.job_of_proc(p).0);
         }
+    }
+
+    #[test]
+    fn for_job_wraps_a_single_job_workload() {
+        let w = two_job_workload();
+        let job = &w.jobs[0];
+        let ctx = MapCtx::for_job(job).unwrap();
+        assert_eq!(ctx.len(), 4);
+        assert_eq!(ctx.workload().jobs.len(), 1);
+        assert_eq!(ctx.workload().name, job.name);
+        // The single-job context's matrix is the job's own block.
+        assert_eq!(ctx.traffic(), &TrafficMatrix::of_job(job));
+        assert_eq!(ctx.job_traffic(0), &TrafficMatrix::of_job(job));
+        for p in 0..4 {
+            assert_eq!(ctx.job_of(p), 0);
+        }
+        // Invalid jobs are rejected cleanly.
+        let mut bad = job.clone();
+        bad.procs = 0;
+        assert!(MapCtx::for_job(&bad).is_err());
     }
 
     #[test]

@@ -17,12 +17,13 @@
 
 use std::sync::Arc;
 
-use crate::coordinator::{MapperKind, MapperSpec};
+use crate::coordinator::{MapperKind, MapperSpec, DEFAULT_RANDOM_SEED};
 use crate::ctx::MapCtx;
 use crate::error::Result;
 use crate::model::npb;
 use crate::model::topology::ClusterSpec;
 use crate::model::workload::Workload;
+use crate::online::{self, ArrivalTrace, ChurnReport, ReplayConfig};
 use crate::report::csv::Csv;
 use crate::report::figure::{bar_chart, gain_pct};
 use crate::report::json;
@@ -194,6 +195,33 @@ pub fn run_sweep(
     Ok(runs)
 }
 
+/// Replay one arrival trace under every mapper of `mappers`, one full
+/// replay per mapper cell distributed over up to `threads` worker threads
+/// (`<= 1` = serial). Each replay is a deterministic fold over the trace,
+/// so the threaded fan-out is bit-identical to the serial one in every
+/// [`ChurnReport::metrics_eq`] field — the same contract [`run_sweep`]
+/// holds for the batch figures, asserted by `tests/online_replay.rs` and
+/// `nicmap replay --compare-serial`.
+pub fn run_replay(
+    trace: &ArrivalTrace,
+    cluster: &ClusterSpec,
+    mappers: &[MapperSpec],
+    cfg: &ReplayConfig,
+    threads: usize,
+) -> Result<Vec<ChurnReport>> {
+    let cells: Vec<MapperSpec> = mappers.to_vec();
+    crate::par::par_map(cells, threads, |spec| online::replay(trace, cluster, spec, cfg))
+        .into_iter()
+        .collect()
+}
+
+/// True when two replay fan-outs agree on every deterministic churn metric
+/// (wall-clock times may differ) — the replay sibling of
+/// [`sweeps_identical`].
+pub fn replays_identical(a: &[ChurnReport], b: &[ChurnReport]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.metrics_eq(y))
+}
+
 /// True when two sweeps agree on every deterministic metric (wall-clock
 /// times may differ) — the parallel-vs-serial golden check.
 pub fn sweeps_identical(a: &[WorkloadRun], b: &[WorkloadRun]) -> bool {
@@ -221,13 +249,21 @@ pub fn cap_rounds(w: &mut Workload, rounds: u64) {
 /// Render a finished sweep as the machine-readable `BENCH_harness.json`
 /// document: one record per cell (waiting-ms / finish-s / map-secs /
 /// sim-wall-secs / events) plus sweep-level wall times for the repo's perf
-/// trajectory.
+/// trajectory. The run metadata — swept mapper specs, workload names, and
+/// the builtin random-mapper seed — is stamped up front so bench
+/// trajectories are self-describing without the invoking command line.
 pub fn sweep_to_json(
     runs: &[WorkloadRun],
     threads: usize,
     parallel_wall_secs: f64,
     serial_wall_secs: Option<f64>,
 ) -> String {
+    let mappers: Vec<String> = runs
+        .first()
+        .map(|run| run.cells.iter().map(|c| json::quote(&c.mapper.name())).collect())
+        .unwrap_or_default();
+    let workloads: Vec<String> =
+        runs.iter().map(|run| json::quote(&run.workload)).collect();
     let mut cells = Vec::new();
     for run in runs {
         for cell in &run.cells {
@@ -248,6 +284,9 @@ pub fn sweep_to_json(
     }
     let mut doc = json::Obj::new()
         .str("schema", "nicmap-bench-v1")
+        .raw("mappers", json::array(&mappers))
+        .raw("workloads", json::array(&workloads))
+        .int("seed", DEFAULT_RANDOM_SEED)
         .int("threads", threads as u64)
         .num("parallel_wall_secs", parallel_wall_secs);
     doc = match serial_wall_secs {
@@ -444,11 +483,46 @@ mod tests {
         assert!(doc.contains("\"mapper\":\"Blocked\""));
         assert!(doc.contains("\"waiting_ms\":"));
         assert!(doc.contains("\"map_secs\":"));
+        // Run metadata: the swept mapper list, workload names, and seed are
+        // stamped so the JSON is self-describing.
+        assert!(doc.contains("\"mappers\":[\"Blocked\",\"Cyclic\",\"DRB\",\"New\"]"));
+        assert!(doc.contains("\"workloads\":[\"tiny\"]"));
+        assert!(doc.contains(&format!("\"seed\":{DEFAULT_RANDOM_SEED}")));
         // Without a serial comparison the field is null and speedup absent.
         let run = tiny_run();
         let doc = sweep_to_json(&[run], 1, 1.0, None);
         assert!(doc.contains("\"serial_wall_secs\":null"));
         assert!(!doc.contains("speedup"));
+        // Empty sweep still renders the metadata arrays.
+        let doc = sweep_to_json(&[], 1, 0.0, None);
+        assert!(doc.contains("\"mappers\":[]"));
+        assert!(doc.contains("\"workloads\":[]"));
+    }
+
+    #[test]
+    fn replay_fanout_parallel_bit_identical_to_serial() {
+        let cluster = ClusterSpec::small_test_cluster();
+        let trace = ArrivalTrace::builtin("poisson:11:5").unwrap();
+        let mappers = [
+            MapperSpec::plain(MapperKind::Blocked),
+            MapperSpec::plus_r(MapperKind::Blocked),
+            MapperSpec::plain(MapperKind::New),
+            MapperSpec::plus_r(MapperKind::New),
+        ];
+        let cfg = ReplayConfig { sim_every: 4, sim_rounds: 2, ..ReplayConfig::default() };
+        let serial = run_replay(&trace, &cluster, &mappers, &cfg, 1).unwrap();
+        let parallel = run_replay(&trace, &cluster, &mappers, &cfg, 4).unwrap();
+        assert!(replays_identical(&serial, &parallel));
+        assert_eq!(serial.len(), 4);
+        for (rep, spec) in serial.iter().zip(&mappers) {
+            assert_eq!(rep.mapper, spec.name());
+            assert_eq!(rep.events.len(), trace.len());
+        }
+        // And the fan-out matches direct one-shot replays.
+        for (rep, spec) in serial.iter().zip(&mappers) {
+            let direct = online::replay(&trace, &cluster, *spec, &cfg).unwrap();
+            assert!(rep.metrics_eq(&direct), "{} drifted from direct replay", rep.mapper);
+        }
     }
 
     #[test]

@@ -9,10 +9,11 @@
 //!   baselines it is compared against (Blocked, Cyclic, DRB, K-way), the
 //!   shared per-workload artifact layer ([`ctx`]) every mapper consumes,
 //!   the cost layer with its incremental refinement ledger ([`cost`]) behind
-//!   the `+r` mapper variants, a deterministic discrete-event simulator of
-//!   the 16-node InfiniBand cluster the paper evaluates on ([`sim`]), and
-//!   the workload models ([`model`]) including an NPB communication
-//!   characterization.
+//!   the `+r` mapper variants, the online elastic mapping service that
+//!   places streaming job arrivals/departures incrementally ([`online`]),
+//!   a deterministic discrete-event simulator of the 16-node InfiniBand
+//!   cluster the paper evaluates on ([`sim`]), and the workload models
+//!   ([`model`]) including an NPB communication characterization.
 //! * **Layer 2 (JAX, `python/compile/model.py`)** — the placement cost
 //!   model `M = AᵀTA` + NIC/demand/adjacency reductions, AOT-lowered once
 //!   to HLO text.
@@ -53,6 +54,7 @@ pub mod error;
 pub mod graph;
 pub mod harness;
 pub mod model;
+pub mod online;
 pub mod par;
 pub mod report;
 pub mod runtime;

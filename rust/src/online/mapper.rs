@@ -1,0 +1,551 @@
+//! The online mapping service: a long-lived mapper that admits and retires
+//! jobs against live cluster state, one event at a time.
+//!
+//! Per event the service does **incremental** work only:
+//!
+//! * **Arrival** — build the arriving job's own [`MapCtx`] (one
+//!   traffic-matrix construction of the *job's* size, never the world's),
+//!   place its processes on free cores through the base strategy's
+//!   [`IncrementalMapper`] entry point, and add the job's precomputed
+//!   per-node [`JobDelta`] to the live [`BulkLedger`] in O(nodes). Jobs that
+//!   do not fit the free pool are rejected and recorded, not errors.
+//! * **Departure** — release the job's cores and subtract its delta
+//!   (snapshot-backed bulk remove, the PR-2 revert discipline at job
+//!   granularity).
+//! * **Optional refinement** (`+r` specs) — a bounded [`Refiner`] pass over
+//!   the live placement after each event. Candidate scoring reuses the
+//!   PR-2 O(P) delta machinery, but driving the refiner does compose the
+//!   live traffic matrix from the stored per-job blocks (O(P²) writes, no
+//!   [`crate::model::traffic::TrafficMatrix::of_workload`] rebuild) and
+//!   seed one full scorer pass per event — the documented price of the
+//!   *optional* pass, not of the service (see the ROADMAP open item for
+//!   the incremental-composition next step). Accepted moves are folded
+//!   back as per-job delta remove/add pairs, and the number of processes
+//!   whose core changed is the event's migration count.
+//!
+//! After every event the live ledger loads equal a full scorer recompute of
+//! the live placement (bit-for-bit on integer-rate workloads) — the bulk
+//! extension of the delta-evaluation invariant, asserted by
+//! `tests/online_replay.rs`.
+
+use crate::coordinator::refine::Refiner;
+use crate::coordinator::{IncrementalMapper, MapperSpec, Occupancy, Placement};
+use crate::cost::{BulkLedger, JobDelta, JobMove, NodeLoads};
+use crate::ctx::MapCtx;
+use crate::error::{Error, Result};
+use crate::model::topology::{ClusterSpec, CoreId};
+use crate::model::traffic::TrafficMatrix;
+use crate::model::workload::{JobSpec, Workload};
+use crate::online::trace::{TraceEvent, TraceEventKind};
+use crate::runtime::NativeScorer;
+use crate::sim::{simulate, SimConfig};
+use crate::units::Ns;
+
+/// Replay knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplayConfig {
+    /// Round budget of the bounded per-event [`Refiner`] pass (`+r` specs
+    /// only; 0 disables refinement even for `+r`).
+    pub refine_rounds: usize,
+    /// Take a simulated waiting-time snapshot every `sim_every` events
+    /// through [`crate::sim::runner::simulate`] (0 = never). Snapshots make
+    /// the churn trajectory comparable with the batch figures but cost a
+    /// full (round-capped) simulation each.
+    pub sim_every: usize,
+    /// Per-flow round cap applied to epoch-snapshot simulations.
+    pub sim_rounds: u64,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        ReplayConfig { refine_rounds: 2, sim_every: 0, sim_rounds: 5 }
+    }
+}
+
+/// What the service did with one trace event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventAction {
+    /// Arrival admitted and placed on free cores.
+    Placed,
+    /// Arrival rejected: more processes than free cores.
+    Rejected,
+    /// Departure of a live job: cores freed, delta removed.
+    Departed,
+    /// Departure of a job that had been rejected at arrival (no-op).
+    DepartedUnplaced,
+}
+
+impl EventAction {
+    /// Short name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventAction::Placed => "placed",
+            EventAction::Rejected => "rejected",
+            EventAction::Departed => "departed",
+            EventAction::DepartedUnplaced => "departed-unplaced",
+        }
+    }
+}
+
+/// Per-event churn record ([`crate::online::ChurnReport`] collects these).
+#[derive(Debug, Clone)]
+pub struct EventRecord {
+    /// Event index within the replay (0-based).
+    pub seq: usize,
+    /// Trace timestamp, ns.
+    pub at_ns: Ns,
+    /// What happened.
+    pub action: EventAction,
+    /// Name of the job arriving/departing.
+    pub job: String,
+    /// Processes placed (arrival) or freed (departure); the arriving size
+    /// for rejections, 0 for unplaced departures.
+    pub procs: usize,
+    /// Processes whose core changed in this event's refinement pass.
+    pub migrations: usize,
+    /// Live cost-model objective after the event (placement-cost
+    /// trajectory).
+    pub objective: f64,
+    /// Live processes after the event.
+    pub live_procs: usize,
+    /// Free cores after the event.
+    pub free_cores: usize,
+    /// Epoch waiting-time snapshot (ms) when sampled this event.
+    pub waiting_ms: Option<f64>,
+    /// Wall-clock seconds spent handling the event (time-to-place);
+    /// excluded from determinism comparisons.
+    pub place_secs: f64,
+}
+
+/// One live (admitted, not yet departed) job.
+struct LiveJob {
+    /// Arrival number in the trace.
+    instance: usize,
+    /// The job itself.
+    spec: JobSpec,
+    /// The job's local-rank traffic block (from its admission ctx).
+    traffic: TrafficMatrix,
+    /// Core of each local rank.
+    cores: Vec<CoreId>,
+    /// Per-node load contribution under `cores`.
+    delta: JobDelta,
+}
+
+/// The long-lived online mapper (see the module docs).
+pub struct OnlineMapper<'c> {
+    cluster: &'c ClusterSpec,
+    spec: MapperSpec,
+    inc: Box<dyn IncrementalMapper>,
+    refiner: Refiner,
+    cfg: ReplayConfig,
+    occ: Occupancy<'c>,
+    ledger: BulkLedger,
+    live: Vec<LiveJob>,
+    arrivals: usize,
+    /// Rejected arrivals by instance id, with the job name so the matching
+    /// departure record can still be correlated by name.
+    rejected: std::collections::BTreeMap<usize, String>,
+    seq: usize,
+}
+
+impl<'c> OnlineMapper<'c> {
+    /// Start an empty service on `cluster` placing with `spec` (the `+r`
+    /// flag selects the bounded per-event refinement pass). Errors when the
+    /// base strategy has no incremental variant (DRB, K-way).
+    pub fn new(cluster: &'c ClusterSpec, spec: MapperSpec, cfg: ReplayConfig) -> Result<Self> {
+        cluster.validate()?;
+        let inc = spec.base.build_incremental()?;
+        Ok(OnlineMapper {
+            cluster,
+            spec,
+            inc,
+            refiner: Refiner::with_rounds(cfg.refine_rounds),
+            cfg,
+            occ: Occupancy::new(cluster),
+            ledger: BulkLedger::new(cluster),
+            live: Vec::new(),
+            arrivals: 0,
+            rejected: std::collections::BTreeMap::new(),
+            seq: 0,
+        })
+    }
+
+    /// Mapper selection this service places with.
+    pub fn spec(&self) -> MapperSpec {
+        self.spec
+    }
+
+    /// Live processes.
+    pub fn live_procs(&self) -> usize {
+        self.ledger.procs()
+    }
+
+    /// Free cores.
+    pub fn free_cores(&self) -> usize {
+        self.occ.total_free()
+    }
+
+    /// Live per-node loads (the bulk ledger's running sums).
+    pub fn loads(&self) -> &NodeLoads {
+        self.ledger.loads()
+    }
+
+    /// Live cost-model objective.
+    pub fn objective(&self) -> f64 {
+        self.ledger.objective()
+    }
+
+    /// The live workload: every admitted, not-yet-departed job in arrival
+    /// order (global proc ids follow this order, as everywhere else).
+    pub fn live_workload(&self) -> Workload {
+        Workload {
+            name: "live".into(),
+            jobs: self.live.iter().map(|j| j.spec.clone()).collect(),
+        }
+    }
+
+    /// The live placement, aligned with [`Self::live_workload`].
+    pub fn live_placement(&self) -> Placement {
+        let mut cores = Vec::with_capacity(self.live_procs());
+        for job in &self.live {
+            cores.extend_from_slice(&job.cores);
+        }
+        Placement::new(cores)
+    }
+
+    /// The live traffic matrix, composed from the stored per-job blocks —
+    /// never a [`TrafficMatrix::of_workload`] rebuild (the admission-time
+    /// block is reused; the build counter must not move on composition).
+    pub fn live_traffic(&self) -> TrafficMatrix {
+        let total: usize = self.live.iter().map(|j| j.spec.procs).sum();
+        let mut t = TrafficMatrix::zeros(total);
+        let mut off = 0;
+        for job in &self.live {
+            let p = job.spec.procs;
+            for i in 0..p {
+                for (j, &v) in job.traffic.row(i).iter().enumerate() {
+                    if v > 0.0 {
+                        t.add(off + i, off + j, v);
+                    }
+                }
+            }
+            off += p;
+        }
+        t
+    }
+
+    /// Process one trace event; returns its churn record. Trace-level
+    /// malformations (departing a job that never arrived) are errors;
+    /// capacity shortfalls are recorded rejections.
+    pub fn on_event(&mut self, ev: &TraceEvent) -> Result<EventRecord> {
+        let t0 = std::time::Instant::now();
+        let seq = self.seq;
+        self.seq += 1;
+        let (action, job_name, procs) = match &ev.kind {
+            TraceEventKind::Arrive(job) => {
+                let instance = self.arrivals;
+                self.arrivals += 1;
+                if job.procs > self.occ.total_free() {
+                    self.rejected.insert(instance, job.name.clone());
+                    (EventAction::Rejected, job.name.clone(), job.procs)
+                } else {
+                    self.admit(instance, job)?;
+                    (EventAction::Placed, job.name.clone(), job.procs)
+                }
+            }
+            TraceEventKind::Depart(instance) => {
+                if let Some(name) = self.rejected.get(instance) {
+                    (EventAction::DepartedUnplaced, name.clone(), 0)
+                } else {
+                    let job = self.retire(*instance)?;
+                    (EventAction::Departed, job.name, job.procs)
+                }
+            }
+        };
+        // Bounded refinement after the event for `+r` specs (skipped when
+        // the event changed nothing placeable).
+        let migrations = if self.spec.refined
+            && self.cfg.refine_rounds > 0
+            && matches!(action, EventAction::Placed | EventAction::Departed)
+        {
+            self.refine_pass()?
+        } else {
+            0
+        };
+        let waiting_ms = if self.cfg.sim_every > 0
+            && (seq + 1) % self.cfg.sim_every == 0
+            && !self.live.is_empty()
+        {
+            Some(self.epoch_snapshot()?)
+        } else {
+            None
+        };
+        Ok(EventRecord {
+            seq,
+            at_ns: ev.at_ns,
+            action,
+            job: job_name,
+            procs,
+            migrations,
+            objective: self.ledger.objective(),
+            live_procs: self.ledger.procs(),
+            free_cores: self.occ.total_free(),
+            waiting_ms,
+            place_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Admit one job: single-job ctx, free-core-restricted placement, bulk
+    /// delta add.
+    fn admit(&mut self, instance: usize, job: &JobSpec) -> Result<()> {
+        let ctx = MapCtx::for_job(job)?;
+        let placement = self.inc.map_into(&ctx, self.cluster, &mut self.occ)?;
+        let delta = JobDelta::compute(ctx.traffic(), &placement.core_of, self.cluster)?;
+        self.ledger.apply(JobMove::Add(&delta))?;
+        self.ledger.commit();
+        self.live.push(LiveJob {
+            instance,
+            spec: job.clone(),
+            traffic: ctx.traffic().clone(),
+            cores: placement.core_of,
+            delta,
+        });
+        Ok(())
+    }
+
+    /// Retire one live job: free its cores, bulk delta remove. Returns the
+    /// departed spec.
+    fn retire(&mut self, instance: usize) -> Result<JobSpec> {
+        let pos = self
+            .live
+            .iter()
+            .position(|j| j.instance == instance)
+            .ok_or_else(|| {
+                Error::mapping(format!(
+                    "replay: departure of unknown or already-departed instance {instance}"
+                ))
+            })?;
+        let job = self.live.remove(pos);
+        for &c in &job.cores {
+            self.occ.release(c)?;
+        }
+        self.ledger.apply(JobMove::Remove(&job.delta))?;
+        self.ledger.commit();
+        Ok(job.spec)
+    }
+
+    /// One bounded refinement pass over the live placement; folds accepted
+    /// moves back into per-job core lists, deltas, and occupancy. Returns
+    /// the number of processes whose core changed.
+    fn refine_pass(&mut self) -> Result<usize> {
+        if self.live.is_empty() {
+            return Ok(0);
+        }
+        let w = self.live_workload();
+        let traffic = self.live_traffic();
+        let start = self.live_placement();
+        let rep = self.refiner.run(&NativeScorer, &traffic, &start, &w, self.cluster)?;
+        let moved: usize = rep
+            .placement
+            .core_of
+            .iter()
+            .zip(&start.core_of)
+            .filter(|(a, b)| a != b)
+            .count();
+        if moved == 0 {
+            return Ok(0);
+        }
+        // Fold the refined cores back per job; jobs whose slice changed get
+        // a delta remove/add pair (the bulk-move invariant keeps the live
+        // loads equal to a fresh recompute).
+        let mut off = 0;
+        for job in &mut self.live {
+            let p = job.spec.procs;
+            let new_cores = &rep.placement.core_of[off..off + p];
+            off += p;
+            if new_cores == job.cores.as_slice() {
+                continue;
+            }
+            let new_delta = JobDelta::compute(&job.traffic, new_cores, self.cluster)?;
+            self.ledger.apply(JobMove::Remove(&job.delta))?;
+            self.ledger.apply(JobMove::Add(&new_delta))?;
+            self.ledger.commit();
+            job.cores = new_cores.to_vec();
+            job.delta = new_delta;
+        }
+        // Occupancy follows the refined placement wholesale.
+        let mut occ = Occupancy::new(self.cluster);
+        for job in &self.live {
+            for &c in &job.cores {
+                occ.claim(c)?;
+            }
+        }
+        self.occ = occ;
+        Ok(moved)
+    }
+
+    /// Round-capped simulation of the live workload under the live
+    /// placement — the epoch waiting-time snapshot.
+    fn epoch_snapshot(&self) -> Result<f64> {
+        let mut w = self.live_workload();
+        crate::harness::cap_rounds(&mut w, self.cfg.sim_rounds);
+        let report =
+            simulate(&w, &self.live_placement(), self.cluster, &SimConfig::default())?;
+        Ok(report.waiting_ms())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MapperKind;
+    use crate::cost::Scorer;
+    use crate::model::pattern::Pattern;
+    use crate::online::trace::{ArrivalTrace, TraceGenConfig};
+    use crate::testkit::loads_bits_eq;
+
+    fn ev(at_ns: Ns, kind: TraceEventKind) -> TraceEvent {
+        TraceEvent { at_ns, kind }
+    }
+
+    fn job(procs: usize) -> JobSpec {
+        JobSpec::synthetic(Pattern::AllToAll, procs, 64_000, 10.0, 5)
+    }
+
+    #[test]
+    fn arrivals_place_and_departures_free() {
+        let cluster = ClusterSpec::small_test_cluster(); // 16 cores
+        let mut m = OnlineMapper::new(
+            &cluster,
+            MapperSpec::plain(MapperKind::New),
+            ReplayConfig::default(),
+        )
+        .unwrap();
+        let r = m.on_event(&ev(0, TraceEventKind::Arrive(job(6)))).unwrap();
+        assert_eq!(r.action, EventAction::Placed);
+        assert_eq!(r.procs, 6);
+        assert_eq!(m.live_procs(), 6);
+        assert_eq!(m.free_cores(), 10);
+        let r = m.on_event(&ev(10, TraceEventKind::Arrive(job(4)))).unwrap();
+        assert_eq!(r.action, EventAction::Placed);
+        assert_eq!(m.live_procs(), 10);
+        m.live_placement().validate(&m.live_workload(), &cluster).unwrap();
+
+        let r = m.on_event(&ev(20, TraceEventKind::Depart(0))).unwrap();
+        assert_eq!(r.action, EventAction::Departed);
+        assert_eq!(r.procs, 6);
+        assert_eq!(m.live_procs(), 4);
+        assert_eq!(m.free_cores(), 12);
+        m.live_placement().validate(&m.live_workload(), &cluster).unwrap();
+        // Unknown instance is a trace bug, not a rejection.
+        assert!(m.on_event(&ev(30, TraceEventKind::Depart(0))).is_err());
+    }
+
+    #[test]
+    fn oversized_arrival_rejected_and_departure_noop() {
+        let cluster = ClusterSpec::small_test_cluster();
+        let mut m = OnlineMapper::new(
+            &cluster,
+            MapperSpec::plain(MapperKind::Blocked),
+            ReplayConfig::default(),
+        )
+        .unwrap();
+        let r = m.on_event(&ev(0, TraceEventKind::Arrive(job(99)))).unwrap();
+        assert_eq!(r.action, EventAction::Rejected);
+        assert_eq!(m.live_procs(), 0);
+        assert_eq!(m.free_cores(), 16);
+        let r = m.on_event(&ev(5, TraceEventKind::Depart(0))).unwrap();
+        assert_eq!(r.action, EventAction::DepartedUnplaced);
+        assert_eq!(r.procs, 0);
+    }
+
+    #[test]
+    fn ledger_matches_recompute_across_events_including_refinement() {
+        let cluster = ClusterSpec::small_test_cluster();
+        for spec in [MapperSpec::plain(MapperKind::Cyclic), MapperSpec::plus_r(MapperKind::Cyclic)]
+        {
+            let mut m = OnlineMapper::new(&cluster, spec, ReplayConfig::default()).unwrap();
+            let trace = ArrivalTrace::poisson(
+                "t",
+                0xBEEF,
+                &TraceGenConfig {
+                    jobs: 6,
+                    min_procs: 2,
+                    max_procs: 6,
+                    ..TraceGenConfig::default()
+                },
+            );
+            for event in &trace.events {
+                m.on_event(event).unwrap();
+                let full = NativeScorer
+                    .score(&m.live_traffic(), &m.live_placement(), &cluster)
+                    .unwrap();
+                assert!(
+                    loads_bits_eq(m.loads(), &full),
+                    "{spec:?}: live ledger drifted from full recompute"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn refinement_accounts_migrations() {
+        let cluster = ClusterSpec::small_test_cluster();
+        // Blocked placement of an 8-proc all-to-all is refinable; +r must
+        // report the moved processes and keep the placement valid.
+        let mut m = OnlineMapper::new(
+            &cluster,
+            MapperSpec::plus_r(MapperKind::Blocked),
+            ReplayConfig { refine_rounds: 4, ..ReplayConfig::default() },
+        )
+        .unwrap();
+        let r = m.on_event(&ev(0, TraceEventKind::Arrive(job(8)))).unwrap();
+        m.live_placement().validate(&m.live_workload(), &cluster).unwrap();
+        let plain = OnlineMapper::new(
+            &cluster,
+            MapperSpec::plain(MapperKind::Blocked),
+            ReplayConfig::default(),
+        )
+        .unwrap()
+        .on_event(&ev(0, TraceEventKind::Arrive(job(8))))
+        .unwrap();
+        assert!(
+            r.objective <= plain.objective,
+            "+r must not worsen the objective ({} > {})",
+            r.objective,
+            plain.objective
+        );
+        if r.migrations > 0 {
+            assert!(r.objective < plain.objective);
+        }
+    }
+
+    #[test]
+    fn epoch_snapshots_sampled_on_schedule() {
+        let cluster = ClusterSpec::small_test_cluster();
+        let mut m = OnlineMapper::new(
+            &cluster,
+            MapperSpec::plain(MapperKind::New),
+            ReplayConfig { sim_every: 2, sim_rounds: 2, ..ReplayConfig::default() },
+        )
+        .unwrap();
+        let r1 = m.on_event(&ev(0, TraceEventKind::Arrive(job(4)))).unwrap();
+        assert!(r1.waiting_ms.is_none(), "seq 0 is off-schedule");
+        let r2 = m.on_event(&ev(1, TraceEventKind::Arrive(job(4)))).unwrap();
+        assert!(r2.waiting_ms.is_some(), "seq 1 is on-schedule");
+        assert!(r2.waiting_ms.unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn partitioner_bases_rejected_up_front() {
+        let cluster = ClusterSpec::small_test_cluster();
+        for kind in [MapperKind::Drb, MapperKind::KWay] {
+            assert!(OnlineMapper::new(
+                &cluster,
+                MapperSpec::plain(kind),
+                ReplayConfig::default()
+            )
+            .is_err());
+        }
+    }
+}

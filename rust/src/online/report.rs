@@ -1,0 +1,169 @@
+//! Churn report rendering: the CSV/JSON documents `nicmap replay` writes
+//! (`CHURN_replay.csv` / `CHURN_replay.json`), built on the shared
+//! [`crate::report`] writers. One CSV row / JSON record per (mapper, event)
+//! so replay trajectories diff cleanly across commits, mirroring what
+//! `BENCH_harness.json` does for the batch sweep.
+
+use crate::online::ChurnReport;
+use crate::report::csv::Csv;
+use crate::report::json;
+
+/// Render churn reports as CSV: one row per (mapper, event), numeric fields
+/// in full precision (they are the determinism-compared metrics).
+pub fn churn_to_csv(reports: &[ChurnReport]) -> Csv {
+    let mut csv = Csv::new();
+    csv.row(&[
+        "trace",
+        "mapper",
+        "seq",
+        "at_ns",
+        "action",
+        "job",
+        "procs",
+        "migrations",
+        "objective",
+        "live_procs",
+        "free_cores",
+        "waiting_ms",
+        "place_secs",
+    ]);
+    for rep in reports {
+        for e in &rep.events {
+            csv.row(&[
+                rep.trace.clone(),
+                rep.mapper.clone(),
+                e.seq.to_string(),
+                e.at_ns.to_string(),
+                e.action.name().to_string(),
+                e.job.clone(),
+                e.procs.to_string(),
+                e.migrations.to_string(),
+                format!("{}", e.objective),
+                e.live_procs.to_string(),
+                e.free_cores.to_string(),
+                e.waiting_ms.map_or(String::new(), |w| format!("{w}")),
+                format!("{}", e.place_secs),
+            ]);
+        }
+    }
+    csv
+}
+
+/// Render churn reports as the `CHURN_replay.json` document: per-mapper
+/// summaries (migrations, rejections, objective peaks, time-to-place) plus
+/// the full per-event trajectories.
+pub fn churn_to_json(reports: &[ChurnReport], threads: usize, wall_secs: f64) -> String {
+    let mut mappers = Vec::with_capacity(reports.len());
+    for rep in reports {
+        let events: Vec<String> = rep
+            .events
+            .iter()
+            .map(|e| {
+                json::Obj::new()
+                    .int("seq", e.seq as u64)
+                    .int("at_ns", e.at_ns)
+                    .str("action", e.action.name())
+                    .str("job", &e.job)
+                    .int("procs", e.procs as u64)
+                    .int("migrations", e.migrations as u64)
+                    .num("objective", e.objective)
+                    .int("live_procs", e.live_procs as u64)
+                    .int("free_cores", e.free_cores as u64)
+                    .opt_num("waiting_ms", e.waiting_ms)
+                    .num("place_secs", e.place_secs)
+                    .build()
+            })
+            .collect();
+        mappers.push(
+            json::Obj::new()
+                .str("mapper", &rep.mapper)
+                .int("events", rep.events.len() as u64)
+                .int("placed", rep.placed() as u64)
+                .int("rejected", rep.rejected() as u64)
+                .int("departed", rep.departed() as u64)
+                .int("migrations", rep.total_migrations() as u64)
+                .num("peak_objective", rep.peak_objective())
+                .num("final_objective", rep.final_objective())
+                .num("time_to_place_secs", rep.time_to_place_secs())
+                .num("wall_secs", rep.wall_secs)
+                .raw("trajectory", json::array(&events))
+                .build(),
+        );
+    }
+    let trace = reports.first().map_or("", |r| r.trace.as_str());
+    let mut out = json::Obj::new()
+        .str("schema", "nicmap-replay-v1")
+        .str("trace", trace)
+        .int("threads", threads as u64)
+        .num("wall_secs", wall_secs)
+        .raw("mappers", json::array(&mappers))
+        .build();
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{MapperKind, MapperSpec};
+    use crate::model::topology::ClusterSpec;
+    use crate::online::{replay, ArrivalTrace, ReplayConfig};
+
+    fn small_reports() -> Vec<ChurnReport> {
+        let cluster = ClusterSpec::small_test_cluster();
+        let trace = ArrivalTrace::builtin("poisson:3:4").unwrap();
+        [MapperSpec::plain(MapperKind::Blocked), MapperSpec::plus_r(MapperKind::New)]
+            .iter()
+            .map(|&spec| {
+                replay(
+                    &trace,
+                    &cluster,
+                    spec,
+                    &ReplayConfig { sim_every: 3, sim_rounds: 2, ..ReplayConfig::default() },
+                )
+                .unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn csv_one_row_per_mapper_event_plus_header() {
+        let reports = small_reports();
+        let csv = churn_to_csv(&reports);
+        let text = csv.as_str();
+        let rows: usize = reports.iter().map(|r| r.events.len()).sum();
+        assert_eq!(text.lines().count(), 1 + rows);
+        assert!(text.starts_with(
+            "trace,mapper,seq,at_ns,action,job,procs,migrations,objective,live_procs,\
+             free_cores,waiting_ms,place_secs"
+        ));
+        assert!(text.contains(",Blocked,"));
+        assert!(text.contains(",New+r,"));
+        assert!(text.contains(",placed,") || text.contains(",rejected,"));
+    }
+
+    #[test]
+    fn json_has_schema_summaries_and_trajectories() {
+        let reports = small_reports();
+        let doc = churn_to_json(&reports, 2, 0.5);
+        assert!(doc.starts_with('{') && doc.ends_with("}\n"));
+        assert!(doc.contains("\"schema\":\"nicmap-replay-v1\""));
+        assert!(doc.contains("\"trace\":\"poisson:3:4\""));
+        assert!(doc.contains("\"mapper\":\"Blocked\""));
+        assert!(doc.contains("\"mapper\":\"New+r\""));
+        assert!(doc.contains("\"trajectory\":["));
+        assert!(doc.contains("\"migrations\":"));
+        assert!(doc.contains("\"final_objective\":"));
+        // Events off the sampling schedule render null waiting snapshots.
+        assert!(doc.contains("\"waiting_ms\":null"));
+    }
+
+    #[test]
+    fn empty_reports_render_clean() {
+        let csv = churn_to_csv(&[]);
+        assert_eq!(csv.as_str().lines().count(), 1, "header only");
+        let doc = churn_to_json(&[], 1, 0.0);
+        assert!(doc.contains("\"trace\":\"\""));
+        assert!(doc.contains("\"mappers\":[]"));
+    }
+}

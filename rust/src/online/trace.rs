@@ -1,0 +1,386 @@
+//! Arrival traces — the deterministic event streams the online mapping
+//! service replays.
+//!
+//! An [`ArrivalTrace`] is a time-ordered sequence of [`TraceEvent`]s at
+//! nanosecond timestamps: a job arrives (carrying its full [`JobSpec`]) or a
+//! previously-arrived job departs. Arrivals are numbered `0, 1, 2, …` in
+//! event order — that number is the job's **instance id**, and departures
+//! reference it. Traces are validated up front (monotone timestamps, valid
+//! job specs, departures that reference an earlier arrival exactly once) so
+//! the replay loop never has to defend against malformed streams.
+//!
+//! [`ArrivalTrace::poisson`] is the seeded scenario generator: Poisson-ish
+//! exponential inter-arrival gaps and residency times driven by the
+//! deterministic [`SplitMix64`] RNG, with jobs drawn from the paper's
+//! synthetic pattern/size/rate palette. Same seed ⇒ same trace, bit for bit
+//! — the property the serial-vs-threaded replay goldens build on. A few
+//! named scenarios ([`ArrivalTrace::builtin`]) cover the CLI and CI smoke.
+
+use crate::error::{Error, Result};
+use crate::model::pattern::Pattern;
+use crate::model::workload::JobSpec;
+use crate::testkit::rng::SplitMix64;
+use crate::units::{Ns, KB, MB};
+
+/// What happens at one trace timestamp.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEventKind {
+    /// A job arrives and asks to be placed.
+    Arrive(JobSpec),
+    /// The job admitted as arrival number `instance` departs.
+    Depart(usize),
+}
+
+/// One timestamped event of an arrival trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Event time (ns since trace start; non-decreasing within a trace).
+    pub at_ns: Ns,
+    /// Arrival or departure.
+    pub kind: TraceEventKind,
+}
+
+/// A validated, time-ordered stream of job arrivals and departures.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrivalTrace {
+    /// Scenario name (reported in churn outputs).
+    pub name: String,
+    /// Events in time order.
+    pub events: Vec<TraceEvent>,
+}
+
+impl ArrivalTrace {
+    /// Build and validate a trace: timestamps must be non-decreasing, every
+    /// arriving job must be a valid [`JobSpec`], and every departure must
+    /// reference an arrival that already happened and has not departed yet.
+    pub fn new(name: impl Into<String>, events: Vec<TraceEvent>) -> Result<ArrivalTrace> {
+        let name = name.into();
+        let mut last = 0;
+        let mut arrivals = 0usize;
+        let mut departed = vec![];
+        for (i, ev) in events.iter().enumerate() {
+            if ev.at_ns < last {
+                return Err(Error::spec(format!(
+                    "trace {name:?}: event {i} at {} ns goes back in time (prev {} ns)",
+                    ev.at_ns, last
+                )));
+            }
+            last = ev.at_ns;
+            match &ev.kind {
+                TraceEventKind::Arrive(job) => {
+                    job.validate()?;
+                    arrivals += 1;
+                    departed.push(false);
+                }
+                TraceEventKind::Depart(instance) => {
+                    if *instance >= arrivals {
+                        return Err(Error::spec(format!(
+                            "trace {name:?}: event {i} departs instance {instance} \
+                             before it arrived"
+                        )));
+                    }
+                    if departed[*instance] {
+                        return Err(Error::spec(format!(
+                            "trace {name:?}: event {i} departs instance {instance} twice"
+                        )));
+                    }
+                    departed[*instance] = true;
+                }
+            }
+        }
+        Ok(ArrivalTrace { name, events })
+    }
+
+    /// Number of events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True for a trace with no events.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Number of arrival events.
+    pub fn arrivals(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e.kind, TraceEventKind::Arrive(_)))
+            .count()
+    }
+
+    /// Seeded Poisson-ish scenario: `cfg.jobs` arrivals with exponential
+    /// inter-arrival gaps (mean `cfg.mean_gap_ns`), each departing after an
+    /// exponential residency (mean `cfg.mean_lifetime_ns`). Jobs draw a
+    /// random paper pattern, a process count in `[cfg.min_procs,
+    /// cfg.max_procs]`, and a size/rate from the synthetic tables.
+    /// Deterministic per seed.
+    pub fn poisson(name: impl Into<String>, seed: u64, cfg: &TraceGenConfig) -> ArrivalTrace {
+        let mut rng = SplitMix64::new(seed);
+        // Exponential sampler over integral ns; >= 1 so arrival times are
+        // strictly increasing and instance ids match time order.
+        fn exp(mean: Ns, rng: &mut SplitMix64) -> Ns {
+            let u = rng.unit_f64(); // [0, 1)
+            let t = -(1.0 - u).ln() * mean as f64;
+            (t as Ns).max(1)
+        }
+        let mut arrive_at = Vec::with_capacity(cfg.jobs);
+        let mut depart_at = Vec::with_capacity(cfg.jobs);
+        let mut jobs = Vec::with_capacity(cfg.jobs);
+        let mut t = 0;
+        for i in 0..cfg.jobs {
+            t += exp(cfg.mean_gap_ns, &mut rng);
+            arrive_at.push(t);
+            depart_at.push(t + exp(cfg.mean_lifetime_ns, &mut rng));
+            let pattern = *rng.choose(&Pattern::ALL);
+            let procs = rng.range(cfg.min_procs, cfg.max_procs + 1);
+            let msg = *rng.choose(&[2 * KB, 64 * KB, 512 * KB, 2 * MB]);
+            let rate = *rng.choose(&[1.0, 10.0, 50.0, 100.0]);
+            let count = rng.below(8) + 3; // small round budgets keep epoch sims cheap
+            let mut job = JobSpec::synthetic(pattern, procs, msg, rate, count);
+            job.name = format!("{}#{i}", job.name);
+            jobs.push(job);
+        }
+        // Merge arrivals and departures. Arrival times are strictly
+        // increasing and each departure is strictly later than its own
+        // arrival, so any deterministic total order on (time, key) keeps
+        // every Depart after its Arrive. Key = 2i for Arrive(i), 2i+1 for
+        // Depart(i): at a timestamp collision between Depart(i) and
+        // Arrive(j) necessarily j > i, so the *departure sorts first* and
+        // the arriving job sees the freed cores.
+        let mut events: Vec<(Ns, usize, TraceEvent)> = Vec::with_capacity(2 * cfg.jobs);
+        for (i, job) in jobs.into_iter().enumerate() {
+            events.push((
+                arrive_at[i],
+                2 * i,
+                TraceEvent { at_ns: arrive_at[i], kind: TraceEventKind::Arrive(job) },
+            ));
+            events.push((
+                depart_at[i],
+                2 * i + 1,
+                TraceEvent { at_ns: depart_at[i], kind: TraceEventKind::Depart(i) },
+            ));
+        }
+        events.sort_by_key(|&(t, order, _)| (t, order));
+        let events = events.into_iter().map(|(_, _, e)| e).collect();
+        Self::new(name, events).expect("generated traces are valid by construction")
+    }
+
+    /// Named scenarios for the CLI and CI smoke, plus the parameterized
+    /// `poisson:SEED:JOBS` form.
+    ///
+    /// * `smoke`  — 8 jobs, light churn (the CI replay smoke).
+    /// * `steady` — 24 jobs, arrivals and departures in rough balance.
+    /// * `churn`  — 32 short-lived jobs (departure-heavy).
+    /// * `burst`  — 20 jobs arriving almost at once, long residencies
+    ///   (exercises capacity rejections).
+    pub fn builtin(name: &str) -> Result<ArrivalTrace> {
+        let ms = 1_000_000u64;
+        match name.trim() {
+            "smoke" => Ok(Self::poisson(
+                "smoke",
+                0x5e1f_0001,
+                &TraceGenConfig {
+                    jobs: 8,
+                    mean_gap_ns: 40 * ms,
+                    mean_lifetime_ns: 150 * ms,
+                    min_procs: 4,
+                    max_procs: 24,
+                },
+            )),
+            "steady" => Ok(Self::poisson(
+                "steady",
+                0x5e1f_0002,
+                &TraceGenConfig {
+                    jobs: 24,
+                    mean_gap_ns: 50 * ms,
+                    mean_lifetime_ns: 200 * ms,
+                    min_procs: 8,
+                    max_procs: 48,
+                },
+            )),
+            "churn" => Ok(Self::poisson(
+                "churn",
+                0x5e1f_0003,
+                &TraceGenConfig {
+                    jobs: 32,
+                    mean_gap_ns: 30 * ms,
+                    mean_lifetime_ns: 45 * ms,
+                    min_procs: 4,
+                    max_procs: 32,
+                },
+            )),
+            "burst" => Ok(Self::poisson(
+                "burst",
+                0x5e1f_0004,
+                &TraceGenConfig {
+                    jobs: 20,
+                    mean_gap_ns: 2 * ms,
+                    mean_lifetime_ns: 900 * ms,
+                    min_procs: 16,
+                    max_procs: 64,
+                },
+            )),
+            other => match other.strip_prefix("poisson:") {
+                Some(rest) => {
+                    let mut it = rest.splitn(2, ':');
+                    let seed: u64 = it
+                        .next()
+                        .unwrap_or_default()
+                        .parse()
+                        .map_err(|_| Error::usage(format!("bad trace seed in {other:?}")))?;
+                    let jobs: usize = it
+                        .next()
+                        .unwrap_or("16")
+                        .parse()
+                        .map_err(|_| Error::usage(format!("bad trace job count in {other:?}")))?;
+                    Ok(Self::poisson(
+                        format!("poisson:{seed}:{jobs}"),
+                        seed,
+                        &TraceGenConfig { jobs, ..TraceGenConfig::default() },
+                    ))
+                }
+                None => Err(Error::usage(format!(
+                    "unknown trace {other:?} (expected smoke|steady|churn|burst|poisson:SEED:JOBS)"
+                ))),
+            },
+        }
+    }
+
+    /// Names of the fixed builtin scenarios.
+    pub fn builtin_names() -> [&'static str; 4] {
+        ["smoke", "steady", "churn", "burst"]
+    }
+}
+
+/// Knobs of the Poisson-ish generator ([`ArrivalTrace::poisson`]).
+#[derive(Debug, Clone, Copy)]
+pub struct TraceGenConfig {
+    /// Number of job arrivals.
+    pub jobs: usize,
+    /// Mean inter-arrival gap, ns.
+    pub mean_gap_ns: Ns,
+    /// Mean job residency (arrival → departure), ns.
+    pub mean_lifetime_ns: Ns,
+    /// Minimum processes per job.
+    pub min_procs: usize,
+    /// Maximum processes per job (inclusive).
+    pub max_procs: usize,
+}
+
+impl Default for TraceGenConfig {
+    fn default() -> Self {
+        TraceGenConfig {
+            jobs: 16,
+            mean_gap_ns: 50_000_000,
+            mean_lifetime_ns: 150_000_000,
+            min_procs: 4,
+            max_procs: 32,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(procs: usize) -> JobSpec {
+        JobSpec::synthetic(Pattern::Linear, procs, 1000, 1.0, 5)
+    }
+
+    #[test]
+    fn validation_accepts_wellformed_traces() {
+        let t = ArrivalTrace::new(
+            "t",
+            vec![
+                TraceEvent { at_ns: 0, kind: TraceEventKind::Arrive(job(2)) },
+                TraceEvent { at_ns: 5, kind: TraceEventKind::Arrive(job(3)) },
+                TraceEvent { at_ns: 9, kind: TraceEventKind::Depart(0) },
+                TraceEvent { at_ns: 9, kind: TraceEventKind::Depart(1) },
+            ],
+        )
+        .unwrap();
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.arrivals(), 2);
+        assert!(!t.is_empty());
+    }
+
+    #[test]
+    fn validation_rejects_malformed_traces() {
+        // Time going backwards.
+        assert!(ArrivalTrace::new(
+            "t",
+            vec![
+                TraceEvent { at_ns: 5, kind: TraceEventKind::Arrive(job(2)) },
+                TraceEvent { at_ns: 4, kind: TraceEventKind::Depart(0) },
+            ],
+        )
+        .is_err());
+        // Departure before arrival.
+        assert!(ArrivalTrace::new(
+            "t",
+            vec![TraceEvent { at_ns: 0, kind: TraceEventKind::Depart(0) }],
+        )
+        .is_err());
+        // Double departure.
+        assert!(ArrivalTrace::new(
+            "t",
+            vec![
+                TraceEvent { at_ns: 0, kind: TraceEventKind::Arrive(job(2)) },
+                TraceEvent { at_ns: 1, kind: TraceEventKind::Depart(0) },
+                TraceEvent { at_ns: 2, kind: TraceEventKind::Depart(0) },
+            ],
+        )
+        .is_err());
+        // Invalid job spec.
+        let mut bad = job(2);
+        bad.procs = 0;
+        assert!(ArrivalTrace::new(
+            "t",
+            vec![TraceEvent { at_ns: 0, kind: TraceEventKind::Arrive(bad) }],
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn poisson_deterministic_per_seed() {
+        let cfg = TraceGenConfig::default();
+        let a = ArrivalTrace::poisson("a", 42, &cfg);
+        let b = ArrivalTrace::poisson("a", 42, &cfg);
+        assert_eq!(a, b, "same seed must regenerate the same trace");
+        let c = ArrivalTrace::poisson("a", 43, &cfg);
+        assert_ne!(a.events, c.events, "different seed must differ");
+        assert_eq!(a.arrivals(), cfg.jobs);
+        assert_eq!(a.len(), 2 * cfg.jobs, "every job arrives and departs");
+    }
+
+    #[test]
+    fn poisson_departures_follow_their_arrivals() {
+        let t = ArrivalTrace::poisson("t", 7, &TraceGenConfig::default());
+        let mut arrived = std::collections::BTreeSet::new();
+        for ev in &t.events {
+            match &ev.kind {
+                TraceEventKind::Arrive(_) => {
+                    arrived.insert(arrived.len());
+                }
+                TraceEventKind::Depart(i) => {
+                    assert!(arrived.contains(i), "depart {i} before arrival");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn builtin_scenarios_resolve() {
+        for name in ArrivalTrace::builtin_names() {
+            let t = ArrivalTrace::builtin(name).unwrap();
+            assert!(!t.is_empty(), "{name}");
+            assert_eq!(t.name, name);
+        }
+        let p = ArrivalTrace::builtin("poisson:9:5").unwrap();
+        assert_eq!(p.arrivals(), 5);
+        assert!(ArrivalTrace::builtin("bogus").is_err());
+        assert!(ArrivalTrace::builtin("poisson:x:5").is_err());
+        assert!(ArrivalTrace::builtin("poisson:9:y").is_err());
+    }
+}

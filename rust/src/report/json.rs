@@ -64,6 +64,14 @@ impl Obj {
         self.raw(key, value.to_string())
     }
 
+    /// Add an optional float field (`null` when absent or non-finite).
+    pub fn opt_num(self, key: &str, value: Option<f64>) -> Self {
+        match value {
+            Some(v) => self.num(key, v),
+            None => self.raw(key, "null".to_string()),
+        }
+    }
+
     /// Add a pre-rendered JSON fragment (nested object/array/null).
     pub fn raw(mut self, key: &str, fragment: String) -> Self {
         self.fields.push(format!("{}:{}", quote(key), fragment));
@@ -95,6 +103,12 @@ mod tests {
         assert_eq!(num(0.0), "0");
         assert_eq!(num(f64::NAN), "null");
         assert_eq!(num(f64::INFINITY), "null");
+    }
+
+    #[test]
+    fn optional_numbers() {
+        let doc = Obj::new().opt_num("a", Some(1.5)).opt_num("b", None).build();
+        assert_eq!(doc, "{\"a\":1.5,\"b\":null}");
     }
 
     #[test]

@@ -9,6 +9,16 @@
 pub mod gen;
 pub mod rng;
 
+/// Bitwise equality of two [`crate::cost::NodeLoads`] — the comparator the
+/// delta-vs-full-recompute invariant tests share (equal lane lengths and
+/// identical f64 bits in every `nic_tx`/`nic_rx`/`intra` entry).
+pub fn loads_bits_eq(a: &crate::cost::NodeLoads, b: &crate::cost::NodeLoads) -> bool {
+    fn eq(x: &[f64], y: &[f64]) -> bool {
+        x.len() == y.len() && x.iter().zip(y).all(|(u, v)| u.to_bits() == v.to_bits())
+    }
+    eq(&a.nic_tx, &b.nic_tx) && eq(&a.nic_rx, &b.nic_rx) && eq(&a.intra, &b.intra)
+}
+
 /// Run `prop` over `cases` generated inputs; panics with the offending seed
 /// on the first failure. Each case's seed derives from `base_seed` so a
 /// failure message like "seed 0xDEAD_0005" replays with

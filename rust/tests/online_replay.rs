@@ -1,0 +1,203 @@
+//! Acceptance tests for the online elastic mapping service (ISSUE 4):
+//!
+//! * replaying the same seeded arrival trace serial vs `par_map`-threaded
+//!   yields **bit-identical** `ChurnReport` metrics;
+//! * after every arrival/departure event the live ledger loads equal a
+//!   full scorer recompute of the live placement — the PR-2
+//!   delta-evaluation invariant extended to bulk job moves (including the
+//!   `+r` per-event refinement fold-back);
+//! * `TrafficMatrix::of_workload` runs **exactly once per admitted job**,
+//!   and never on departures, rejections, or refinement — the
+//!   counting-constructor invariant extended to churn.
+//!
+//! Tests that read the process-wide build counter serialize on one mutex,
+//! mirroring `tests/mapctx_sweep.rs` (this file is its own test binary, so
+//! the lock is all the isolation the counting assertions need).
+
+use std::sync::Mutex;
+
+use nicmap::coordinator::{MapperKind, MapperSpec};
+use nicmap::cost::Scorer;
+use nicmap::harness::{replays_identical, run_replay};
+use nicmap::model::pattern::Pattern;
+use nicmap::model::topology::ClusterSpec;
+use nicmap::model::traffic::TrafficMatrix;
+use nicmap::model::workload::JobSpec;
+use nicmap::online::{
+    replay, ArrivalTrace, OnlineMapper, ReplayConfig, TraceEvent, TraceEventKind,
+};
+use nicmap::runtime::NativeScorer;
+use nicmap::testkit::{forall, gen, loads_bits_eq};
+
+static COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+fn counter_guard() -> std::sync::MutexGuard<'static, ()> {
+    COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Replaying one seeded trace serial vs threaded is bit-identical in every
+/// deterministic churn metric, across plain and `+r` mappers and with
+/// epoch waiting-time snapshots enabled.
+#[test]
+fn replay_serial_vs_threaded_bit_identical() {
+    let _guard = counter_guard();
+    let cluster = ClusterSpec::paper_cluster();
+    let mappers = [
+        MapperSpec::plain(MapperKind::Blocked),
+        MapperSpec::plus_r(MapperKind::Blocked),
+        MapperSpec::plain(MapperKind::Cyclic),
+        MapperSpec::plain(MapperKind::New),
+        MapperSpec::plus_r(MapperKind::New),
+    ];
+    let cfg = ReplayConfig { sim_every: 5, sim_rounds: 3, ..ReplayConfig::default() };
+    for scenario in ["smoke", "churn"] {
+        let trace = ArrivalTrace::builtin(scenario).unwrap();
+        let serial = run_replay(&trace, &cluster, &mappers, &cfg, 1).unwrap();
+        for threads in [2, 8] {
+            let parallel = run_replay(&trace, &cluster, &mappers, &cfg, threads).unwrap();
+            assert!(
+                replays_identical(&serial, &parallel),
+                "{scenario} with {threads} threads diverged from serial"
+            );
+        }
+        // The fan-out also matches independent one-shot replays.
+        for (rep, spec) in serial.iter().zip(&mappers) {
+            let direct = replay(&trace, &cluster, *spec, &cfg).unwrap();
+            assert!(
+                rep.metrics_eq(&direct),
+                "{scenario}/{}: fan-out drifted from direct replay",
+                rep.mapper
+            );
+        }
+    }
+}
+
+/// After every event — arrival, departure, rejection, refinement — the
+/// live `BulkLedger` loads equal a full `NativeScorer` recompute of the
+/// live placement, bit for bit (integer-rate workloads), and the live
+/// placement stays structurally valid.
+#[test]
+fn live_ledger_equals_full_recompute_after_every_event() {
+    let _guard = counter_guard();
+    let cluster = ClusterSpec::paper_cluster();
+    let specs = [
+        MapperSpec::plain(MapperKind::Blocked),
+        MapperSpec::plain(MapperKind::New),
+        MapperSpec::plus_r(MapperKind::New),
+        MapperSpec::plus_r(MapperKind::Cyclic),
+    ];
+    let trace = ArrivalTrace::builtin("steady").unwrap();
+    for spec in specs {
+        let mut service = OnlineMapper::new(&cluster, spec, ReplayConfig::default()).unwrap();
+        for event in &trace.events {
+            let record = service.on_event(event).unwrap();
+            let live_w = service.live_workload();
+            let live_p = service.live_placement();
+            if !live_w.jobs.is_empty() {
+                live_p.validate(&live_w, &cluster).unwrap();
+            }
+            let full = NativeScorer
+                .score(&service.live_traffic(), &live_p, &cluster)
+                .unwrap();
+            assert!(
+                loads_bits_eq(service.loads(), &full),
+                "{}: event {} ({:?}) drifted from full recompute",
+                spec.name(),
+                record.seq,
+                record.action
+            );
+            assert_eq!(
+                service.objective().to_bits(),
+                full.objective(cluster.nic_bw as f64).to_bits(),
+                "{}: objective drift at event {}",
+                spec.name(),
+                record.seq
+            );
+            assert_eq!(
+                service.free_cores(),
+                cluster.total_cores() - service.live_procs(),
+                "{}: occupancy drift at event {}",
+                spec.name(),
+                record.seq
+            );
+        }
+    }
+}
+
+/// The bulk invariant also holds over randomly generated clusters and
+/// traces (seeded, replayable — failures print the offending seed).
+#[test]
+fn live_ledger_invariant_over_generated_traces() {
+    let _guard = counter_guard();
+    forall(0x0519_4EAD, 10, |rng| {
+        let cluster = gen::cluster(rng);
+        let trace = gen::trace(rng, &cluster);
+        let spec = if rng.below(2) == 0 {
+            MapperSpec::plain(MapperKind::Cyclic)
+        } else {
+            MapperSpec::plus_r(MapperKind::Blocked)
+        };
+        let mut service = OnlineMapper::new(&cluster, spec, ReplayConfig::default()).unwrap();
+        for event in &trace.events {
+            service.on_event(event).unwrap();
+            let full = NativeScorer
+                .score(&service.live_traffic(), &service.live_placement(), &cluster)
+                .unwrap();
+            assert!(
+                loads_bits_eq(service.loads(), &full),
+                "generated trace drifted from full recompute"
+            );
+        }
+    });
+}
+
+/// `TrafficMatrix::of_workload` build count: exactly one per admitted job,
+/// zero on departures, rejections, and refinement.
+#[test]
+fn one_traffic_build_per_admitted_job() {
+    let _guard = counter_guard();
+    let cluster = ClusterSpec::paper_cluster();
+    let job = |procs: usize| JobSpec::synthetic(Pattern::AllToAll, procs, 64_000, 10.0, 5);
+    let ev = |at_ns, kind| TraceEvent { at_ns, kind };
+    let trace = ArrivalTrace::new(
+        "counting",
+        vec![
+            ev(0, TraceEventKind::Arrive(job(32))),
+            ev(10, TraceEventKind::Arrive(job(64))),
+            ev(20, TraceEventKind::Arrive(job(300))), // > 256 cores: rejected
+            ev(30, TraceEventKind::Depart(0)),
+            ev(40, TraceEventKind::Arrive(job(48))),
+            ev(50, TraceEventKind::Depart(2)), // rejected instance: no-op
+            ev(60, TraceEventKind::Depart(1)),
+            ev(70, TraceEventKind::Depart(3)),
+        ],
+    )
+    .unwrap();
+    // `+r` so every event also runs the refinement pass — which must not
+    // rebuild any workload matrix either.
+    let spec = MapperSpec::plus_r(MapperKind::New);
+    let before = TrafficMatrix::workload_builds();
+    let rep = replay(&trace, &cluster, spec, &ReplayConfig::default()).unwrap();
+    let delta = TrafficMatrix::workload_builds() - before;
+    assert_eq!(rep.placed(), 3);
+    assert_eq!(rep.rejected(), 1);
+    assert_eq!(rep.departed(), 3);
+    assert_eq!(
+        delta, 3,
+        "exactly one workload-matrix build per admitted job (got {delta})"
+    );
+    // A departure-only continuation builds nothing: replay the same trace
+    // minus its tail arrivals and compare counters around the departures.
+    let before = TrafficMatrix::workload_builds();
+    let mut service = OnlineMapper::new(&cluster, spec, ReplayConfig::default()).unwrap();
+    service.on_event(&trace.events[0]).unwrap();
+    service.on_event(&trace.events[1]).unwrap();
+    let after_admits = TrafficMatrix::workload_builds();
+    assert_eq!(after_admits - before, 2);
+    service.on_event(&trace.events[3]).unwrap(); // depart 0 (+ refinement)
+    assert_eq!(
+        TrafficMatrix::workload_builds(),
+        after_admits,
+        "departures and refinement must never rebuild a workload matrix"
+    );
+}

@@ -173,12 +173,7 @@ fn ledger_loads_equal_full_recompute_after_every_accepted_move() {
     // are integer-valued, so delta arithmetic is exact — crate::cost docs).
     let (traffic, _w, cluster, start) = seeded_256();
     let mut ledger = LoadLedger::new(&NativeScorer, &traffic, &start, &cluster).unwrap();
-    let bits_eq = |a: &NodeLoads, b: &NodeLoads| {
-        let eq = |x: &[f64], y: &[f64]| {
-            x.iter().zip(y).all(|(u, v)| u.to_bits() == v.to_bits())
-        };
-        eq(&a.nic_tx, &b.nic_tx) && eq(&a.nic_rx, &b.nic_rx) && eq(&a.intra, &b.intra)
-    };
+    let bits_eq = nicmap::testkit::loads_bits_eq;
     let mut current = ledger.objective();
     let mut accepted = 0usize;
     for _ in 0..3 {
