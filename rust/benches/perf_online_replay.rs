@@ -6,7 +6,7 @@
 
 use std::time::Instant;
 
-use nicmap::coordinator::{MapperKind, MapperSpec};
+use nicmap::coordinator::MapperSpec;
 use nicmap::harness::{replays_identical, run_replay};
 use nicmap::model::topology::ClusterSpec;
 use nicmap::model::traffic::TrafficMatrix;
@@ -14,12 +14,10 @@ use nicmap::online::{ArrivalTrace, ReplayConfig};
 
 fn main() {
     let cluster = ClusterSpec::paper_cluster();
-    let mappers = [
-        MapperSpec::plain(MapperKind::Blocked),
-        MapperSpec::plain(MapperKind::Cyclic),
-        MapperSpec::plain(MapperKind::New),
-        MapperSpec::plus_r(MapperKind::New),
-    ];
+    // The full paper set with its +r pipelines: every strategy — the graph
+    // partitioners included, via the induced free-core sub-cluster — now
+    // streams through the occupancy-aware `place` entry point.
+    let mappers = MapperSpec::PAPER_REFINED;
     let cfg = ReplayConfig::default();
 
     println!("perf_online_replay: {} mappers, scenarios smoke/steady/churn/burst", mappers.len());

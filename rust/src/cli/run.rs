@@ -39,18 +39,18 @@ VERBS
              [--csv [FILE]] [--json [FILE]] [--sim-every K] [--sim-rounds R]
              [--refine-rounds K] [--events]
              stream job arrivals/departures through the online mapping
-             service; --csv/--json write CHURN_replay.{csv,json}; `all`
-             expands to the incremental strategies B,C,N (DRB/K-way have
-             no restricted variant)
+             service; --csv/--json write CHURN_replay.{csv,json}
   workload   <show> <name>                  print a builtin workload table
   artifacts                                 list AOT artifacts + PJRT platform
   help                                      this text
 
-Any mapper takes a `+r` suffix (B+r, C+r, D+r, N+r, ...) selecting the
-cost-model refinement stage after the base mapping; `--mappers all` is the
-paper's B,C,D,N and `--mappers all+r` interleaves their +r variants. For
-`replay`, `+r` selects a bounded per-event refinement pass instead, and the
-base must be an incremental strategy (B, C, N, or random).
+Mapper letters are case-insensitive (N == n) and any mapper takes a `+r`
+suffix (B+r, c+r, D+r, n+r, ...) selecting the cost-model refinement stage
+after the base mapping; `--mappers all` is the paper's B,C,D,N and
+`--mappers all+r` interleaves their +r variants — in `bench`/`figure`
+sweeps and in `replay` alike, since every strategy (the graph partitioners
+included) places through the occupancy-aware `place` entry point. For
+`replay`, `+r` selects a bounded per-event refinement pass instead.
 ";
 
 /// Entry point given parsed args; returns the process exit code.
@@ -445,20 +445,15 @@ fn cmd_refine(args: &Args) -> Result<()> {
 fn cmd_replay(args: &Args) -> Result<()> {
     let trace = ArrivalTrace::builtin(args.require("trace")?)?;
     let mapper_key = if args.get("mappers").is_some() { "mappers" } else { "mapper" };
-    // `all`/`all+r` expand to the *incremental* strategies only — DRB has
-    // no free-core-restricted variant, so the batch sweep's B,C,D,N set
-    // would make every `all` replay fail at service construction.
-    const INCREMENTAL: [MapperKind; 3] =
-        [MapperKind::Blocked, MapperKind::Cyclic, MapperKind::New];
+    // `all`/`all+r` expand exactly as in the batch sweeps: every strategy
+    // places through the occupancy-aware `place` entry point, the graph
+    // partitioners included (they cut the induced free-core sub-cluster).
     let mappers: Vec<MapperSpec> = match args.get(mapper_key) {
         // The online default: the paper strategy with and without the
         // per-event refinement pass.
         None => vec![MapperSpec::plain(MapperKind::New), MapperSpec::plus_r(MapperKind::New)],
-        Some("all") => INCREMENTAL.iter().map(|&k| MapperSpec::plain(k)).collect(),
-        Some("all+r") => INCREMENTAL
-            .iter()
-            .flat_map(|&k| [MapperSpec::plain(k), MapperSpec::plus_r(k)])
-            .collect(),
+        Some("all") => MapperSpec::PAPER.to_vec(),
+        Some("all+r") => MapperSpec::PAPER_REFINED.to_vec(),
         Some(list) => list.split(',').map(MapperSpec::parse).collect::<Result<Vec<_>>>()?,
     };
     let mut cfg = ReplayConfig::default();
@@ -745,11 +740,20 @@ mod tests {
     }
 
     #[test]
-    fn replay_all_expands_to_incremental_strategies() {
-        // `all`/`all+r` must not include DRB/K-way (no incremental variant);
-        // both expansions have to run clean end to end.
+    fn replay_all_expands_to_paper_strategies() {
+        // `all`/`all+r` now cover the full paper set — DRB places restricted
+        // via the induced free-core sub-cluster — and both expansions have
+        // to run clean end to end.
         main_with_args(args(&["replay", "--trace", "poisson:7:3", "--mappers", "all"])).unwrap();
         main_with_args(args(&["replay", "--trace", "poisson:7:3", "--mappers", "all+r"]))
+            .unwrap();
+    }
+
+    #[test]
+    fn replay_partitioners_stream_restricted() {
+        // The graph partitioners (and their +r pipelines) replay under
+        // churn now that `place` projects the free cores.
+        main_with_args(args(&["replay", "--trace", "poisson:5:3", "--mappers", "D,kway,D+r"]))
             .unwrap();
     }
 
@@ -759,11 +763,6 @@ mod tests {
         assert!(main_with_args(args(&["replay", "--trace", "bogus"])).is_err());
         assert!(
             main_with_args(args(&["replay", "--trace", "poisson:5:3", "--mappers", "zz"]))
-                .is_err()
-        );
-        // DRB has no incremental variant: clean error, not a panic.
-        assert!(
-            main_with_args(args(&["replay", "--trace", "poisson:5:3", "--mappers", "D"]))
                 .is_err()
         );
     }

@@ -5,7 +5,7 @@
 //! node.
 
 use crate::coordinator::placement::Occupancy;
-use crate::coordinator::{IncrementalMapper, Mapper, Placement};
+use crate::coordinator::{Mapper, Placement};
 use crate::ctx::MapCtx;
 use crate::error::{Error, Result};
 use crate::model::topology::ClusterSpec;
@@ -19,26 +19,12 @@ impl Mapper for Blocked {
         "Blocked"
     }
 
-    fn map(&self, ctx: &MapCtx, cluster: &ClusterSpec) -> Result<Placement> {
-        let p = ctx.len();
-        if p > cluster.total_cores() {
-            return Err(Error::mapping(format!(
-                "{p} processes exceed {} cores",
-                cluster.total_cores()
-            )));
-        }
-        // Jobs in table order, ranks in order, cores in order: process g
-        // simply takes core g.
-        Ok(Placement::new((0..p).collect()))
-    }
-}
-
-impl IncrementalMapper for Blocked {
-    /// Restricted Blocked: take free cores in core order — on a live
+    /// Occupancy-restricted Blocked: take free cores in core order. On an
+    /// all-free occupancy process `g` simply takes core `g` (jobs in table
+    /// order, ranks in order, cores in order — the batch shape); on a live
     /// cluster this fills the holes left by departed jobs first, then the
-    /// untouched tail, preserving the fill-first shape. Equal to
-    /// [`Mapper::map`] on an all-free occupancy.
-    fn map_into(
+    /// untouched tail, preserving the fill-first shape.
+    fn place(
         &self,
         ctx: &MapCtx,
         cluster: &ClusterSpec,

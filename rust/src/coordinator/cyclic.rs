@@ -3,7 +3,7 @@
 //! per node.
 
 use crate::coordinator::placement::Occupancy;
-use crate::coordinator::{IncrementalMapper, Mapper, Placement};
+use crate::coordinator::{Mapper, Placement};
 use crate::ctx::MapCtx;
 use crate::error::{Error, Result};
 use crate::model::topology::ClusterSpec;
@@ -17,34 +17,11 @@ impl Mapper for Cyclic {
         "Cyclic"
     }
 
-    fn map(&self, ctx: &MapCtx, cluster: &ClusterSpec) -> Result<Placement> {
-        let p = ctx.len();
-        if p > cluster.total_cores() {
-            return Err(Error::mapping(format!(
-                "{p} processes exceed {} cores",
-                cluster.total_cores()
-            )));
-        }
-        // Process g goes to node g % nodes, taking that node's next free
-        // core in socket order. With dense global ids this is core
-        // (node, slot) where slot = g / nodes.
-        let nodes = cluster.nodes;
-        let cores = (0..p)
-            .map(|g| {
-                let node = g % nodes;
-                let slot = g / nodes;
-                cluster.first_core_of_node(node) + slot
-            })
-            .collect();
-        Ok(Placement::new(cores))
-    }
-}
-
-impl IncrementalMapper for Cyclic {
-    /// Restricted Cyclic: round-robin over nodes, skipping nodes with no
-    /// free core, taking each visited node's first free core. Equal to
-    /// [`Mapper::map`] on an all-free occupancy.
-    fn map_into(
+    /// Occupancy-restricted Cyclic: round-robin over nodes, skipping nodes
+    /// with no free core, taking each visited node's first free core. On an
+    /// all-free occupancy process `g` lands on node `g % nodes` at slot
+    /// `g / nodes` — exactly the batch round-robin shape.
+    fn place(
         &self,
         ctx: &MapCtx,
         cluster: &ClusterSpec,

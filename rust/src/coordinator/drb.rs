@@ -12,6 +12,15 @@
 //! part-size vector computed from node capacities (proportional split —
 //! the same shape Scotch's load-balance constraint produces), then repeat
 //! one level down to pick sockets inside every node.
+//!
+//! Occupancy restriction: under a partially occupied cluster the CTG is
+//! **projected onto the free cores** — an induced sub-cluster whose node
+//! (and socket) capacities are the per-node (per-socket) free-core counts.
+//! The AG is partitioned against that sub-cluster and the parts lift back
+//! onto real free cores, so DRB serves the streaming path with the same
+//! min-cut machinery as the batch figures. On an all-free occupancy the
+//! sub-cluster is the full cluster and the batch placement falls out as
+//! the special case.
 
 use crate::coordinator::{placement::Occupancy, Mapper, Placement};
 use crate::ctx::MapCtx;
@@ -50,26 +59,39 @@ impl Mapper for Drb {
         "DRB"
     }
 
-    fn map(&self, ctx: &MapCtx, cluster: &ClusterSpec) -> Result<Placement> {
+    fn place(
+        &self,
+        ctx: &MapCtx,
+        cluster: &ClusterSpec,
+        occ: &mut Occupancy<'_>,
+    ) -> Result<Placement> {
         let p = ctx.len();
-        if p > cluster.total_cores() {
+        if p > occ.total_free() {
             return Err(Error::mapping(format!(
-                "{p} processes exceed {} cores",
-                cluster.total_cores()
+                "{p} processes exceed {} free cores",
+                occ.total_free()
             )));
+        }
+        if p == 0 {
+            // Nothing to cut (and a fully occupied cluster would make the
+            // proportional split's capacity sum zero).
+            return Ok(Placement::new(Vec::new()));
         }
         // The application graph comes prebuilt from the shared context —
         // no per-call traffic-matrix or CSR reconstruction.
         let ag = ctx.graph();
 
-        // Level 1: bisect the AG against the node level of the CTG.
-        let node_caps = vec![cluster.cores_per_node(); cluster.nodes];
+        // Level 1: bisect the AG against the node level of the induced
+        // sub-cluster — the CTG restricted to free cores, whose node
+        // capacities are the per-node free-core counts (the full capacities
+        // on an all-free occupancy).
+        let node_caps: Vec<usize> = (0..cluster.nodes).map(|n| occ.node_free(n)).collect();
         let node_sizes = proportional_split(p, &node_caps);
         let node_of_proc = recursive_bisection(ag, &node_sizes);
 
         // Level 2: inside each node, bisect the per-node subgraph against
-        // the socket level, then hand out cores.
-        let mut occ = Occupancy::new(cluster);
+        // the socket level of the sub-cluster, then lift the parts back
+        // onto real free cores.
         let mut core_of = vec![usize::MAX; p];
         for node in 0..cluster.nodes {
             let members: Vec<usize> =
@@ -78,7 +100,8 @@ impl Mapper for Drb {
                 continue;
             }
             let (sub, back) = ag.subgraph(&members);
-            let socket_caps = vec![cluster.cores_per_socket; cluster.sockets_per_node];
+            let socket_caps: Vec<usize> =
+                cluster.sockets_of_node(node).map(|s| occ.socket_free(s)).collect();
             let socket_sizes = proportional_split(members.len(), &socket_caps);
             let socket_of_member = recursive_bisection(&sub, &socket_sizes);
             for (m, &proc) in back.iter().enumerate() {
@@ -159,6 +182,40 @@ mod tests {
         // what we check is structural validity + determinism.
         let p2 = Drb.map_workload(&w, &cluster).unwrap();
         assert_eq!(p, p2);
+    }
+
+    /// Restricted DRB partitions against the induced free-core sub-cluster:
+    /// the balance constraint follows the *free* capacities, claimed cores
+    /// stay untouched, and an overfull free pool is a clean error.
+    #[test]
+    fn restricted_place_follows_free_capacities() {
+        let cluster = ClusterSpec::paper_cluster();
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::AllToAll, 32, 64_000, 10.0, 100)],
+        )
+        .unwrap();
+        let ctx = crate::ctx::MapCtx::build(&w);
+        // Fill nodes 0-7 completely: the induced sub-cluster is nodes 8-15.
+        let mut occ = Occupancy::new(&cluster);
+        let occupied: Vec<usize> = (0..8 * cluster.cores_per_node()).collect();
+        for &c in &occupied {
+            occ.claim(c).unwrap();
+        }
+        let p = Drb.place(&ctx, &cluster, &mut occ).unwrap();
+        let counts = p.node_counts(&cluster);
+        assert_eq!(&counts[..8], &[0; 8], "full nodes must receive nothing");
+        // 32 procs over 8 free 16-core nodes, proportional: 4 each.
+        assert_eq!(&counts[8..], &[4; 8], "balance must follow free capacity");
+        for &c in &p.core_of {
+            assert!(!occupied.contains(&c));
+        }
+        // Free pool smaller than the job: clean error.
+        let mut tight = Occupancy::new(&cluster);
+        for c in 0..cluster.total_cores() - 31 {
+            tight.claim(c).unwrap();
+        }
+        assert!(Drb.place(&ctx, &cluster, &mut tight).is_err());
     }
 
     #[test]

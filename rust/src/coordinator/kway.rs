@@ -25,19 +25,34 @@ impl Mapper for KWay {
         "KWay"
     }
 
-    fn map(&self, ctx: &MapCtx, cluster: &ClusterSpec) -> Result<Placement> {
+    /// Occupancy-restricted K-way: partition the AG into `nodes` parts
+    /// sized by the **free** cores per node (the induced sub-cluster, as in
+    /// [`crate::coordinator::drb`]), then lift each part onto that node's
+    /// free cores in socket order. On an all-free occupancy the part sizes
+    /// are the full node capacities — the batch placement.
+    fn place(
+        &self,
+        ctx: &MapCtx,
+        cluster: &ClusterSpec,
+        occ: &mut Occupancy<'_>,
+    ) -> Result<Placement> {
         let p = ctx.len();
-        if p > cluster.total_cores() {
+        if p > occ.total_free() {
             return Err(Error::mapping(format!(
-                "{p} processes exceed {} cores",
-                cluster.total_cores()
+                "{p} processes exceed {} free cores",
+                occ.total_free()
             )));
         }
+        if p == 0 {
+            // Nothing to cut (and a fully occupied cluster would make the
+            // proportional split's capacity sum zero).
+            return Ok(Placement::new(Vec::new()));
+        }
         // Shared-context AG: the same CSR view DRB cuts, built once.
-        let sizes = proportional_split(p, &vec![cluster.cores_per_node(); cluster.nodes]);
+        let caps: Vec<usize> = (0..cluster.nodes).map(|n| occ.node_free(n)).collect();
+        let sizes = proportional_split(p, &caps);
         let node_of_proc = recursive_bisection(ctx.graph(), &sizes);
 
-        let mut occ = Occupancy::new(cluster);
         let mut core_of = vec![usize::MAX; p];
         for proc in 0..p {
             let node = node_of_proc[proc];
@@ -74,5 +89,39 @@ mod tests {
         for &c in p.node_counts(&cluster).iter() {
             assert!(c <= cluster.cores_per_node());
         }
+    }
+
+    /// Restricted K-way sizes its parts by the free cores per node.
+    #[test]
+    fn restricted_place_respects_free_capacities() {
+        let cluster = ClusterSpec::paper_cluster();
+        let w = Workload::new(
+            "t",
+            vec![crate::model::workload::JobSpec::synthetic(
+                crate::model::pattern::Pattern::AllToAll,
+                24,
+                64_000,
+                10.0,
+                100,
+            )],
+        )
+        .unwrap();
+        let ctx = crate::ctx::MapCtx::build(&w);
+        let mut occ = Occupancy::new(&cluster);
+        // Leave node 0 with a single free core; fill node 1 completely.
+        for c in 0..cluster.cores_per_node() - 1 {
+            occ.claim(c).unwrap();
+        }
+        for c in cluster.first_core_of_node(1)..cluster.first_core_of_node(2) {
+            occ.claim(c).unwrap();
+        }
+        let free_before: Vec<usize> = (0..cluster.nodes).map(|n| occ.node_free(n)).collect();
+        let p = KWay.place(&ctx, &cluster, &mut occ).unwrap();
+        let counts = p.node_counts(&cluster);
+        for (n, &c) in counts.iter().enumerate() {
+            assert!(c <= free_before[n], "node {n} got {c} > {} free", free_before[n]);
+        }
+        assert_eq!(counts[1], 0, "full node must receive nothing");
+        assert_eq!(counts.iter().sum::<usize>(), 24);
     }
 }

@@ -11,16 +11,22 @@
 //! * [`new_strategy::NewStrategy`] — the paper's contribution (Fig. 1):
 //!   size-class job ordering, CD-sorted anchors, adjacency co-location
 //!   capped by the eq. 2 threshold.
-//! * [`refine::Refined`] — cost-model-guided refinement stage
-//!   ([`refine::Refiner`], paper §7 future work) composed with any of the
-//!   above; selected as the `+r` variant of a [`MapperSpec`] (`B+r`,
-//!   `C+r`, `D+r`, `N+r`), scored incrementally via [`crate::cost`].
+//!
+//! Every strategy is driven through one occupancy-aware entry point,
+//! [`Mapper::place`]: map onto the free cores of a live [`Occupancy`],
+//! claiming them. Batch mapping is exactly `place` into an all-free
+//! occupancy ([`Mapper::map`]). Post-processing composes as a
+//! [`pipeline::Pipeline`] of [`pipeline::Stage`]s: a `+r` [`MapperSpec`]
+//! (`B+r`, `C+r`, `D+r`, `N+r`) lowers to a map stage followed by the
+//! cost-model refinement stage ([`refine::Refiner`], paper §7 future work),
+//! scored incrementally via [`crate::cost`].
 
 pub mod blocked;
 pub mod cyclic;
 pub mod drb;
 pub mod kway;
 pub mod new_strategy;
+pub mod pipeline;
 pub mod placement;
 pub mod random;
 pub mod refine;
@@ -31,6 +37,7 @@ use crate::error::{Error, Result};
 use crate::model::topology::ClusterSpec;
 use crate::model::workload::Workload;
 
+pub use pipeline::{MapStage, Pipeline, RefineStage, Stage, VerifyStage};
 pub use placement::{Occupancy, Placement};
 
 /// Seed of the builtin [`random::RandomMap`] baseline (the `random` mapper
@@ -39,6 +46,25 @@ pub use placement::{Occupancy, Placement};
 pub const DEFAULT_RANDOM_SEED: u64 = 0x5eed;
 
 /// A process-mapping strategy.
+///
+/// The single entry point is [`Mapper::place`]: map `ctx`'s workload onto
+/// the **free cores** of a live [`Occupancy`], claiming them as it goes.
+/// Batch mapping is exactly `place` into an all-free occupancy — that is
+/// what the [`Mapper::map`] convenience does — so the batch figures and the
+/// streaming online service ([`crate::online`]) drive one implementation
+/// per strategy and the two paths cannot drift apart.
+///
+/// Contracts every implementation upholds (asserted by the shared
+/// conformance suite in `tests/mapper_conformance.rs`):
+///
+/// * **all-free equivalence** — `place` into a fresh occupancy equals
+///   [`Mapper::map`] bit for bit;
+/// * **restriction** — cores claimed on entry are never touched; every
+///   placed core was free on entry and is claimed on exit;
+/// * **clean rejection** — more processes than free cores is an error,
+///   never a panic;
+/// * **determinism** — identical (ctx, cluster, occupancy) inputs always
+///   produce the identical placement.
 ///
 /// Strategies consume a prebuilt [`MapCtx`] — the traffic/topology artifact
 /// layer constructed **once per workload** — so a sweep over many mappers
@@ -49,9 +75,21 @@ pub trait Mapper {
     /// Short name used in reports (`"Blocked"`, `"N"`...).
     fn name(&self) -> &'static str;
 
-    /// Compute a placement of every process of `ctx`'s workload onto
-    /// `cluster`, reusing the context's shared artifacts.
-    fn map(&self, ctx: &MapCtx, cluster: &ClusterSpec) -> Result<Placement>;
+    /// Place every process of `ctx`'s workload onto cores of `cluster`
+    /// that are free in `occ`, claiming them. Already-claimed cores (other
+    /// live workloads' cores) are never touched; placing more processes
+    /// than there are free cores is a clean error.
+    fn place(
+        &self,
+        ctx: &MapCtx,
+        cluster: &ClusterSpec,
+        occ: &mut Occupancy<'_>,
+    ) -> Result<Placement>;
+
+    /// Batch mapping: [`Mapper::place`] into an all-free occupancy.
+    fn map(&self, ctx: &MapCtx, cluster: &ClusterSpec) -> Result<Placement> {
+        self.place(ctx, cluster, &mut Occupancy::new(cluster))
+    }
 
     /// Convenience for one-shot callers: build a [`MapCtx`] for `w` and
     /// map it. Sweeps and anything mapping the same workload more than once
@@ -59,27 +97,6 @@ pub trait Mapper {
     fn map_workload(&self, w: &Workload, cluster: &ClusterSpec) -> Result<Placement> {
         self.map(&MapCtx::build(w), cluster)
     }
-}
-
-/// A strategy that can place a workload onto a **partially occupied**
-/// cluster — the free-core-restricted entry point the online mapping
-/// service ([`crate::online`]) drives on every job arrival.
-///
-/// `map_into` must place every process of `ctx`'s workload on cores that
-/// are free in `occ`, claiming them as it goes; already-claimed cores (the
-/// live jobs' cores) are never touched. On an all-free occupancy the result
-/// must equal [`Mapper::map`] so the batch and streaming paths cannot
-/// drift. Implemented by Blocked, Cyclic, the paper strategy, and Random;
-/// the graph-partitioning baselines (DRB, K-way) have no restricted form
-/// and return a clean error from [`MapperKind::build_incremental`].
-pub trait IncrementalMapper: Mapper {
-    /// Place `ctx`'s processes on free cores of `occ`, claiming them.
-    fn map_into(
-        &self,
-        ctx: &MapCtx,
-        cluster: &ClusterSpec,
-        occ: &mut Occupancy<'_>,
-    ) -> Result<Placement>;
 }
 
 /// The strategies the paper's figures compare, by their figure letter.
@@ -138,7 +155,9 @@ impl MapperKind {
         }
     }
 
-    /// Parse a mapper name or letter.
+    /// Parse a mapper name or letter (case-insensitive, so the lowercase
+    /// figure letters `b`/`c`/`d`/`n` work everywhere the uppercase ones
+    /// do). Unknown mappers error with the full valid set spelled out.
     pub fn parse(s: &str) -> Result<MapperKind> {
         match s.trim().to_ascii_lowercase().as_str() {
             "b" | "blocked" => Ok(MapperKind::Blocked),
@@ -147,11 +166,17 @@ impl MapperKind {
             "n" | "new" | "nicmap" => Ok(MapperKind::New),
             "r" | "random" => Ok(MapperKind::Random),
             "k" | "kway" | "k-way" => Ok(MapperKind::KWay),
-            other => Err(Error::usage(format!("unknown mapper {other:?}"))),
+            other => Err(Error::usage(format!(
+                "unknown mapper {other:?}; valid mappers: B/blocked, C/cyclic, D/drb, \
+                 N/new, r/random, k/kway (each optionally with a +r refinement suffix)"
+            ))),
         }
     }
 
-    /// Instantiate the mapper.
+    /// Instantiate the mapper. Every strategy — the graph partitioners
+    /// included — implements the occupancy-aware [`Mapper::place`] entry
+    /// point, so the result serves both batch sweeps and the online
+    /// streaming path.
     pub fn build(&self) -> Box<dyn Mapper> {
         match self {
             MapperKind::Blocked => Box::new(blocked::Blocked),
@@ -160,24 +185,6 @@ impl MapperKind {
             MapperKind::New => Box::new(new_strategy::NewStrategy::default()),
             MapperKind::Random => Box::new(random::RandomMap::new(DEFAULT_RANDOM_SEED)),
             MapperKind::KWay => Box::new(kway::KWay::default()),
-        }
-    }
-
-    /// Instantiate the free-core-restricted (incremental) variant, used by
-    /// the online mapping service on job arrivals. The graph-partitioning
-    /// baselines repartition the whole application graph and therefore have
-    /// no restricted form — they error cleanly here.
-    pub fn build_incremental(&self) -> Result<Box<dyn IncrementalMapper>> {
-        match self {
-            MapperKind::Blocked => Ok(Box::new(blocked::Blocked)),
-            MapperKind::Cyclic => Ok(Box::new(cyclic::Cyclic)),
-            MapperKind::New => Ok(Box::new(new_strategy::NewStrategy::default())),
-            MapperKind::Random => Ok(Box::new(random::RandomMap::new(DEFAULT_RANDOM_SEED))),
-            MapperKind::Drb | MapperKind::KWay => Err(Error::mapping(format!(
-                "mapper {} has no incremental (free-core-restricted) variant; \
-                 use B, C, N, or random",
-                self.name()
-            ))),
         }
     }
 }
@@ -189,9 +196,10 @@ impl std::fmt::Display for MapperKind {
 }
 
 /// A mapper selection the harness, figures, and CLI operate on: a base
-/// strategy, optionally post-processed by the cost-model refinement stage
-/// ([`refine::Refined`]). Written `B+r`, `C+r`, `D+r`, `N+r` in figure
-/// columns and on the command line.
+/// strategy, optionally post-processed by the cost-model refinement stage.
+/// A spec **lowers** into a [`pipeline::Pipeline`] of [`pipeline::Stage`]s
+/// (`[map]` or `[map, refine]`). Written `B+r`, `C+r`, `D+r`, `N+r` in
+/// figure columns and on the command line.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct MapperSpec {
     /// Base strategy.
@@ -261,14 +269,10 @@ impl MapperSpec {
         }
     }
 
-    /// Instantiate the mapper (base strategy, wrapped in
-    /// [`refine::Refined`] for `+r` specs).
+    /// Lower the spec into its stage [`pipeline::Pipeline`] and box it:
+    /// `[MapStage]` for plain specs, `[MapStage, RefineStage]` for `+r`.
     pub fn build(&self) -> Box<dyn Mapper> {
-        if self.refined {
-            Box::new(refine::Refined::of_kind(self.base))
-        } else {
-            self.base.build()
-        }
+        Box::new(pipeline::Pipeline::lower(*self))
     }
 }
 
@@ -298,6 +302,20 @@ mod tests {
         for k in MapperKind::ALL {
             assert_eq!(MapperKind::parse(k.name()).unwrap(), k);
             assert_eq!(MapperKind::parse(k.letter()).unwrap(), k);
+            // Lowercase figure letters parse too.
+            assert_eq!(MapperKind::parse(&k.letter().to_ascii_lowercase()).unwrap(), k);
+        }
+    }
+
+    /// Unknown mappers are rejected with the valid set spelled out, so CLI
+    /// users see their options instead of a bare "unknown mapper".
+    #[test]
+    fn unknown_mapper_error_lists_valid_set() {
+        for bad in ["zz", "zz+r"] {
+            let msg = MapperSpec::parse(bad).unwrap_err().to_string();
+            for valid in ["blocked", "cyclic", "drb", "new", "random", "kway", "+r"] {
+                assert!(msg.contains(valid), "error {msg:?} must mention {valid:?}");
+            }
         }
     }
 
@@ -366,29 +384,20 @@ mod tests {
         }
     }
 
-    /// On an all-free cluster the incremental entry point must reproduce
-    /// the batch mapper exactly — the no-drift contract of
-    /// [`IncrementalMapper`].
+    /// On an all-free cluster the occupancy-aware entry point must
+    /// reproduce the batch mapper exactly — the no-drift contract of
+    /// [`Mapper::place`], for every strategy including the partitioners.
     #[test]
-    fn incremental_equals_batch_on_empty_occupancy() {
+    fn place_equals_map_on_empty_occupancy() {
         let cluster = ClusterSpec::paper_cluster();
         for name in ["synt3", "real4"] {
             let w = Workload::builtin(name).unwrap();
             let ctx = crate::ctx::MapCtx::build(&w);
-            for kind in [
-                MapperKind::Blocked,
-                MapperKind::Cyclic,
-                MapperKind::New,
-                MapperKind::Random,
-            ] {
+            for kind in MapperKind::ALL {
                 let batch = kind.build().map(&ctx, &cluster).unwrap();
                 let mut occ = Occupancy::new(&cluster);
-                let inc = kind
-                    .build_incremental()
-                    .unwrap()
-                    .map_into(&ctx, &cluster, &mut occ)
-                    .unwrap();
-                assert_eq!(batch, inc, "{kind} on {name}: restricted path drifted");
+                let placed = kind.build().place(&ctx, &cluster, &mut occ).unwrap();
+                assert_eq!(batch, placed, "{kind} on {name}: restricted path drifted");
                 assert_eq!(
                     occ.total_free(),
                     cluster.total_cores() - w.total_procs(),
@@ -398,10 +407,11 @@ mod tests {
         }
     }
 
-    /// Restricted mapping never touches claimed cores and errors cleanly
-    /// when the free pool is too small.
+    /// Restricted placement never touches claimed cores and errors cleanly
+    /// when the free pool is too small — for all six strategies (the
+    /// partitioners project the free cores into an induced sub-cluster).
     #[test]
-    fn incremental_respects_occupied_cores() {
+    fn place_respects_occupied_cores() {
         let cluster = ClusterSpec::small_test_cluster(); // 16 cores
         let w = Workload::new(
             "t",
@@ -416,26 +426,18 @@ mod tests {
         .unwrap();
         let ctx = crate::ctx::MapCtx::build(&w);
         let taken = [0usize, 1, 5, 9, 13];
-        for kind in [
-            MapperKind::Blocked,
-            MapperKind::Cyclic,
-            MapperKind::New,
-            MapperKind::Random,
-        ] {
+        for kind in MapperKind::ALL {
             let mut occ = Occupancy::new(&cluster);
             for &c in &taken {
                 occ.claim(c).unwrap();
             }
-            let p = kind
-                .build_incremental()
-                .unwrap()
-                .map_into(&ctx, &cluster, &mut occ)
-                .unwrap();
+            let p = kind.build().place(&ctx, &cluster, &mut occ).unwrap();
             assert_eq!(p.len(), 6, "{kind}");
             let mut seen = std::collections::BTreeSet::new();
             for &c in &p.core_of {
                 assert!(!taken.contains(&c), "{kind} placed on claimed core {c}");
                 assert!(seen.insert(c), "{kind} double-used core {c}");
+                assert!(!occ.is_free(c), "{kind} left placed core {c} unclaimed");
             }
             // 11 free cores, 12 processes: must error, not panic.
             let w12 = Workload::new(
@@ -455,25 +457,9 @@ mod tests {
                 occ.claim(c).unwrap();
             }
             assert!(
-                kind.build_incremental()
-                    .unwrap()
-                    .map_into(&ctx12, &cluster, &mut occ)
-                    .is_err(),
+                kind.build().place(&ctx12, &cluster, &mut occ).is_err(),
                 "{kind} must reject an overfull restricted mapping"
             );
-        }
-    }
-
-    #[test]
-    fn partitioners_have_no_incremental_variant() {
-        for kind in [MapperKind::Drb, MapperKind::KWay] {
-            let err = kind.build_incremental().err().expect("must error");
-            assert!(err.to_string().contains("no incremental"), "{err}");
-        }
-        for kind in
-            [MapperKind::Blocked, MapperKind::Cyclic, MapperKind::New, MapperKind::Random]
-        {
-            assert!(kind.build_incremental().is_ok(), "{kind}");
         }
     }
 
@@ -514,16 +500,12 @@ mod tests {
         }
         // More processes than cores: clean error everywhere (also checked by
         // `overfull_workload_rejected` for the batch path; here the
-        // incremental one).
+        // free-core-restricted one).
         let big = Workload::synt_workload_1();
         let ctx_big = crate::ctx::MapCtx::build(&big);
-        for kind in [MapperKind::Blocked, MapperKind::Cyclic, MapperKind::New] {
+        for kind in MapperKind::ALL {
             let mut occ = Occupancy::new(&one);
-            assert!(kind
-                .build_incremental()
-                .unwrap()
-                .map_into(&ctx_big, &one, &mut occ)
-                .is_err());
+            assert!(kind.build().place(&ctx_big, &one, &mut occ).is_err());
         }
     }
 

@@ -23,7 +23,7 @@
 
 use crate::coordinator::placement::{Occupancy, Placement};
 use crate::coordinator::threshold::{decide_with_avg, Threshold};
-use crate::coordinator::{IncrementalMapper, Mapper};
+use crate::coordinator::Mapper;
 use crate::ctx::MapCtx;
 use crate::error::{Error, Result};
 use crate::model::topology::{ClusterSpec, NodeId};
@@ -200,13 +200,18 @@ impl NewStrategy {
     }
 }
 
-impl NewStrategy {
-    /// Map every job of `ctx` into the provided occupancy — the shared core
-    /// of the batch [`Mapper::map`] path (fresh occupancy) and the online
-    /// free-core-restricted path (live occupancy with claimed cores). The
-    /// paper's per-job state (threshold, CD order, anchors) is computed the
-    /// same way in both; `FreeCores_avg` naturally reads the live free map.
-    fn map_with_occ(
+impl Mapper for NewStrategy {
+    fn name(&self) -> &'static str {
+        "New"
+    }
+
+    /// Map every job of `ctx` into the provided occupancy — one
+    /// implementation serving both the batch path (fresh occupancy, via the
+    /// default [`Mapper::map`]) and the online free-core-restricted path
+    /// (live occupancy with claimed cores). The paper's per-job state
+    /// (threshold, CD order, anchors) is computed the same way in both;
+    /// `FreeCores_avg` naturally reads the live free map.
+    fn place(
         &self,
         ctx: &MapCtx,
         cluster: &ClusterSpec,
@@ -233,27 +238,6 @@ impl NewStrategy {
             self.map_job(&mut st, occ, cluster, &mut core_of)?;
         }
         Ok(Placement::new(core_of))
-    }
-}
-
-impl Mapper for NewStrategy {
-    fn name(&self) -> &'static str {
-        "New"
-    }
-
-    fn map(&self, ctx: &MapCtx, cluster: &ClusterSpec) -> Result<Placement> {
-        self.map_with_occ(ctx, cluster, &mut Occupancy::new(cluster))
-    }
-}
-
-impl IncrementalMapper for NewStrategy {
-    fn map_into(
-        &self,
-        ctx: &MapCtx,
-        cluster: &ClusterSpec,
-        occ: &mut Occupancy<'_>,
-    ) -> Result<Placement> {
-        self.map_with_occ(ctx, cluster, occ)
     }
 }
 

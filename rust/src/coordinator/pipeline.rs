@@ -1,0 +1,402 @@
+//! Composable placement pipelines: a [`MapperSpec`] lowers into a sequence
+//! of [`Stage`]s run by one [`Pipeline`], which is itself a [`Mapper`].
+//!
+//! The historical design hard-wired refinement as a bespoke `Refined`
+//! wrapper type around the base mapper, which made every future
+//! post-processing step another wrapper. The pipeline replaces that special
+//! case: a `B+r` spec is simply `[MapStage(Blocked), RefineStage]`, and
+//! future stages — placement verification ([`VerifyStage`]), PJRT-batched
+//! candidate scoring — slot in as more [`Stage`] implementations instead of
+//! more combinator types.
+//!
+//! Stages run under the *caller's* [`Occupancy`], so a whole pipeline is
+//! occupancy-aware end to end: map stages claim free cores through
+//! [`Mapper::place`], the refine stage only migrates onto cores no other
+//! workload owns, and on an all-free occupancy the pipeline reproduces the
+//! batch `map` path bit for bit.
+
+use crate::coordinator::refine::Refiner;
+use crate::coordinator::{Mapper, MapperKind, MapperSpec, Occupancy, Placement};
+use crate::ctx::MapCtx;
+use crate::error::{Error, Result};
+use crate::model::topology::ClusterSpec;
+use crate::runtime::NativeScorer;
+
+/// One stage of a placement [`Pipeline`].
+///
+/// A stage either *produces* the pipeline's placement (map stages, which
+/// require `prev` to be `None`) or *transforms* the placement an earlier
+/// stage produced (refine/verify stages, which require `Some`). Every stage
+/// sees — and must maintain — the live occupancy: on return, exactly the
+/// returned placement's cores (plus whatever was already claimed on entry
+/// by other workloads) are claimed in `occ`.
+pub trait Stage {
+    /// Stage name for diagnostics (`"Blocked"`, `"refine"`, `"verify"`).
+    fn name(&self) -> &'static str;
+
+    /// Run the stage against the live occupancy.
+    fn apply(
+        &self,
+        ctx: &MapCtx,
+        cluster: &ClusterSpec,
+        occ: &mut Occupancy<'_>,
+        prev: Option<Placement>,
+    ) -> Result<Placement>;
+}
+
+/// Stage wrapping a base [`Mapper`]: places the workload on free cores.
+pub struct MapStage {
+    inner: Box<dyn Mapper>,
+}
+
+impl MapStage {
+    /// Map stage over an arbitrary mapper.
+    pub fn new(inner: Box<dyn Mapper>) -> MapStage {
+        MapStage { inner }
+    }
+
+    /// Map stage over a builtin strategy.
+    pub fn of_kind(kind: MapperKind) -> MapStage {
+        MapStage { inner: kind.build() }
+    }
+}
+
+impl Stage for MapStage {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn apply(
+        &self,
+        ctx: &MapCtx,
+        cluster: &ClusterSpec,
+        occ: &mut Occupancy<'_>,
+        prev: Option<Placement>,
+    ) -> Result<Placement> {
+        if prev.is_some() {
+            return Err(Error::mapping(format!(
+                "map stage {} must run first in its pipeline",
+                self.inner.name()
+            )));
+        }
+        self.inner.place(ctx, cluster, occ)
+    }
+}
+
+/// Stage running the cost-model [`Refiner`] over the placement produced by
+/// the earlier stages — the `+r` half of a [`MapperSpec`] pipeline.
+///
+/// Under a partially occupied cluster the refiner's migrate candidates are
+/// restricted to cores no *other* workload owns (free in `occ`, or owned by
+/// this very placement); on an all-free occupancy that restriction is
+/// vacuous, so the batch `B+r` path is unchanged bit for bit. After the
+/// descent the occupancy is re-pointed at the refined cores.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RefineStage {
+    refiner: Refiner,
+}
+
+impl RefineStage {
+    /// Refine stage with a custom [`Refiner`] configuration.
+    pub fn new(refiner: Refiner) -> RefineStage {
+        RefineStage { refiner }
+    }
+}
+
+impl Stage for RefineStage {
+    fn name(&self) -> &'static str {
+        "refine"
+    }
+
+    fn apply(
+        &self,
+        ctx: &MapCtx,
+        cluster: &ClusterSpec,
+        occ: &mut Occupancy<'_>,
+        prev: Option<Placement>,
+    ) -> Result<Placement> {
+        let prev = prev.ok_or_else(|| {
+            Error::mapping("refine stage needs a placement from an earlier map stage")
+        })?;
+        // Cores this pipeline may use: free in the live occupancy, plus the
+        // ones the earlier stages already claimed for this placement. The
+        // set of cores owned by *others* cannot change mid-stage, so it is
+        // computed once and the ledger's own occupancy tracks the rest.
+        let mut usable = vec![false; cluster.total_cores()];
+        for (core, ok) in usable.iter_mut().enumerate() {
+            *ok = occ.is_free(core);
+        }
+        for &core in &prev.core_of {
+            usable[core] = true;
+        }
+        let rep = self.refiner.run_constrained(
+            &NativeScorer,
+            ctx.traffic(),
+            &prev,
+            ctx.workload(),
+            cluster,
+            |core| usable[core],
+        )?;
+        // Re-point the occupancy at the refined cores: release every
+        // vacated core first, then claim every newly taken one (a swap's
+        // two cores are each other's old homes, so claims must follow all
+        // releases).
+        for (&old, &new) in prev.core_of.iter().zip(&rep.placement.core_of) {
+            if old != new {
+                occ.release(old)?;
+            }
+        }
+        for (&old, &new) in prev.core_of.iter().zip(&rep.placement.core_of) {
+            if old != new {
+                occ.claim(new)?;
+            }
+        }
+        Ok(rep.placement)
+    }
+}
+
+/// Stage asserting the placement is structurally sound and consistent with
+/// the live occupancy — a cheap tripwire demonstrating how non-mapping
+/// stages slot into a pipeline (the seam a future PJRT-batched scoring
+/// stage uses).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VerifyStage;
+
+impl Stage for VerifyStage {
+    fn name(&self) -> &'static str {
+        "verify"
+    }
+
+    fn apply(
+        &self,
+        ctx: &MapCtx,
+        cluster: &ClusterSpec,
+        occ: &mut Occupancy<'_>,
+        prev: Option<Placement>,
+    ) -> Result<Placement> {
+        let prev = prev.ok_or_else(|| {
+            Error::mapping("verify stage needs a placement from an earlier map stage")
+        })?;
+        prev.validate(ctx.workload(), cluster)?;
+        for &core in &prev.core_of {
+            if occ.is_free(core) {
+                return Err(Error::mapping(format!(
+                    "verify stage: placed core {core} is not claimed in the occupancy"
+                )));
+            }
+        }
+        Ok(prev)
+    }
+}
+
+/// A sequence of [`Stage`]s behind one [`Mapper`] face — what
+/// [`MapperSpec::build`] lowers a spec into, and the extension point for
+/// bespoke pipelines ([`Pipeline::new`] + [`Pipeline::with_stage`]).
+pub struct Pipeline {
+    name: &'static str,
+    stages: Vec<Box<dyn Stage>>,
+}
+
+impl Pipeline {
+    /// Pipeline from explicit stages under a display name.
+    pub fn new(name: &'static str, stages: Vec<Box<dyn Stage>>) -> Pipeline {
+        Pipeline { name, stages }
+    }
+
+    /// Lower a [`MapperSpec`] into its stage pipeline: `[MapStage]` for a
+    /// plain spec, `[MapStage, RefineStage]` for a `+r` one.
+    pub fn lower(spec: MapperSpec) -> Pipeline {
+        let mut stages: Vec<Box<dyn Stage>> = vec![Box::new(MapStage::of_kind(spec.base))];
+        if spec.refined {
+            stages.push(Box::new(RefineStage::default()));
+        }
+        Pipeline { name: spec_name(spec), stages }
+    }
+
+    /// Append a stage (builder-style).
+    pub fn with_stage(mut self, stage: Box<dyn Stage>) -> Pipeline {
+        self.stages.push(stage);
+        self
+    }
+
+    /// Stage names in execution order.
+    pub fn stage_names(&self) -> Vec<&'static str> {
+        self.stages.iter().map(|s| s.name()).collect()
+    }
+}
+
+/// Static display name of a lowered spec (`MapperSpec::name` allocates; the
+/// [`Mapper`] trait hands out `&'static str`).
+fn spec_name(spec: MapperSpec) -> &'static str {
+    if !spec.refined {
+        return spec.base.name();
+    }
+    match spec.base {
+        MapperKind::Blocked => "Blocked+r",
+        MapperKind::Cyclic => "Cyclic+r",
+        MapperKind::Drb => "DRB+r",
+        MapperKind::New => "New+r",
+        MapperKind::Random => "Random+r",
+        MapperKind::KWay => "KWay+r",
+    }
+}
+
+impl Mapper for Pipeline {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn place(
+        &self,
+        ctx: &MapCtx,
+        cluster: &ClusterSpec,
+        occ: &mut Occupancy<'_>,
+    ) -> Result<Placement> {
+        let mut current: Option<Placement> = None;
+        for stage in &self.stages {
+            current = Some(stage.apply(ctx, cluster, occ, current)?);
+        }
+        current.ok_or_else(|| Error::mapping(format!("pipeline {} has no stages", self.name)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::Scorer;
+    use crate::model::pattern::Pattern;
+    use crate::model::workload::{JobSpec, Workload};
+
+    fn a2a(procs: usize) -> (Workload, ClusterSpec) {
+        let cluster = ClusterSpec::small_test_cluster();
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::AllToAll, procs, 64_000, 10.0, 100)],
+        )
+        .unwrap();
+        (w, cluster)
+    }
+
+    #[test]
+    fn lowered_names_cover_all_specs() {
+        for kind in MapperKind::ALL {
+            for spec in [MapperSpec::plain(kind), MapperSpec::plus_r(kind)] {
+                let pipeline = Pipeline::lower(spec);
+                assert_eq!(pipeline.name(), spec.name(), "{spec:?}");
+                let stages = pipeline.stage_names();
+                assert_eq!(stages[0], kind.name());
+                if spec.refined {
+                    assert_eq!(stages, vec![kind.name(), "refine"]);
+                } else {
+                    assert_eq!(stages.len(), 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn refined_pipeline_equals_manual_map_then_refine() {
+        // The +r pipeline must be exactly base-map followed by the default
+        // refiner — the bit-compatibility bar against the pre-pipeline
+        // `Refined` wrapper.
+        let (w, cluster) = a2a(8);
+        let ctx = crate::ctx::MapCtx::build(&w);
+        for kind in MapperKind::ALL {
+            let base = kind.build().map(&ctx, &cluster).unwrap();
+            let manual = Refiner::default()
+                .run(&NativeScorer, ctx.traffic(), &base, &w, &cluster)
+                .unwrap()
+                .placement;
+            let piped = Pipeline::lower(MapperSpec::plus_r(kind)).map(&ctx, &cluster).unwrap();
+            assert_eq!(manual, piped, "{kind}+r pipeline drifted from map-then-refine");
+        }
+    }
+
+    #[test]
+    fn refined_pipeline_never_hurts_the_base_mapper() {
+        let (w, cluster) = a2a(8);
+        let ctx = crate::ctx::MapCtx::build(&w);
+        let nic_bw = cluster.nic_bw as f64;
+        let obj = |p: &Placement| {
+            NativeScorer.score(ctx.traffic(), p, &cluster).unwrap().objective(nic_bw)
+        };
+        let base = MapperKind::Blocked.build().map(&ctx, &cluster).unwrap();
+        let refined = MapperSpec::plus_r(MapperKind::Blocked).build().map(&ctx, &cluster).unwrap();
+        refined.validate(&w, &cluster).unwrap();
+        assert!(obj(&refined) <= obj(&base) + 1e-9);
+        assert_eq!(MapperSpec::plus_r(MapperKind::Blocked).build().name(), "Blocked+r");
+    }
+
+    #[test]
+    fn refine_stage_respects_foreign_claims() {
+        // Claim half the cluster for "someone else": the refine stage may
+        // shuffle this placement's own cores but must never migrate onto a
+        // foreign core, and the occupancy must track the refined cores.
+        let (w, cluster) = a2a(6);
+        let ctx = crate::ctx::MapCtx::build(&w);
+        let foreign = [2usize, 3, 6, 7, 10];
+        let mut occ = Occupancy::new(&cluster);
+        for &c in &foreign {
+            occ.claim(c).unwrap();
+        }
+        let placement = MapperSpec::plus_r(MapperKind::Blocked)
+            .build()
+            .place(&ctx, &cluster, &mut occ)
+            .unwrap();
+        let mut seen = std::collections::BTreeSet::new();
+        for &c in &placement.core_of {
+            assert!(!foreign.contains(&c), "refined placement stole foreign core {c}");
+            assert!(seen.insert(c), "core {c} double-used");
+            assert!(!occ.is_free(c), "refined core {c} unclaimed");
+        }
+        assert_eq!(occ.total_free(), cluster.total_cores() - foreign.len() - w.total_procs());
+        for &c in &foreign {
+            assert!(!occ.is_free(c), "foreign core {c} must stay claimed");
+        }
+    }
+
+    #[test]
+    fn custom_pipeline_with_verify_stage() {
+        let (w, cluster) = a2a(8);
+        let ctx = crate::ctx::MapCtx::build(&w);
+        let pipeline = Pipeline::new(
+            "Blocked+r+verify",
+            vec![
+                Box::new(MapStage::of_kind(MapperKind::Blocked)),
+                Box::new(RefineStage::default()),
+                Box::new(VerifyStage),
+            ],
+        );
+        assert_eq!(pipeline.stage_names(), vec!["Blocked", "refine", "verify"]);
+        let p = pipeline.map(&ctx, &cluster).unwrap();
+        p.validate(&w, &cluster).unwrap();
+        // The verify stage passes the refined placement through unchanged.
+        let plain = Pipeline::lower(MapperSpec::plus_r(MapperKind::Blocked))
+            .map(&ctx, &cluster)
+            .unwrap();
+        assert_eq!(p, plain);
+    }
+
+    #[test]
+    fn malformed_pipelines_error_cleanly() {
+        let (w, cluster) = a2a(4);
+        let ctx = crate::ctx::MapCtx::build(&w);
+        // No stages.
+        let empty = Pipeline::new("empty", vec![]);
+        assert!(empty.map(&ctx, &cluster).is_err());
+        // Transform stage with nothing to transform.
+        let headless = Pipeline::new("headless", vec![Box::new(RefineStage::default())]);
+        assert!(headless.map(&ctx, &cluster).is_err());
+        let unverifiable = Pipeline::new("unverifiable", vec![Box::new(VerifyStage)]);
+        assert!(unverifiable.map(&ctx, &cluster).is_err());
+        // Two map stages: the second would double-place the workload.
+        let doubled = Pipeline::new(
+            "doubled",
+            vec![
+                Box::new(MapStage::of_kind(MapperKind::Blocked)),
+                Box::new(MapStage::of_kind(MapperKind::Cyclic)),
+            ],
+        );
+        assert!(doubled.map(&ctx, &cluster).is_err());
+    }
+}

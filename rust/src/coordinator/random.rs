@@ -2,7 +2,7 @@
 //! used by tests and ablations as a "no intelligence at all" reference).
 
 use crate::coordinator::placement::Occupancy;
-use crate::coordinator::{IncrementalMapper, Mapper, Placement};
+use crate::coordinator::{Mapper, Placement};
 use crate::ctx::MapCtx;
 use crate::error::{Error, Result};
 use crate::model::topology::ClusterSpec;
@@ -26,27 +26,11 @@ impl Mapper for RandomMap {
         "Random"
     }
 
-    fn map(&self, ctx: &MapCtx, cluster: &ClusterSpec) -> Result<Placement> {
-        let p = ctx.len();
-        if p > cluster.total_cores() {
-            return Err(Error::mapping(format!(
-                "{p} processes exceed {} cores",
-                cluster.total_cores()
-            )));
-        }
-        let mut rng = SplitMix64::new(self.seed);
-        let mut cores: Vec<usize> = (0..cluster.total_cores()).collect();
-        rng.shuffle(&mut cores);
-        cores.truncate(p);
-        Ok(Placement::new(cores))
-    }
-}
-
-impl IncrementalMapper for RandomMap {
-    /// Restricted Random: shuffle the free-core list with the same seed.
-    /// Equal to [`Mapper::map`] on an all-free occupancy (identical list,
-    /// identical shuffle).
-    fn map_into(
+    /// Occupancy-restricted Random: shuffle the free-core list with the
+    /// seed and take the prefix. On an all-free occupancy the free-core
+    /// list is the full core list, so the batch placement falls out as the
+    /// special case (identical list, identical shuffle).
+    fn place(
         &self,
         ctx: &MapCtx,
         cluster: &ClusterSpec,

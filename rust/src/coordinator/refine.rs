@@ -12,19 +12,20 @@
 //!   moves through one batched [`LoadLedger::peek_batch`] pass over its
 //!   traffic rows, and re-verifies against one final full pass — where the
 //!   pre-ledger implementation paid a full O(P²) recompute per candidate.
-//! * [`Refined`] composes the stage with any [`Mapper`], giving every
-//!   strategy a `+r` variant ([`crate::coordinator::MapperSpec`]); it reuses
-//!   the shared [`MapCtx`] traffic matrix instead of rebuilding it.
+//! * [`crate::coordinator::pipeline::RefineStage`] lifts the stage into the
+//!   composable placement pipeline, giving every strategy a `+r` variant
+//!   ([`crate::coordinator::MapperSpec`] lowers `B+r` to `[map, refine]`);
+//!   it reuses the shared [`crate::ctx::MapCtx`] traffic matrix instead of
+//!   rebuilding it, and under a partially occupied cluster it constrains
+//!   migrates to unowned cores via [`Refiner::run_constrained`].
 
-use crate::coordinator::{Mapper, MapperKind, Placement};
+use crate::coordinator::Placement;
 pub use crate::cost::{NodeLoads, Scorer};
 use crate::cost::{LoadLedger, Move};
-use crate::ctx::MapCtx;
 use crate::error::Result;
-use crate::model::topology::ClusterSpec;
+use crate::model::topology::{ClusterSpec, CoreId};
 use crate::model::traffic::TrafficMatrix;
 use crate::model::workload::Workload;
-use crate::runtime::NativeScorer;
 
 /// Result of a refinement run.
 #[derive(Debug, Clone)]
@@ -86,6 +87,26 @@ impl Refiner {
         w: &Workload,
         cluster: &ClusterSpec,
     ) -> Result<RefineReport> {
+        self.run_constrained(scorer, traffic, start, w, cluster, |_| true)
+    }
+
+    /// Like [`Refiner::run`], but migrate targets are restricted to cores
+    /// admitted by `usable` — the occupancy-aware entry point the pipeline
+    /// [`crate::coordinator::pipeline::RefineStage`] drives: on a partially
+    /// occupied cluster `usable` is "free in the live occupancy or owned by
+    /// this very placement", so refinement never steals another workload's
+    /// cores. (Swaps only exchange cores the placement already owns, so the
+    /// predicate applies to migrates alone; with an always-true predicate
+    /// this *is* `run`, bit for bit.)
+    pub fn run_constrained(
+        &self,
+        scorer: &dyn Scorer,
+        traffic: &TrafficMatrix,
+        start: &Placement,
+        w: &Workload,
+        cluster: &ClusterSpec,
+        usable: impl Fn(CoreId) -> bool,
+    ) -> Result<RefineReport> {
         let mut ledger = LoadLedger::new(scorer, traffic, start, cluster)?;
         let mut evaluations = 1usize; // the ledger seed pass
         let mut delta_evals = 0usize;
@@ -102,10 +123,11 @@ impl Refiner {
             // are interchangeable at this granularity. The ledger's free
             // map is updated on every accepted move (and `apply` rejects
             // occupied targets outright), so this list can never go stale
-            // against moves accepted in earlier rounds.
+            // against moves accepted in earlier rounds. The `usable`
+            // predicate additionally masks cores owned by other workloads.
             let free_targets: Vec<usize> = (0..cluster.nodes)
                 .filter(|&n| n != hot)
-                .filter_map(|n| ledger.free_core_on(n))
+                .filter_map(|n| ledger.free_core_on_where(n, &usable))
                 .collect();
 
             let mut best: Option<(Move, f64)> = None;
@@ -181,63 +203,14 @@ pub fn refine(
     Refiner::with_rounds(max_rounds).run(scorer, traffic, start, w, cluster)
 }
 
-/// [`Mapper`] combinator: run a base strategy, then post-process its
-/// placement with the [`Refiner`] (native scorer). This is what `+r`
-/// variants ([`crate::coordinator::MapperSpec`]) build, which makes
-/// refinement reachable from the harness sweep, the figures, and the CLI.
-pub struct Refined {
-    inner: Box<dyn Mapper>,
-    name: &'static str,
-    refiner: Refiner,
-}
-
-impl Refined {
-    /// Refined variant of a builtin strategy (`Blocked` → `"Blocked+r"`).
-    pub fn of_kind(kind: MapperKind) -> Self {
-        let name = match kind {
-            MapperKind::Blocked => "Blocked+r",
-            MapperKind::Cyclic => "Cyclic+r",
-            MapperKind::Drb => "DRB+r",
-            MapperKind::New => "New+r",
-            MapperKind::Random => "Random+r",
-            MapperKind::KWay => "KWay+r",
-        };
-        Refined { inner: kind.build(), name, refiner: Refiner::default() }
-    }
-
-    /// Wrap an arbitrary mapper under a display name.
-    pub fn wrapping(inner: Box<dyn Mapper>, name: &'static str) -> Self {
-        Refined { inner, name, refiner: Refiner::default() }
-    }
-
-    /// Override the refinement stage configuration.
-    pub fn with_refiner(mut self, refiner: Refiner) -> Self {
-        self.refiner = refiner;
-        self
-    }
-}
-
-impl Mapper for Refined {
-    fn name(&self) -> &'static str {
-        self.name
-    }
-
-    fn map(&self, ctx: &MapCtx, cluster: &ClusterSpec) -> Result<Placement> {
-        let base = self.inner.map(ctx, cluster)?;
-        // The sweep's shared traffic matrix drives refinement directly —
-        // the pre-ctx implementation rebuilt the O(P²) matrix here even
-        // though the base mapper had just derived its own copy.
-        let rep = self.refiner.run(&NativeScorer, ctx.traffic(), &base, ctx.workload(), cluster)?;
-        Ok(rep.placement)
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::{Mapper, MapperKind, Occupancy};
     use crate::cost::CountingScorer;
     use crate::model::pattern::Pattern;
     use crate::model::workload::JobSpec;
+    use crate::runtime::NativeScorer;
 
     fn a2a(procs: usize) -> (TrafficMatrix, Workload, ClusterSpec) {
         let cluster = ClusterSpec::small_test_cluster();
@@ -285,27 +258,60 @@ mod tests {
         assert!(rep.delta_evals >= rep.moves);
     }
 
+    /// `run_constrained` with an always-true predicate is `run`, and a
+    /// restrictive predicate keeps migrates off masked cores.
     #[test]
-    fn refined_combinator_never_hurts_the_base_mapper() {
+    fn run_constrained_masks_migrate_targets() {
         let (traffic, w, cluster) = a2a(8);
-        let nic_bw = cluster.nic_bw as f64;
-        let base = MapperKind::Blocked.build().map_workload(&w, &cluster).unwrap();
-        let refined = Refined::of_kind(MapperKind::Blocked).map_workload(&w, &cluster).unwrap();
-        refined.validate(&w, &cluster).unwrap();
-        let obj = |p: &Placement| {
-            NativeScorer.score(&traffic, p, &cluster).unwrap().objective(nic_bw)
-        };
-        assert!(obj(&refined) <= obj(&base) + 1e-9);
-        assert_eq!(Refined::of_kind(MapperKind::Blocked).name(), "Blocked+r");
+        let start = MapperKind::Blocked.build().map_workload(&w, &cluster).unwrap();
+        let open = Refiner::default()
+            .run_constrained(&NativeScorer, &traffic, &start, &w, &cluster, |_| true)
+            .unwrap();
+        let plain = Refiner::default().run(&NativeScorer, &traffic, &start, &w, &cluster).unwrap();
+        assert_eq!(open.placement, plain.placement);
+        assert_eq!(open.after.to_bits(), plain.after.to_bits());
+        assert_eq!(open.delta_evals, plain.delta_evals);
+
+        // Mask every core outside the starting placement: migrates are
+        // impossible, only swaps among the owned cores may be accepted.
+        let owned: std::collections::BTreeSet<usize> = start.core_of.iter().copied().collect();
+        let swaps_only = Refiner::default()
+            .run_constrained(&NativeScorer, &traffic, &start, &w, &cluster, |c| owned.contains(&c))
+            .unwrap();
+        let result: std::collections::BTreeSet<usize> =
+            swaps_only.placement.core_of.iter().copied().collect();
+        assert_eq!(result, owned, "masked refinement must stay on owned cores");
+        assert!(swaps_only.after <= swaps_only.before + 1e-12);
     }
 
+    /// The masked-core predicate mirrors a live occupancy: refinement of a
+    /// sub-placement must never take a core another workload claimed.
     #[test]
-    fn refined_names_cover_all_kinds() {
-        for kind in MapperKind::ALL {
-            let r = Refined::of_kind(kind);
-            assert!(r.name().ends_with("+r"), "{}", r.name());
-            assert!(r.name().starts_with(kind.name()));
+    fn run_constrained_respects_a_live_occupancy_mask() {
+        let (traffic, w, cluster) = a2a(8);
+        let start = MapperKind::Blocked.build().map_workload(&w, &cluster).unwrap();
+        let mut occ = Occupancy::new(&cluster);
+        for &c in &start.core_of {
+            occ.claim(c).unwrap();
         }
+        let foreign = [10usize, 11, 14];
+        for &c in &foreign {
+            occ.claim(c).unwrap();
+        }
+        let mut usable = vec![false; cluster.total_cores()];
+        for (c, ok) in usable.iter_mut().enumerate() {
+            *ok = occ.is_free(c);
+        }
+        for &c in &start.core_of {
+            usable[c] = true;
+        }
+        let rep = Refiner::default()
+            .run_constrained(&NativeScorer, &traffic, &start, &w, &cluster, |c| usable[c])
+            .unwrap();
+        for &c in &rep.placement.core_of {
+            assert!(!foreign.contains(&c), "refinement stole foreign core {c}");
+        }
+        rep.placement.validate(&w, &cluster).unwrap();
     }
 
     /// Degenerate inputs: a single-node cluster (no migrate targets, no

@@ -141,7 +141,20 @@ impl<'a> LoadLedger<'a> {
 
     /// First free core of `node`, if any.
     pub fn free_core_on(&self, node: NodeId) -> Option<CoreId> {
-        self.cluster.cores_of_node(node).find(|&c| !self.used[c])
+        self.free_core_on_where(node, |_| true)
+    }
+
+    /// First core of `node` that is free in the ledger **and** admitted by
+    /// `pred` — the occupancy-restricted variant of [`Self::free_core_on`].
+    /// Pipeline refine stages pass "no other workload owns this core" so
+    /// migrates under a live [`crate::coordinator::Occupancy`] never leave
+    /// the caller's free pool; an always-true predicate is `free_core_on`.
+    pub fn free_core_on_where(
+        &self,
+        node: NodeId,
+        mut pred: impl FnMut(CoreId) -> bool,
+    ) -> Option<CoreId> {
+        self.cluster.cores_of_node(node).find(|&c| !self.used[c] && pred(c))
     }
 
     /// Snapshot of the current placement.

@@ -127,7 +127,10 @@ impl WorkloadRun {
 /// Map and simulate one (workload × mapper) cell — the unit of work the
 /// parallel sweep distributes. The cell *consumes* a prebuilt [`MapCtx`];
 /// building one here would defeat the sweep's one-construction-per-workload
-/// guarantee, so only the per-workload drivers build contexts.
+/// guarantee, so only the per-workload drivers build contexts. The spec's
+/// lowered stage pipeline runs through the batch
+/// [`crate::coordinator::Mapper::map`] shorthand — i.e. `place` into an
+/// all-free occupancy.
 pub fn run_cell(
     ctx: &MapCtx,
     cluster: &ClusterSpec,

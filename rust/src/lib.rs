@@ -28,8 +28,15 @@
 //!
 //! ## Quickstart
 //!
+//! Every strategy is driven through one occupancy-aware entry point,
+//! [`coordinator::Mapper::place`]: map onto the free cores of a live
+//! [`coordinator::Occupancy`], claiming them. Batch mapping is exactly
+//! `place` into an all-free occupancy — the [`coordinator::Mapper::map`] /
+//! `map_workload` conveniences — so sweeps stay one-liners while the online
+//! service streams through the very same implementation.
+//!
 //! ```no_run
-//! use nicmap::coordinator::{Mapper, MapperKind};
+//! use nicmap::coordinator::{Mapper, MapperKind, MapperSpec, Occupancy};
 //! use nicmap::ctx::MapCtx;
 //! use nicmap::model::topology::ClusterSpec;
 //! use nicmap::model::workload::Workload;
@@ -37,12 +44,42 @@
 //!
 //! let cluster = ClusterSpec::paper_cluster();
 //! let workload = Workload::builtin("synt3").unwrap();
-//! // Build the shared traffic/topology artifacts once, then map.
+//! // Build the shared traffic/topology artifacts once, then place onto
+//! // the cluster's free cores (all of them here — i.e. batch mapping;
+//! // `MapperKind::New.build().map(&ctx, &cluster)` is the shorthand).
 //! let ctx = MapCtx::build(&workload);
-//! let placement = MapperKind::New.build().map(&ctx, &cluster).unwrap();
+//! let mut occ = Occupancy::new(&cluster);
+//! let placement = MapperKind::New.build().place(&ctx, &cluster, &mut occ).unwrap();
 //! let report = simulate(&workload, &placement, &cluster, &SimConfig::default()).unwrap();
 //! println!("waiting time: {:.1} ms", report.waiting_ms());
+//!
+//! // Post-processing composes as a pipeline of stages: `N+r` lowers to
+//! // [map, refine], and custom stages slot in the same way.
+//! use nicmap::coordinator::{MapStage, Pipeline, RefineStage, VerifyStage};
+//! let refined = MapperSpec::parse("N+r").unwrap().build().map(&ctx, &cluster).unwrap();
+//! let custom = Pipeline::new(
+//!     "New+r+verify",
+//!     vec![
+//!         Box::new(MapStage::of_kind(MapperKind::New)),
+//!         Box::new(RefineStage::default()),
+//!         Box::new(VerifyStage),
+//!     ],
+//! );
+//! let verified = custom.map(&ctx, &cluster).unwrap();
+//! assert_eq!(refined, verified);
 //! ```
+//!
+//! ### Migrating from the pre-`place` API
+//!
+//! `IncrementalMapper` and `MapperKind::build_incremental` are gone: the
+//! free-core-restricted entry point **is** [`coordinator::Mapper::place`]
+//! on every mapper, so
+//! `kind.build_incremental()?.map_into(&ctx, &cluster, &mut occ)` becomes
+//! `kind.build().place(&ctx, &cluster, &mut occ)` — and now also works for
+//! DRB and K-way, which partition against the induced free-core
+//! sub-cluster. The `Refined` wrapper is likewise gone: `+r` specs lower to
+//! a [`coordinator::Pipeline`] (`[MapStage, RefineStage]`) with identical
+//! results.
 
 #![warn(missing_docs)]
 

@@ -6,8 +6,10 @@
 //! * **Arrival** — build the arriving job's own [`MapCtx`] (one
 //!   traffic-matrix construction of the *job's* size, never the world's),
 //!   place its processes on free cores through the base strategy's
-//!   [`IncrementalMapper`] entry point, and add the job's precomputed
-//!   per-node [`JobDelta`] to the live [`BulkLedger`] in O(nodes). Jobs that
+//!   occupancy-aware [`Mapper::place`] entry point — every strategy serves
+//!   here, the graph partitioners included (they cut against the induced
+//!   free-core sub-cluster) — and add the job's precomputed per-node
+//!   [`JobDelta`] to the live [`BulkLedger`] in O(nodes). Jobs that
 //!   do not fit the free pool are rejected and recorded, not errors.
 //! * **Departure** — release the job's cores and subtract its delta
 //!   (snapshot-backed bulk remove, the PR-2 revert discipline at job
@@ -29,7 +31,7 @@
 //! `tests/online_replay.rs`.
 
 use crate::coordinator::refine::Refiner;
-use crate::coordinator::{IncrementalMapper, MapperSpec, Occupancy, Placement};
+use crate::coordinator::{Mapper, MapperSpec, Occupancy, Placement};
 use crate::cost::{BulkLedger, JobDelta, JobMove, NodeLoads};
 use crate::ctx::MapCtx;
 use crate::error::{Error, Result};
@@ -135,7 +137,7 @@ struct LiveJob {
 pub struct OnlineMapper<'c> {
     cluster: &'c ClusterSpec,
     spec: MapperSpec,
-    inc: Box<dyn IncrementalMapper>,
+    base: Box<dyn Mapper>,
     refiner: Refiner,
     cfg: ReplayConfig,
     occ: Occupancy<'c>,
@@ -150,15 +152,17 @@ pub struct OnlineMapper<'c> {
 
 impl<'c> OnlineMapper<'c> {
     /// Start an empty service on `cluster` placing with `spec` (the `+r`
-    /// flag selects the bounded per-event refinement pass). Errors when the
-    /// base strategy has no incremental variant (DRB, K-way).
+    /// flag selects the bounded per-event refinement pass). Any base
+    /// strategy serves: arrivals go through the occupancy-aware
+    /// [`Mapper::place`], which every mapper — the graph partitioners
+    /// included — implements against the live free-core map.
     pub fn new(cluster: &'c ClusterSpec, spec: MapperSpec, cfg: ReplayConfig) -> Result<Self> {
         cluster.validate()?;
-        let inc = spec.base.build_incremental()?;
+        let base = spec.base.build();
         Ok(OnlineMapper {
             cluster,
             spec,
-            inc,
+            base,
             refiner: Refiner::with_rounds(cfg.refine_rounds),
             cfg,
             occ: Occupancy::new(cluster),
@@ -299,7 +303,7 @@ impl<'c> OnlineMapper<'c> {
     /// delta add.
     fn admit(&mut self, instance: usize, job: &JobSpec) -> Result<()> {
         let ctx = MapCtx::for_job(job)?;
-        let placement = self.inc.map_into(&ctx, self.cluster, &mut self.occ)?;
+        let placement = self.base.place(&ctx, self.cluster, &mut self.occ)?;
         let delta = JobDelta::compute(ctx.traffic(), &placement.core_of, self.cluster)?;
         self.ledger.apply(JobMove::Add(&delta))?;
         self.ledger.commit();
@@ -536,16 +540,56 @@ mod tests {
         assert!(r2.waiting_ms.unwrap() >= 0.0);
     }
 
+    /// The graph partitioners place restricted under churn: arrivals land
+    /// on free cores only (via the induced free-core sub-cluster), live
+    /// cores are never stolen, and an arrival larger than the free pool is
+    /// a recorded rejection — not an error.
     #[test]
-    fn partitioner_bases_rejected_up_front() {
-        let cluster = ClusterSpec::small_test_cluster();
+    fn partitioner_bases_place_restricted_under_churn() {
+        let cluster = ClusterSpec::small_test_cluster(); // 16 cores
         for kind in [MapperKind::Drb, MapperKind::KWay] {
-            assert!(OnlineMapper::new(
-                &cluster,
-                MapperSpec::plain(kind),
-                ReplayConfig::default()
-            )
-            .is_err());
+            let mut m =
+                OnlineMapper::new(&cluster, MapperSpec::plain(kind), ReplayConfig::default())
+                    .unwrap();
+            let r = m.on_event(&ev(0, TraceEventKind::Arrive(job(6)))).unwrap();
+            assert_eq!(r.action, EventAction::Placed, "{kind}");
+            let first_cores: std::collections::BTreeSet<_> =
+                m.live_placement().core_of.iter().copied().collect();
+            let r = m.on_event(&ev(10, TraceEventKind::Arrive(job(6)))).unwrap();
+            assert_eq!(r.action, EventAction::Placed, "{kind}");
+            m.live_placement().validate(&m.live_workload(), &cluster).unwrap();
+            // The second job landed strictly on cores the first left free.
+            let second_cores: Vec<_> = m.live_placement().core_of[6..].to_vec();
+            for c in &second_cores {
+                assert!(!first_cores.contains(c), "{kind} stole live core {c}");
+            }
+            // Free cores (4) < procs (6): recorded rejection, not an error.
+            let r = m.on_event(&ev(20, TraceEventKind::Arrive(job(6)))).unwrap();
+            assert_eq!(r.action, EventAction::Rejected, "{kind}");
+            // Departure frees the first job's cores for the next arrival.
+            let r = m.on_event(&ev(30, TraceEventKind::Depart(0))).unwrap();
+            assert_eq!(r.action, EventAction::Departed, "{kind}");
+            let r = m.on_event(&ev(40, TraceEventKind::Arrive(job(8)))).unwrap();
+            assert_eq!(r.action, EventAction::Placed, "{kind}");
+            m.live_placement().validate(&m.live_workload(), &cluster).unwrap();
         }
+    }
+
+    /// `+r` partitioner specs run the per-event refinement pass too.
+    #[test]
+    fn refined_partitioner_replays_cleanly() {
+        let cluster = ClusterSpec::small_test_cluster();
+        let mut m = OnlineMapper::new(
+            &cluster,
+            MapperSpec::plus_r(MapperKind::Drb),
+            ReplayConfig::default(),
+        )
+        .unwrap();
+        m.on_event(&ev(0, TraceEventKind::Arrive(job(6)))).unwrap();
+        m.on_event(&ev(10, TraceEventKind::Arrive(job(4)))).unwrap();
+        m.on_event(&ev(20, TraceEventKind::Depart(0))).unwrap();
+        m.live_placement().validate(&m.live_workload(), &cluster).unwrap();
+        let full = NativeScorer.score(&m.live_traffic(), &m.live_placement(), &cluster).unwrap();
+        assert!(loads_bits_eq(m.loads(), &full), "DRB+r live ledger drifted");
     }
 }

@@ -15,9 +15,10 @@
 //! * [`mapper`] — [`OnlineMapper`]: live occupancy + live per-node loads
 //!   maintained by job-granularity bulk ledger moves
 //!   ([`crate::cost::BulkLedger`]); arrivals place through the
-//!   free-core-restricted [`crate::coordinator::IncrementalMapper`] entry
-//!   points, departures free cores and subtract deltas, and `+r` specs run
-//!   a bounded [`crate::coordinator::refine::Refiner`] pass per event.
+//!   occupancy-aware [`crate::coordinator::Mapper::place`] entry point
+//!   (every strategy, graph partitioners included), departures free cores
+//!   and subtract deltas, and `+r` specs run a bounded
+//!   [`crate::coordinator::refine::Refiner`] pass per event.
 //! * [`report`] — churn CSV/JSON rendering.
 //! * [`replay`] / [`ChurnReport`] — drive a whole trace through one service
 //!   and collect per-event churn records (migrations, placement-cost

@@ -160,6 +160,44 @@ fn all_plus_r_sweep_accepted() {
 }
 
 #[test]
+fn lowercase_letters_accepted_and_unknown_mapper_lists_valid_set() {
+    // Lowercase figure letters parse wherever mappers are accepted.
+    let path = write_temp(
+        "lower.spec",
+        "cluster nodes=4 sockets=2 cores=2\n\
+         job procs=8 pattern=a2a size=512KB rate=10m/s count=5\n",
+    );
+    for mapper in ["b+r", "n", "c", "d+r", "kway", "b,C+r,n+R"] {
+        main_with_args(args(&[
+            "simulate",
+            "--spec",
+            path.to_str().unwrap(),
+            "--mapper",
+            mapper,
+        ]))
+        .unwrap_or_else(|e| panic!("mapper {mapper}: {e}"));
+    }
+    main_with_args(args(&["map", "--spec", path.to_str().unwrap(), "--mapper", "b+r"])).unwrap();
+
+    // Unknown mappers error with the whole valid set spelled out.
+    for bad in ["zz", "zz+r"] {
+        let err = main_with_args(args(&[
+            "map",
+            "--spec",
+            path.to_str().unwrap(),
+            "--mapper",
+            bad,
+        ]))
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown mapper"), "{msg}");
+        for valid in ["blocked", "cyclic", "drb", "new", "random", "kway", "+r"] {
+            assert!(msg.contains(valid), "error {msg:?} must list {valid:?}");
+        }
+    }
+}
+
+#[test]
 fn npb_jobs_in_spec_files() {
     let path = write_temp(
         "npb.spec",

@@ -1,0 +1,176 @@
+//! Shared conformance suite for the occupancy-aware placement API
+//! (ISSUE 5): **every** `MapperKind` — and its `+r` pipeline — is run
+//! through the same contracts of `Mapper::place`:
+//!
+//! * `place` into an all-free occupancy bit-equals batch `map` (so the
+//!   batch figures and the streaming online path cannot drift);
+//! * cores claimed before the call are never touched, across seeded
+//!   partial occupancies, and the occupancy tracks exactly the returned
+//!   placement's cores afterwards;
+//! * results are deterministic across repeated calls on identical inputs;
+//! * a free pool smaller than the workload is a clean error, not a panic.
+
+use nicmap::coordinator::{Mapper, MapperKind, MapperSpec, Occupancy};
+use nicmap::ctx::MapCtx;
+use nicmap::model::pattern::Pattern;
+use nicmap::model::topology::ClusterSpec;
+use nicmap::model::workload::{JobSpec, Workload};
+use nicmap::testkit::rng::SplitMix64;
+
+/// Every spec the suite covers: all six strategies, plain and `+r`.
+fn all_specs() -> Vec<MapperSpec> {
+    MapperKind::ALL
+        .iter()
+        .flat_map(|&k| [MapperSpec::plain(k), MapperSpec::plus_r(k)])
+        .collect()
+}
+
+/// A two-job workload small enough to fit heavily occupied clusters.
+fn mixed_workload(procs_a: usize, procs_b: usize) -> Workload {
+    Workload::new(
+        "conformance",
+        vec![
+            JobSpec::synthetic(Pattern::AllToAll, procs_a, 64_000, 10.0, 100),
+            JobSpec::synthetic(Pattern::Linear, procs_b, 2_000, 5.0, 50),
+        ],
+    )
+    .unwrap()
+}
+
+/// Claim `count` pseudo-random cores, seeded and replayable.
+fn seeded_claims(cluster: &ClusterSpec, seed: u64, count: usize) -> Vec<usize> {
+    let mut rng = SplitMix64::new(seed);
+    let mut cores: Vec<usize> = (0..cluster.total_cores()).collect();
+    rng.shuffle(&mut cores);
+    cores.truncate(count);
+    cores
+}
+
+fn occupancy_with<'a>(cluster: &'a ClusterSpec, claimed: &[usize]) -> Occupancy<'a> {
+    let mut occ = Occupancy::new(cluster);
+    for &c in claimed {
+        occ.claim(c).unwrap();
+    }
+    occ
+}
+
+/// `place` on an all-free occupancy bit-equals batch `map` for every spec
+/// and builtin workload, and the occupancy afterwards holds exactly the
+/// placement's cores.
+#[test]
+fn place_all_free_bit_equals_batch_map() {
+    let cluster = ClusterSpec::paper_cluster();
+    for name in ["synt1", "synt3", "real4"] {
+        let w = Workload::builtin(name).unwrap();
+        let ctx = MapCtx::build(&w);
+        for spec in all_specs() {
+            let batch = spec.build().map(&ctx, &cluster).unwrap();
+            let mut occ = Occupancy::new(&cluster);
+            let placed = spec.build().place(&ctx, &cluster, &mut occ).unwrap();
+            assert_eq!(batch, placed, "{spec:?} on {name}: place drifted from map");
+            assert_eq!(
+                occ.total_free(),
+                cluster.total_cores() - w.total_procs(),
+                "{spec:?} on {name}: free-core accounting"
+            );
+            for &c in &placed.core_of {
+                assert!(!occ.is_free(c), "{spec:?} on {name}: placed core {c} unclaimed");
+            }
+        }
+    }
+}
+
+/// Claimed cores are never touched, over several seeded partial
+/// occupancies per spec; the placement stays duplicate-free and in range.
+#[test]
+fn place_never_touches_claimed_cores() {
+    let cluster = ClusterSpec::paper_cluster(); // 256 cores
+    let w = mixed_workload(24, 8);
+    let ctx = MapCtx::build(&w);
+    for spec in all_specs() {
+        for (case, &claim_count) in [64usize, 128, 200].iter().enumerate() {
+            let seed = 0xC0FF_EE00 + case as u64;
+            let claimed = seeded_claims(&cluster, seed, claim_count);
+            let mut occ = occupancy_with(&cluster, &claimed);
+            let free_before = occ.total_free();
+            let p = spec
+                .build()
+                .place(&ctx, &cluster, &mut occ)
+                .unwrap_or_else(|e| panic!("{spec:?} seed {seed:#x}: {e}"));
+            assert_eq!(p.len(), w.total_procs(), "{spec:?} seed {seed:#x}");
+            let claimed_set: std::collections::BTreeSet<_> = claimed.iter().copied().collect();
+            let mut seen = std::collections::BTreeSet::new();
+            for &c in &p.core_of {
+                assert!(c < cluster.total_cores(), "{spec:?} seed {seed:#x}: core {c}");
+                assert!(
+                    !claimed_set.contains(&c),
+                    "{spec:?} seed {seed:#x}: touched claimed core {c}"
+                );
+                assert!(seen.insert(c), "{spec:?} seed {seed:#x}: core {c} double-used");
+                assert!(!occ.is_free(c), "{spec:?} seed {seed:#x}: core {c} unclaimed");
+            }
+            assert_eq!(
+                occ.total_free(),
+                free_before - w.total_procs(),
+                "{spec:?} seed {seed:#x}: free-core accounting"
+            );
+            for &c in &claimed {
+                assert!(!occ.is_free(c), "{spec:?} seed {seed:#x}: released foreign {c}");
+            }
+        }
+    }
+}
+
+/// Identical inputs (ctx, cluster, seeded occupancy) produce the identical
+/// placement on repeated calls — the determinism contract behind the
+/// serial==threaded harness and replay goldens.
+#[test]
+fn place_deterministic_across_repeated_calls() {
+    let cluster = ClusterSpec::paper_cluster();
+    let w = mixed_workload(32, 12);
+    let ctx = MapCtx::build(&w);
+    let claimed = seeded_claims(&cluster, 0xD_E7E_12, 100);
+    for spec in all_specs() {
+        let mut occ_a = occupancy_with(&cluster, &claimed);
+        let a = spec.build().place(&ctx, &cluster, &mut occ_a).unwrap();
+        let mut occ_b = occupancy_with(&cluster, &claimed);
+        let b = spec.build().place(&ctx, &cluster, &mut occ_b).unwrap();
+        assert_eq!(a, b, "{spec:?}: placement not deterministic");
+        // And the batch shorthand is deterministic too.
+        let m1 = spec.build().map(&ctx, &cluster).unwrap();
+        let m2 = spec.build().map(&ctx, &cluster).unwrap();
+        assert_eq!(m1, m2, "{spec:?}: batch map not deterministic");
+    }
+}
+
+/// Fewer free cores than processes is a clean error for every spec — and
+/// the occupancy is still usable afterwards (no partial claims observable
+/// through a subsequent successful placement).
+#[test]
+fn place_rejects_overfull_free_pool_cleanly() {
+    let cluster = ClusterSpec::small_test_cluster(); // 16 cores
+    let w = mixed_workload(8, 4); // 12 procs
+    let ctx = MapCtx::build(&w);
+    // 6 free cores < 12 procs.
+    let claimed: Vec<usize> = (0..10).collect();
+    let small = Workload::new(
+        "small",
+        vec![JobSpec::synthetic(Pattern::Linear, 4, 2_000, 5.0, 50)],
+    )
+    .unwrap();
+    let small_ctx = MapCtx::build(&small);
+    for spec in all_specs() {
+        let mut occ = occupancy_with(&cluster, &claimed);
+        let err = spec.build().place(&ctx, &cluster, &mut occ).unwrap_err();
+        assert!(err.to_string().contains("free cores"), "{spec:?}: unexpected error {err}");
+        // The rejection left no partial claims behind...
+        assert_eq!(
+            occ.total_free(),
+            cluster.total_cores() - claimed.len(),
+            "{spec:?}: overfull rejection leaked claims"
+        );
+        // ...so a fitting placement still goes through on the same occupancy.
+        let p = spec.build().place(&small_ctx, &cluster, &mut occ).unwrap();
+        assert_eq!(p.len(), 4, "{spec:?}: occupancy unusable after rejection");
+    }
+}

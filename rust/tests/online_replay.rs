@@ -46,6 +46,9 @@ fn replay_serial_vs_threaded_bit_identical() {
         MapperSpec::plain(MapperKind::Blocked),
         MapperSpec::plus_r(MapperKind::Blocked),
         MapperSpec::plain(MapperKind::Cyclic),
+        MapperSpec::plain(MapperKind::Drb),
+        MapperSpec::plus_r(MapperKind::Drb),
+        MapperSpec::plain(MapperKind::KWay),
         MapperSpec::plain(MapperKind::New),
         MapperSpec::plus_r(MapperKind::New),
     ];
@@ -85,6 +88,8 @@ fn live_ledger_equals_full_recompute_after_every_event() {
         MapperSpec::plain(MapperKind::New),
         MapperSpec::plus_r(MapperKind::New),
         MapperSpec::plus_r(MapperKind::Cyclic),
+        MapperSpec::plain(MapperKind::Drb),
+        MapperSpec::plus_r(MapperKind::KWay),
     ];
     let trace = ArrivalTrace::builtin("steady").unwrap();
     for spec in specs {
