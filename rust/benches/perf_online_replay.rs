@@ -1,16 +1,18 @@
 //! Perf pass for the online mapping service: replay churn-heavy scenarios
 //! across mappers, report events/sec and time-to-place, and **assert** the
-//! serial-vs-threaded determinism contract and the one-build-per-admitted-
-//! job invariant while we are here (plain main — criterion is not vendored
-//! offline).
+//! serial-vs-threaded determinism contract, the one-build-per-admitted-job
+//! invariant, and — on the closing 10⁵-job scale run — the zero-seed
+//! persistent-ledger invariant behind the O(P)-per-event refined replays
+//! (plain main — criterion is not vendored offline).
 
 use std::time::Instant;
 
-use nicmap::coordinator::MapperSpec;
+use nicmap::coordinator::{MapperKind, MapperSpec};
+use nicmap::cost::LoadLedger;
 use nicmap::harness::{replays_identical, run_replay};
 use nicmap::model::topology::ClusterSpec;
 use nicmap::model::traffic::TrafficMatrix;
-use nicmap::online::{ArrivalTrace, ReplayConfig};
+use nicmap::online::{ArrivalTrace, Replay, ReplayConfig};
 
 fn main() {
     let cluster = ClusterSpec::paper_cluster();
@@ -59,4 +61,42 @@ fn main() {
         );
     }
     println!("determinism + build-count invariants held on all scenarios");
+
+    // ---- scale: a 10^5-job poisson trace through the refined replay ----
+    // The persistent ledger makes each event O(P): one job-sized traffic
+    // build per admission, zero `of_workload` rebuilds beyond that, and
+    // zero full-scorer seed passes over the whole replay.
+    let trace = ArrivalTrace::builtin("poisson:1207:100000").expect("scale trace");
+    let builds_before = TrafficMatrix::workload_builds();
+    let seeds_before = LoadLedger::seed_passes();
+    let t0 = Instant::now();
+    let rep = Replay::new(&trace)
+        .on(&cluster)
+        .mappers(&[MapperSpec::plus_r(MapperKind::New)])
+        .run()
+        .expect("scale replay")
+        .pop()
+        .expect("one report");
+    let wall = t0.elapsed().as_secs_f64();
+    let builds = TrafficMatrix::workload_builds() - builds_before;
+    let seeds = LoadLedger::seed_passes() - seeds_before;
+    assert_eq!(
+        builds,
+        rep.placed() as u64,
+        "scale replay: workload-matrix builds ({builds}) != admitted jobs ({})",
+        rep.placed()
+    );
+    assert_eq!(seeds, 0, "scale replay: the persistent ledger must never be seeded");
+    let p50 = rep.place_p50_secs().expect("placed jobs");
+    let p99 = rep.place_p99_secs().expect("placed jobs");
+    println!(
+        "  scale: {} events ({} placed, {} rejected) in {wall:.2}s | \
+         {:.0} events/s | place p50 {p50:.2e}s p99 {p99:.2e}s | \
+         {builds} builds, {seeds} seeds",
+        rep.events.len(),
+        rep.placed(),
+        rep.rejected(),
+        rep.events_per_sec(),
+    );
+    println!("zero-seed persistent-ledger invariant held at 10^5-job scale");
 }

@@ -7,14 +7,14 @@ use crate::cost::{NodeLoads, Scorer};
 use crate::ctx::MapCtx;
 use crate::error::{Error, Result};
 use crate::harness::{
-    cap_rounds, render_figure, replays_identical, run_real, run_replay, run_sweep,
+    cap_rounds, render_figure, replays_identical, run_real, run_sweep,
     run_synthetic, run_workload, sweep_to_csv, sweep_to_json, sweeps_identical, Metric,
 };
 use crate::model::spec;
 use crate::model::topology::ClusterSpec;
 use crate::model::traffic::TrafficMatrix;
 use crate::model::workload::Workload;
-use crate::online::{report as churn_report, ArrivalTrace, ReplayConfig};
+use crate::online::{report as churn_report, ArrivalTrace, Replay, ReplayConfig};
 use crate::report::table::Table;
 use crate::runtime::NativeScorer;
 use crate::sim::SimConfig;
@@ -478,11 +478,17 @@ fn cmd_replay(args: &Args) -> Result<()> {
         threads
     );
     let t0 = std::time::Instant::now();
-    let reports = run_replay(&trace, &cluster, &mappers, &cfg, threads)?;
+    let reports = Replay::new(&trace)
+        .on(&cluster)
+        .mappers(&mappers)
+        .config(cfg)
+        .threads(threads)
+        .run()?;
     let wall_secs = t0.elapsed().as_secs_f64();
 
     if args.flag("compare-serial") {
-        let serial = run_replay(&trace, &cluster, &mappers, &cfg, 1)?;
+        let serial =
+            Replay::new(&trace).on(&cluster).mappers(&mappers).config(cfg).run()?;
         if !replays_identical(&reports, &serial) {
             return Err(Error::sim(
                 "threaded replay churn metrics diverge from the serial replay \
@@ -501,7 +507,11 @@ fn cmd_replay(args: &Args) -> Result<()> {
         "peak obj",
         "final obj",
         "place (s)",
+        "events/s",
+        "place p50 (s)",
+        "place p99 (s)",
     ]);
+    let fmt_opt = |v: Option<f64>| v.map_or("-".to_string(), |s| format!("{s:.2e}"));
     for rep in &reports {
         table.row(vec![
             rep.mapper.clone(),
@@ -512,6 +522,9 @@ fn cmd_replay(args: &Args) -> Result<()> {
             format!("{:.4e}", rep.peak_objective()),
             format!("{:.4e}", rep.final_objective()),
             format!("{:.4}", rep.time_to_place_secs()),
+            format!("{:.0}", rep.events_per_sec()),
+            fmt_opt(rep.place_p50_secs()),
+            fmt_opt(rep.place_p99_secs()),
         ]);
     }
     print!("{table}");
@@ -733,9 +746,12 @@ mod tests {
         assert!(csv.starts_with("trace,mapper,seq,"));
         assert!(csv.contains(",Blocked,"));
         assert!(csv.contains(",New+r,"));
+        assert!(csv.lines().next().unwrap().ends_with("time_to_place_p99_secs"));
         let doc = std::fs::read_to_string(&json_path).unwrap();
         assert!(doc.contains("\"schema\":\"nicmap-replay-v1\""));
         assert!(doc.contains("\"trace\":\"poisson:5:4\""));
+        assert!(doc.contains("\"events_per_sec\":"));
+        assert!(doc.contains("\"time_to_place_p50_secs\":"));
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -761,6 +777,9 @@ mod tests {
     fn replay_verb_rejects_bad_inputs() {
         assert!(main_with_args(args(&["replay"])).is_err(), "missing --trace");
         assert!(main_with_args(args(&["replay", "--trace", "bogus"])).is_err());
+        // Hardened poisson spec parsing surfaces as usage errors here too.
+        assert!(main_with_args(args(&["replay", "--trace", "poisson:5"])).is_err());
+        assert!(main_with_args(args(&["replay", "--trace", "poisson:5:0"])).is_err());
         assert!(
             main_with_args(args(&["replay", "--trace", "poisson:5:3", "--mappers", "zz"]))
                 .is_err()

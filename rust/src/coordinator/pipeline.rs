@@ -91,6 +91,11 @@ impl Stage for MapStage {
 /// this very placement); on an all-free occupancy that restriction is
 /// vacuous, so the batch `B+r` path is unchanged bit for bit. After the
 /// descent the occupancy is re-pointed at the refined cores.
+///
+/// The descent loop itself is [`Refiner::descend`], the same core the
+/// online service drives against its persistent
+/// [`crate::cost::LoadLedger`]; this stage is the batch entry that seeds a
+/// fresh ledger first ([`Refiner::run_constrained`]).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct RefineStage {
     refiner: Refiner,

@@ -12,6 +12,10 @@
 //!   moves through one batched [`LoadLedger::peek_batch`] pass over its
 //!   traffic rows, and re-verifies against one final full pass — where the
 //!   pre-ledger implementation paid a full O(P²) recompute per candidate.
+//!   The inner loop is exposed as [`Refiner::descend`], which runs on an
+//!   *existing* ledger with no seed and no verify — the online service
+//!   descends on its persistent [`LoadLedger::live`] ledger so a refined
+//!   replay event costs O(P) total, not one O(P²) pass per event.
 //! * [`crate::coordinator::pipeline::RefineStage`] lifts the stage into the
 //!   composable placement pipeline, giving every strategy a `+r` variant
 //!   ([`crate::coordinator::MapperSpec`] lowers `B+r` to `[map, refine]`);
@@ -43,6 +47,22 @@ pub struct RefineReport {
     pub evaluations: usize,
     /// O(P) ledger delta evaluations (one per candidate move considered).
     pub delta_evals: usize,
+}
+
+/// Outcome of one [`Refiner::descend`] pass over an existing ledger — the
+/// seed-free inner loop shared by [`Refiner::run_constrained`] (batch: seed
+/// → descend → verify) and the online service's persistent-ledger
+/// refinement, which descends on the live ledger directly and never pays a
+/// seed or verify pass per event.
+#[derive(Debug, Clone, Copy)]
+pub struct DescentStats {
+    /// Accepted moves (swaps and migrates).
+    pub moves: usize,
+    /// O(P) ledger delta evaluations (one per candidate move considered).
+    pub delta_evals: usize,
+    /// Ledger objective after the last accepted move (the starting
+    /// objective when no move improved).
+    pub objective: f64,
 }
 
 /// Greedy refinement stage: repeatedly try swapping a process from the
@@ -109,10 +129,53 @@ impl Refiner {
     ) -> Result<RefineReport> {
         let mut ledger = LoadLedger::new(scorer, traffic, start, cluster)?;
         let mut evaluations = 1usize; // the ledger seed pass
+        let before = ledger.objective();
+        let stats = self.descend(&mut ledger, usable)?;
+        let current = stats.objective;
+
+        // Exact-equivalence guarantee: one verifying full recompute is the
+        // reported objective, so `after` never silently drifts from the
+        // ledger's delta arithmetic (see the invariant in `crate::cost`).
+        let placement = ledger.placement();
+        let full = scorer.score(traffic, &placement, cluster)?;
+        evaluations += 1;
+        let after = full.objective(cluster.nic_bw as f64);
+        debug_assert!(
+            !after.is_finite()
+                || !current.is_finite()
+                || (after - current).abs() <= 1e-6 * current.abs().max(1.0),
+            "ledger objective {current} drifted from full recompute {after}"
+        );
+        // The refined placement must stay structurally valid.
+        placement.validate(w, cluster)?;
+        Ok(RefineReport {
+            placement,
+            before,
+            after,
+            moves: stats.moves,
+            evaluations,
+            delta_evals: stats.delta_evals,
+        })
+    }
+
+    /// Greedy descent on an already-loaded ledger: the inner loop of
+    /// [`Refiner::run_constrained`], exposed so a persistent ledger (the
+    /// online service's [`crate::cost::LoadLedger::live`] mode) can be
+    /// refined in place with **zero** full scorer passes — no seed, no
+    /// verify, just O(P) candidate deltas per round. Accepted moves are
+    /// committed into the ledger; read the refined placement back with
+    /// [`LoadLedger::placement`]. Migrate targets are restricted to free
+    /// cores admitted by `usable` (pass `|_| true` for an unconstrained
+    /// descent — exactly what [`Refiner::run`] does after seeding).
+    pub fn descend(
+        &self,
+        ledger: &mut LoadLedger<'_>,
+        usable: impl Fn(CoreId) -> bool,
+    ) -> Result<DescentStats> {
+        let cluster = ledger.cluster();
         let mut delta_evals = 0usize;
         let mut moves = 0usize;
-        let before = ledger.objective();
-        let mut current = before;
+        let mut current = ledger.objective();
 
         for _ in 0..self.max_rounds {
             let hot = ledger.hottest_node();
@@ -171,22 +234,7 @@ impl Refiner {
             }
         }
 
-        // Exact-equivalence guarantee: one verifying full recompute is the
-        // reported objective, so `after` never silently drifts from the
-        // ledger's delta arithmetic (see the invariant in `crate::cost`).
-        let placement = ledger.placement();
-        let full = scorer.score(traffic, &placement, cluster)?;
-        evaluations += 1;
-        let after = full.objective(cluster.nic_bw as f64);
-        debug_assert!(
-            !after.is_finite()
-                || !current.is_finite()
-                || (after - current).abs() <= 1e-6 * current.abs().max(1.0),
-            "ledger objective {current} drifted from full recompute {after}"
-        );
-        // The refined placement must stay structurally valid.
-        placement.validate(w, cluster)?;
-        Ok(RefineReport { placement, before, after, moves, evaluations, delta_evals })
+        Ok(DescentStats { moves, delta_evals, objective: current })
     }
 }
 
@@ -344,6 +392,32 @@ mod tests {
 
         // Placement/traffic disagreement is an error, not a panic.
         assert!(refine(&NativeScorer, &traffic, &p0, &w, &cluster, 1).is_err());
+    }
+
+    /// `descend` on a persistent live ledger accepts exactly the moves a
+    /// seeded `run` over the composed matrix accepts — the equivalence the
+    /// online `+r` path relies on to skip the per-event seed and verify
+    /// passes entirely.
+    #[test]
+    fn descend_on_a_live_ledger_matches_seeded_run() {
+        let (traffic, w, cluster) = a2a(8);
+        let start = MapperKind::Blocked.build().map_workload(&w, &cluster).unwrap();
+        let mut live = LoadLedger::live(&cluster);
+        live.admit_block(traffic.clone(), &start.core_of).unwrap();
+        let seeds_before = LoadLedger::seed_passes();
+        let stats = Refiner::default().descend(&mut live, |_| true).unwrap();
+        let rep = Refiner::default().run(&NativeScorer, &traffic, &start, &w, &cluster).unwrap();
+        assert_eq!(stats.moves, rep.moves);
+        assert_eq!(stats.delta_evals, rep.delta_evals);
+        assert_eq!(live.placement(), rep.placement);
+        assert_eq!(
+            stats.objective.to_bits(),
+            rep.after.to_bits(),
+            "delta-tracked objective must equal the verifying recompute"
+        );
+        // The descent itself never seeds; the comparison `run` does (its
+        // own dense ledger), so the counter moved by run's passes only.
+        assert!(LoadLedger::seed_passes() >= seeds_before + 1);
     }
 
     #[test]

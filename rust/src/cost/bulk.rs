@@ -22,6 +22,14 @@
 //! snapshots the O(nodes) load vectors, mirroring
 //! [`crate::cost::LoadLedger`]'s frame discipline. Enforced by the in-module
 //! property tests and `tests/online_replay.rs`.
+//!
+//! Since the persistent-ledger rework the online mapper itself streams
+//! events through a long-lived block-structured
+//! [`crate::cost::LoadLedger::live`] (which reuses [`JobDelta::compute`]
+//! for its `admit_block`/`retire_block` arithmetic); `BulkLedger` remains
+//! the standalone job-granularity evaluator — the reference the replay
+//! tests recompute against, and the right tool when only aggregate loads
+//! (no per-process move candidates) are needed.
 
 use crate::cost::NodeLoads;
 use crate::error::{Error, Result};

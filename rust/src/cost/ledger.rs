@@ -11,13 +11,42 @@
 //!
 //! Reverts are bit-exact: every apply snapshots the O(nodes) load vectors,
 //! so `revert` restores them wholesale rather than replaying deltas.
+//!
+//! ## Two traffic stores, one ledger
+//!
+//! A ledger reads traffic through one of two private stores:
+//!
+//! * **Dense** — borrows a caller-owned [`TrafficMatrix`]; this is the
+//!   batch path ([`LoadLedger::new`]), seeded with one full [`Scorer`]
+//!   pass (counted by [`LoadLedger::seed_passes`]).
+//! * **Blocks** — owns one traffic block per *live job*, exploiting that
+//!   workload matrices are block diagonal in job order (jobs never
+//!   communicate). This is the **persistent** online path
+//!   ([`LoadLedger::live`]): arrivals splice their block in with
+//!   [`LoadLedger::admit_block`] (O(p²) in the job's own size), departures
+//!   delete the block and remap the offsets of the blocks behind it with
+//!   [`LoadLedger::retire_block`] (O(P)), and the loads are maintained by
+//!   the same [`crate::cost::JobDelta`] arithmetic the bulk ledger uses —
+//!   so a live ledger is **never seeded**, no matter how many events it
+//!   absorbs. A process's traffic row lives entirely inside its own block,
+//!   so every delta walk (`apply`/`peek_batch`/`relocate`) is O(job size)
+//!   instead of O(P), and all of the move machinery above works on both
+//!   stores unchanged — same arithmetic, same accumulation order, hence
+//!   bit-identical results on the integer-valued rates of every builtin
+//!   and testkit workload (the persistent-ledger invariant of
+//!   [`crate::cost`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::coordinator::Placement;
-use crate::cost::{NodeLoads, Scorer};
+use crate::cost::{JobDelta, NodeLoads, Scorer};
 use crate::error::{Error, Result};
 use crate::model::topology::{ClusterSpec, CoreId, NodeId};
 use crate::model::traffic::TrafficMatrix;
 use crate::model::workload::ProcId;
+
+/// Process-wide count of full-scorer seed passes ([`LoadLedger::new`]).
+static SEED_PASSES: AtomicU64 = AtomicU64::new(0);
 
 /// A candidate placement change the ledger can apply and revert.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -47,6 +76,76 @@ struct RowVols {
     inc_tot: f64,
 }
 
+/// Owned per-job traffic blocks of a live ([`LoadLedger::live`]) ledger.
+/// Block `b` covers global procs `starts[b] .. starts[b] + blocks[b].len()`;
+/// `block_of[p]` inverts the mapping. Cross-block traffic is zero by the
+/// block-diagonal structure of workload matrices.
+struct BlockStore {
+    blocks: Vec<TrafficMatrix>,
+    starts: Vec<usize>,
+    block_of: Vec<usize>,
+}
+
+impl BlockStore {
+    /// Compose the dense block-diagonal matrix (verification/eviction path
+    /// only — the hot paths never materialize it). No
+    /// [`TrafficMatrix::of_workload`] rebuild: the stored blocks are reused.
+    fn compose(&self) -> TrafficMatrix {
+        let mut t = TrafficMatrix::zeros(self.block_of.len());
+        for (blk, &start) in self.blocks.iter().zip(&self.starts) {
+            for i in 0..blk.len() {
+                for (j, &v) in blk.row(i).iter().enumerate() {
+                    if v > 0.0 {
+                        t.add(start + i, start + j, v);
+                    }
+                }
+            }
+        }
+        t
+    }
+}
+
+/// Where a ledger reads traffic from (see the module docs): a borrowed
+/// dense matrix (batch path) or owned per-job blocks (persistent online
+/// path). Every accessor hides the distinction from the move machinery.
+enum TrafficStore<'a> {
+    Dense(&'a TrafficMatrix),
+    Blocks(BlockStore),
+}
+
+impl TrafficStore<'_> {
+    /// Process `p`'s traffic row as `(global column offset, row slice)`.
+    /// Dense: the full row at offset 0. Blocks: only `p`'s own block — the
+    /// columns outside it are structurally zero, so walking the slice
+    /// visits exactly the nonzeros the dense walk would, in the same order.
+    fn row_span(&self, p: ProcId) -> (usize, &[f64]) {
+        match self {
+            TrafficStore::Dense(t) => (0, t.row(p)),
+            TrafficStore::Blocks(b) => {
+                let blk = b.block_of[p];
+                let start = b.starts[blk];
+                (start, b.blocks[blk].row(p - start))
+            }
+        }
+    }
+
+    /// Traffic rate `i -> j` (0 across blocks).
+    fn get(&self, i: ProcId, j: ProcId) -> f64 {
+        match self {
+            TrafficStore::Dense(t) => t.get(i, j),
+            TrafficStore::Blocks(b) => {
+                let (bi, bj) = (b.block_of[i], b.block_of[j]);
+                if bi != bj {
+                    0.0
+                } else {
+                    let start = b.starts[bi];
+                    b.blocks[bi].get(i - start, j - start)
+                }
+            }
+        }
+    }
+}
+
 /// Incremental evaluator over one traffic matrix and cluster.
 ///
 /// Owns the working placement (cores + derived nodes + free-core map) so
@@ -54,7 +153,7 @@ struct RowVols {
 /// [`Move::Migrate`] whose target core is occupied is rejected at apply
 /// time, and accepted moves update the free map immediately.
 pub struct LoadLedger<'a> {
-    traffic: &'a TrafficMatrix,
+    traffic: TrafficStore<'a>,
     cluster: &'a ClusterSpec,
     nic_bw: f64,
     core_of: Vec<CoreId>,
@@ -91,9 +190,10 @@ impl<'a> LoadLedger<'a> {
         }
         let node_of: Vec<NodeId> =
             placement.core_of.iter().map(|&c| cluster.node_of_core(c)).collect();
+        SEED_PASSES.fetch_add(1, Ordering::Relaxed);
         let loads = scorer.score(traffic, placement, cluster)?;
         Ok(LoadLedger {
-            traffic,
+            traffic: TrafficStore::Dense(traffic),
             cluster,
             nic_bw: cluster.nic_bw as f64,
             core_of: placement.core_of.clone(),
@@ -102,6 +202,188 @@ impl<'a> LoadLedger<'a> {
             loads,
             undo: Vec::new(),
         })
+    }
+
+    /// Number of full-scorer seed passes ([`Self::new`]) since process
+    /// start — the counting instrumentation behind the persistent-ledger
+    /// invariant (see [`crate::cost`]): a [`Self::live`] ledger is seeded
+    /// **zero** times no matter how many events it absorbs, asserted by
+    /// `tests/online_replay.rs` and the `perf_online_replay` bench.
+    pub fn seed_passes() -> u64 {
+        SEED_PASSES.load(Ordering::Relaxed)
+    }
+
+    /// Empty **persistent** ledger over `cluster`: no live jobs, no borrowed
+    /// traffic matrix, no scorer pass. Grows and shrinks one job block at a
+    /// time through [`Self::admit_block`] / [`Self::retire_block`]; all of
+    /// the move machinery (`apply`/`peek_batch`/`revert`) works on it
+    /// exactly as on a scorer-seeded dense ledger.
+    pub fn live(cluster: &'a ClusterSpec) -> LoadLedger<'a> {
+        LoadLedger {
+            traffic: TrafficStore::Blocks(BlockStore {
+                blocks: Vec::new(),
+                starts: Vec::new(),
+                block_of: Vec::new(),
+            }),
+            cluster,
+            nic_bw: cluster.nic_bw as f64,
+            core_of: Vec::new(),
+            node_of: Vec::new(),
+            used: vec![false; cluster.total_cores()],
+            loads: NodeLoads::zeros(cluster.nodes),
+            undo: Vec::new(),
+        }
+    }
+
+    /// Splice an arriving job's local-rank `traffic` block into a
+    /// [`Self::live`] ledger, rank `r` on `cores[r]`. Loads grow by the
+    /// job's [`JobDelta`] — the same arithmetic the bulk ledger applies, so
+    /// the running loads stay bit-equal to a full recompute on
+    /// integer-valued rates. O(p²) in the *job's* size (the delta scatter),
+    /// never in the live world's. Errors (leaving the ledger untouched) on
+    /// a dense ledger, a rank/core count mismatch, or cores that are out of
+    /// range, duplicated, or already occupied. Clears the undo history.
+    pub fn admit_block(&mut self, traffic: TrafficMatrix, cores: &[CoreId]) -> Result<()> {
+        if matches!(self.traffic, TrafficStore::Dense(_)) {
+            return Err(Error::mapping(
+                "ledger: admit_block on a scorer-seeded dense ledger (use LoadLedger::live)",
+            ));
+        }
+        if cores.len() != traffic.len() {
+            return Err(Error::mapping(format!(
+                "ledger: admitting {} cores for a {}-rank block",
+                cores.len(),
+                traffic.len()
+            )));
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for (r, &c) in cores.iter().enumerate() {
+            if c >= self.used.len() {
+                return Err(Error::mapping(format!("ledger: rank {r} admitted on bad core {c}")));
+            }
+            if self.used[c] {
+                return Err(Error::mapping(format!(
+                    "ledger: admitted core {c} already occupied"
+                )));
+            }
+            if !seen.insert(c) {
+                return Err(Error::mapping(format!("ledger: core {c} admitted twice")));
+            }
+        }
+        let delta = JobDelta::compute(&traffic, cores, self.cluster)?;
+        for n in 0..self.loads.nodes() {
+            self.loads.nic_tx[n] += delta.loads.nic_tx[n];
+            self.loads.nic_rx[n] += delta.loads.nic_rx[n];
+            self.loads.intra[n] += delta.loads.intra[n];
+        }
+        let start = self.core_of.len();
+        for &c in cores {
+            self.used[c] = true;
+            self.core_of.push(c);
+            self.node_of.push(self.cluster.node_of_core(c));
+        }
+        if let TrafficStore::Blocks(store) = &mut self.traffic {
+            let bidx = store.blocks.len();
+            store.starts.push(start);
+            store.block_of.extend(std::iter::repeat(bidx).take(traffic.len()));
+            store.blocks.push(traffic);
+        }
+        self.undo.clear();
+        Ok(())
+    }
+
+    /// Retire live block `block` from a [`Self::live`] ledger: subtract its
+    /// [`JobDelta`] at the block's *current* cores (refinement may have
+    /// moved them since admission), delete the block, and shift every later
+    /// block's global proc offset down — O(P) end to end. Returns the freed
+    /// cores in local-rank order so the caller can release its own
+    /// occupancy. Clears the undo history.
+    pub fn retire_block(&mut self, block: usize) -> Result<Vec<CoreId>> {
+        let (start, procs, delta) = match &self.traffic {
+            TrafficStore::Dense(_) => {
+                return Err(Error::mapping(
+                    "ledger: retire_block on a scorer-seeded dense ledger (use LoadLedger::live)",
+                ))
+            }
+            TrafficStore::Blocks(b) => {
+                if block >= b.blocks.len() {
+                    return Err(Error::mapping(format!(
+                        "ledger: retire of unknown block {block} ({} live)",
+                        b.blocks.len()
+                    )));
+                }
+                let start = b.starts[block];
+                let procs = b.blocks[block].len();
+                let cores = &self.core_of[start..start + procs];
+                let delta = JobDelta::compute(&b.blocks[block], cores, self.cluster)?;
+                (start, procs, delta)
+            }
+        };
+        for n in 0..self.loads.nodes() {
+            self.loads.nic_tx[n] -= delta.loads.nic_tx[n];
+            self.loads.nic_rx[n] -= delta.loads.nic_rx[n];
+            self.loads.intra[n] -= delta.loads.intra[n];
+        }
+        let freed: Vec<CoreId> = self.core_of.drain(start..start + procs).collect();
+        self.node_of.drain(start..start + procs);
+        for &c in &freed {
+            self.used[c] = false;
+        }
+        if let TrafficStore::Blocks(store) = &mut self.traffic {
+            store.blocks.remove(block);
+            store.starts.remove(block);
+            for s in &mut store.starts[block..] {
+                *s -= procs;
+            }
+            store.block_of.truncate(store.block_of.len() - procs);
+            for (p, slot) in store.block_of.iter_mut().enumerate().skip(start) {
+                *slot = match store.starts.binary_search(&p) {
+                    Ok(b) => b,
+                    Err(b) => b - 1,
+                };
+            }
+        }
+        self.undo.clear();
+        Ok(freed)
+    }
+
+    /// Number of live job blocks (0 for a scorer-seeded dense ledger).
+    pub fn blocks(&self) -> usize {
+        match &self.traffic {
+            TrafficStore::Dense(_) => 0,
+            TrafficStore::Blocks(b) => b.blocks.len(),
+        }
+    }
+
+    /// Global proc offset and rank count of live block `block`; `None` on a
+    /// dense ledger or an out-of-range index.
+    pub fn block_span(&self, block: usize) -> Option<(usize, usize)> {
+        match &self.traffic {
+            TrafficStore::Dense(_) => None,
+            TrafficStore::Blocks(b) => {
+                (block < b.blocks.len()).then(|| (b.starts[block], b.blocks[block].len()))
+            }
+        }
+    }
+
+    /// The dense traffic matrix this ledger evaluates: a clone of the
+    /// borrowed matrix (dense mode) or the composed block diagonal (live
+    /// mode). Verification/reporting path — never a
+    /// [`TrafficMatrix::of_workload`] rebuild, and never on the per-event
+    /// hot path.
+    pub fn compose_traffic(&self) -> TrafficMatrix {
+        match &self.traffic {
+            TrafficStore::Dense(t) => (*t).clone(),
+            TrafficStore::Blocks(b) => b.compose(),
+        }
+    }
+
+    /// Cluster this ledger evaluates against. Returns the `'a`-borrowed
+    /// reference (not a reborrow of `self`) so callers can hold it across
+    /// mutating ledger calls — the descent loop reads `cluster.nodes` while
+    /// applying moves.
+    pub fn cluster(&self) -> &'a ClusterSpec {
+        self.cluster
     }
 
     /// Process count.
@@ -378,7 +660,9 @@ impl<'a> LoadLedger<'a> {
 
     /// One pass over process `p`'s traffic row and column, bucketed by the
     /// partner's node. `moved` temporarily re-homes one partner (the swap
-    /// peer mid-evaluation).
+    /// peer mid-evaluation). On a live ledger the walk covers only `p`'s
+    /// own block — the same nonzeros a dense walk visits, in the same
+    /// order, at O(job size) instead of O(P).
     fn row_vols(&self, p: ProcId, moved: Option<(ProcId, NodeId)>) -> RowVols {
         let nodes = self.cluster.nodes;
         let mut v = RowVols {
@@ -387,7 +671,9 @@ impl<'a> LoadLedger<'a> {
             out_tot: 0.0,
             inc_tot: 0.0,
         };
-        for (j, &out) in self.traffic.row(p).iter().enumerate() {
+        let (off, row) = self.traffic.row_span(p);
+        for (lj, &out) in row.iter().enumerate() {
+            let j = off + lj;
             if j == p {
                 continue; // self-traffic stays intra wherever p lands
             }
@@ -441,7 +727,12 @@ impl<'a> LoadLedger<'a> {
     /// `scorer` recompute of the current placement — the exact-equivalence
     /// guarantee, checked by tests after every accepted move.
     pub fn max_deviation(&self, scorer: &dyn Scorer) -> Result<f64> {
-        let full = scorer.score(self.traffic, &self.placement(), self.cluster)?;
+        let full = match &self.traffic {
+            TrafficStore::Dense(t) => scorer.score(t, &self.placement(), self.cluster)?,
+            TrafficStore::Blocks(b) => {
+                scorer.score(&b.compose(), &self.placement(), self.cluster)?
+            }
+        };
         let pair = |a: &[f64], b: &[f64]| {
             a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f64, f64::max)
         };
@@ -451,16 +742,17 @@ impl<'a> LoadLedger<'a> {
     }
 
     /// Re-attribute process `p`'s traffic rows from its current node to
-    /// `to`. O(P): one pass over `p`'s row and column.
+    /// `to`. One pass over `p`'s row and column: O(P) dense, O(job size)
+    /// on a live ledger (the row lives inside `p`'s own block).
     fn relocate(&mut self, p: ProcId, to: NodeId) {
         let from = self.node_of[p];
         if from == to {
             self.node_of[p] = to;
             return;
         }
-        let traffic = self.traffic;
-        let row = traffic.row(p);
-        for (j, &out) in row.iter().enumerate() {
+        let (off, row) = self.traffic.row_span(p);
+        for (lj, &out) in row.iter().enumerate() {
+            let j = off + lj;
             if j == p {
                 // Self-traffic (zero for every pattern, but stay exact):
                 // always intra on whichever node hosts p.
@@ -470,7 +762,7 @@ impl<'a> LoadLedger<'a> {
                 }
                 continue;
             }
-            let inc = traffic.get(j, p);
+            let inc = self.traffic.get(j, p);
             let nj = self.node_of[j];
             if out > 0.0 {
                 // p -> j leaves `from`'s books...
@@ -812,5 +1104,153 @@ mod tests {
             }
             assert!(ledger.max_deviation(&NativeScorer).unwrap() == 0.0);
         });
+    }
+
+    #[test]
+    fn dense_seeding_bumps_the_seed_pass_counter() {
+        // Monotone counter (process-wide, so only >= is race-safe here; the
+        // exact zero-seeds-per-replay delta is asserted in the serialized
+        // tests/online_replay.rs binary).
+        let (t, _w, cluster) = setup();
+        let p = Placement::new((0..8).collect());
+        let before = LoadLedger::seed_passes();
+        let _dense = LoadLedger::new(&NativeScorer, &t, &p, &cluster).unwrap();
+        assert!(
+            LoadLedger::seed_passes() > before,
+            "LoadLedger::new must count a seed pass"
+        );
+    }
+
+    fn three_jobs() -> (Vec<JobSpec>, Vec<Vec<usize>>, ClusterSpec) {
+        let cluster = ClusterSpec::small_test_cluster(); // 4 nodes x 4 cores
+        let jobs = vec![
+            JobSpec::synthetic(Pattern::AllToAll, 4, 64_000, 10.0, 100),
+            JobSpec::synthetic(Pattern::GatherReduce, 5, 2_000, 50.0, 100),
+            JobSpec::synthetic(Pattern::Linear, 3, 1_000, 5.0, 50),
+        ];
+        let cores = vec![vec![0, 4, 8, 12], vec![1, 2, 5, 9, 13], vec![3, 6, 10]];
+        (jobs, cores, cluster)
+    }
+
+    #[test]
+    fn live_ledger_admits_and_retires_blocks_bit_for_bit() {
+        let (jobs, cores, cluster) = three_jobs();
+        let mut live = LoadLedger::live(&cluster);
+        assert!(live.is_empty());
+        assert_eq!(live.blocks(), 0);
+        for (job, cs) in jobs.iter().zip(&cores) {
+            live.admit_block(TrafficMatrix::of_job(job), cs).unwrap();
+        }
+        assert_eq!(live.blocks(), 3);
+        assert_eq!(live.len(), 12);
+        // Bit-equal to a dense ledger seeded from the composed workload.
+        let w = Workload::new("abc", jobs.clone()).unwrap();
+        let t = TrafficMatrix::of_workload(&w);
+        let flat: Vec<usize> = cores.iter().flatten().copied().collect();
+        let dense =
+            LoadLedger::new(&NativeScorer, &t, &Placement::new(flat), &cluster).unwrap();
+        assert_loads_bits_eq(live.loads(), dense.loads(), "after three admits");
+        assert_eq!(live.placement(), dense.placement());
+        assert_eq!(live.objective().to_bits(), dense.objective().to_bits());
+        assert!(live.max_deviation(&NativeScorer).unwrap() == 0.0);
+        // The composed matrix equals the dense workload build entry-wise.
+        let composed = live.compose_traffic();
+        assert_eq!(composed.len(), t.len());
+        for i in 0..t.len() {
+            for j in 0..t.len() {
+                assert_eq!(composed.get(i, j).to_bits(), t.get(i, j).to_bits());
+            }
+        }
+
+        // Retire the middle block: later blocks shift down by its rank
+        // count, the freed cores come back in local-rank order.
+        let freed = live.retire_block(1).unwrap();
+        assert_eq!(freed, cores[1]);
+        for &c in &freed {
+            assert!(live.is_free(c), "retired core {c} must free up");
+        }
+        assert_eq!(live.blocks(), 2);
+        assert_eq!(live.block_span(0), Some((0, 4)));
+        assert_eq!(live.block_span(1), Some((4, 3)));
+        assert_eq!(live.block_span(2), None);
+        let w2 = Workload::new("ac", vec![jobs[0].clone(), jobs[2].clone()]).unwrap();
+        let t2 = TrafficMatrix::of_workload(&w2);
+        let flat2: Vec<usize> = cores[0].iter().chain(&cores[2]).copied().collect();
+        let dense2 =
+            LoadLedger::new(&NativeScorer, &t2, &Placement::new(flat2), &cluster).unwrap();
+        assert_loads_bits_eq(live.loads(), dense2.loads(), "after retiring the middle block");
+        assert_eq!(live.placement(), dense2.placement());
+        assert!(live.max_deviation(&NativeScorer).unwrap() == 0.0);
+    }
+
+    #[test]
+    fn live_ledger_supports_moves_like_a_dense_one() {
+        // After admits, apply/peek/peek_batch/revert on the live ledger
+        // behave exactly as on a dense ledger over the composed matrix.
+        let (jobs, cores, cluster) = three_jobs();
+        let mut live = LoadLedger::live(&cluster);
+        for (job, cs) in jobs.iter().zip(&cores) {
+            live.admit_block(TrafficMatrix::of_job(job), cs).unwrap();
+        }
+        let w = Workload::new("abc", jobs).unwrap();
+        let t = TrafficMatrix::of_workload(&w);
+        let flat: Vec<usize> = cores.iter().flatten().copied().collect();
+        let mut dense =
+            LoadLedger::new(&NativeScorer, &t, &Placement::new(flat), &cluster).unwrap();
+        let moves = vec![
+            Move::Swap(0, 5),       // cross-job swap
+            Move::Swap(1, 3),       // intra-job swap
+            Move::Migrate(2, 14),   // free core on node 3
+        ];
+        let live_objs = live.peek_batch(&moves).unwrap();
+        let dense_objs = dense.peek_batch(&moves).unwrap();
+        for ((mv, lo), de) in moves.iter().zip(&live_objs).zip(&dense_objs) {
+            assert_eq!(lo.to_bits(), de.to_bits(), "{mv:?} peeked differently");
+        }
+        for &mv in &moves {
+            live.apply(mv).unwrap();
+            dense.apply(mv).unwrap();
+            assert_loads_bits_eq(live.loads(), dense.loads(), "after applied move");
+            assert_eq!(live.placement(), dense.placement());
+        }
+        live.revert().unwrap();
+        dense.revert().unwrap();
+        assert_loads_bits_eq(live.loads(), dense.loads(), "after revert");
+        assert!(live.max_deviation(&NativeScorer).unwrap() == 0.0);
+        // Retiring a block after refinement moves subtracts the delta at
+        // the blocks' *current* cores.
+        live.commit();
+        let freed = live.retire_block(0).unwrap();
+        assert_eq!(freed.len(), 4);
+        let full = NativeScorer
+            .score(&live.compose_traffic(), &live.placement(), &cluster)
+            .unwrap();
+        assert_loads_bits_eq(live.loads(), &full, "retire after moves");
+    }
+
+    #[test]
+    fn live_ledger_rejects_invalid_admissions_and_retires() {
+        let cluster = ClusterSpec::small_test_cluster();
+        let block = || {
+            TrafficMatrix::of_job(&JobSpec::synthetic(Pattern::Linear, 3, 1000, 1.0, 5))
+        };
+        let mut live = LoadLedger::live(&cluster);
+        assert!(live.admit_block(block(), &[0, 1]).is_err(), "rank/core mismatch");
+        assert!(live.admit_block(block(), &[0, 1, 999]).is_err(), "core out of range");
+        assert!(live.admit_block(block(), &[0, 1, 1]).is_err(), "core admitted twice");
+        assert!(live.is_empty(), "rejected admits leave the ledger empty");
+        live.admit_block(block(), &[0, 1, 2]).unwrap();
+        assert!(live.admit_block(block(), &[2, 3, 4]).is_err(), "occupied core");
+        assert_eq!(live.blocks(), 1, "rejected admit adds no block");
+        assert_eq!(live.len(), 3);
+        assert!(live.retire_block(5).is_err(), "unknown block");
+        // Dense ledgers reject the live-mode calls outright.
+        let (t, _w, small) = setup();
+        let p = Placement::new((0..8).collect());
+        let mut dense = LoadLedger::new(&NativeScorer, &t, &p, &small).unwrap();
+        assert!(dense.admit_block(block(), &[13, 14, 15]).is_err());
+        assert!(dense.retire_block(0).is_err());
+        assert_eq!(dense.blocks(), 0);
+        assert_eq!(dense.block_span(0), None);
     }
 }

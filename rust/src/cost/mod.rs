@@ -46,6 +46,27 @@
 //! bit-for-bit on integer-valued rates), and reverts are snapshot-restored,
 //! hence bit-exact unconditionally. Enforced by the `bulk` module tests and
 //! `tests/online_replay.rs`.
+//!
+//! ## Persistent-ledger invariant (online replays)
+//!
+//! [`LoadLedger::live`] opens an empty block-structured ledger that the
+//! online service keeps alive across its whole event stream: arrivals
+//! splice a job's traffic block in ([`LoadLedger::admit_block`]),
+//! departures delete the block and shift later proc offsets down
+//! ([`LoadLedger::retire_block`]), and the per-event refinement pass
+//! descends on the ledger directly ([`crate::coordinator::refine::Refiner::descend`])
+//! instead of re-seeding a fresh one. Every event is therefore O(P) in the
+//! live process count: after warm-up a steady-state replay performs **zero**
+//! [`crate::model::traffic::TrafficMatrix::of_workload`] rebuilds and
+//! **zero** full-scorer seed passes ([`LoadLedger::seed_passes`] counts
+//! them). Loads stay equal to a full recompute of the live placement under
+//! the same conditions as the delta-evaluation invariant (exact up to FP
+//! associativity; bit-for-bit on integer-valued rates) because job blocks
+//! are disjoint: cross-block traffic is identically 0.0, so splicing or
+//! deleting a block only adds/removes that job's own row contributions.
+//! Enforced per event by `persistent_ledger_bit_equal_over_a_thousand_events`
+//! and at 10⁵-job scale by the zero-seed asserts in
+//! `tests/online_replay.rs` and `benches/perf_online_replay.rs`.
 
 pub mod bulk;
 pub mod ledger;

@@ -25,6 +25,11 @@
 //! * the proc → job index,
 //! * the CSR adjacency [`Graph`] the recursive-bisection mappers cut.
 //!
+//! The online mapping service builds the single-job variant
+//! [`MapCtx::for_job`] per arrival and feeds its traffic block straight
+//! into the persistent [`crate::cost::LoadLedger::admit_block`] — the
+//! one-build-per-admitted-job guarantee under churn.
+//!
 //! The harness builds one `Arc<MapCtx>` per workload row and shares it
 //! across all mapper cells and `par_map` worker threads; the
 //! one-build-per-workload guarantee is enforced by

@@ -200,7 +200,9 @@ pub fn run_sweep(
 
 /// Replay one arrival trace under every mapper of `mappers`, one full
 /// replay per mapper cell distributed over up to `threads` worker threads
-/// (`<= 1` = serial). Each replay is a deterministic fold over the trace,
+/// (`<= 1` = serial). A thin positional front-end over the
+/// [`online::Replay`] builder, kept for harness callers that already hold a
+/// [`ReplayConfig`]. Each replay is a deterministic fold over the trace,
 /// so the threaded fan-out is bit-identical to the serial one in every
 /// [`ChurnReport::metrics_eq`] field — the same contract [`run_sweep`]
 /// holds for the batch figures, asserted by `tests/online_replay.rs` and
@@ -212,10 +214,12 @@ pub fn run_replay(
     cfg: &ReplayConfig,
     threads: usize,
 ) -> Result<Vec<ChurnReport>> {
-    let cells: Vec<MapperSpec> = mappers.to_vec();
-    crate::par::par_map(cells, threads, |spec| online::replay(trace, cluster, spec, cfg))
-        .into_iter()
-        .collect()
+    online::Replay::new(trace)
+        .on(cluster)
+        .mappers(mappers)
+        .config(*cfg)
+        .threads(threads)
+        .run()
 }
 
 /// True when two replay fan-outs agree on every deterministic churn metric
@@ -292,12 +296,12 @@ pub fn sweep_to_json(
         .int("seed", DEFAULT_RANDOM_SEED)
         .int("threads", threads as u64)
         .num("parallel_wall_secs", parallel_wall_secs);
-    doc = match serial_wall_secs {
-        Some(s) => {
-            doc.num("serial_wall_secs", s).num("speedup", s / parallel_wall_secs.max(1e-12))
-        }
-        None => doc.raw("serial_wall_secs", "null".to_string()),
-    };
+    // Absent values render through `opt_num` (a JSON null) everywhere —
+    // the same convention as the churn documents' naming table.
+    doc = doc.opt_num("serial_wall_secs", serial_wall_secs);
+    if let Some(s) = serial_wall_secs {
+        doc = doc.num("speedup", s / parallel_wall_secs.max(1e-12));
+    }
     let mut out = doc.raw("cells", json::array(&cells)).build();
     out.push('\n');
     out
@@ -523,7 +527,14 @@ mod tests {
         }
         // And the fan-out matches direct one-shot replays.
         for (rep, spec) in serial.iter().zip(&mappers) {
-            let direct = online::replay(&trace, &cluster, *spec, &cfg).unwrap();
+            let direct = online::Replay::new(&trace)
+                .on(&cluster)
+                .mappers(&[*spec])
+                .config(cfg)
+                .run()
+                .unwrap()
+                .pop()
+                .unwrap();
             assert!(rep.metrics_eq(&direct), "{} drifted from direct replay", rep.mapper);
         }
     }

@@ -80,6 +80,29 @@
 //! sub-cluster. The `Refined` wrapper is likewise gone: `+r` specs lower to
 //! a [`coordinator::Pipeline`] (`[MapStage, RefineStage]`) with identical
 //! results.
+//!
+//! ### Migrating from positional `online::replay`
+//!
+//! The positional `online::replay(trace, cluster, spec, cfg)` free
+//! function is deprecated in favor of the [`online::Replay`] builder,
+//! which names every knob, defaults the rest, and replays any number of
+//! mapper specs (fanned over threads) in one call:
+//!
+//! ```text
+//! // before: one spec per call, threading via harness::run_replay
+//! let report = online::replay(&trace, &cluster, spec, &cfg)?;
+//! // after
+//! let reports = online::Replay::new(&trace)
+//!     .on(&cluster)
+//!     .mappers(&[spec])
+//!     .threads(4)
+//!     .run()?;
+//! ```
+//!
+//! The builder drives the same persistent-ledger replay core (see the
+//! [`cost`] module docs for the zero-rebuild/zero-seed invariant), so
+//! reports are bit-identical to the old call for equal settings. The shim
+//! stays one release and then goes away.
 
 #![warn(missing_docs)]
 

@@ -1,45 +1,50 @@
 //! The online mapping service: a long-lived mapper that admits and retires
 //! jobs against live cluster state, one event at a time.
 //!
-//! Per event the service does **incremental** work only:
+//! The service owns one **persistent** [`LoadLedger`] in
+//! [`LoadLedger::live`] (block-diagonal) mode, carried across every event.
+//! Job blocks are disjoint — jobs never exchange traffic — so the live
+//! world's traffic matrix is exactly the block diagonal of the admitted
+//! jobs' own matrices, and the ledger stores it that way instead of ever
+//! composing a dense P×P matrix on the event path. Per event:
 //!
 //! * **Arrival** — build the arriving job's own [`MapCtx`] (one
 //!   traffic-matrix construction of the *job's* size, never the world's),
 //!   place its processes on free cores through the base strategy's
 //!   occupancy-aware [`Mapper::place`] entry point — every strategy serves
 //!   here, the graph partitioners included (they cut against the induced
-//!   free-core sub-cluster) — and add the job's precomputed per-node
-//!   [`JobDelta`] to the live [`BulkLedger`] in O(nodes). Jobs that
-//!   do not fit the free pool are rejected and recorded, not errors.
-//! * **Departure** — release the job's cores and subtract its delta
-//!   (snapshot-backed bulk remove, the PR-2 revert discipline at job
-//!   granularity).
-//! * **Optional refinement** (`+r` specs) — a bounded [`Refiner`] pass over
-//!   the live placement after each event. Candidate scoring reuses the
-//!   PR-2 O(P) delta machinery, but driving the refiner does compose the
-//!   live traffic matrix from the stored per-job blocks (O(P²) writes, no
-//!   [`crate::model::traffic::TrafficMatrix::of_workload`] rebuild) and
-//!   seed one full scorer pass per event — the documented price of the
-//!   *optional* pass, not of the service (see the ROADMAP open item for
-//!   the incremental-composition next step). Accepted moves are folded
-//!   back as per-job delta remove/add pairs, and the number of processes
-//!   whose core changed is the event's migration count.
+//!   free-core sub-cluster) — and splice the job's block into the ledger
+//!   with [`LoadLedger::admit_block`]: one [`crate::cost::JobDelta`]
+//!   scatter, O(p²) in the job's size. Jobs that do not fit the free pool
+//!   are rejected and recorded, not errors.
+//! * **Departure** — [`LoadLedger::retire_block`]: subtract the block's
+//!   delta at its *current* cores, drop the block, and shift later blocks'
+//!   proc offsets down — O(P) end to end. The freed cores go back to the
+//!   occupancy.
+//! * **Optional refinement** (`+r` specs) — [`Refiner::descend`] directly
+//!   on the persistent ledger: candidate moves are scored through the O(P)
+//!   delta machinery against the stored blocks, with **no** per-event
+//!   traffic composition, no [`TrafficMatrix::of_workload`] rebuild, and
+//!   no full scorer seed or verify pass (the pre-persistent implementation
+//!   paid an O(P²) compose plus one full seed per refined event). The
+//!   number of processes whose core changed is the event's migration
+//!   count, and the occupancy is re-pointed at the refined cores.
 //!
 //! After every event the live ledger loads equal a full scorer recompute of
-//! the live placement (bit-for-bit on integer-rate workloads) — the bulk
-//! extension of the delta-evaluation invariant, asserted by
-//! `tests/online_replay.rs`.
+//! the live placement (bit-for-bit on integer-rate workloads), and a
+//! steady-state event performs **zero** `of_workload` rebuilds and **zero**
+//! full-scorer seed passes — both counted invariants, asserted by
+//! `tests/online_replay.rs` and the `perf_online_replay` bench.
 
 use crate::coordinator::refine::Refiner;
 use crate::coordinator::{Mapper, MapperSpec, Occupancy, Placement};
-use crate::cost::{BulkLedger, JobDelta, JobMove, NodeLoads};
+use crate::cost::{LoadLedger, NodeLoads};
 use crate::ctx::MapCtx;
 use crate::error::{Error, Result};
-use crate::model::topology::{ClusterSpec, CoreId};
+use crate::model::topology::ClusterSpec;
 use crate::model::traffic::TrafficMatrix;
 use crate::model::workload::{JobSpec, Workload};
 use crate::online::trace::{TraceEvent, TraceEventKind};
-use crate::runtime::NativeScorer;
 use crate::sim::{simulate, SimConfig};
 use crate::units::Ns;
 
@@ -119,18 +124,15 @@ pub struct EventRecord {
     pub place_secs: f64,
 }
 
-/// One live (admitted, not yet departed) job.
+/// One live (admitted, not yet departed) job. The job's traffic block and
+/// current cores live in the persistent ledger, indexed by this job's
+/// position in the live vector (both are arrival-ordered and shrink
+/// together on departures).
 struct LiveJob {
     /// Arrival number in the trace.
     instance: usize,
     /// The job itself.
     spec: JobSpec,
-    /// The job's local-rank traffic block (from its admission ctx).
-    traffic: TrafficMatrix,
-    /// Core of each local rank.
-    cores: Vec<CoreId>,
-    /// Per-node load contribution under `cores`.
-    delta: JobDelta,
 }
 
 /// The long-lived online mapper (see the module docs).
@@ -141,7 +143,10 @@ pub struct OnlineMapper<'c> {
     refiner: Refiner,
     cfg: ReplayConfig,
     occ: Occupancy<'c>,
-    ledger: BulkLedger,
+    /// The persistent live ledger: block-diagonal traffic store plus the
+    /// running per-node loads, maintained incrementally across events and
+    /// refined in place — never re-seeded (see the module docs).
+    ledger: LoadLedger<'c>,
     live: Vec<LiveJob>,
     arrivals: usize,
     /// Rejected arrivals by instance id, with the job name so the matching
@@ -166,7 +171,7 @@ impl<'c> OnlineMapper<'c> {
             refiner: Refiner::with_rounds(cfg.refine_rounds),
             cfg,
             occ: Occupancy::new(cluster),
-            ledger: BulkLedger::new(cluster),
+            ledger: LoadLedger::live(cluster),
             live: Vec::new(),
             arrivals: 0,
             rejected: std::collections::BTreeMap::new(),
@@ -181,7 +186,7 @@ impl<'c> OnlineMapper<'c> {
 
     /// Live processes.
     pub fn live_procs(&self) -> usize {
-        self.ledger.procs()
+        self.ledger.len()
     }
 
     /// Free cores.
@@ -189,7 +194,7 @@ impl<'c> OnlineMapper<'c> {
         self.occ.total_free()
     }
 
-    /// Live per-node loads (the bulk ledger's running sums).
+    /// Live per-node loads (the persistent ledger's running sums).
     pub fn loads(&self) -> &NodeLoads {
         self.ledger.loads()
     }
@@ -208,34 +213,19 @@ impl<'c> OnlineMapper<'c> {
         }
     }
 
-    /// The live placement, aligned with [`Self::live_workload`].
+    /// The live placement, aligned with [`Self::live_workload`] (the
+    /// ledger's proc order is arrival order, exactly like the live vector).
     pub fn live_placement(&self) -> Placement {
-        let mut cores = Vec::with_capacity(self.live_procs());
-        for job in &self.live {
-            cores.extend_from_slice(&job.cores);
-        }
-        Placement::new(cores)
+        self.ledger.placement()
     }
 
-    /// The live traffic matrix, composed from the stored per-job blocks —
-    /// never a [`TrafficMatrix::of_workload`] rebuild (the admission-time
-    /// block is reused; the build counter must not move on composition).
+    /// The live traffic matrix, composed from the ledger's stored per-job
+    /// blocks — never a [`TrafficMatrix::of_workload`] rebuild (the
+    /// admission-time block is reused; the build counter must not move on
+    /// composition). Verification/reporting path only: the event path
+    /// works on the block store directly and never composes.
     pub fn live_traffic(&self) -> TrafficMatrix {
-        let total: usize = self.live.iter().map(|j| j.spec.procs).sum();
-        let mut t = TrafficMatrix::zeros(total);
-        let mut off = 0;
-        for job in &self.live {
-            let p = job.spec.procs;
-            for i in 0..p {
-                for (j, &v) in job.traffic.row(i).iter().enumerate() {
-                    if v > 0.0 {
-                        t.add(off + i, off + j, v);
-                    }
-                }
-            }
-            off += p;
-        }
-        t
+        self.ledger.compose_traffic()
     }
 
     /// Process one trace event; returns its churn record. Trace-level
@@ -292,33 +282,26 @@ impl<'c> OnlineMapper<'c> {
             procs,
             migrations,
             objective: self.ledger.objective(),
-            live_procs: self.ledger.procs(),
+            live_procs: self.ledger.len(),
             free_cores: self.occ.total_free(),
             waiting_ms,
             place_secs: t0.elapsed().as_secs_f64(),
         })
     }
 
-    /// Admit one job: single-job ctx, free-core-restricted placement, bulk
-    /// delta add.
+    /// Admit one job: single-job ctx, free-core-restricted placement, block
+    /// splice into the persistent ledger.
     fn admit(&mut self, instance: usize, job: &JobSpec) -> Result<()> {
         let ctx = MapCtx::for_job(job)?;
         let placement = self.base.place(&ctx, self.cluster, &mut self.occ)?;
-        let delta = JobDelta::compute(ctx.traffic(), &placement.core_of, self.cluster)?;
-        self.ledger.apply(JobMove::Add(&delta))?;
-        self.ledger.commit();
-        self.live.push(LiveJob {
-            instance,
-            spec: job.clone(),
-            traffic: ctx.traffic().clone(),
-            cores: placement.core_of,
-            delta,
-        });
+        self.ledger.admit_block(ctx.traffic().clone(), &placement.core_of)?;
+        self.live.push(LiveJob { instance, spec: job.clone() });
         Ok(())
     }
 
-    /// Retire one live job: free its cores, bulk delta remove. Returns the
-    /// departed spec.
+    /// Retire one live job: drop its ledger block (delta subtract at the
+    /// block's current cores, offsets remapped) and release the freed
+    /// cores. Returns the departed spec.
     fn retire(&mut self, instance: usize) -> Result<JobSpec> {
         let pos = self
             .live
@@ -330,27 +313,27 @@ impl<'c> OnlineMapper<'c> {
                 ))
             })?;
         let job = self.live.remove(pos);
-        for &c in &job.cores {
+        // The live vector and the ledger's block list are both
+        // arrival-ordered, so the vector position IS the block index.
+        let freed = self.ledger.retire_block(pos)?;
+        for &c in &freed {
             self.occ.release(c)?;
         }
-        self.ledger.apply(JobMove::Remove(&job.delta))?;
-        self.ledger.commit();
         Ok(job.spec)
     }
 
-    /// One bounded refinement pass over the live placement; folds accepted
-    /// moves back into per-job core lists, deltas, and occupancy. Returns
-    /// the number of processes whose core changed.
+    /// One bounded refinement descent on the persistent ledger — no
+    /// traffic composition, no scorer seed, no verify pass. Returns the
+    /// number of processes whose core changed and re-points the occupancy
+    /// at the refined cores.
     fn refine_pass(&mut self) -> Result<usize> {
         if self.live.is_empty() {
             return Ok(0);
         }
-        let w = self.live_workload();
-        let traffic = self.live_traffic();
-        let start = self.live_placement();
-        let rep = self.refiner.run(&NativeScorer, &traffic, &start, &w, self.cluster)?;
-        let moved: usize = rep
-            .placement
+        let start = self.ledger.placement();
+        self.refiner.descend(&mut self.ledger, |_| true)?;
+        let refined = self.ledger.placement();
+        let moved = refined
             .core_of
             .iter()
             .zip(&start.core_of)
@@ -359,32 +342,19 @@ impl<'c> OnlineMapper<'c> {
         if moved == 0 {
             return Ok(0);
         }
-        // Fold the refined cores back per job; jobs whose slice changed get
-        // a delta remove/add pair (the bulk-move invariant keeps the live
-        // loads equal to a fresh recompute).
-        let mut off = 0;
-        for job in &mut self.live {
-            let p = job.spec.procs;
-            let new_cores = &rep.placement.core_of[off..off + p];
-            off += p;
-            if new_cores == job.cores.as_slice() {
-                continue;
-            }
-            let new_delta = JobDelta::compute(&job.traffic, new_cores, self.cluster)?;
-            self.ledger.apply(JobMove::Remove(&job.delta))?;
-            self.ledger.apply(JobMove::Add(&new_delta))?;
-            self.ledger.commit();
-            job.cores = new_cores.to_vec();
-            job.delta = new_delta;
-        }
-        // Occupancy follows the refined placement wholesale.
-        let mut occ = Occupancy::new(self.cluster);
-        for job in &self.live {
-            for &c in &job.cores {
-                occ.claim(c)?;
+        // Re-point the occupancy at the refined cores: release every
+        // changed old core before claiming any new one, so a core swapped
+        // between two processes is never claimed while still held.
+        for (&old, &new) in start.core_of.iter().zip(&refined.core_of) {
+            if old != new {
+                self.occ.release(old)?;
             }
         }
-        self.occ = occ;
+        for (&old, &new) in start.core_of.iter().zip(&refined.core_of) {
+            if old != new {
+                self.occ.claim(new)?;
+            }
+        }
         Ok(moved)
     }
 
@@ -406,6 +376,7 @@ mod tests {
     use crate::cost::Scorer;
     use crate::model::pattern::Pattern;
     use crate::online::trace::{ArrivalTrace, TraceGenConfig};
+    use crate::runtime::NativeScorer;
     use crate::testkit::loads_bits_eq;
 
     fn ev(at_ns: Ns, kind: TraceEventKind) -> TraceEvent {

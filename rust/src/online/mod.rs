@@ -12,22 +12,49 @@
 //! * [`trace`] — [`ArrivalTrace`]: validated `JobArrive`/`JobDepart` event
 //!   streams at ns timestamps, plus the seeded Poisson-ish scenario
 //!   generator and named builtin scenarios.
-//! * [`mapper`] — [`OnlineMapper`]: live occupancy + live per-node loads
-//!   maintained by job-granularity bulk ledger moves
-//!   ([`crate::cost::BulkLedger`]); arrivals place through the
-//!   occupancy-aware [`crate::coordinator::Mapper::place`] entry point
-//!   (every strategy, graph partitioners included), departures free cores
-//!   and subtract deltas, and `+r` specs run a bounded
-//!   [`crate::coordinator::refine::Refiner`] pass per event.
-//! * [`report`] — churn CSV/JSON rendering.
-//! * [`replay`] / [`ChurnReport`] — drive a whole trace through one service
-//!   and collect per-event churn records (migrations, placement-cost
-//!   trajectory, epoch waiting-time snapshots, time-to-place).
+//! * [`mapper`] — [`OnlineMapper`]: live occupancy plus one **persistent**
+//!   [`crate::cost::LoadLedger`] in block-diagonal live mode, carried
+//!   across events; arrivals place through the occupancy-aware
+//!   [`crate::coordinator::Mapper::place`] entry point (every strategy,
+//!   graph partitioners included) and splice their traffic block in,
+//!   departures retire their block and remap offsets, and `+r` specs run a
+//!   bounded [`crate::coordinator::refine::Refiner`] descent directly on
+//!   the persistent ledger — O(P) per event, zero per-event traffic
+//!   rebuilds or scorer seeds.
+//! * [`report`] — churn CSV/JSON rendering (one naming table for both).
+//! * [`Replay`] / [`ChurnReport`] — the builder that drives a whole trace
+//!   through one service per mapper spec and collects per-event churn
+//!   records (migrations, placement-cost trajectory, epoch waiting-time
+//!   snapshots, time-to-place, events/sec throughput).
 //!
 //! Replays are deterministic: same trace, same mapper, same config ⇒ the
-//! same [`ChurnReport`] metrics bit for bit, which is what lets the harness
-//! fan replays out over worker threads ([`crate::harness::run_replay`])
-//! with serial-identical results.
+//! same [`ChurnReport`] metrics bit for bit, which is what lets
+//! [`Replay::threads`] fan mapper cells out over worker threads (and the
+//! harness over whole replays, [`crate::harness::run_replay`]) with
+//! serial-identical results.
+//!
+//! ## Replaying a trace
+//!
+//! ```
+//! use nicmap::coordinator::{MapperKind, MapperSpec};
+//! use nicmap::model::topology::ClusterSpec;
+//! use nicmap::online::{ArrivalTrace, Replay};
+//!
+//! let cluster = ClusterSpec::paper_cluster();
+//! let trace = ArrivalTrace::builtin("smoke").unwrap();
+//! let reports = Replay::new(&trace)
+//!     .on(&cluster)
+//!     .mappers(&[MapperSpec::plain(MapperKind::New), MapperSpec::plus_r(MapperKind::New)])
+//!     .sim_every(5)
+//!     .threads(2)
+//!     .run()
+//!     .unwrap();
+//! assert_eq!(reports.len(), 2);
+//! ```
+//!
+//! The positional `replay(trace, cluster, spec, cfg)` free function is
+//! deprecated in favor of the builder and now just forwards to it
+//! (migration note in the crate docs).
 
 pub mod mapper;
 pub mod report;
@@ -36,7 +63,7 @@ pub mod trace;
 pub use mapper::{EventAction, EventRecord, OnlineMapper, ReplayConfig};
 pub use trace::{ArrivalTrace, TraceEvent, TraceEventKind, TraceGenConfig};
 
-use crate::coordinator::MapperSpec;
+use crate::coordinator::{MapperKind, MapperSpec};
 use crate::error::Result;
 use crate::model::topology::ClusterSpec;
 
@@ -95,6 +122,45 @@ impl ChurnReport {
             .sum()
     }
 
+    /// Events processed per wall-clock second over the whole replay — the
+    /// throughput headline of the scale runs (0.0 when the replay recorded
+    /// no events or no wall time).
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_secs > 0.0 && !self.events.is_empty() {
+            self.events.len() as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Median per-event time-to-place over placed arrivals, wall seconds
+    /// (`None` when nothing was placed). Wall-clock derived — excluded from
+    /// [`Self::metrics_eq`], like `place_secs` itself.
+    pub fn place_p50_secs(&self) -> Option<f64> {
+        self.place_percentile(50.0)
+    }
+
+    /// 99th-percentile per-event time-to-place over placed arrivals, wall
+    /// seconds (`None` when nothing was placed) — the tail-latency figure
+    /// the million-job replays track.
+    pub fn place_p99_secs(&self) -> Option<f64> {
+        self.place_percentile(99.0)
+    }
+
+    fn place_percentile(&self, q: f64) -> Option<f64> {
+        let mut secs: Vec<f64> = self
+            .events
+            .iter()
+            .filter(|e| e.action == EventAction::Placed)
+            .map(|e| e.place_secs)
+            .collect();
+        if secs.is_empty() {
+            return None;
+        }
+        secs.sort_by(f64::total_cmp);
+        Some(crate::report::stats::percentile_sorted(&secs, q))
+    }
+
     /// Epoch waiting-time snapshots as `(seq, waiting_ms)` pairs — the
     /// wait-time trajectory; consecutive differences are the wait-time
     /// deltas between epochs.
@@ -128,10 +194,108 @@ impl ChurnReport {
     }
 }
 
+/// Builder for trace replays: one [`OnlineMapper`] per mapper spec, fanned
+/// out over worker threads, one [`ChurnReport`] each. Defaults: the paper
+/// cluster, the paper strategy plain and refined (`N`, `N+r`),
+/// [`ReplayConfig::default`] knobs, serial execution. See the module docs
+/// for a worked example.
+#[derive(Debug, Clone)]
+pub struct Replay<'a> {
+    trace: &'a ArrivalTrace,
+    cluster: Option<&'a ClusterSpec>,
+    mappers: Vec<MapperSpec>,
+    cfg: ReplayConfig,
+    threads: usize,
+}
+
+impl<'a> Replay<'a> {
+    /// Replay of `trace` with the default cluster, mappers, and knobs.
+    pub fn new(trace: &'a ArrivalTrace) -> Self {
+        Replay {
+            trace,
+            cluster: None,
+            mappers: vec![
+                MapperSpec::plain(MapperKind::New),
+                MapperSpec::plus_r(MapperKind::New),
+            ],
+            cfg: ReplayConfig::default(),
+            threads: 1,
+        }
+    }
+
+    /// Replay on `cluster` instead of [`ClusterSpec::paper_cluster`].
+    pub fn on(mut self, cluster: &'a ClusterSpec) -> Self {
+        self.cluster = Some(cluster);
+        self
+    }
+
+    /// Replay under each of `specs` (one full replay per spec, reported in
+    /// this order).
+    pub fn mappers(mut self, specs: &[MapperSpec]) -> Self {
+        self.mappers = specs.to_vec();
+        self
+    }
+
+    /// Round budget of the per-event refinement pass (`+r` specs only; 0
+    /// disables refinement even for `+r`).
+    pub fn refine_rounds(mut self, rounds: usize) -> Self {
+        self.cfg.refine_rounds = rounds;
+        self
+    }
+
+    /// Take a simulated waiting-time snapshot every `every` events (0 =
+    /// never).
+    pub fn sim_every(mut self, every: usize) -> Self {
+        self.cfg.sim_every = every;
+        self
+    }
+
+    /// Per-flow round cap applied to epoch-snapshot simulations.
+    pub fn sim_rounds(mut self, rounds: u64) -> Self {
+        self.cfg.sim_rounds = rounds;
+        self
+    }
+
+    /// Replace the whole knob set at once (an escape hatch for callers that
+    /// already hold a [`ReplayConfig`]).
+    pub fn config(mut self, cfg: ReplayConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Fan the mapper cells out over up to `threads` worker threads
+    /// (clamped to ≥ 1). Each cell is a deterministic fold over the trace,
+    /// so any thread count is bit-identical to serial in every
+    /// [`ChurnReport::metrics_eq`] field.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Run every mapper cell and collect the reports in mapper order.
+    pub fn run(self) -> Result<Vec<ChurnReport>> {
+        let default_cluster;
+        let cluster = match self.cluster {
+            Some(c) => c,
+            None => {
+                default_cluster = ClusterSpec::paper_cluster();
+                &default_cluster
+            }
+        };
+        let trace = self.trace;
+        let cfg = self.cfg;
+        crate::par::par_map(self.mappers, self.threads, |spec| {
+            replay_one(trace, cluster, spec, &cfg)
+        })
+        .into_iter()
+        .collect()
+    }
+}
+
 /// Replay a whole trace through one [`OnlineMapper`] and collect the churn
 /// record. Deterministic per (trace, spec, cfg) in every
 /// [`ChurnReport::metrics_eq`] field.
-pub fn replay(
+fn replay_one(
     trace: &ArrivalTrace,
     cluster: &ClusterSpec,
     spec: MapperSpec,
@@ -151,6 +315,21 @@ pub fn replay(
     })
 }
 
+/// Replay a whole trace through one [`OnlineMapper`] and collect the churn
+/// record.
+#[deprecated(
+    since = "0.1.0",
+    note = "use the `Replay` builder: `Replay::new(trace).on(cluster).mappers(&[spec]).config(*cfg).run()`"
+)]
+pub fn replay(
+    trace: &ArrivalTrace,
+    cluster: &ClusterSpec,
+    spec: MapperSpec,
+    cfg: &ReplayConfig,
+) -> Result<ChurnReport> {
+    replay_one(trace, cluster, spec, cfg)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,13 +339,13 @@ mod tests {
     fn replay_smoke_scenario_accounts_every_event() {
         let cluster = ClusterSpec::paper_cluster();
         let trace = ArrivalTrace::builtin("smoke").unwrap();
-        let rep = replay(
-            &trace,
-            &cluster,
-            MapperSpec::plain(MapperKind::New),
-            &ReplayConfig::default(),
-        )
-        .unwrap();
+        let rep = Replay::new(&trace)
+            .on(&cluster)
+            .mappers(&[MapperSpec::plain(MapperKind::New)])
+            .run()
+            .unwrap()
+            .pop()
+            .unwrap();
         assert_eq!(rep.events.len(), trace.len(), "one record per event");
         assert_eq!(rep.trace, "smoke");
         assert_eq!(rep.mapper, "New");
@@ -196,11 +375,11 @@ mod tests {
     fn replay_metrics_deterministic_across_runs() {
         let cluster = ClusterSpec::paper_cluster();
         let trace = ArrivalTrace::builtin("churn").unwrap();
-        for spec in [MapperSpec::plain(MapperKind::Blocked), MapperSpec::plus_r(MapperKind::New)]
-        {
-            let a = replay(&trace, &cluster, spec, &ReplayConfig::default()).unwrap();
-            let b = replay(&trace, &cluster, spec, &ReplayConfig::default()).unwrap();
-            assert!(a.metrics_eq(&b), "{spec:?} replay not deterministic");
+        let specs = [MapperSpec::plain(MapperKind::Blocked), MapperSpec::plus_r(MapperKind::New)];
+        let a = Replay::new(&trace).on(&cluster).mappers(&specs).run().unwrap();
+        let b = Replay::new(&trace).on(&cluster).mappers(&specs).run().unwrap();
+        for ((x, y), spec) in a.iter().zip(&b).zip(&specs) {
+            assert!(x.metrics_eq(y), "{spec:?} replay not deterministic");
         }
     }
 
@@ -208,20 +387,16 @@ mod tests {
     fn refined_replay_never_worse_final_objective() {
         let cluster = ClusterSpec::paper_cluster();
         let trace = ArrivalTrace::builtin("burst").unwrap();
-        let plain = replay(
-            &trace,
-            &cluster,
-            MapperSpec::plain(MapperKind::Blocked),
-            &ReplayConfig::default(),
-        )
-        .unwrap();
-        let refined = replay(
-            &trace,
-            &cluster,
-            MapperSpec::plus_r(MapperKind::Blocked),
-            &ReplayConfig::default(),
-        )
-        .unwrap();
+        let mut reports = Replay::new(&trace)
+            .on(&cluster)
+            .mappers(&[
+                MapperSpec::plain(MapperKind::Blocked),
+                MapperSpec::plus_r(MapperKind::Blocked),
+            ])
+            .run()
+            .unwrap();
+        let refined = reports.pop().unwrap();
+        let plain = reports.pop().unwrap();
         // Admission decisions depend only on free-core *counts*, which
         // refinement preserves (swaps and migrates never change how many
         // cores are free), so the two replays admit identically.
@@ -234,5 +409,71 @@ mod tests {
             refined.events[0].objective <= plain.events[0].objective + 1e-9,
             "refinement worsened the first placement"
         );
+    }
+
+    /// Builder defaults: the paper cluster and the paper strategy plain and
+    /// refined, serially — and a threaded run of the same cells is
+    /// bit-identical.
+    #[test]
+    fn replay_builder_defaults_and_threading() {
+        let trace = ArrivalTrace::builtin("smoke").unwrap();
+        let serial = Replay::new(&trace).run().unwrap();
+        assert_eq!(serial.len(), 2);
+        assert_eq!(serial[0].mapper, "N");
+        assert_eq!(serial[1].mapper, "N+r");
+        let threaded = Replay::new(&trace).threads(4).run().unwrap();
+        for (a, b) in serial.iter().zip(&threaded) {
+            assert!(a.metrics_eq(b), "{}: threaded run diverged", a.mapper);
+        }
+        // threads(0) clamps to serial instead of hanging on zero workers.
+        let clamped = Replay::new(&trace).threads(0).run().unwrap();
+        assert_eq!(clamped.len(), 2);
+    }
+
+    /// The deprecated positional shim forwards to the same replay core.
+    #[test]
+    fn deprecated_replay_shim_matches_builder() {
+        let cluster = ClusterSpec::paper_cluster();
+        let trace = ArrivalTrace::builtin("smoke").unwrap();
+        let spec = MapperSpec::plus_r(MapperKind::Blocked);
+        let cfg = ReplayConfig { sim_every: 3, sim_rounds: 2, ..ReplayConfig::default() };
+        #[allow(deprecated)]
+        let old = replay(&trace, &cluster, spec, &cfg).unwrap();
+        let new = Replay::new(&trace)
+            .on(&cluster)
+            .mappers(&[spec])
+            .sim_every(3)
+            .sim_rounds(2)
+            .run()
+            .unwrap()
+            .pop()
+            .unwrap();
+        assert!(old.metrics_eq(&new), "shim drifted from the builder path");
+    }
+
+    /// Throughput and tail-latency accessors: present and sane on a real
+    /// replay, `None`/zero on an empty one.
+    #[test]
+    fn throughput_and_place_percentiles() {
+        let trace = ArrivalTrace::builtin("steady").unwrap();
+        let rep = Replay::new(&trace)
+            .mappers(&[MapperSpec::plain(MapperKind::Blocked)])
+            .run()
+            .unwrap()
+            .pop()
+            .unwrap();
+        assert!(rep.events_per_sec() > 0.0, "a real replay has throughput");
+        let p50 = rep.place_p50_secs().expect("steady places jobs");
+        let p99 = rep.place_p99_secs().expect("steady places jobs");
+        assert!(p50 >= 0.0 && p99 >= p50, "percentiles ordered (p50 {p50}, p99 {p99})");
+        let empty = ChurnReport {
+            trace: "empty".into(),
+            mapper: "N".into(),
+            events: Vec::new(),
+            wall_secs: 0.0,
+        };
+        assert_eq!(empty.events_per_sec(), 0.0);
+        assert!(empty.place_p50_secs().is_none());
+        assert!(empty.place_p99_secs().is_none());
     }
 }

@@ -3,6 +3,27 @@
 //! [`crate::report`] writers. One CSV row / JSON record per (mapper, event)
 //! so replay trajectories diff cleanly across commits, mirroring what
 //! `BENCH_harness.json` does for the batch sweep.
+//!
+//! ## Column naming
+//!
+//! Both documents use the same snake_case name for the same quantity; the
+//! CSV repeats per-replay aggregates on every row of that mapper, the JSON
+//! carries them once in the per-mapper summary. Absent values are an empty
+//! CSV cell and a JSON `null` ([`crate::report::json::Obj::opt_num`]).
+//!
+//! | name | per | meaning |
+//! |---|---|---|
+//! | `trace` | replay | scenario name |
+//! | `mapper` | replay | mapper spec name (`N`, `N+r`, ...) |
+//! | `seq`, `at_ns`, `action`, `job`, `procs` | event | trace event identity |
+//! | `migrations` | event | processes moved by this event's refinement |
+//! | `objective` | event | live cost-model objective after the event |
+//! | `live_procs`, `free_cores` | event | occupancy after the event |
+//! | `waiting_ms` | event | epoch waiting snapshot (absent off-schedule) |
+//! | `place_secs` | event | wall seconds handling the event |
+//! | `events_per_sec` | replay | replay throughput ([`ChurnReport::events_per_sec`]) |
+//! | `time_to_place_p50_secs` | replay | median time-to-place (absent when nothing placed) |
+//! | `time_to_place_p99_secs` | replay | tail time-to-place (absent when nothing placed) |
 
 use crate::online::ChurnReport;
 use crate::report::csv::Csv;
@@ -26,8 +47,14 @@ pub fn churn_to_csv(reports: &[ChurnReport]) -> Csv {
         "free_cores",
         "waiting_ms",
         "place_secs",
+        "events_per_sec",
+        "time_to_place_p50_secs",
+        "time_to_place_p99_secs",
     ]);
     for rep in reports {
+        let eps = rep.events_per_sec();
+        let p50 = rep.place_p50_secs();
+        let p99 = rep.place_p99_secs();
         for e in &rep.events {
             csv.row(&[
                 rep.trace.clone(),
@@ -43,6 +70,9 @@ pub fn churn_to_csv(reports: &[ChurnReport]) -> Csv {
                 e.free_cores.to_string(),
                 e.waiting_ms.map_or(String::new(), |w| format!("{w}")),
                 format!("{}", e.place_secs),
+                format!("{eps}"),
+                p50.map_or(String::new(), |v| format!("{v}")),
+                p99.map_or(String::new(), |v| format!("{v}")),
             ]);
         }
     }
@@ -85,6 +115,9 @@ pub fn churn_to_json(reports: &[ChurnReport], threads: usize, wall_secs: f64) ->
                 .num("peak_objective", rep.peak_objective())
                 .num("final_objective", rep.final_objective())
                 .num("time_to_place_secs", rep.time_to_place_secs())
+                .num("events_per_sec", rep.events_per_sec())
+                .opt_num("time_to_place_p50_secs", rep.place_p50_secs())
+                .opt_num("time_to_place_p99_secs", rep.place_p99_secs())
                 .num("wall_secs", rep.wall_secs)
                 .raw("trajectory", json::array(&events))
                 .build(),
@@ -107,23 +140,18 @@ mod tests {
     use super::*;
     use crate::coordinator::{MapperKind, MapperSpec};
     use crate::model::topology::ClusterSpec;
-    use crate::online::{replay, ArrivalTrace, ReplayConfig};
+    use crate::online::{ArrivalTrace, Replay};
 
     fn small_reports() -> Vec<ChurnReport> {
         let cluster = ClusterSpec::small_test_cluster();
         let trace = ArrivalTrace::builtin("poisson:3:4").unwrap();
-        [MapperSpec::plain(MapperKind::Blocked), MapperSpec::plus_r(MapperKind::New)]
-            .iter()
-            .map(|&spec| {
-                replay(
-                    &trace,
-                    &cluster,
-                    spec,
-                    &ReplayConfig { sim_every: 3, sim_rounds: 2, ..ReplayConfig::default() },
-                )
-                .unwrap()
-            })
-            .collect()
+        Replay::new(&trace)
+            .on(&cluster)
+            .mappers(&[MapperSpec::plain(MapperKind::Blocked), MapperSpec::plus_r(MapperKind::New)])
+            .sim_every(3)
+            .sim_rounds(2)
+            .run()
+            .unwrap()
     }
 
     #[test]
@@ -135,7 +163,8 @@ mod tests {
         assert_eq!(text.lines().count(), 1 + rows);
         assert!(text.starts_with(
             "trace,mapper,seq,at_ns,action,job,procs,migrations,objective,live_procs,\
-             free_cores,waiting_ms,place_secs"
+             free_cores,waiting_ms,place_secs,events_per_sec,time_to_place_p50_secs,\
+             time_to_place_p99_secs"
         ));
         assert!(text.contains(",Blocked,"));
         assert!(text.contains(",New+r,"));
@@ -154,6 +183,11 @@ mod tests {
         assert!(doc.contains("\"trajectory\":["));
         assert!(doc.contains("\"migrations\":"));
         assert!(doc.contains("\"final_objective\":"));
+        // Throughput and tail-latency summaries are per-mapper fields.
+        assert!(doc.contains("\"events_per_sec\":"));
+        assert!(doc.contains("\"time_to_place_p50_secs\":"));
+        assert!(doc.contains("\"time_to_place_p99_secs\":"));
+        assert!(!doc.contains("\"time_to_place_p50_secs\":null"), "this trace places jobs");
         // Events off the sampling schedule render null waiting snapshots.
         assert!(doc.contains("\"waiting_ms\":null"));
     }

@@ -223,17 +223,37 @@ impl ArrivalTrace {
             )),
             other => match other.strip_prefix("poisson:") {
                 Some(rest) => {
-                    let mut it = rest.splitn(2, ':');
-                    let seed: u64 = it
-                        .next()
-                        .unwrap_or_default()
-                        .parse()
-                        .map_err(|_| Error::usage(format!("bad trace seed in {other:?}")))?;
-                    let jobs: usize = it
-                        .next()
-                        .unwrap_or("16")
-                        .parse()
-                        .map_err(|_| Error::usage(format!("bad trace job count in {other:?}")))?;
+                    // Exactly `poisson:SEED:JOBS` — missing, empty, extra,
+                    // or non-numeric fields are usage errors that restate
+                    // the valid forms (mirroring `MapperKind::parse`).
+                    let fields: Vec<&str> = rest.split(':').collect();
+                    let (seed_str, jobs_str) = match fields.as_slice() {
+                        [seed, jobs] => (*seed, *jobs),
+                        _ => {
+                            return Err(Error::usage(format!(
+                                "trace {other:?} needs exactly two fields \
+                                 (expected smoke|steady|churn|burst|poisson:SEED:JOBS)"
+                            )))
+                        }
+                    };
+                    let seed: u64 = seed_str.parse().map_err(|_| {
+                        Error::usage(format!(
+                            "bad trace seed {seed_str:?} in {other:?} \
+                             (expected smoke|steady|churn|burst|poisson:SEED:JOBS)"
+                        ))
+                    })?;
+                    let jobs: usize = jobs_str.parse().map_err(|_| {
+                        Error::usage(format!(
+                            "bad trace job count {jobs_str:?} in {other:?} \
+                             (expected smoke|steady|churn|burst|poisson:SEED:JOBS)"
+                        ))
+                    })?;
+                    if jobs == 0 {
+                        return Err(Error::usage(format!(
+                            "trace {other:?} generates no arrivals \
+                             (expected smoke|steady|churn|burst|poisson:SEED:JOBS with JOBS >= 1)"
+                        )));
+                    }
                     Ok(Self::poisson(
                         format!("poisson:{seed}:{jobs}"),
                         seed,
@@ -382,5 +402,32 @@ mod tests {
         assert!(ArrivalTrace::builtin("bogus").is_err());
         assert!(ArrivalTrace::builtin("poisson:x:5").is_err());
         assert!(ArrivalTrace::builtin("poisson:9:y").is_err());
+    }
+
+    /// Malformed `poisson:SEED:JOBS` specs fail with a usage error that
+    /// restates the valid forms — mirroring `MapperKind::parse`.
+    #[test]
+    fn poisson_spec_parse_rejects_malformed_forms() {
+        let bad = [
+            "poisson:",        // no fields at all
+            "poisson:9",       // missing job count
+            "poisson::5",      // empty seed
+            "poisson:9:",      // empty job count
+            "poisson:9:5:7",   // extra field
+            "poisson:-1:5",    // negative seed
+            "poisson:9:5.5",   // non-integer job count
+            "poisson:9:0",     // zero jobs generates nothing
+        ];
+        for spec in bad {
+            let err = ArrivalTrace::builtin(spec).unwrap_err().to_string();
+            assert!(
+                err.contains("smoke|steady|churn|burst|poisson:SEED:JOBS"),
+                "{spec:?} error must list the valid forms, got: {err}"
+            );
+        }
+        // The well-formed spec still resolves, with a canonical name.
+        let t = ArrivalTrace::builtin("poisson:0:1").unwrap();
+        assert_eq!(t.name, "poisson:0:1");
+        assert_eq!(t.arrivals(), 1);
     }
 }

@@ -2,13 +2,17 @@
 //!
 //! * replaying the same seeded arrival trace serial vs `par_map`-threaded
 //!   yields **bit-identical** `ChurnReport` metrics;
-//! * after every arrival/departure event the live ledger loads equal a
-//!   full scorer recompute of the live placement — the PR-2
-//!   delta-evaluation invariant extended to bulk job moves (including the
-//!   `+r` per-event refinement fold-back);
-//! * `TrafficMatrix::of_workload` runs **exactly once per admitted job**,
-//!   and never on departures, rejections, or refinement — the
-//!   counting-constructor invariant extended to churn.
+//! * after every arrival/departure event the persistent live ledger loads
+//!   equal a full scorer recompute of the live placement — the PR-2
+//!   delta-evaluation invariant extended to block admits/retires (including
+//!   the `+r` per-event refinement descent), held over 10³-event traces
+//!   with interleaved departures;
+//! * departures shift later blocks' global proc offsets without touching
+//!   their cores (the offset-remap invariant);
+//! * `TrafficMatrix::of_workload` runs **exactly once per admitted job**
+//!   and `LoadLedger::new` full-scorer seeding runs **zero** times across a
+//!   whole refined replay — the counting invariants behind the
+//!   O(P)-per-event claim.
 //!
 //! Tests that read the process-wide build counter serialize on one mutex,
 //! mirroring `tests/mapctx_sweep.rs` (this file is its own test binary, so
@@ -17,14 +21,14 @@
 use std::sync::Mutex;
 
 use nicmap::coordinator::{MapperKind, MapperSpec};
-use nicmap::cost::Scorer;
+use nicmap::cost::{LoadLedger, Scorer};
 use nicmap::harness::{replays_identical, run_replay};
 use nicmap::model::pattern::Pattern;
 use nicmap::model::topology::ClusterSpec;
 use nicmap::model::traffic::TrafficMatrix;
 use nicmap::model::workload::JobSpec;
 use nicmap::online::{
-    replay, ArrivalTrace, OnlineMapper, ReplayConfig, TraceEvent, TraceEventKind,
+    ArrivalTrace, OnlineMapper, Replay, ReplayConfig, TraceEvent, TraceEventKind, TraceGenConfig,
 };
 use nicmap::runtime::NativeScorer;
 use nicmap::testkit::{forall, gen, loads_bits_eq};
@@ -65,7 +69,14 @@ fn replay_serial_vs_threaded_bit_identical() {
         }
         // The fan-out also matches independent one-shot replays.
         for (rep, spec) in serial.iter().zip(&mappers) {
-            let direct = replay(&trace, &cluster, *spec, &cfg).unwrap();
+            let direct = Replay::new(&trace)
+                .on(&cluster)
+                .mappers(&[*spec])
+                .config(cfg)
+                .run()
+                .unwrap()
+                .pop()
+                .unwrap();
             assert!(
                 rep.metrics_eq(&direct),
                 "{scenario}/{}: fan-out drifted from direct replay",
@@ -182,7 +193,13 @@ fn one_traffic_build_per_admitted_job() {
     // rebuild any workload matrix either.
     let spec = MapperSpec::plus_r(MapperKind::New);
     let before = TrafficMatrix::workload_builds();
-    let rep = replay(&trace, &cluster, spec, &ReplayConfig::default()).unwrap();
+    let rep = Replay::new(&trace)
+        .on(&cluster)
+        .mappers(&[spec])
+        .run()
+        .unwrap()
+        .pop()
+        .unwrap();
     let delta = TrafficMatrix::workload_builds() - before;
     assert_eq!(rep.placed(), 3);
     assert_eq!(rep.rejected(), 1);
@@ -205,4 +222,118 @@ fn one_traffic_build_per_admitted_job() {
         after_admits,
         "departures and refinement must never rebuild a workload matrix"
     );
+}
+
+/// A whole refined replay — arrivals, departures, rejections, per-event
+/// refinement — performs **zero** full-scorer seed passes: the persistent
+/// ledger is admitted into and descended on, never re-seeded. Combined with
+/// the build-count assertion above, this is the O(P)-per-event claim in
+/// counter form.
+#[test]
+fn refined_replay_runs_zero_full_scorer_seed_passes() {
+    let _guard = counter_guard();
+    let cluster = ClusterSpec::paper_cluster();
+    let trace = ArrivalTrace::builtin("poisson:1207:64").unwrap();
+    let builds_before = TrafficMatrix::workload_builds();
+    let seeds_before = LoadLedger::seed_passes();
+    let rep = Replay::new(&trace)
+        .on(&cluster)
+        .mappers(&[MapperSpec::plus_r(MapperKind::New)])
+        .run()
+        .unwrap()
+        .pop()
+        .unwrap();
+    assert!(rep.placed() > 0, "the scale scenario must admit jobs");
+    assert_eq!(
+        TrafficMatrix::workload_builds() - builds_before,
+        rep.placed() as u64,
+        "one job-sized traffic build per admitted job, nothing else"
+    );
+    assert_eq!(
+        LoadLedger::seed_passes() - seeds_before,
+        0,
+        "a refined replay must never seed a dense ledger"
+    );
+}
+
+/// The persistent-ledger invariant at 10³-event scale: a seeded Poisson
+/// trace with interleaved departures, replayed plain and refined, with the
+/// live loads compared bit-for-bit against a full recompute after every
+/// single event (integer rates make the comparison exact).
+#[test]
+fn persistent_ledger_bit_equal_over_a_thousand_events() {
+    let _guard = counter_guard();
+    let cluster = ClusterSpec::paper_cluster();
+    let cfg = TraceGenConfig {
+        jobs: 500,
+        mean_gap_ns: 5_000_000,
+        mean_lifetime_ns: 15_000_000,
+        min_procs: 2,
+        max_procs: 24,
+    };
+    let trace = ArrivalTrace::poisson("kilo", 0x1207_2878, &cfg);
+    assert!(trace.len() >= 1_000, "want a 10^3-event trace, got {}", trace.len());
+    let seeds_before = LoadLedger::seed_passes();
+    for spec in [MapperSpec::plain(MapperKind::New), MapperSpec::plus_r(MapperKind::New)] {
+        let mut service = OnlineMapper::new(&cluster, spec, ReplayConfig::default()).unwrap();
+        for event in &trace.events {
+            let record = service.on_event(event).unwrap();
+            let full = NativeScorer
+                .score(&service.live_traffic(), &service.live_placement(), &cluster)
+                .unwrap();
+            assert!(
+                loads_bits_eq(service.loads(), &full),
+                "{}: event {} ({:?}) drifted from full recompute",
+                spec.name(),
+                record.seq,
+                record.action
+            );
+        }
+    }
+    assert_eq!(
+        LoadLedger::seed_passes() - seeds_before,
+        0,
+        "10^3 events, zero dense-ledger seeds"
+    );
+}
+
+/// Offset remap on departure: retiring a middle job shifts the global proc
+/// offsets of every later block down by the departed size while leaving
+/// their cores (and loads) untouched.
+#[test]
+fn departure_shifts_later_block_offsets_not_their_cores() {
+    let _guard = counter_guard();
+    let cluster = ClusterSpec::small_test_cluster(); // 16 cores
+    let job = |procs: usize| JobSpec::synthetic(Pattern::AllToAll, procs, 64_000, 10.0, 5);
+    let ev = |at_ns, kind| TraceEvent { at_ns, kind };
+    let mut service = OnlineMapper::new(
+        &cluster,
+        MapperSpec::plain(MapperKind::Blocked),
+        ReplayConfig::default(),
+    )
+    .unwrap();
+    service.on_event(&ev(0, TraceEventKind::Arrive(job(4)))).unwrap();
+    service.on_event(&ev(10, TraceEventKind::Arrive(job(6)))).unwrap();
+    service.on_event(&ev(20, TraceEventKind::Arrive(job(5)))).unwrap();
+    let before = service.live_placement();
+    assert_eq!(before.core_of.len(), 15);
+    let first = before.core_of[0..4].to_vec();
+    let third = before.core_of[10..15].to_vec();
+
+    // Retire the middle job (instance 1, procs 4..10).
+    service.on_event(&ev(30, TraceEventKind::Depart(1))).unwrap();
+    let after = service.live_placement();
+    assert_eq!(after.core_of.len(), 9);
+    assert_eq!(&after.core_of[0..4], first.as_slice(), "first block untouched");
+    assert_eq!(
+        &after.core_of[4..9],
+        third.as_slice(),
+        "third block's cores unchanged, now at global procs 4..9"
+    );
+    // And the remapped world still satisfies the recompute invariant.
+    let full = NativeScorer
+        .score(&service.live_traffic(), &after, &cluster)
+        .unwrap();
+    assert!(loads_bits_eq(service.loads(), &full), "offset remap drifted the loads");
+    assert_eq!(service.free_cores(), cluster.total_cores() - 9);
 }
