@@ -58,10 +58,17 @@ fn main() {
         let ctx = MapCtx::build(&w);
         let p = MapperKind::New.build().map(&ctx, &cluster).unwrap();
         println!("--- {wname}: P={} N={}", w.total_procs(), cluster.nodes);
-        bench_scorer(&format!("{wname}/native"), &NativeScorer, ctx.traffic(), &p, &cluster, 50);
+        bench_scorer(
+            &format!("{wname}/native"),
+            &NativeScorer,
+            ctx.dense_traffic(),
+            &p,
+            &cluster,
+            50,
+        );
         #[cfg(feature = "pjrt")]
         if let Some(scorer) = pjrt.as_ref() {
-            bench_scorer(&format!("{wname}/pjrt"), scorer, ctx.traffic(), &p, &cluster, 50);
+            bench_scorer(&format!("{wname}/pjrt"), scorer, ctx.dense_traffic(), &p, &cluster, 50);
         }
     }
     #[cfg(feature = "pjrt")]
@@ -86,7 +93,7 @@ fn bench_refinement(cluster: &ClusterSpec) {
 
     let counting = CountingScorer::new(&NativeScorer);
     let t0 = std::time::Instant::now();
-    let rep = refine(&counting, ctx.traffic(), &start, &w, cluster, ROUNDS).unwrap();
+    let rep = refine(&counting, ctx.dense_traffic(), &start, &w, cluster, ROUNDS).unwrap();
     let dt = t0.elapsed();
     println!(
         "refine/ledger                objective {:.3e} -> {:.3e} | {} moves | \
@@ -132,7 +139,7 @@ fn bench_peek_batch(cluster: &ClusterSpec) {
     let w = Workload::builtin("synt1").unwrap();
     let ctx = MapCtx::build(&w);
     let start = MapperKind::Blocked.build().map(&ctx, cluster).unwrap();
-    let mut ledger = LoadLedger::new(&NativeScorer, ctx.traffic(), &start, cluster).unwrap();
+    let mut ledger = LoadLedger::new(&NativeScorer, ctx.dense_traffic(), &start, cluster).unwrap();
 
     // The refiner's candidate shape: every hot-node process against the
     // cold pool plus one free core per other node.

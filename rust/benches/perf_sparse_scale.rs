@@ -1,0 +1,90 @@
+//! Perf bench: the sparse-first traffic layer at scale — and the assertion
+//! that the dense O(P²) wall is actually gone.
+//!
+//! A 4096-process 2D-stencil job (64×64 grid, 4 neighbours per interior
+//! rank — nnz ≈ 4P, the classic sparse workload shape) is mapped onto a
+//! 320-node cluster and then `+r`-refined, entirely on the sparse path:
+//! `MapCtx::build` constructs the CSR traffic artifact, the New strategy
+//! walks per-job nonzero rows, and `Refiner::run_sparse_constrained` seeds
+//! and verifies through the sparse scatter. A dense `TrafficMatrix` for
+//! this workload would hold P² = 16.7M cells (≈134 MB); the bench asserts
+//! the traffic artifacts actually allocated stay *far* below that bound
+//! and prints greppable `procs_per_sec=` / `artifact_bytes_ok=` lines the
+//! CI bench-smoke job pins.
+//!
+//! Run with `cargo bench --bench perf_sparse_scale`.
+
+use nicmap::coordinator::refine::Refiner;
+use nicmap::coordinator::MapperKind;
+use nicmap::ctx::MapCtx;
+use nicmap::model::pattern::Pattern;
+use nicmap::model::topology::ClusterSpec;
+use nicmap::model::workload::{JobSpec, Workload};
+
+const PROCS: usize = 4096; // 64×64 stencil grid
+
+fn main() {
+    // Paper-style nodes (4 sockets × 4 cores), scaled out to hold 4096
+    // processes with headroom: 320 × 16 = 5120 cores.
+    let cluster = ClusterSpec { nodes: 320, ..ClusterSpec::paper_cluster() };
+    let w = Workload::new(
+        "stencil4096",
+        vec![JobSpec::synthetic(Pattern::Stencil2d, PROCS, 64_000, 10.0, 100)],
+    )
+    .unwrap();
+    println!("--- sparse scale: P={PROCS} stencil on {}", cluster.summary());
+
+    // Build the shared ctx: the only traffic construction of the run.
+    let t0 = std::time::Instant::now();
+    let ctx = MapCtx::build(&w);
+    let build_secs = t0.elapsed().as_secs_f64();
+
+    // Artifact memory: every sparse traffic object this run ever holds —
+    // the workload CSR plus the per-job block — against the dense bound.
+    let traffic = ctx.traffic();
+    let nnz = traffic.nnz();
+    let artifact_bytes: usize = traffic.artifact_bytes()
+        + (0..w.jobs.len()).map(|j| ctx.job_traffic(j).artifact_bytes()).sum::<usize>();
+    let dense_bytes = PROCS * PROCS * std::mem::size_of::<f64>();
+    assert_eq!(traffic.len(), PROCS);
+    assert!(
+        nnz <= 4 * PROCS,
+        "stencil nonzeros must stay O(P): {nnz} > {}",
+        4 * PROCS
+    );
+    assert!(
+        artifact_bytes * 16 < dense_bytes,
+        "sparse artifacts ({artifact_bytes} B) must be far below the dense \
+         P²×8 bound ({dense_bytes} B)"
+    );
+
+    // Map (New strategy, per-job sparse rows) …
+    let t1 = std::time::Instant::now();
+    let placement = MapperKind::New.build().map(&ctx, &cluster).unwrap();
+    let map_secs = t1.elapsed().as_secs_f64();
+    placement.validate(&w, &cluster).unwrap();
+
+    // … then refine fully sparse: seed, descent, and the verifying
+    // recompute all run on the CSR rows — no dense matrix exists anywhere
+    // in this process.
+    let t2 = std::time::Instant::now();
+    let rep = Refiner::default()
+        .run_sparse_constrained(ctx.traffic(), &placement, &w, &cluster, |_| true)
+        .unwrap();
+    let refine_secs = t2.elapsed().as_secs_f64();
+    rep.placement.validate(&w, &cluster).unwrap();
+    assert!(rep.after <= rep.before + 1e-9, "refinement must never worsen the objective");
+    assert_eq!(rep.evaluations, 2, "sparse seed + sparse verify only");
+
+    let total_secs = build_secs + map_secs + refine_secs;
+    let procs_per_sec = (PROCS as f64 / total_secs.max(1e-12)) as u64;
+    assert!(procs_per_sec > 0);
+    println!(
+        "build {build_secs:.3}s | map {map_secs:.3}s | refine {refine_secs:.3}s \
+         ({} moves, {} delta evals) | objective {:.3e} -> {:.3e}",
+        rep.moves, rep.delta_evals, rep.before, rep.after
+    );
+    println!("nnz={nnz} artifact_bytes={artifact_bytes} dense_bytes={dense_bytes}");
+    println!("procs_per_sec={procs_per_sec}");
+    println!("artifact_bytes_ok={}", artifact_bytes * 16 < dense_bytes);
+}

@@ -54,7 +54,9 @@ fn drive(scorer: &dyn Scorer) -> nicmap::Result<()> {
     // Shared artifact layer: one ctx build covers every mapper, the
     // refinement stage, and the scorer cross-check below.
     let ctx = MapCtx::build(&w);
-    let traffic = ctx.traffic();
+    // Dense view for the scorer cross-check and the dense-path refine
+    // helper below; the mapping steps themselves stay on the sparse ctx.
+    let traffic = ctx.dense_traffic();
     println!("=== nicmap end-to-end driver ===");
     println!("cluster:  {}", cluster.summary());
     println!("workload: {} ({} jobs, {} procs)\n", w.name, w.jobs.len(), w.total_procs());

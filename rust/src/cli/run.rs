@@ -383,7 +383,7 @@ fn cmd_evaluate(args: &Args) -> Result<()> {
     let mapper = MapperSpec::parse(args.get_or("mapper", "N"))?;
     let placement = mapper.build().map(&ctx, &cluster)?;
 
-    let (loads, backend) = score_placement(args, ctx.traffic(), &placement, &cluster)?;
+    let (loads, backend) = score_placement(args, ctx.dense_traffic(), &placement, &cluster)?;
     println!(
         "cost model ({backend}) — {} mapped by {} on {}",
         ctx.workload().name,
@@ -423,7 +423,7 @@ fn cmd_refine(args: &Args) -> Result<()> {
     let placement = mapper.build().map(&ctx, &cluster)?;
 
     let report =
-        refine_placement(args, ctx.traffic(), &placement, ctx.workload(), &cluster, rounds)?;
+        refine_placement(args, ctx.dense_traffic(), &placement, ctx.workload(), &cluster, rounds)?;
     println!(
         "refined {} (start={}): objective {:.4e} -> {:.4e} \
          ({} moves, {} full scorer passes, {} O(P) ledger evaluations)",

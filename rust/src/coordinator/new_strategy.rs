@@ -26,8 +26,8 @@ use crate::coordinator::threshold::{decide_with_avg, Threshold};
 use crate::coordinator::Mapper;
 use crate::ctx::MapCtx;
 use crate::error::{Error, Result};
+use crate::model::sparse::SparseTraffic;
 use crate::model::topology::{ClusterSpec, NodeId};
-use crate::model::traffic::TrafficMatrix;
 use crate::model::workload::{JobId, SizeClass};
 
 /// Tunables for the new strategy (defaults = the paper's algorithm; the
@@ -49,12 +49,14 @@ impl Default for NewStrategy {
     }
 }
 
-/// Per-job mapping state; the traffic matrix is borrowed from the shared
-/// [`MapCtx`] (one per-job build per workload, not per map call).
+/// Per-job mapping state; the sparse traffic rows are borrowed from the
+/// shared [`MapCtx`] (one per-job build per workload, not per map call).
+/// Demand sorting, partner enumeration, and the threshold decision all walk
+/// nonzeros only — O(job nnz) per job, never O(procs²).
 struct JobState<'a> {
     /// Global proc id of local rank r.
     offset: usize,
-    traffic: &'a TrafficMatrix,
+    traffic: &'a SparseTraffic,
     /// Cached `Adj_avg` of this job (from the ctx — eq. 2 input).
     adj_avg: f64,
     /// Processes of this job placed per node (threshold accounting).

@@ -20,7 +20,6 @@ use crate::coordinator::{Mapper, MapperKind, MapperSpec, Occupancy, Placement};
 use crate::ctx::MapCtx;
 use crate::error::{Error, Result};
 use crate::model::topology::ClusterSpec;
-use crate::runtime::NativeScorer;
 
 /// One stage of a placement [`Pipeline`].
 ///
@@ -95,7 +94,9 @@ impl Stage for MapStage {
 /// The descent loop itself is [`Refiner::descend`], the same core the
 /// online service drives against its persistent
 /// [`crate::cost::LoadLedger`]; this stage is the batch entry that seeds a
-/// fresh ledger first ([`Refiner::run_constrained`]).
+/// fresh ledger straight from the shared [`MapCtx`] sparse rows
+/// ([`Refiner::run_sparse_constrained`]) — the whole `+r` stage is O(nnz)
+/// memory and never materializes a dense matrix.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct RefineStage {
     refiner: Refiner,
@@ -134,8 +135,7 @@ impl Stage for RefineStage {
         for &core in &prev.core_of {
             usable[core] = true;
         }
-        let rep = self.refiner.run_constrained(
-            &NativeScorer,
+        let rep = self.refiner.run_sparse_constrained(
             ctx.traffic(),
             &prev,
             ctx.workload(),
@@ -271,6 +271,7 @@ mod tests {
     use crate::cost::Scorer;
     use crate::model::pattern::Pattern;
     use crate::model::workload::{JobSpec, Workload};
+    use crate::runtime::NativeScorer;
 
     fn a2a(procs: usize) -> (Workload, ClusterSpec) {
         let cluster = ClusterSpec::small_test_cluster();
@@ -309,7 +310,7 @@ mod tests {
         for kind in MapperKind::ALL {
             let base = kind.build().map(&ctx, &cluster).unwrap();
             let manual = Refiner::default()
-                .run(&NativeScorer, ctx.traffic(), &base, &w, &cluster)
+                .run(&NativeScorer, ctx.dense_traffic(), &base, &w, &cluster)
                 .unwrap()
                 .placement;
             let piped = Pipeline::lower(MapperSpec::plus_r(kind)).map(&ctx, &cluster).unwrap();
@@ -323,7 +324,7 @@ mod tests {
         let ctx = crate::ctx::MapCtx::build(&w);
         let nic_bw = cluster.nic_bw as f64;
         let obj = |p: &Placement| {
-            NativeScorer.score(ctx.traffic(), p, &cluster).unwrap().objective(nic_bw)
+            NativeScorer.score(ctx.dense_traffic(), p, &cluster).unwrap().objective(nic_bw)
         };
         let base = MapperKind::Blocked.build().map(&ctx, &cluster).unwrap();
         let refined = MapperSpec::plus_r(MapperKind::Blocked).build().map(&ctx, &cluster).unwrap();

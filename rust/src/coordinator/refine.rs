@@ -19,14 +19,17 @@
 //! * [`crate::coordinator::pipeline::RefineStage`] lifts the stage into the
 //!   composable placement pipeline, giving every strategy a `+r` variant
 //!   ([`crate::coordinator::MapperSpec`] lowers `B+r` to `[map, refine]`);
-//!   it reuses the shared [`crate::ctx::MapCtx`] traffic matrix instead of
-//!   rebuilding it, and under a partially occupied cluster it constrains
-//!   migrates to unowned cores via [`Refiner::run_constrained`].
+//!   it reuses the shared [`crate::ctx::MapCtx`] sparse traffic instead of
+//!   rebuilding it — through [`Refiner::run_sparse_constrained`], which
+//!   seeds and verifies via the O(nnz) sparse scatter so the `+r` pass
+//!   never materializes a dense P×P matrix — and under a partially occupied
+//!   cluster it constrains migrates to unowned cores.
 
 use crate::coordinator::Placement;
 pub use crate::cost::{NodeLoads, Scorer};
-use crate::cost::{LoadLedger, Move};
+use crate::cost::{JobDelta, LoadLedger, Move};
 use crate::error::Result;
+use crate::model::sparse::SparseTraffic;
 use crate::model::topology::{ClusterSpec, CoreId};
 use crate::model::traffic::TrafficMatrix;
 use crate::model::workload::Workload;
@@ -147,6 +150,55 @@ impl Refiner {
             "ledger objective {current} drifted from full recompute {after}"
         );
         // The refined placement must stay structurally valid.
+        placement.validate(w, cluster)?;
+        Ok(RefineReport {
+            placement,
+            before,
+            after,
+            moves: stats.moves,
+            evaluations,
+            delta_evals: stats.delta_evals,
+        })
+    }
+
+    /// Fully sparse refinement: like [`Refiner::run_constrained`] with the
+    /// native scorer, but both the ledger seed and the verifying recompute
+    /// run on the sparse rows directly ([`LoadLedger::from_sparse`] /
+    /// [`JobDelta::compute`]) — no dense P×P matrix is ever materialized,
+    /// so the whole `+r` pass is O(nnz) memory. This is the entry point the
+    /// pipeline [`crate::coordinator::pipeline::RefineStage`] drives with
+    /// the shared [`crate::ctx::MapCtx`] sparse traffic. Seeding via the
+    /// sparse scatter loads bit-equal state to the dense scorer seed (see
+    /// the equivalence test in [`crate::cost::ledger`]), and the descent is
+    /// the same [`Refiner::descend`] — accepted moves, delta counts, and
+    /// objectives match the dense path bit for bit on integer-valued rates.
+    pub fn run_sparse_constrained(
+        &self,
+        traffic: &SparseTraffic,
+        start: &Placement,
+        w: &Workload,
+        cluster: &ClusterSpec,
+        usable: impl Fn(CoreId) -> bool,
+    ) -> Result<RefineReport> {
+        let mut ledger = LoadLedger::from_sparse(traffic, start, cluster)?;
+        let mut evaluations = 1usize; // the sparse seed scatter
+        let before = ledger.objective();
+        let stats = self.descend(&mut ledger, usable)?;
+        let current = stats.objective;
+
+        // Same exact-equivalence guarantee as the dense path: one verifying
+        // full recompute — through the sparse scatter, O(nnz) — is the
+        // reported objective.
+        let placement = ledger.placement();
+        let full = JobDelta::compute(traffic, &placement.core_of, cluster)?.loads;
+        evaluations += 1;
+        let after = full.objective(cluster.nic_bw as f64);
+        debug_assert!(
+            !after.is_finite()
+                || !current.is_finite()
+                || (after - current).abs() <= 1e-6 * current.abs().max(1.0),
+            "ledger objective {current} drifted from sparse recompute {after}"
+        );
         placement.validate(w, cluster)?;
         Ok(RefineReport {
             placement,
@@ -403,7 +455,7 @@ mod tests {
         let (traffic, w, cluster) = a2a(8);
         let start = MapperKind::Blocked.build().map_workload(&w, &cluster).unwrap();
         let mut live = LoadLedger::live(&cluster);
-        live.admit_block(traffic.clone(), &start.core_of).unwrap();
+        live.admit_block(SparseTraffic::from_dense(&traffic), &start.core_of).unwrap();
         let seeds_before = LoadLedger::seed_passes();
         let stats = Refiner::default().descend(&mut live, |_| true).unwrap();
         let rep = Refiner::default().run(&NativeScorer, &traffic, &start, &w, &cluster).unwrap();
@@ -418,6 +470,38 @@ mod tests {
         // The descent itself never seeds; the comparison `run` does (its
         // own dense ledger), so the counter moved by run's passes only.
         assert!(LoadLedger::seed_passes() >= seeds_before + 1);
+    }
+
+    /// The fully sparse path (`run_sparse_constrained`) reproduces the
+    /// dense-seeded `run_constrained` bit for bit: same accepted moves,
+    /// same delta counts, same placement, same reported objective — while
+    /// never building a dense matrix.
+    #[test]
+    fn run_sparse_constrained_matches_dense_run() {
+        let (traffic, w, cluster) = a2a(8);
+        let start = MapperKind::Blocked.build().map_workload(&w, &cluster).unwrap();
+        let sparse = SparseTraffic::from_dense(&traffic);
+        let sp = Refiner::default()
+            .run_sparse_constrained(&sparse, &start, &w, &cluster, |_| true)
+            .unwrap();
+        let dn = Refiner::default()
+            .run_constrained(&NativeScorer, &traffic, &start, &w, &cluster, |_| true)
+            .unwrap();
+        assert_eq!(sp.placement, dn.placement);
+        assert_eq!(sp.moves, dn.moves);
+        assert_eq!(sp.delta_evals, dn.delta_evals);
+        assert_eq!(sp.before.to_bits(), dn.before.to_bits());
+        assert_eq!(sp.after.to_bits(), dn.after.to_bits());
+        assert_eq!(sp.evaluations, 2, "sparse seed + sparse verify");
+
+        // The occupancy mask constrains the sparse path identically.
+        let owned: std::collections::BTreeSet<usize> = start.core_of.iter().copied().collect();
+        let masked = Refiner::default()
+            .run_sparse_constrained(&sparse, &start, &w, &cluster, |c| owned.contains(&c))
+            .unwrap();
+        let result: std::collections::BTreeSet<usize> =
+            masked.placement.core_of.iter().copied().collect();
+        assert_eq!(result, owned, "masked sparse refinement must stay on owned cores");
     }
 
     #[test]

@@ -18,7 +18,7 @@
 use std::sync::OnceLock;
 
 use crate::model::pattern::Pattern;
-use crate::model::traffic::TrafficMatrix;
+use crate::model::sparse::SparseTraffic;
 use crate::model::workload::JobSpec;
 
 /// Outcome of the threshold decision for one job.
@@ -41,19 +41,19 @@ impl Threshold {
     }
 }
 
-/// Decide the threshold for a job with traffic matrix `t`, given the current
+/// Decide the threshold for a job with sparse traffic `t`, given the current
 /// average free cores per node (`FreeCores_avg`) and the cluster node count.
-pub fn decide(t: &TrafficMatrix, free_cores_avg: f64, num_nodes: usize) -> Threshold {
+pub fn decide(t: &SparseTraffic, free_cores_avg: f64, num_nodes: usize) -> Threshold {
     decide_with_avg(t.avg_adjacency(), t, free_cores_avg, num_nodes)
 }
 
 /// [`decide`] with the job's `Adj_avg` supplied by the caller — the form the
 /// mapping stack uses with the per-job average cached in
-/// [`crate::ctx::MapCtx`], skipping the O(P²) recomputation per map call.
+/// [`crate::ctx::MapCtx`], skipping the O(nnz) recomputation per map call.
 /// `adj_avg` must equal `t.avg_adjacency()`.
 pub fn decide_with_avg(
     adj_avg: f64,
-    t: &TrafficMatrix,
+    t: &SparseTraffic,
     free_cores_avg: f64,
     num_nodes: usize,
 ) -> Threshold {
@@ -76,10 +76,10 @@ pub fn decide_with_avg(
 /// Built once per process (`OnceLock`) so the self-check in
 /// [`decide_with_avg`] never rebuilds the synthetic calibration job's
 /// matrix; guarded by a regression test pinning the result to 4.
-pub fn calibration_matrix() -> &'static TrafficMatrix {
-    static CALIBRATION: OnceLock<TrafficMatrix> = OnceLock::new();
+pub fn calibration_matrix() -> &'static SparseTraffic {
+    static CALIBRATION: OnceLock<SparseTraffic> = OnceLock::new();
     CALIBRATION.get_or_init(|| {
-        TrafficMatrix::of_job(&JobSpec::synthetic(Pattern::AllToAll, 64, 64_000, 10.0, 100))
+        SparseTraffic::of_job(&JobSpec::synthetic(Pattern::AllToAll, 64, 64_000, 10.0, 100))
     })
 }
 
@@ -92,7 +92,7 @@ pub fn calibration_threshold() -> usize {
 }
 
 /// Equation 2 with the ≥1 clamp.
-pub fn eq2(t: &TrafficMatrix, num_nodes: usize) -> usize {
+pub fn eq2(t: &SparseTraffic, num_nodes: usize) -> usize {
     let adj_max = t.max_adjacency();
     if adj_max == 0 || num_nodes == 0 {
         return 1;
@@ -108,11 +108,10 @@ pub fn eq2(t: &TrafficMatrix, num_nodes: usize) -> usize {
 mod tests {
     use super::*;
     use crate::model::pattern::Pattern;
-    use crate::model::traffic::TrafficMatrix;
     use crate::model::workload::JobSpec;
 
-    fn t_of(pattern: Pattern, procs: usize) -> TrafficMatrix {
-        TrafficMatrix::of_job(&JobSpec::synthetic(pattern, procs, 64_000, 10.0, 100))
+    fn t_of(pattern: Pattern, procs: usize) -> SparseTraffic {
+        SparseTraffic::of_job(&JobSpec::synthetic(pattern, procs, 64_000, 10.0, 100))
     }
 
     #[test]
@@ -180,7 +179,7 @@ mod tests {
 
     #[test]
     fn empty_traffic_matrix_safe() {
-        let t = TrafficMatrix::zeros(4);
+        let t = SparseTraffic::zeros(4);
         assert_eq!(eq2(&t, 16), 1);
         assert_eq!(decide(&t, 16.0, 16), Threshold::None);
     }
@@ -212,7 +211,7 @@ mod tests {
         assert!(std::ptr::eq(calibration_matrix(), calibration_matrix()));
         // And the cached value agrees with a from-scratch evaluation.
         let fresh =
-            TrafficMatrix::of_job(&JobSpec::synthetic(Pattern::AllToAll, 64, 64_000, 10.0, 100));
+            SparseTraffic::of_job(&JobSpec::synthetic(Pattern::AllToAll, 64, 64_000, 10.0, 100));
         assert_eq!(eq2(&fresh, 16), calibration_threshold());
         assert_eq!(calibration_matrix(), &fresh);
     }

@@ -8,8 +8,8 @@
 //! [`crate::model::traffic::TrafficMatrix::of_workload`]), one job's
 //! contribution to every node's tx/rx/intra load is independent of every
 //! other live job: admitting or retiring a job is a pure add/subtract of a
-//! precomputed per-node [`JobDelta`], O(nodes) per event instead of the
-//! O(P²) full rescore.
+//! precomputed per-node [`JobDelta`] (itself an O(job nnz) sparse scatter),
+//! O(nodes) per event instead of the full rescore.
 //!
 //! ## Bulk-move invariant (the PR-2 invariant, lifted to jobs)
 //!
@@ -33,8 +33,8 @@
 
 use crate::cost::NodeLoads;
 use crate::error::{Error, Result};
+use crate::model::sparse::SparseTraffic;
 use crate::model::topology::{ClusterSpec, CoreId};
-use crate::model::traffic::TrafficMatrix;
 
 /// Per-node load contribution of **one job** under a concrete core
 /// assignment of its local ranks — the unit the [`BulkLedger`] adds and
@@ -48,13 +48,15 @@ pub struct JobDelta {
 }
 
 impl JobDelta {
-    /// Compute the contribution of a job with local-rank `traffic` whose
-    /// rank `r` sits on `cores[r]`. Same scatter-by-node-pair arithmetic as
-    /// the native scorer restricted to this job's block, so summing deltas
-    /// over live jobs reproduces a full recompute (bit-for-bit on
+    /// Compute the contribution of a job with local-rank sparse `traffic`
+    /// whose rank `r` sits on `cores[r]`. Same scatter-by-node-pair
+    /// arithmetic as the native scorer restricted to this job's block,
+    /// walking only the O(job nnz) stored entries in row-major order — the
+    /// exact entries (and order) a guarded dense scan visits — so summing
+    /// deltas over live jobs reproduces a full recompute (bit-for-bit on
     /// integer-valued rates).
     pub fn compute(
-        traffic: &TrafficMatrix,
+        traffic: &SparseTraffic,
         cores: &[CoreId],
         cluster: &ClusterSpec,
     ) -> Result<JobDelta> {
@@ -75,15 +77,14 @@ impl JobDelta {
         let mut loads = NodeLoads::zeros(cluster.nodes);
         for i in 0..traffic.len() {
             let ni = node_of[i];
-            for (j, &v) in traffic.row(i).iter().enumerate() {
-                if v > 0.0 {
-                    let nj = node_of[j];
-                    if ni == nj {
-                        loads.intra[ni] += v;
-                    } else {
-                        loads.nic_tx[ni] += v;
-                        loads.nic_rx[nj] += v;
-                    }
+            let (cols, rates) = traffic.out_row(i);
+            for (&j, &v) in cols.iter().zip(rates) {
+                let nj = node_of[j];
+                if ni == nj {
+                    loads.intra[ni] += v;
+                } else {
+                    loads.nic_tx[ni] += v;
+                    loads.nic_rx[nj] += v;
                 }
             }
         }
@@ -211,6 +212,7 @@ mod tests {
     use crate::coordinator::Placement;
     use crate::cost::Scorer;
     use crate::model::pattern::Pattern;
+    use crate::model::traffic::TrafficMatrix;
     use crate::model::workload::{JobSpec, Workload};
     use crate::runtime::NativeScorer;
     use crate::testkit::loads_bits_eq as bits_eq;
@@ -219,7 +221,7 @@ mod tests {
     fn job_delta_matches_single_job_full_score() {
         let cluster = ClusterSpec::small_test_cluster();
         let job = JobSpec::synthetic(Pattern::AllToAll, 6, 64_000, 10.0, 100);
-        let t = TrafficMatrix::of_job(&job);
+        let t = SparseTraffic::of_job(&job);
         let cores: Vec<usize> = vec![0, 1, 4, 5, 8, 12]; // spans 4 nodes
         let delta = JobDelta::compute(&t, &cores, &cluster).unwrap();
         // A one-job workload scored in full must agree exactly.
@@ -235,7 +237,7 @@ mod tests {
     fn job_delta_rejects_bad_shapes() {
         let cluster = ClusterSpec::small_test_cluster();
         let job = JobSpec::synthetic(Pattern::Linear, 3, 1000, 1.0, 5);
-        let t = TrafficMatrix::of_job(&job);
+        let t = SparseTraffic::of_job(&job);
         assert!(JobDelta::compute(&t, &[0, 1], &cluster).is_err(), "rank/core mismatch");
         assert!(JobDelta::compute(&t, &[0, 1, 999], &cluster).is_err(), "core out of range");
     }
@@ -247,8 +249,8 @@ mod tests {
         let cluster = ClusterSpec::small_test_cluster();
         let a = JobSpec::synthetic(Pattern::AllToAll, 4, 64_000, 10.0, 100);
         let b = JobSpec::synthetic(Pattern::GatherReduce, 5, 2_000, 50.0, 100);
-        let ta = TrafficMatrix::of_job(&a);
-        let tb = TrafficMatrix::of_job(&b);
+        let ta = SparseTraffic::of_job(&a);
+        let tb = SparseTraffic::of_job(&b);
         let cores_a: Vec<usize> = vec![0, 4, 8, 12];
         let cores_b: Vec<usize> = vec![1, 2, 5, 9, 13];
         let da = JobDelta::compute(&ta, &cores_a, &cluster).unwrap();
@@ -292,7 +294,7 @@ mod tests {
     fn revert_is_bit_exact() {
         let cluster = ClusterSpec::small_test_cluster();
         let job = JobSpec::synthetic(Pattern::AllToAll, 4, 64_000, 10.0, 100);
-        let t = TrafficMatrix::of_job(&job);
+        let t = SparseTraffic::of_job(&job);
         let delta = JobDelta::compute(&t, &[0, 4, 8, 12], &cluster).unwrap();
         let mut ledger = BulkLedger::new(&cluster);
         ledger.apply(JobMove::Add(&delta)).unwrap();
@@ -312,7 +314,7 @@ mod tests {
         let small = ClusterSpec::small_test_cluster();
         let paper = ClusterSpec::paper_cluster();
         let job = JobSpec::synthetic(Pattern::Linear, 2, 1000, 1.0, 5);
-        let t = TrafficMatrix::of_job(&job);
+        let t = SparseTraffic::of_job(&job);
         let delta_paper = JobDelta::compute(&t, &[0, 1], &paper).unwrap();
         let delta_small = JobDelta::compute(&t, &[0, 1], &small).unwrap();
         let mut ledger = BulkLedger::new(&small);

@@ -1,51 +1,58 @@
 //! Incremental cost-model evaluation: apply/revert a placement [`Move`] in
-//! O(P) instead of re-running the O(P²) full scorer per candidate.
+//! O(nnz-per-row) instead of re-running the full scorer per candidate.
 //!
 //! A [`LoadLedger`] materializes per-node tx/rx/intra loads once (one full
-//! [`Scorer`] pass) and then maintains them under moves by re-attributing
-//! only the moved processes' traffic rows: moving process `p` from node `u`
+//! seed pass) and then maintains them under moves by re-attributing only
+//! the moved processes' traffic nonzeros: moving process `p` from node `u`
 //! to node `v` touches exactly the entries `p`'s row and column feed —
 //! `nic_tx[u]`/`nic_tx[v]`, `nic_rx` of each partner's node, and the intra
-//! volumes of `u`/`v`. Nothing else changes, so one pass over `p`'s row
-//! suffices (see the delta-evaluation invariant in [`crate::cost`]).
+//! volumes of `u`/`v`. Nothing else changes, so one merged walk over `p`'s
+//! sparse out/in rows ([`SparseTraffic::pairs`]) suffices (see the
+//! delta-evaluation invariant in [`crate::cost`]).
 //!
 //! Reverts are bit-exact: every apply snapshots the O(nodes) load vectors,
 //! so `revert` restores them wholesale rather than replaying deltas.
 //!
 //! ## Two traffic stores, one ledger
 //!
-//! A ledger reads traffic through one of two private stores:
+//! A ledger reads traffic through one of two private stores, both sparse:
 //!
-//! * **Dense** — borrows a caller-owned [`TrafficMatrix`]; this is the
-//!   batch path ([`LoadLedger::new`]), seeded with one full [`Scorer`]
-//!   pass (counted by [`LoadLedger::seed_passes`]).
-//! * **Blocks** — owns one traffic block per *live job*, exploiting that
-//!   workload matrices are block diagonal in job order (jobs never
+//! * **Whole** — one [`SparseTraffic`] covering the whole workload:
+//!   borrowed on the sparse batch path ([`LoadLedger::from_sparse`]) or
+//!   converted once from a caller's dense matrix on the interop path
+//!   ([`LoadLedger::new`], seeded with one full [`Scorer`] pass). Both
+//!   count toward [`LoadLedger::seed_passes`].
+//! * **Blocks** — owns one sparse traffic block per *live job*, exploiting
+//!   that workload traffic is block diagonal in job order (jobs never
 //!   communicate). This is the **persistent** online path
 //!   ([`LoadLedger::live`]): arrivals splice their block in with
-//!   [`LoadLedger::admit_block`] (O(p²) in the job's own size), departures
+//!   [`LoadLedger::admit_block`] (O(job nnz), the delta scatter), departures
 //!   delete the block and remap the offsets of the blocks behind it with
 //!   [`LoadLedger::retire_block`] (O(P)), and the loads are maintained by
 //!   the same [`crate::cost::JobDelta`] arithmetic the bulk ledger uses —
 //!   so a live ledger is **never seeded**, no matter how many events it
-//!   absorbs. A process's traffic row lives entirely inside its own block,
-//!   so every delta walk (`apply`/`peek_batch`/`relocate`) is O(job size)
-//!   instead of O(P), and all of the move machinery above works on both
-//!   stores unchanged — same arithmetic, same accumulation order, hence
-//!   bit-identical results on the integer-valued rates of every builtin
-//!   and testkit workload (the persistent-ledger invariant of
-//!   [`crate::cost`]).
+//!   absorbs. A process's traffic lives entirely inside its own block,
+//!   so every delta walk (`apply`/`peek_batch`/`relocate`) is
+//!   O(nnz-per-row), and all of the move machinery above works on both
+//!   stores unchanged — same arithmetic, same accumulation order as the
+//!   dense guarded walks ([`SparseTraffic::pairs`] visits exactly the
+//!   nonzeros a dense scan would, ascending), hence bit-identical results
+//!   on the integer-valued rates of every builtin and testkit workload
+//!   (the persistent-ledger invariant of [`crate::cost`]).
 
+use std::borrow::Cow;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::coordinator::Placement;
 use crate::cost::{JobDelta, NodeLoads, Scorer};
 use crate::error::{Error, Result};
+use crate::model::sparse::SparseTraffic;
 use crate::model::topology::{ClusterSpec, CoreId, NodeId};
 use crate::model::traffic::TrafficMatrix;
 use crate::model::workload::ProcId;
 
-/// Process-wide count of full-scorer seed passes ([`LoadLedger::new`]).
+/// Process-wide count of full seed passes ([`LoadLedger::new`] and
+/// [`LoadLedger::from_sparse`]).
 static SEED_PASSES: AtomicU64 = AtomicU64::new(0);
 
 /// A candidate placement change the ledger can apply and revert.
@@ -76,12 +83,13 @@ struct RowVols {
     inc_tot: f64,
 }
 
-/// Owned per-job traffic blocks of a live ([`LoadLedger::live`]) ledger.
-/// Block `b` covers global procs `starts[b] .. starts[b] + blocks[b].len()`;
-/// `block_of[p]` inverts the mapping. Cross-block traffic is zero by the
-/// block-diagonal structure of workload matrices.
+/// Owned per-job sparse traffic blocks of a live ([`LoadLedger::live`])
+/// ledger. Block `b` covers global procs
+/// `starts[b] .. starts[b] + blocks[b].len()`; `block_of[p]` inverts the
+/// mapping. Cross-block traffic is zero by the block-diagonal structure of
+/// workload traffic.
 struct BlockStore {
-    blocks: Vec<TrafficMatrix>,
+    blocks: Vec<SparseTraffic>,
     starts: Vec<usize>,
     block_of: Vec<usize>,
 }
@@ -94,10 +102,9 @@ impl BlockStore {
         let mut t = TrafficMatrix::zeros(self.block_of.len());
         for (blk, &start) in self.blocks.iter().zip(&self.starts) {
             for i in 0..blk.len() {
-                for (j, &v) in blk.row(i).iter().enumerate() {
-                    if v > 0.0 {
-                        t.add(start + i, start + j, v);
-                    }
+                let (cols, rates) = blk.out_row(i);
+                for (&j, &v) in cols.iter().zip(rates) {
+                    t.add(start + i, start + j, v);
                 }
             }
         }
@@ -105,44 +112,32 @@ impl BlockStore {
     }
 }
 
-/// Where a ledger reads traffic from (see the module docs): a borrowed
-/// dense matrix (batch path) or owned per-job blocks (persistent online
-/// path). Every accessor hides the distinction from the move machinery.
+/// Where a ledger reads traffic from (see the module docs): one sparse
+/// matrix over the whole workload (batch path; borrowed or converted-owned
+/// via [`Cow`]) or owned per-job sparse blocks (persistent online path).
+/// Every accessor hides the distinction from the move machinery.
 enum TrafficStore<'a> {
-    Dense(&'a TrafficMatrix),
+    Whole(Cow<'a, SparseTraffic>),
     Blocks(BlockStore),
 }
 
 impl TrafficStore<'_> {
-    /// Process `p`'s traffic row as `(global column offset, row slice)`.
-    /// Dense: the full row at offset 0. Blocks: only `p`'s own block — the
-    /// columns outside it are structurally zero, so walking the slice
-    /// visits exactly the nonzeros the dense walk would, in the same order.
-    fn row_span(&self, p: ProcId) -> (usize, &[f64]) {
-        match self {
-            TrafficStore::Dense(t) => (0, t.row(p)),
+    /// Merged walk over process `p`'s traffic nonzeros:
+    /// `(global partner, out rate, in rate)` ascending, `0.0` for an absent
+    /// direction — the sparse replacement for a guarded dense row/column
+    /// scan ([`SparseTraffic::pairs`]). Blocks: only `p`'s own block — the
+    /// partners outside it are structurally zero, so the walk visits
+    /// exactly the nonzeros the dense walk would, in the same order.
+    fn pairs(&self, p: ProcId) -> impl Iterator<Item = (ProcId, f64, f64)> + '_ {
+        let (off, iter) = match self {
+            TrafficStore::Whole(t) => (0, t.pairs(p)),
             TrafficStore::Blocks(b) => {
                 let blk = b.block_of[p];
                 let start = b.starts[blk];
-                (start, b.blocks[blk].row(p - start))
+                (start, b.blocks[blk].pairs(p - start))
             }
-        }
-    }
-
-    /// Traffic rate `i -> j` (0 across blocks).
-    fn get(&self, i: ProcId, j: ProcId) -> f64 {
-        match self {
-            TrafficStore::Dense(t) => t.get(i, j),
-            TrafficStore::Blocks(b) => {
-                let (bi, bj) = (b.block_of[i], b.block_of[j]);
-                if bi != bj {
-                    0.0
-                } else {
-                    let start = b.starts[bi];
-                    b.blocks[bi].get(i - start, j - start)
-                }
-            }
-        }
+        };
+        iter.map(move |(j, out, inc)| (off + j, out, inc))
     }
 }
 
@@ -164,18 +159,18 @@ pub struct LoadLedger<'a> {
 }
 
 impl<'a> LoadLedger<'a> {
-    /// Seed a ledger from `placement` with one full `scorer` pass.
-    pub fn new(
-        scorer: &dyn Scorer,
-        traffic: &'a TrafficMatrix,
+    /// Validate `placement` against the cluster and derive the occupancy
+    /// and node maps shared by both whole-matrix seed paths.
+    fn validate_placement(
         placement: &Placement,
-        cluster: &'a ClusterSpec,
-    ) -> Result<Self> {
-        if placement.len() != traffic.len() {
+        procs: usize,
+        cluster: &ClusterSpec,
+    ) -> Result<(Vec<bool>, Vec<NodeId>)> {
+        if placement.len() != procs {
             return Err(Error::mapping(format!(
                 "ledger: placement covers {} procs, traffic has {}",
                 placement.len(),
-                traffic.len()
+                procs
             )));
         }
         let mut used = vec![false; cluster.total_cores()];
@@ -190,10 +185,25 @@ impl<'a> LoadLedger<'a> {
         }
         let node_of: Vec<NodeId> =
             placement.core_of.iter().map(|&c| cluster.node_of_core(c)).collect();
+        Ok((used, node_of))
+    }
+
+    /// Seed a ledger from `placement` with one full `scorer` pass over the
+    /// caller's dense matrix — the interop path (a sparse copy of the
+    /// matrix is converted and owned internally; hot walks never touch the
+    /// dense form again). Prefer [`Self::from_sparse`] when the traffic is
+    /// already sparse.
+    pub fn new(
+        scorer: &dyn Scorer,
+        traffic: &'a TrafficMatrix,
+        placement: &Placement,
+        cluster: &'a ClusterSpec,
+    ) -> Result<Self> {
+        let (used, node_of) = Self::validate_placement(placement, traffic.len(), cluster)?;
         SEED_PASSES.fetch_add(1, Ordering::Relaxed);
         let loads = scorer.score(traffic, placement, cluster)?;
         Ok(LoadLedger {
-            traffic: TrafficStore::Dense(traffic),
+            traffic: TrafficStore::Whole(Cow::Owned(SparseTraffic::from_dense(traffic))),
             cluster,
             nic_bw: cluster.nic_bw as f64,
             core_of: placement.core_of.clone(),
@@ -204,11 +214,38 @@ impl<'a> LoadLedger<'a> {
         })
     }
 
-    /// Number of full-scorer seed passes ([`Self::new`]) since process
-    /// start — the counting instrumentation behind the persistent-ledger
-    /// invariant (see [`crate::cost`]): a [`Self::live`] ledger is seeded
-    /// **zero** times no matter how many events it absorbs, asserted by
-    /// `tests/online_replay.rs` and the `perf_online_replay` bench.
+    /// Seed a ledger from `placement` over a borrowed sparse traffic
+    /// artifact — the sparse-first batch path. The seed pass is one
+    /// [`JobDelta`] scatter over the nonzeros (O(nnz), no dense
+    /// materialization), counted by [`Self::seed_passes`] like the scorer
+    /// seed of [`Self::new`]; on integer-valued rates the resulting loads
+    /// are bit-equal to a full dense scorer pass.
+    pub fn from_sparse(
+        traffic: &'a SparseTraffic,
+        placement: &Placement,
+        cluster: &'a ClusterSpec,
+    ) -> Result<Self> {
+        let (used, node_of) = Self::validate_placement(placement, traffic.len(), cluster)?;
+        SEED_PASSES.fetch_add(1, Ordering::Relaxed);
+        let loads = JobDelta::compute(traffic, &placement.core_of, cluster)?.loads;
+        Ok(LoadLedger {
+            traffic: TrafficStore::Whole(Cow::Borrowed(traffic)),
+            cluster,
+            nic_bw: cluster.nic_bw as f64,
+            core_of: placement.core_of.clone(),
+            node_of,
+            used,
+            loads,
+            undo: Vec::new(),
+        })
+    }
+
+    /// Number of full seed passes ([`Self::new`] / [`Self::from_sparse`])
+    /// since process start — the counting instrumentation behind the
+    /// persistent-ledger invariant (see [`crate::cost`]): a [`Self::live`]
+    /// ledger is seeded **zero** times no matter how many events it
+    /// absorbs, asserted by `tests/online_replay.rs` and the
+    /// `perf_online_replay` bench.
     pub fn seed_passes() -> u64 {
         SEED_PASSES.load(Ordering::Relaxed)
     }
@@ -235,18 +272,19 @@ impl<'a> LoadLedger<'a> {
         }
     }
 
-    /// Splice an arriving job's local-rank `traffic` block into a
+    /// Splice an arriving job's local-rank sparse `traffic` block into a
     /// [`Self::live`] ledger, rank `r` on `cores[r]`. Loads grow by the
     /// job's [`JobDelta`] — the same arithmetic the bulk ledger applies, so
     /// the running loads stay bit-equal to a full recompute on
-    /// integer-valued rates. O(p²) in the *job's* size (the delta scatter),
-    /// never in the live world's. Errors (leaving the ledger untouched) on
-    /// a dense ledger, a rank/core count mismatch, or cores that are out of
-    /// range, duplicated, or already occupied. Clears the undo history.
-    pub fn admit_block(&mut self, traffic: TrafficMatrix, cores: &[CoreId]) -> Result<()> {
-        if matches!(self.traffic, TrafficStore::Dense(_)) {
+    /// integer-valued rates. O(job nnz) (the delta scatter), never in the
+    /// live world's size. Errors (leaving the ledger untouched) on a
+    /// whole-matrix ledger, a rank/core count mismatch, or cores that are
+    /// out of range, duplicated, or already occupied. Clears the undo
+    /// history.
+    pub fn admit_block(&mut self, traffic: SparseTraffic, cores: &[CoreId]) -> Result<()> {
+        if matches!(self.traffic, TrafficStore::Whole(_)) {
             return Err(Error::mapping(
-                "ledger: admit_block on a scorer-seeded dense ledger (use LoadLedger::live)",
+                "ledger: admit_block on a whole-matrix ledger (use LoadLedger::live)",
             ));
         }
         if cores.len() != traffic.len() {
@@ -300,9 +338,9 @@ impl<'a> LoadLedger<'a> {
     /// occupancy. Clears the undo history.
     pub fn retire_block(&mut self, block: usize) -> Result<Vec<CoreId>> {
         let (start, procs, delta) = match &self.traffic {
-            TrafficStore::Dense(_) => {
+            TrafficStore::Whole(_) => {
                 return Err(Error::mapping(
-                    "ledger: retire_block on a scorer-seeded dense ledger (use LoadLedger::live)",
+                    "ledger: retire_block on a whole-matrix ledger (use LoadLedger::live)",
                 ))
             }
             TrafficStore::Blocks(b) => {
@@ -347,33 +385,33 @@ impl<'a> LoadLedger<'a> {
         Ok(freed)
     }
 
-    /// Number of live job blocks (0 for a scorer-seeded dense ledger).
+    /// Number of live job blocks (0 for a whole-matrix ledger).
     pub fn blocks(&self) -> usize {
         match &self.traffic {
-            TrafficStore::Dense(_) => 0,
+            TrafficStore::Whole(_) => 0,
             TrafficStore::Blocks(b) => b.blocks.len(),
         }
     }
 
     /// Global proc offset and rank count of live block `block`; `None` on a
-    /// dense ledger or an out-of-range index.
+    /// whole-matrix ledger or an out-of-range index.
     pub fn block_span(&self, block: usize) -> Option<(usize, usize)> {
         match &self.traffic {
-            TrafficStore::Dense(_) => None,
+            TrafficStore::Whole(_) => None,
             TrafficStore::Blocks(b) => {
                 (block < b.blocks.len()).then(|| (b.starts[block], b.blocks[block].len()))
             }
         }
     }
 
-    /// The dense traffic matrix this ledger evaluates: a clone of the
-    /// borrowed matrix (dense mode) or the composed block diagonal (live
-    /// mode). Verification/reporting path — never a
+    /// The dense traffic matrix this ledger evaluates: densified from the
+    /// whole sparse artifact or the composed block diagonal (live mode).
+    /// Verification/reporting path — never a
     /// [`TrafficMatrix::of_workload`] rebuild, and never on the per-event
     /// hot path.
     pub fn compose_traffic(&self) -> TrafficMatrix {
         match &self.traffic {
-            TrafficStore::Dense(t) => (*t).clone(),
+            TrafficStore::Whole(t) => t.to_dense(),
             TrafficStore::Blocks(b) => b.compose(),
         }
     }
@@ -658,11 +696,10 @@ impl<'a> LoadLedger<'a> {
         &cached.as_ref().expect("cache filled above").1
     }
 
-    /// One pass over process `p`'s traffic row and column, bucketed by the
+    /// One merged pass over process `p`'s traffic nonzeros, bucketed by the
     /// partner's node. `moved` temporarily re-homes one partner (the swap
-    /// peer mid-evaluation). On a live ledger the walk covers only `p`'s
-    /// own block — the same nonzeros a dense walk visits, in the same
-    /// order, at O(job size) instead of O(P).
+    /// peer mid-evaluation). O(nnz-per-row): the walk visits exactly the
+    /// partners a guarded dense row/column scan would, in the same order.
     fn row_vols(&self, p: ProcId, moved: Option<(ProcId, NodeId)>) -> RowVols {
         let nodes = self.cluster.nodes;
         let mut v = RowVols {
@@ -671,13 +708,10 @@ impl<'a> LoadLedger<'a> {
             out_tot: 0.0,
             inc_tot: 0.0,
         };
-        let (off, row) = self.traffic.row_span(p);
-        for (lj, &out) in row.iter().enumerate() {
-            let j = off + lj;
+        for (j, out, inc) in self.traffic.pairs(p) {
             if j == p {
                 continue; // self-traffic stays intra wherever p lands
             }
-            let inc = self.traffic.get(j, p);
             let mut nj = self.node_of[j];
             if let Some((q, nq)) = moved {
                 if j == q {
@@ -728,7 +762,9 @@ impl<'a> LoadLedger<'a> {
     /// guarantee, checked by tests after every accepted move.
     pub fn max_deviation(&self, scorer: &dyn Scorer) -> Result<f64> {
         let full = match &self.traffic {
-            TrafficStore::Dense(t) => scorer.score(t, &self.placement(), self.cluster)?,
+            TrafficStore::Whole(t) => {
+                scorer.score(&t.to_dense(), &self.placement(), self.cluster)?
+            }
             TrafficStore::Blocks(b) => {
                 scorer.score(&b.compose(), &self.placement(), self.cluster)?
             }
@@ -742,27 +778,25 @@ impl<'a> LoadLedger<'a> {
     }
 
     /// Re-attribute process `p`'s traffic rows from its current node to
-    /// `to`. One pass over `p`'s row and column: O(P) dense, O(job size)
-    /// on a live ledger (the row lives inside `p`'s own block).
+    /// `to`. One merged pass over `p`'s nonzeros: O(nnz-per-row), never
+    /// O(P).
     fn relocate(&mut self, p: ProcId, to: NodeId) {
         let from = self.node_of[p];
         if from == to {
             self.node_of[p] = to;
             return;
         }
-        let (off, row) = self.traffic.row_span(p);
-        for (lj, &out) in row.iter().enumerate() {
-            let j = off + lj;
+        for (j, out, inc) in self.traffic.pairs(p) {
             if j == p {
                 // Self-traffic (zero for every pattern, but stay exact):
-                // always intra on whichever node hosts p.
+                // always intra on whichever node hosts p. `inc` is the
+                // same cell — counting it too would double-book.
                 if out > 0.0 {
                     self.loads.intra[from] -= out;
                     self.loads.intra[to] += out;
                 }
                 continue;
             }
-            let inc = self.traffic.get(j, p);
             let nj = self.node_of[j];
             if out > 0.0 {
                 // p -> j leaves `from`'s books...
@@ -1107,6 +1141,39 @@ mod tests {
     }
 
     #[test]
+    fn from_sparse_seed_bit_equal_to_dense_scorer_seed() {
+        // The sparse-first batch path: seeding off the sparse artifact (a
+        // JobDelta scatter) must produce the same loads as a dense scorer
+        // seed, bitwise on integer rates — and track moves identically.
+        let (t, w, cluster) = setup();
+        let sparse = SparseTraffic::of_workload(&w);
+        let p = Placement::new((0..8).collect());
+        let mut from_sparse = LoadLedger::from_sparse(&sparse, &p, &cluster).unwrap();
+        let mut dense = LoadLedger::new(&NativeScorer, &t, &p, &cluster).unwrap();
+        assert_loads_bits_eq(from_sparse.loads(), dense.loads(), "sparse seed");
+        assert_eq!(from_sparse.objective().to_bits(), dense.objective().to_bits());
+        for mv in [Move::Swap(0, 7), Move::Migrate(2, 12), Move::Swap(1, 5)] {
+            assert_eq!(
+                from_sparse.peek(mv).unwrap().to_bits(),
+                dense.peek(mv).unwrap().to_bits(),
+                "{mv:?} peeked differently"
+            );
+            from_sparse.apply(mv).unwrap();
+            dense.apply(mv).unwrap();
+            assert_loads_bits_eq(from_sparse.loads(), dense.loads(), "after move");
+        }
+        assert!(from_sparse.max_deviation(&NativeScorer).unwrap() == 0.0);
+        // Same validation as the dense path.
+        let bad = Placement::new(vec![0, 0, 2, 3, 4, 5, 6, 7]);
+        assert!(LoadLedger::from_sparse(&sparse, &bad, &cluster).is_err());
+        // Whole-matrix ledgers reject live-mode calls.
+        assert!(from_sparse
+            .admit_block(SparseTraffic::zeros(2), &[14, 15])
+            .is_err());
+        assert!(from_sparse.retire_block(0).is_err());
+    }
+
+    #[test]
     fn dense_seeding_bumps_the_seed_pass_counter() {
         // Monotone counter (process-wide, so only >= is race-safe here; the
         // exact zero-seeds-per-replay delta is asserted in the serialized
@@ -1139,7 +1206,7 @@ mod tests {
         assert!(live.is_empty());
         assert_eq!(live.blocks(), 0);
         for (job, cs) in jobs.iter().zip(&cores) {
-            live.admit_block(TrafficMatrix::of_job(job), cs).unwrap();
+            live.admit_block(SparseTraffic::of_job(job), cs).unwrap();
         }
         assert_eq!(live.blocks(), 3);
         assert_eq!(live.len(), 12);
@@ -1190,7 +1257,7 @@ mod tests {
         let (jobs, cores, cluster) = three_jobs();
         let mut live = LoadLedger::live(&cluster);
         for (job, cs) in jobs.iter().zip(&cores) {
-            live.admit_block(TrafficMatrix::of_job(job), cs).unwrap();
+            live.admit_block(SparseTraffic::of_job(job), cs).unwrap();
         }
         let w = Workload::new("abc", jobs).unwrap();
         let t = TrafficMatrix::of_workload(&w);
@@ -1232,7 +1299,7 @@ mod tests {
     fn live_ledger_rejects_invalid_admissions_and_retires() {
         let cluster = ClusterSpec::small_test_cluster();
         let block = || {
-            TrafficMatrix::of_job(&JobSpec::synthetic(Pattern::Linear, 3, 1000, 1.0, 5))
+            SparseTraffic::of_job(&JobSpec::synthetic(Pattern::Linear, 3, 1000, 1.0, 5))
         };
         let mut live = LoadLedger::live(&cluster);
         assert!(live.admit_block(block(), &[0, 1]).is_err(), "rank/core mismatch");

@@ -8,18 +8,43 @@
 //! * [`Scorer`] — anything that can produce [`NodeLoads`] for a placement:
 //!   [`crate::runtime::NativeScorer`] (pure Rust, always available) and
 //!   `PjrtScorer` (the AOT JAX/Pallas artifact, behind the `pjrt` feature).
-//! * [`LoadLedger`] — the delta evaluator behind fast refinement. One full
-//!   scorer pass materializes the loads; afterwards a candidate
-//!   [`Move`] (swap or migrate) is applied/reverted in O(P) by
-//!   re-attributing only the moved processes' traffic rows, instead of the
-//!   O(P²) full recompute. [`LoadLedger::peek_batch`] goes one step
-//!   further: all candidates of one hot process are scored off a single
-//!   pass over its traffic rows (per-node aggregates), which is both the
-//!   refiner's inner loop and the seam for a future SIMD/PJRT batched
-//!   artifact. This is the same insight that makes mapping-quality search
-//!   tractable on large topologies (arXiv:2005.10413) and that the
-//!   multi-core contention model of arXiv:0810.2150 motivates: only the
-//!   traffic rows of moved processes change per move.
+//! * [`LoadLedger`] — the delta evaluator behind fast refinement. A seed
+//!   materializes the loads (one dense scorer pass via [`LoadLedger::new`],
+//!   or the O(nnz) sparse scatter via [`LoadLedger::from_sparse`] — bit
+//!   equal on integer rates); afterwards a candidate [`Move`] (swap or
+//!   migrate) is applied/reverted in O(row nnz) by re-attributing only the
+//!   moved processes' stored nonzeros, instead of the O(P²) full recompute.
+//!   [`LoadLedger::peek_batch`] goes one step further: all candidates of
+//!   one hot process are scored off a single pass over its sparse rows
+//!   (per-node aggregates), which is both the refiner's inner loop and the
+//!   seam for a future SIMD/PJRT batched artifact. This is the same
+//!   insight that makes mapping-quality search tractable on large
+//!   topologies (arXiv:2005.10413) and that the multi-core contention
+//!   model of arXiv:0810.2150 motivates: only the traffic rows of moved
+//!   processes change per move.
+//!
+//! ## Sparse-first representation
+//!
+//! The canonical traffic artifact throughout this layer is
+//! [`crate::model::sparse::SparseTraffic`] — CSR rows of `(dst, rate)`
+//! nonzeros plus their transpose and precomputed per-process tx/rx
+//! aggregates. Communication patterns are sparse (a 4096-process stencil
+//! has ≈4 partners per process; even all-to-all jobs are block-diagonal
+//! islands in a multi-job workload), so every hot walk — ledger seeding,
+//! `peek`/`peek_batch` row-volume construction, apply/revert
+//! re-attribution, block admit/retire splicing, [`bulk::JobDelta`]'s
+//! scatter — iterates stored nonzeros only: O(nnz-per-row) per event or
+//! candidate, O(nnz) workload memory. The dense
+//! [`crate::model::traffic::TrafficMatrix`] survives as the
+//! degenerate/interop case (`to_dense`/`from_dense` round-trip exactly):
+//! the full [`Scorer`] pass, [`LoadLedger::compose_traffic`], and the
+//! [`LoadLedger::max_deviation`] verification recompute still walk a dense
+//! view, which is precisely what keeps them independent witnesses for the
+//! equivalence invariants below. Sparse iteration visits exactly the
+//! nonzeros the dense guarded walk visits, in the same ascending order, so
+//! the sparse paths inherit every bit-for-bit guarantee
+//! (`tests/property_invariants.rs` proves the round-trip and the
+//! seed/churn equivalences over seeded workloads).
 //!
 //! ## Delta-evaluation invariant
 //!
@@ -37,10 +62,11 @@
 //! ## Bulk-move invariant (jobs, not processes)
 //!
 //! The online mapping service ([`crate::online`]) admits and retires whole
-//! jobs. Workload matrices are block diagonal in job order, so a job's
-//! per-node load contribution ([`bulk::JobDelta`]) is independent of every
-//! other live job; [`bulk::BulkLedger`] adds/removes those deltas in
-//! O(nodes) per event. After any apply/revert sequence its loads equal a
+//! jobs. Workload traffic is block diagonal in job order, so a job's
+//! per-node load contribution ([`bulk::JobDelta`], one O(job nnz) scatter
+//! over its sparse rows) is independent of every other live job;
+//! [`bulk::BulkLedger`] adds/removes those deltas in O(nodes) per event.
+//! After any apply/revert sequence its loads equal a
 //! full scorer recompute of the live placement under the same conditions as
 //! the delta-evaluation invariant above (exact up to FP associativity;
 //! bit-for-bit on integer-valued rates), and reverts are snapshot-restored,

@@ -4,11 +4,11 @@
 //!
 //! Before this layer existed every consumer rebuilt its own view of the
 //! communication profile from scratch — DRB and k-way re-derived the full
-//! [`TrafficMatrix`] plus its CSR adjacency graph, the new strategy re-built
+//! traffic matrix plus its CSR adjacency graph, the new strategy re-built
 //! per-job matrices, `Refined` re-built the workload matrix after its base
 //! mapper had just done the same, and both CLI evaluation paths constructed
 //! their own copies — so a figure sweep over W workloads × 8 mappers paid
-//! O(W×8) redundant O(P²) constructions. The related literature treats this
+//! O(W×8) redundant constructions. The related literature treats this
 //! profile as a first-class precomputed model (the intra/inter-node
 //! communication model of arXiv:0810.2150) and observes that mapping-quality
 //! evaluation is dominated by repeated traffic-profile scoring
@@ -17,27 +17,36 @@
 //!
 //! [`MapCtx`] is immutable after construction and carries:
 //!
-//! * the full workload [`TrafficMatrix`] (the AG of the mapping literature),
-//! * per-job local-rank matrices ([`JobTraffic`]) plus each job's cached
-//!   average adjacency (`Adj_avg`, paper eq. 2 input),
+//! * the full workload [`SparseTraffic`] (CSR nonzero rows — the AG of the
+//!   mapping literature in its canonical sparse form, O(nnz) memory),
+//! * per-job local-rank sparse traffic ([`JobTraffic`]) plus each job's
+//!   cached average adjacency (`Adj_avg`, paper eq. 2 input),
 //! * per-process total tx/rx byte rates (row/column sums — eq. 1 split by
-//!   direction),
+//!   direction, precomputed inside the sparse artifact),
 //! * the proc → job index,
 //! * the CSR adjacency [`Graph`] the recursive-bisection mappers cut.
 //!
+//! The dense [`TrafficMatrix`] is the degenerate/interop case:
+//! [`MapCtx::dense_traffic`] materializes it lazily (at most once, cached)
+//! for the verification and reporting paths that genuinely want a P×P view
+//! — CLI evaluation, full-scorer recomputes, the AOT artifact padder. The
+//! mapping hot paths never touch it.
+//!
 //! The online mapping service builds the single-job variant
-//! [`MapCtx::for_job`] per arrival and feeds its traffic block straight
-//! into the persistent [`crate::cost::LoadLedger::admit_block`] — the
-//! one-build-per-admitted-job guarantee under churn.
+//! [`MapCtx::for_job`] per arrival and feeds its sparse traffic block
+//! straight into the persistent [`crate::cost::LoadLedger::admit_block`] —
+//! the one-build-per-admitted-job guarantee under churn.
 //!
 //! The harness builds one `Arc<MapCtx>` per workload row and shares it
 //! across all mapper cells and `par_map` worker threads; the
 //! one-build-per-workload guarantee is enforced by
-//! [`TrafficMatrix::workload_builds`] in `tests/mapctx_sweep.rs`.
+//! [`TrafficMatrix::workload_builds`] in `tests/mapctx_sweep.rs` (sparse
+//! builds count against the same counter).
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use crate::graph::Graph;
+use crate::model::sparse::SparseTraffic;
 use crate::model::traffic::{JobTraffic, TrafficMatrix};
 use crate::model::workload::{JobId, ProcId, Workload};
 
@@ -46,48 +55,41 @@ use crate::model::workload::{JobId, ProcId, Workload};
 /// Build once with [`MapCtx::build`] (or [`MapCtx::shared`] for the
 /// multi-threaded harness) and pass by reference to every
 /// [`crate::coordinator::Mapper`]. Constructing it runs the only
-/// [`TrafficMatrix::of_workload`] call of the whole mapping pipeline.
+/// full-workload traffic construction of the whole mapping pipeline
+/// ([`SparseTraffic::of_workload`], counted by
+/// [`TrafficMatrix::workload_builds`]).
 #[derive(Debug, Clone)]
 pub struct MapCtx {
     workload: Workload,
-    traffic: TrafficMatrix,
+    traffic: SparseTraffic,
+    /// Lazy dense view for verification/reporting paths; never built on
+    /// the mapping hot paths.
+    dense: OnceLock<TrafficMatrix>,
     jobs: Vec<JobTraffic>,
     job_adj_avg: Vec<f64>,
-    tx_rate: Vec<f64>,
-    rx_rate: Vec<f64>,
     job_of_proc: Vec<JobId>,
     graph: Graph,
 }
 
 impl MapCtx {
-    /// Build the context for `w`: one full-matrix construction, one per-job
-    /// matrix per job, one CSR adjacency build, and the derived per-process
-    /// rate vectors. O(P²) once — everything downstream is reuse.
+    /// Build the context for `w`: one sparse traffic construction, one
+    /// per-job sparse build per job, one CSR adjacency build. O(nnz) —
+    /// everything downstream is reuse.
     pub fn build(w: &Workload) -> MapCtx {
-        let traffic = TrafficMatrix::of_workload(w);
+        let traffic = SparseTraffic::of_workload(w);
         let jobs = JobTraffic::for_workload(w);
         let job_adj_avg: Vec<f64> = jobs.iter().map(|j| j.matrix.avg_adjacency()).collect();
-        let p = traffic.len();
-        let mut tx_rate = vec![0.0f64; p];
-        let mut rx_rate = vec![0.0f64; p];
-        for i in 0..p {
-            for (j, &v) in traffic.row(i).iter().enumerate() {
-                tx_rate[i] += v;
-                rx_rate[j] += v;
-            }
-        }
-        let mut job_of_proc = Vec::with_capacity(p);
+        let mut job_of_proc = Vec::with_capacity(traffic.len());
         for (jid, job) in w.jobs.iter().enumerate() {
             job_of_proc.resize(job_of_proc.len() + job.procs, jid);
         }
-        let graph = Graph::from_traffic(&traffic);
+        let graph = Graph::from_sparse(&traffic);
         MapCtx {
             workload: w.clone(),
             traffic,
+            dense: OnceLock::new(),
             jobs,
             job_adj_avg,
-            tx_rate,
-            rx_rate,
             job_of_proc,
             graph,
         }
@@ -101,12 +103,12 @@ impl MapCtx {
 
     /// Context for **one arriving job** — the online service's admission
     /// path ([`crate::online`]). Wraps the job in a single-job workload and
-    /// builds its artifacts, so admitting a job costs exactly one
-    /// [`TrafficMatrix::of_workload`] construction of the *job's* size, never
-    /// a rebuild of the whole live world. This extends the
-    /// counting-constructor invariant to churn: the build counter grows by
-    /// exactly one per admitted job and never on departures or refinement
-    /// (asserted by `tests/online_replay.rs`).
+    /// builds its artifacts, so admitting a job costs exactly one sparse
+    /// traffic construction of the *job's* size, never a rebuild of the
+    /// whole live world. This extends the counting-constructor invariant to
+    /// churn: the build counter grows by exactly one per admitted job and
+    /// never on departures or refinement (asserted by
+    /// `tests/online_replay.rs`).
     pub fn for_job(job: &crate::model::workload::JobSpec) -> crate::error::Result<MapCtx> {
         let w = Workload::new(job.name.clone(), vec![job.clone()])?;
         Ok(Self::build(&w))
@@ -117,28 +119,36 @@ impl MapCtx {
         &self.workload
     }
 
-    /// Full workload traffic matrix (global proc ids, block diagonal in job
-    /// order).
-    pub fn traffic(&self) -> &TrafficMatrix {
+    /// Full workload sparse traffic (global proc ids, block diagonal in job
+    /// order) — the canonical artifact every mapping hot path walks.
+    pub fn traffic(&self) -> &SparseTraffic {
         &self.traffic
     }
 
-    /// Per-job local-rank traffic matrices, in job order.
+    /// Dense view of the workload traffic — materialized lazily, at most
+    /// once, for interop/verification consumers (CLI scoring and refinement
+    /// reports, full-scorer recomputes, the AOT artifact padder). O(P²)
+    /// memory: keep it off the mapping hot paths.
+    pub fn dense_traffic(&self) -> &TrafficMatrix {
+        self.dense.get_or_init(|| self.traffic.to_dense())
+    }
+
+    /// Per-job local-rank sparse traffic, in job order.
     pub fn job_traffics(&self) -> &[JobTraffic] {
         &self.jobs
     }
 
-    /// Local-rank traffic matrix of one job.
-    pub fn job_traffic(&self, job: JobId) -> &TrafficMatrix {
+    /// Local-rank sparse traffic of one job.
+    pub fn job_traffic(&self, job: JobId) -> &SparseTraffic {
         &self.jobs[job].matrix
     }
 
-    /// Cached average adjacency (`Adj_avg`) of one job's matrix.
+    /// Cached average adjacency (`Adj_avg`) of one job's traffic.
     pub fn job_adj_avg(&self, job: JobId) -> f64 {
         self.job_adj_avg[job]
     }
 
-    /// CSR adjacency view of the full matrix (symmetrized byte rates) —
+    /// CSR adjacency view of the full traffic (symmetrized byte rates) —
     /// the application graph the bisection mappers cut.
     pub fn graph(&self) -> &Graph {
         &self.graph
@@ -146,21 +156,21 @@ impl MapCtx {
 
     /// Total send rate of process `p` (bytes/sec, row sum).
     pub fn tx_rate(&self, p: ProcId) -> f64 {
-        self.tx_rate[p]
+        self.traffic.tx_rate(p)
     }
 
     /// Total receive rate of process `p` (bytes/sec, column sum).
     pub fn rx_rate(&self, p: ProcId) -> f64 {
-        self.rx_rate[p]
+        self.traffic.rx_rate(p)
     }
 
     /// Communication demand of `p` (eq. 1: tx + rx).
     ///
     /// Equal to [`TrafficMatrix::demand`] — exactly for the integer-valued
     /// rates of every builtin/testkit workload, up to FP associativity
-    /// otherwise (the sums run in a different order).
+    /// otherwise (the dense sum runs in a different order).
     pub fn demand(&self, p: ProcId) -> f64 {
-        self.tx_rate[p] + self.rx_rate[p]
+        self.traffic.demand(p)
     }
 
     /// Job owning process `p` (O(1), precomputed).
@@ -203,20 +213,24 @@ mod tests {
         assert_eq!(ctx.len(), 7);
         assert!(!ctx.is_empty());
         assert_eq!(ctx.workload().name, "t");
-        // Full matrix identical to a direct build.
-        let direct = TrafficMatrix::of_workload(&w);
+        // Sparse artifact identical to a direct build; dense view
+        // round-trips the dense constructor exactly.
+        let direct = SparseTraffic::of_workload(&w);
         assert_eq!(ctx.traffic(), &direct);
-        // Per-job matrices identical to direct of_job builds.
+        assert_eq!(ctx.dense_traffic(), &TrafficMatrix::of_workload(&w));
+        // The lazy dense view is cached: same allocation on re-access.
+        assert!(std::ptr::eq(ctx.dense_traffic(), ctx.dense_traffic()));
+        // Per-job traffic identical to direct of_job builds.
         assert_eq!(ctx.job_traffics().len(), 2);
         for (jid, job) in w.jobs.iter().enumerate() {
-            assert_eq!(ctx.job_traffic(jid), &TrafficMatrix::of_job(job));
+            assert_eq!(ctx.job_traffic(jid), &SparseTraffic::of_job(job));
             assert_eq!(ctx.job_adj_avg(jid), ctx.job_traffic(jid).avg_adjacency());
         }
-        // Graph mirrors the from_traffic construction.
+        // Graph mirrors the from_sparse construction.
         assert_eq!(ctx.graph().len(), 7);
         assert_eq!(
             ctx.graph().total_edge_weight(),
-            Graph::from_traffic(&direct).total_edge_weight()
+            Graph::from_sparse(&direct).total_edge_weight()
         );
     }
 
@@ -225,12 +239,12 @@ mod tests {
         let w = two_job_workload();
         let ctx = MapCtx::build(&w);
         for p in 0..ctx.len() {
-            let row_sum: f64 = ctx.traffic().row(p).iter().sum();
+            let row_sum: f64 = ctx.dense_traffic().row(p).iter().sum();
             assert_eq!(ctx.tx_rate(p), row_sum);
-            let col_sum: f64 = (0..ctx.len()).map(|j| ctx.traffic().get(j, p)).sum();
+            let col_sum: f64 = (0..ctx.len()).map(|j| ctx.dense_traffic().get(j, p)).sum();
             assert_eq!(ctx.rx_rate(p), col_sum);
             // Integer-valued builtin rates: the split demand is exact.
-            assert_eq!(ctx.demand(p), ctx.traffic().demand(p));
+            assert_eq!(ctx.demand(p), ctx.dense_traffic().demand(p));
             assert_eq!(ctx.job_of(p), w.job_of_proc(p).0);
         }
     }
@@ -243,9 +257,9 @@ mod tests {
         assert_eq!(ctx.len(), 4);
         assert_eq!(ctx.workload().jobs.len(), 1);
         assert_eq!(ctx.workload().name, job.name);
-        // The single-job context's matrix is the job's own block.
-        assert_eq!(ctx.traffic(), &TrafficMatrix::of_job(job));
-        assert_eq!(ctx.job_traffic(0), &TrafficMatrix::of_job(job));
+        // The single-job context's traffic is the job's own block.
+        assert_eq!(ctx.traffic(), &SparseTraffic::of_job(job));
+        assert_eq!(ctx.job_traffic(0), &SparseTraffic::of_job(job));
         for p in 0..4 {
             assert_eq!(ctx.job_of(p), 0);
         }
@@ -265,5 +279,14 @@ mod tests {
         std::thread::scope(|s| {
             s.spawn(move || assert_eq!(peer.len(), 7));
         });
+    }
+
+    #[test]
+    fn clone_preserves_sparse_and_dense_views() {
+        let w = two_job_workload();
+        let ctx = MapCtx::build(&w);
+        let copy = ctx.clone();
+        assert_eq!(copy.traffic(), ctx.traffic());
+        assert_eq!(copy.dense_traffic(), ctx.dense_traffic());
     }
 }

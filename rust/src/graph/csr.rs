@@ -1,5 +1,6 @@
 //! Compressed-sparse-row weighted undirected graph.
 
+use crate::model::sparse::SparseTraffic;
 use crate::model::traffic::TrafficMatrix;
 
 /// Undirected weighted graph in CSR form. Edge weights are f64 (byte rates
@@ -42,20 +43,39 @@ impl Graph {
         Graph { offsets, adj, weights, vwts: vec![1.0; n] }
     }
 
-    /// Build the application graph from a traffic matrix (symmetrized byte
-    /// rates as edge weights).
-    pub fn from_traffic(t: &TrafficMatrix) -> Self {
+    /// Build the application graph straight from sparse traffic rows in one
+    /// pass: each vertex's merged nonzero partners (already ascending)
+    /// become its CSR neighbour list with the symmetrized weight
+    /// `out + in`. O(nnz) — no intermediate edge list, no per-vertex maps,
+    /// no O(P²) scan. Weights are bit-identical to the dense
+    /// [`TrafficMatrix::between`] path (IEEE addition is commutative).
+    pub fn from_sparse(t: &SparseTraffic) -> Self {
         let n = t.len();
-        let mut edges = Vec::new();
-        for i in 0..n {
-            for j in (i + 1)..n {
-                let w = t.between(i, j);
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut adj = Vec::new();
+        let mut weights = Vec::new();
+        offsets.push(0);
+        for v in 0..n {
+            for (u, out, inc) in t.pairs(v) {
+                if u == v {
+                    continue;
+                }
+                let w = out + inc;
                 if w > 0.0 {
-                    edges.push((i, j, w));
+                    adj.push(u);
+                    weights.push(w);
                 }
             }
+            offsets.push(adj.len());
         }
-        Self::from_edges(n, &edges)
+        Graph { offsets, adj, weights, vwts: vec![1.0; n] }
+    }
+
+    /// Build the application graph from a dense traffic matrix (symmetrized
+    /// byte rates as edge weights) — the interop wrapper over
+    /// [`Self::from_sparse`].
+    pub fn from_traffic(t: &TrafficMatrix) -> Self {
+        Self::from_sparse(&SparseTraffic::from_dense(t))
     }
 
     /// Vertex count.
@@ -183,6 +203,36 @@ mod tests {
         assert_eq!(g.degree(1), 2);
         let w01 = g.neighbors(0).next().unwrap().1;
         assert_eq!(w01, 2000.0);
+    }
+
+    #[test]
+    fn from_sparse_matches_dense_edge_list_build() {
+        for job in [
+            JobSpec::synthetic(Pattern::AllToAll, 6, 64_000, 100.0, 2000),
+            JobSpec::synthetic(Pattern::GatherReduce, 5, 1000, 2.0, 10),
+            JobSpec::synthetic(Pattern::Stencil2d, 12, 4_000, 2.0, 64),
+        ] {
+            let t = crate::model::traffic::TrafficMatrix::of_job(&job);
+            let sparse = SparseTraffic::of_job(&job);
+            let g = Graph::from_sparse(&sparse);
+            // Reference: the old per-pair edge-list construction.
+            let mut edges = Vec::new();
+            for i in 0..t.len() {
+                for j in (i + 1)..t.len() {
+                    let w = t.between(i, j);
+                    if w > 0.0 {
+                        edges.push((i, j, w));
+                    }
+                }
+            }
+            let want = Graph::from_edges(t.len(), &edges);
+            assert_eq!(g.len(), want.len(), "{}", job.name);
+            for v in 0..g.len() {
+                let a: Vec<_> = g.neighbors(v).collect();
+                let b: Vec<_> = want.neighbors(v).collect();
+                assert_eq!(a, b, "{} vertex {v}", job.name);
+            }
+        }
     }
 
     #[test]

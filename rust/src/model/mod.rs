@@ -9,18 +9,23 @@
 //!   Tables 2–5 (synthetic) and 6–9 (real).
 //! * [`npb`] — communication characterization of the NAS Parallel
 //!   Benchmarks used by the real workloads.
-//! * [`traffic`] — per-job and per-workload traffic matrices (the AG of the
-//!   graph-mapping literature) derived from the specs.
+//! * [`sparse`] — the canonical per-job and per-workload traffic artifact
+//!   (CSR rows of nonzeros — the AG of the graph-mapping literature) derived
+//!   from the specs.
+//! * [`traffic`] — the dense matrix form, kept as the degenerate/interop
+//!   case for verification recomputes and the AOT artifact padder.
 //! * [`spec`] — a small text format to load custom clusters/workloads.
 
 pub mod npb;
 pub mod pattern;
+pub mod sparse;
 pub mod spec;
 pub mod topology;
 pub mod traffic;
 pub mod workload;
 
 pub use pattern::Pattern;
+pub use sparse::SparseTraffic;
 pub use topology::{ClusterSpec, CoreId, NodeId, SocketId};
 pub use traffic::TrafficMatrix;
 pub use workload::{JobId, JobSpec, ProcId, Workload};

@@ -14,8 +14,51 @@
 //! the number of messages each *sender* transmits; destinations follow the
 //! pattern's schedule (round-robin over the peer set where the pattern allows
 //! more than one peer).
+//!
+//! Beyond the paper's four, [`Pattern::Stencil2d`] models the nearest-
+//! neighbour halo exchange of grid codes — the bounded-degree pattern the
+//! sparse traffic layer scales to thousands of processes. It is deliberately
+//! **not** part of [`Pattern::ALL`], which stays the paper's Table-1 set so
+//! the builtin synthetic workloads and generated test data are unchanged.
 
 use crate::model::workload::ProcId;
+
+/// Integer square root (largest `x` with `x * x <= n`).
+fn isqrt(n: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let mut x = (n as f64).sqrt() as usize;
+    while (x + 1) * (x + 1) <= n {
+        x += 1;
+    }
+    while x * x > n {
+        x -= 1;
+    }
+    x
+}
+
+/// Grid neighbours of `rank` on the near-square 2D stencil over `p` ranks:
+/// `isqrt(p)` columns, row-major placement, up/left/right/down neighbours
+/// clipped to the grid and to `p`, ascending rank order.
+fn stencil_dests(rank: usize, p: usize) -> Vec<ProcId> {
+    let cols = isqrt(p).max(1);
+    let c = rank % cols;
+    let mut out = Vec::with_capacity(4);
+    if rank >= cols {
+        out.push(rank - cols);
+    }
+    if c > 0 {
+        out.push(rank - 1);
+    }
+    if c + 1 < cols && rank + 1 < p {
+        out.push(rank + 1);
+    }
+    if rank + cols < p {
+        out.push(rank + cols);
+    }
+    out
+}
 
 /// Communication pattern of one parallel job.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -28,10 +71,16 @@ pub enum Pattern {
     GatherReduce,
     /// Rank i sends to rank i+1; the last rank only receives.
     Linear,
+    /// Near-square 2D grid halo exchange: every rank sends to its up to four
+    /// grid neighbours each round. Symmetric and bounded-degree — the sparse
+    /// scale pattern. Not part of [`Pattern::ALL`].
+    Stencil2d,
 }
 
 impl Pattern {
-    /// All patterns, in the order the paper's workload tables use them.
+    /// The paper's four patterns, in the order its workload tables use them
+    /// (the builtin synthetic workloads and the testkit generators draw from
+    /// exactly this set).
     pub const ALL: [Pattern; 4] = [
         Pattern::AllToAll,
         Pattern::BcastScatter,
@@ -46,6 +95,7 @@ impl Pattern {
             Pattern::BcastScatter => "Bcast/Scatter",
             Pattern::GatherReduce => "Gather/Reduce",
             Pattern::Linear => "Linear",
+            Pattern::Stencil2d => "2D Stencil",
         }
     }
 
@@ -56,6 +106,9 @@ impl Pattern {
             "bcast/scatter" | "bcast-scatter" | "bcast" | "scatter" => Some(Pattern::BcastScatter),
             "gather/reduce" | "gather-reduce" | "gather" | "reduce" => Some(Pattern::GatherReduce),
             "linear" | "ring" | "chain" => Some(Pattern::Linear),
+            "2d-stencil" | "stencil-2d" | "stencil2d" | "stencil" | "grid" | "mesh" => {
+                Some(Pattern::Stencil2d)
+            }
             _ => None,
         }
     }
@@ -67,6 +120,8 @@ impl Pattern {
             Pattern::BcastScatter => rank == 0 && p > 1,
             Pattern::GatherReduce => rank != 0,
             Pattern::Linear => rank + 1 < p,
+            // Every rank of a 2-plus-rank grid has at least one neighbour.
+            Pattern::Stencil2d => p > 1,
         }
     }
 
@@ -81,6 +136,7 @@ impl Pattern {
             Pattern::BcastScatter => p - 1,
             Pattern::GatherReduce => 1,
             Pattern::Linear => 1,
+            Pattern::Stencil2d => stencil_dests(rank, p).len(),
         }
     }
 
@@ -108,6 +164,8 @@ impl Pattern {
                     2
                 }
             }
+            // Symmetric: partners are exactly the grid neighbours.
+            Pattern::Stencil2d => stencil_dests(rank, p).len(),
         }
     }
 
@@ -134,6 +192,10 @@ impl Pattern {
             }
             Pattern::GatherReduce => Some(0),
             Pattern::Linear => Some(rank + 1),
+            Pattern::Stencil2d => {
+                let d = stencil_dests(rank, p);
+                Some(d[(k % d.len() as u64) as usize])
+            }
         }
     }
 
@@ -153,6 +215,7 @@ impl Pattern {
             Pattern::BcastScatter => (1..p).collect(),
             Pattern::GatherReduce => vec![0],
             Pattern::Linear => vec![rank + 1],
+            Pattern::Stencil2d => stencil_dests(rank, p),
         }
     }
 
@@ -299,6 +362,60 @@ mod tests {
         assert_eq!(e.len(), 12); // 4 * 3 ordered pairs
         let e = Pattern::Linear.edges(4);
         assert_eq!(e, vec![(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn stencil_three_by_three_grid() {
+        let p = 9;
+        // Center of a 3x3 grid: all four neighbours, ascending.
+        assert_eq!(Pattern::Stencil2d.dests(4, p), vec![1, 3, 5, 7]);
+        assert_eq!(Pattern::Stencil2d.adjacency(4, p), 4);
+        // Corners have two neighbours, edge midpoints three.
+        assert_eq!(Pattern::Stencil2d.dests(0, p), vec![1, 3]);
+        assert_eq!(Pattern::Stencil2d.dests(8, p), vec![5, 7]);
+        assert_eq!(Pattern::Stencil2d.adjacency(1, p), 3);
+        // Symmetric: j in dests(i) iff i in dests(j).
+        for i in 0..p {
+            for j in Pattern::Stencil2d.dests(i, p) {
+                assert!(Pattern::Stencil2d.dests(j, p).contains(&i), "{i} <-> {j}");
+            }
+        }
+        // Round-robin schedule cycles the neighbour set.
+        assert_eq!(Pattern::Stencil2d.dest_of(4, p, 0), Some(1));
+        assert_eq!(Pattern::Stencil2d.dest_of(4, p, 5), Some(3));
+    }
+
+    #[test]
+    fn stencil_ragged_and_degenerate_sizes() {
+        // p = 2: one column, a vertical pair.
+        assert_eq!(Pattern::Stencil2d.dests(0, 2), vec![1]);
+        assert_eq!(Pattern::Stencil2d.dests(1, 2), vec![0]);
+        assert!(!Pattern::Stencil2d.is_sender(0, 1));
+        assert_eq!(Pattern::Stencil2d.dest_of(0, 1, 0), None);
+        // Ragged grids stay symmetric with everyone connected.
+        for p in [2, 3, 5, 7, 10, 12, 17] {
+            for r in 0..p {
+                let d = Pattern::Stencil2d.dests(r, p);
+                assert!(!d.is_empty(), "rank {r} of {p} isolated");
+                assert!(!d.contains(&r));
+                assert!(d.windows(2).all(|w| w[0] < w[1]), "ascending");
+                assert_eq!(d.len(), Pattern::Stencil2d.out_degree(r, p));
+                for j in &d {
+                    assert!(Pattern::Stencil2d.dests(*j, p).contains(&r));
+                }
+            }
+        }
+        // Bounded degree regardless of scale.
+        assert_eq!(Pattern::Stencil2d.max_adjacency(4096), 4);
+        assert!(Pattern::Stencil2d.avg_adjacency(4096) < 4.0);
+    }
+
+    #[test]
+    fn stencil_parse_spellings() {
+        for s in ["stencil", "stencil2d", "2d-stencil", "2D Stencil", "grid", "mesh"] {
+            assert_eq!(Pattern::parse(s), Some(Pattern::Stencil2d), "{s}");
+        }
+        assert_eq!(Pattern::parse(Pattern::Stencil2d.name()), Some(Pattern::Stencil2d));
     }
 
     #[test]

@@ -1,0 +1,485 @@
+//! Sparse-row traffic — the canonical communication artifact.
+//!
+//! Every pattern the paper evaluates (and every stencil/ring beyond it) is
+//! sparse: a process talks to a handful of neighbours, so the dense
+//! [`TrafficMatrix`] wastes O(P²) memory and forces every hot walk to scan
+//! P entries per row just to skip zeros. [`SparseTraffic`] stores CSR rows
+//! of `(dst, rate)` nonzeros plus the transpose (in-edges per destination)
+//! and per-process tx/rx aggregates, so
+//!
+//! * workload memory is O(nnz), not O(P²),
+//! * per-row walks ([`SparseTraffic::pairs`]) visit exactly the nonzero
+//!   partners, in ascending partner order,
+//! * row/column sums are precomputed once.
+//!
+//! ## Dense equivalence, bit for bit
+//!
+//! The dense hot walks all iterate `j` ascending and guard each side with
+//! `v > 0.0` independently. [`SparseTraffic::pairs`] merges the out-row and
+//! the in-column by two pointers, yielding `(j, out, in)` for every `j`
+//! where either direction is nonzero, ascending, with `0.0` for an absent
+//! side — the *same* visit sequence with the *same* values, so any
+//! accumulation over it produces bit-identical floats. Aggregates are built
+//! in the dense accumulation order (row-major for `tx` and for the
+//! transpose scatter that feeds `rx`), and adding the skipped zeros to a
+//! non-negative running sum is a bitwise no-op, so [`SparseTraffic::tx_rate`]
+//! / [`SparseTraffic::rx_rate`] equal the dense row/column sums exactly.
+//! Only [`SparseTraffic::demand`] (tx + rx, two separate sums) differs in
+//! *order* from the dense interleaved sum — exact anyway for the
+//! integer-valued rates of every builtin and testkit workload.
+//! `tests/property_invariants.rs` proves the round-trip and the ledger
+//! equivalences.
+//!
+//! The dense [`TrafficMatrix`] remains as the degenerate/interop case:
+//! verification recomputes, the AOT artifact padder, and CLI reporting use
+//! [`SparseTraffic::to_dense`] / [`SparseTraffic::from_dense`] round-trips.
+
+use crate::model::traffic::TrafficMatrix;
+use crate::model::workload::{JobSpec, ProcId, Workload};
+
+/// CSR traffic over `n` processes: out-rows, the transpose (in-rows), and
+/// per-process tx/rx byte-rate aggregates. Immutable after construction;
+/// only strictly positive rates are stored.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseTraffic {
+    n: usize,
+    /// Out-row offsets, `n + 1` entries.
+    row_off: Vec<usize>,
+    /// Destinations, ascending within each out-row.
+    cols: Vec<ProcId>,
+    /// Rates parallel to `cols` (bytes/sec, all > 0).
+    rates: Vec<f64>,
+    /// In-row (transpose) offsets, `n + 1` entries.
+    in_off: Vec<usize>,
+    /// Sources, ascending within each in-row.
+    srcs: Vec<ProcId>,
+    /// Rates parallel to `srcs`.
+    in_rates: Vec<f64>,
+    /// Row sums (total send rate per process).
+    tx: Vec<f64>,
+    /// Column sums (total receive rate per process).
+    rx: Vec<f64>,
+}
+
+impl SparseTraffic {
+    /// Empty traffic over `n` processes (no flows).
+    pub fn zeros(n: usize) -> Self {
+        Self::from_sorted_entries(n, &[])
+    }
+
+    /// Sparse traffic of a single job (indices are local ranks).
+    ///
+    /// Flow contributions accumulate in the same per-edge encounter order
+    /// as [`TrafficMatrix::of_job`], so each stored rate is bit-identical
+    /// to the dense cell.
+    pub fn of_job(job: &JobSpec) -> Self {
+        let mut triples = Vec::new();
+        for flow in &job.flows {
+            let per_edge = flow.msg_bytes as f64 * flow.rate;
+            for (src, dst) in flow.pattern.edges(job.procs) {
+                triples.push((src, dst, per_edge));
+            }
+        }
+        Self::from_triples(job.procs, triples)
+    }
+
+    /// Sparse traffic of a whole workload (global proc ids, block diagonal
+    /// in job order). Counts toward [`TrafficMatrix::workload_builds`] —
+    /// it is the same one-build-per-workload artifact, in sparse form.
+    pub fn of_workload(w: &Workload) -> Self {
+        crate::model::traffic::note_workload_build();
+        let mut triples = Vec::new();
+        for (jid, job) in w.jobs.iter().enumerate() {
+            let off = w.job_offset(jid);
+            for flow in &job.flows {
+                let per_edge = flow.msg_bytes as f64 * flow.rate;
+                for (src, dst) in flow.pattern.edges(job.procs) {
+                    triples.push((off + src, off + dst, per_edge));
+                }
+            }
+        }
+        Self::from_triples(w.total_procs(), triples)
+    }
+
+    /// Sparse view of a dense matrix: keeps exactly the strictly positive
+    /// cells. Round-trips with [`Self::to_dense`] whenever the dense matrix
+    /// has no negative entries (rates never are).
+    pub fn from_dense(t: &TrafficMatrix) -> Self {
+        let n = t.len();
+        let mut entries = Vec::new();
+        for i in 0..n {
+            for (j, &v) in t.row(i).iter().enumerate() {
+                if v > 0.0 {
+                    entries.push((i, j, v));
+                }
+            }
+        }
+        Self::from_sorted_entries(n, &entries)
+    }
+
+    /// Densify (interop/verification paths: full-scorer recomputes, the AOT
+    /// artifact padder, CLI reporting).
+    pub fn to_dense(&self) -> TrafficMatrix {
+        let mut t = TrafficMatrix::zeros(self.n);
+        for i in 0..self.n {
+            let (cols, rates) = self.out_row(i);
+            for (&j, &v) in cols.iter().zip(rates) {
+                t.add(i, j, v);
+            }
+        }
+        t
+    }
+
+    /// Accumulate duplicate `(i, j)` triples in encounter order (stable
+    /// sort), drop non-positive results, build the CSR structures.
+    fn from_triples(n: usize, mut triples: Vec<(ProcId, ProcId, f64)>) -> Self {
+        triples.sort_by_key(|&(i, j, _)| (i, j));
+        let mut entries: Vec<(ProcId, ProcId, f64)> = Vec::with_capacity(triples.len());
+        for (i, j, v) in triples {
+            match entries.last_mut() {
+                Some(e) if e.0 == i && e.1 == j => e.2 += v,
+                _ => entries.push((i, j, v)),
+            }
+        }
+        entries.retain(|&(_, _, v)| v > 0.0);
+        Self::from_sorted_entries(n, &entries)
+    }
+
+    /// Build from entries sorted by `(row, col)`, unique, all > 0.
+    fn from_sorted_entries(n: usize, entries: &[(ProcId, ProcId, f64)]) -> Self {
+        let nnz = entries.len();
+        let mut row_off = vec![0usize; n + 1];
+        let mut in_off = vec![0usize; n + 1];
+        for &(i, j, _) in entries {
+            row_off[i + 1] += 1;
+            in_off[j + 1] += 1;
+        }
+        for v in 1..=n {
+            row_off[v] += row_off[v - 1];
+            in_off[v] += in_off[v - 1];
+        }
+        let mut cols = Vec::with_capacity(nnz);
+        let mut rates = Vec::with_capacity(nnz);
+        let mut srcs = vec![0 as ProcId; nnz];
+        let mut in_rates = vec![0.0f64; nnz];
+        let mut tx = vec![0.0f64; n];
+        let mut rx = vec![0.0f64; n];
+        let mut cursor = in_off.clone();
+        // One row-major pass: fills the out-CSR in order, scatters the
+        // transpose (sources arrive ascending per in-row because the scan
+        // is row-major), and accumulates tx/rx in exactly the dense
+        // row-/column-sum order.
+        for &(i, j, v) in entries {
+            cols.push(j);
+            rates.push(v);
+            let slot = cursor[j];
+            srcs[slot] = i;
+            in_rates[slot] = v;
+            cursor[j] += 1;
+            tx[i] += v;
+            rx[j] += v;
+        }
+        SparseTraffic { n, row_off, cols, rates, in_off, srcs, in_rates, tx, rx }
+    }
+
+    /// Process count.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True when tracking zero processes.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Number of stored (strictly positive) directed entries.
+    pub fn nnz(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Rate from `i` to `j` (0.0 when not stored). O(log nnz-per-row).
+    pub fn get(&self, i: ProcId, j: ProcId) -> f64 {
+        let (cols, rates) = self.out_row(i);
+        match cols.binary_search(&j) {
+            Ok(k) => rates[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Out-row of `i`: destinations (ascending) and their rates.
+    #[inline]
+    pub fn out_row(&self, i: ProcId) -> (&[ProcId], &[f64]) {
+        let (a, b) = (self.row_off[i], self.row_off[i + 1]);
+        (&self.cols[a..b], &self.rates[a..b])
+    }
+
+    /// In-row of `i`: sources (ascending) and their rates.
+    #[inline]
+    pub fn in_row(&self, i: ProcId) -> (&[ProcId], &[f64]) {
+        let (a, b) = (self.in_off[i], self.in_off[i + 1]);
+        (&self.srcs[a..b], &self.in_rates[a..b])
+    }
+
+    /// Total send rate of `i` (bytes/sec) — bit-equal to the dense row sum.
+    #[inline]
+    pub fn tx_rate(&self, i: ProcId) -> f64 {
+        self.tx[i]
+    }
+
+    /// Total receive rate of `i` (bytes/sec) — bit-equal to the dense
+    /// column sum.
+    #[inline]
+    pub fn rx_rate(&self, i: ProcId) -> f64 {
+        self.rx[i]
+    }
+
+    /// Communication demand of `i` (paper eq. 1: tx + rx). Equal to
+    /// [`TrafficMatrix::demand`] — exactly for integer-valued rates, up to
+    /// FP associativity otherwise (the dense sum interleaves directions).
+    pub fn demand(&self, i: ProcId) -> f64 {
+        self.tx[i] + self.rx[i]
+    }
+
+    /// Symmetric volume between `i` and `j` (`i->j` plus `j->i`, in that
+    /// operand order — bitwise equal to [`TrafficMatrix::between`]).
+    pub fn between(&self, i: ProcId, j: ProcId) -> f64 {
+        self.get(i, j) + self.get(j, i)
+    }
+
+    /// Merged walk over the nonzero partners of `p`: yields
+    /// `(j, out, in)` = `(j, rate p->j, rate j->p)` for every `j` with
+    /// traffic in either direction, ascending `j`, `0.0` for an absent
+    /// side. This is the sparse replacement for the dense
+    /// `for j in 0..P { row[j] / get(j, p) }` hot walks — same visit
+    /// sequence, same values, O(nnz-per-row) instead of O(P).
+    pub fn pairs(&self, p: ProcId) -> PairIter<'_> {
+        let (oc, or_) = self.out_row(p);
+        let (ic, ir) = self.in_row(p);
+        PairIter { oc, or_, ic, ir, oi: 0, ii: 0 }
+    }
+
+    /// Adjacency degree of `i` (`Adj_pi` of eq. 2): distinct partners with
+    /// traffic in either direction, self excluded.
+    pub fn adjacency(&self, i: ProcId) -> usize {
+        self.pairs(i).filter(|&(j, _, _)| j != i).count()
+    }
+
+    /// Average adjacency over all processes (`Adj_avg`).
+    pub fn avg_adjacency(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let s: usize = (0..self.n).map(|i| self.adjacency(i)).sum();
+        s as f64 / self.n as f64
+    }
+
+    /// Max adjacency over all processes (`Adj_max`), 0 for empty.
+    pub fn max_adjacency(&self) -> usize {
+        (0..self.n).map(|i| self.adjacency(i)).max().unwrap_or(0)
+    }
+
+    /// Partners of `i` sorted by descending symmetric volume, rank
+    /// ascending on ties — same order and bit-identical volumes as
+    /// [`TrafficMatrix::partners_by_volume`].
+    pub fn partners_by_volume(&self, i: ProcId) -> Vec<(ProcId, f64)> {
+        let mut v: Vec<(ProcId, f64)> = self
+            .pairs(i)
+            .filter(|&(j, _, _)| j != i)
+            .map(|(j, out, inc)| (j, out + inc))
+            .filter(|&(_, w)| w > 0.0)
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        v
+    }
+
+    /// Total traffic volume (bytes/sec) — bit-equal to the dense row-major
+    /// sum over all cells.
+    pub fn total(&self) -> f64 {
+        self.rates.iter().sum()
+    }
+
+    /// Heap bytes held by this artifact — the number the scale bench
+    /// asserts stays below the dense `P² × 8` wall.
+    pub fn artifact_bytes(&self) -> usize {
+        use std::mem::size_of;
+        (self.row_off.len() + self.in_off.len()) * size_of::<usize>()
+            + (self.cols.len() + self.srcs.len()) * size_of::<ProcId>()
+            + (self.rates.len() + self.in_rates.len() + self.tx.len() + self.rx.len())
+                * size_of::<f64>()
+    }
+}
+
+/// Two-pointer merge over one process's out-row and in-row — see
+/// [`SparseTraffic::pairs`].
+#[derive(Debug, Clone)]
+pub struct PairIter<'a> {
+    oc: &'a [ProcId],
+    or_: &'a [f64],
+    ic: &'a [ProcId],
+    ir: &'a [f64],
+    oi: usize,
+    ii: usize,
+}
+
+impl Iterator for PairIter<'_> {
+    /// `(partner, out rate, in rate)`.
+    type Item = (ProcId, f64, f64);
+
+    fn next(&mut self) -> Option<(ProcId, f64, f64)> {
+        let o = self.oc.get(self.oi).copied();
+        let i = self.ic.get(self.ii).copied();
+        match (o, i) {
+            (None, None) => None,
+            (Some(j), None) => {
+                let out = self.or_[self.oi];
+                self.oi += 1;
+                Some((j, out, 0.0))
+            }
+            (None, Some(j)) => {
+                let inc = self.ir[self.ii];
+                self.ii += 1;
+                Some((j, 0.0, inc))
+            }
+            (Some(jo), Some(ji)) => {
+                if jo < ji {
+                    let out = self.or_[self.oi];
+                    self.oi += 1;
+                    Some((jo, out, 0.0))
+                } else if ji < jo {
+                    let inc = self.ir[self.ii];
+                    self.ii += 1;
+                    Some((ji, 0.0, inc))
+                } else {
+                    let (out, inc) = (self.or_[self.oi], self.ir[self.ii]);
+                    self.oi += 1;
+                    self.ii += 1;
+                    Some((jo, out, inc))
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::pattern::Pattern;
+    use crate::model::workload::JobSpec;
+
+    fn jobs() -> Vec<JobSpec> {
+        vec![
+            JobSpec::synthetic(Pattern::AllToAll, 6, 64_000, 100.0, 2000),
+            JobSpec::synthetic(Pattern::GatherReduce, 5, 1000, 2.0, 10),
+            JobSpec::synthetic(Pattern::Linear, 4, 2_000, 5.0, 50),
+            JobSpec::synthetic(Pattern::BcastScatter, 3, 500, 3.0, 7),
+            JobSpec::synthetic(Pattern::Stencil2d, 9, 4_000, 2.0, 64),
+        ]
+    }
+
+    #[test]
+    fn of_job_equals_dense_from_dense() {
+        for job in jobs() {
+            let dense = TrafficMatrix::of_job(&job);
+            let sparse = SparseTraffic::of_job(&job);
+            assert_eq!(sparse, SparseTraffic::from_dense(&dense), "{}", job.name);
+            assert_eq!(sparse.to_dense(), dense, "{}", job.name);
+        }
+    }
+
+    #[test]
+    fn round_trip_is_exact() {
+        let w = Workload::new("t", jobs()).unwrap();
+        let dense = TrafficMatrix::of_workload(&w);
+        let sparse = SparseTraffic::of_workload(&w);
+        assert_eq!(sparse.to_dense(), dense);
+        assert_eq!(SparseTraffic::from_dense(&dense), sparse);
+        assert_eq!(sparse.len(), dense.len());
+        let stored = (0..dense.len())
+            .flat_map(|i| (0..dense.len()).map(move |j| (i, j)))
+            .filter(|&(i, j)| dense.get(i, j) > 0.0)
+            .count();
+        assert_eq!(sparse.nnz(), stored);
+    }
+
+    #[test]
+    fn queries_match_dense_bitwise() {
+        let w = Workload::new("t", jobs()).unwrap();
+        let dense = TrafficMatrix::of_workload(&w);
+        let sparse = SparseTraffic::of_workload(&w);
+        assert_eq!(sparse.total(), dense.total());
+        assert_eq!(sparse.max_adjacency(), dense.max_adjacency());
+        assert_eq!(sparse.avg_adjacency(), dense.avg_adjacency());
+        for i in 0..dense.len() {
+            assert_eq!(sparse.tx_rate(i), dense.row(i).iter().sum::<f64>());
+            let col: f64 = (0..dense.len()).map(|j| dense.get(j, i)).sum();
+            assert_eq!(sparse.rx_rate(i), col);
+            // Integer-valued builtin rates: split demand is exact.
+            assert_eq!(sparse.demand(i), dense.demand(i));
+            assert_eq!(sparse.adjacency(i), dense.adjacency(i));
+            assert_eq!(sparse.partners_by_volume(i), dense.partners_by_volume(i));
+            for j in 0..dense.len() {
+                assert_eq!(sparse.get(i, j), dense.get(i, j));
+                assert_eq!(sparse.between(i, j), dense.between(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn pairs_visits_exactly_the_dense_guarded_walk() {
+        let w = Workload::new("t", jobs()).unwrap();
+        let dense = TrafficMatrix::of_workload(&w);
+        let sparse = SparseTraffic::of_workload(&w);
+        for p in 0..dense.len() {
+            let want: Vec<(usize, f64, f64)> = (0..dense.len())
+                .map(|j| (j, dense.get(p, j), dense.get(j, p)))
+                .filter(|&(_, out, inc)| out > 0.0 || inc > 0.0)
+                .collect();
+            let got: Vec<(usize, f64, f64)> = sparse.pairs(p).collect();
+            assert_eq!(got, want, "proc {p}");
+        }
+    }
+
+    #[test]
+    fn duplicate_flows_accumulate_like_dense() {
+        let job = JobSpec {
+            name: "mix".into(),
+            procs: 3,
+            flows: vec![
+                crate::model::workload::FlowSpec::new(Pattern::Linear, 1000, 1.0, 5),
+                crate::model::workload::FlowSpec::new(Pattern::Linear, 1000, 2.0, 5),
+            ],
+        };
+        let t = SparseTraffic::of_job(&job);
+        assert_eq!(t.get(0, 1), 3000.0);
+        assert_eq!(t.nnz(), 2);
+    }
+
+    #[test]
+    fn zeros_and_empty() {
+        let z = SparseTraffic::zeros(4);
+        assert_eq!(z.len(), 4);
+        assert_eq!(z.nnz(), 0);
+        assert_eq!(z.get(1, 2), 0.0);
+        assert_eq!(z.adjacency(0), 0);
+        assert_eq!(z.to_dense(), TrafficMatrix::zeros(4));
+        assert!(z.pairs(0).next().is_none());
+        let e = SparseTraffic::zeros(0);
+        assert!(e.is_empty());
+        assert_eq!(e.avg_adjacency(), 0.0);
+        assert_eq!(e.max_adjacency(), 0);
+    }
+
+    #[test]
+    fn artifact_bytes_scale_with_nnz_not_p_squared() {
+        let job = JobSpec::synthetic(Pattern::Stencil2d, 1024, 4_000, 2.0, 64);
+        let t = SparseTraffic::of_job(&job);
+        let dense_bytes = 1024 * 1024 * std::mem::size_of::<f64>();
+        assert!(t.nnz() < 5 * 1024);
+        assert!(
+            t.artifact_bytes() < dense_bytes / 4,
+            "sparse {} vs dense {}",
+            t.artifact_bytes(),
+            dense_bytes
+        );
+    }
+}

@@ -4,11 +4,13 @@
 //! process `j`, built from the job flow specs under the round send semantics
 //! of DESIGN.md §9 (`rate` messages to **each** destination per second).
 //!
-//! The same matrix drives three consumers, which keeps them consistent by
-//! construction:
-//! * the mapper's `CD_i` (paper eq. 1) and adjacency `Adj_pi` (eq. 2 inputs),
+//! The dense form is the **degenerate/interop case**: the canonical hot-path
+//! artifact is [`crate::model::sparse::SparseTraffic`] (CSR nonzero rows),
+//! which round-trips this matrix exactly. Dense stays in use where a full
+//! P×P view is genuinely wanted:
 //! * the AOT cost model (the Rust side pads this matrix into the artifact),
-//! * the DRB baseline's application graph.
+//! * full-scorer verification recomputes and CLI reporting,
+//! * small interop/test fixtures.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -22,6 +24,14 @@ use crate::model::workload::{JobId, JobSpec, ProcId, Workload};
 /// that guarantee (one increment per workload per sweep) instead of assuming
 /// it — see `tests/mapctx_sweep.rs`.
 static WORKLOAD_BUILDS: AtomicU64 = AtomicU64::new(0);
+
+/// Count one full-workload traffic construction. Shared by
+/// [`TrafficMatrix::of_workload`] and
+/// [`crate::model::sparse::SparseTraffic::of_workload`] — dense or sparse,
+/// it is the same once-per-workload artifact the counter guards.
+pub(crate) fn note_workload_build() {
+    WORKLOAD_BUILDS.fetch_add(1, Ordering::Relaxed);
+}
 
 /// Dense square traffic matrix in bytes/sec.
 #[derive(Debug, Clone, PartialEq)]
@@ -53,17 +63,17 @@ impl TrafficMatrix {
     /// jobs never communicate with each other, so the matrix is block
     /// diagonal in job order).
     pub fn of_workload(w: &Workload) -> Self {
-        WORKLOAD_BUILDS.fetch_add(1, Ordering::Relaxed);
+        note_workload_build();
         let mut t = Self::zeros(w.total_procs());
         for (jid, job) in w.jobs.iter().enumerate() {
             let off = w.job_offset(jid);
-            let jt = Self::of_job(job);
-            for i in 0..job.procs {
-                for j in 0..job.procs {
-                    let v = jt.get(i, j);
-                    if v > 0.0 {
-                        t.add(off + i, off + j, v);
-                    }
+            // Accumulate each flow edge directly at its global offset —
+            // same adds in the same order as a per-job build, without the
+            // intermediate O(procs²) matrix and copy.
+            for flow in &job.flows {
+                let per_edge = flow.msg_bytes as f64 * flow.rate;
+                for (src, dst) in flow.pattern.edges(job.procs) {
+                    t.add(off + src, off + dst, per_edge);
                 }
             }
         }
@@ -169,22 +179,25 @@ impl TrafficMatrix {
     }
 }
 
-/// Per-job views over a workload traffic matrix.
+/// Per-job views over a workload's traffic, in the canonical sparse form.
 #[derive(Debug, Clone)]
 pub struct JobTraffic {
     /// Owning job.
     pub job: JobId,
-    /// Local-rank traffic matrix.
-    pub matrix: TrafficMatrix,
+    /// Local-rank sparse traffic.
+    pub matrix: crate::model::sparse::SparseTraffic,
 }
 
 impl JobTraffic {
-    /// Build per-job matrices for the whole workload.
+    /// Build per-job traffic for the whole workload.
     pub fn for_workload(w: &Workload) -> Vec<JobTraffic> {
         w.jobs
             .iter()
             .enumerate()
-            .map(|(jid, job)| JobTraffic { job: jid, matrix: TrafficMatrix::of_job(job) })
+            .map(|(jid, job)| JobTraffic {
+                job: jid,
+                matrix: crate::model::sparse::SparseTraffic::of_job(job),
+            })
             .collect()
     }
 }

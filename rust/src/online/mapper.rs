@@ -8,15 +8,15 @@
 //! jobs' own matrices, and the ledger stores it that way instead of ever
 //! composing a dense P×P matrix on the event path. Per event:
 //!
-//! * **Arrival** — build the arriving job's own [`MapCtx`] (one
-//!   traffic-matrix construction of the *job's* size, never the world's),
-//!   place its processes on free cores through the base strategy's
+//! * **Arrival** — build the arriving job's own [`MapCtx`] (one sparse
+//!   traffic construction of the *job's* size, never the world's), place
+//!   its processes on free cores through the base strategy's
 //!   occupancy-aware [`Mapper::place`] entry point — every strategy serves
 //!   here, the graph partitioners included (they cut against the induced
-//!   free-core sub-cluster) — and splice the job's block into the ledger
-//!   with [`LoadLedger::admit_block`]: one [`crate::cost::JobDelta`]
-//!   scatter, O(p²) in the job's size. Jobs that do not fit the free pool
-//!   are rejected and recorded, not errors.
+//!   free-core sub-cluster) — and splice the job's sparse block into the
+//!   ledger with [`LoadLedger::admit_block`]: one [`crate::cost::JobDelta`]
+//!   scatter, O(nnz) in the job's nonzeros. Jobs that do not fit the free
+//!   pool are rejected and recorded, not errors.
 //! * **Departure** — [`LoadLedger::retire_block`]: subtract the block's
 //!   delta at its *current* cores, drop the block, and shift later blocks'
 //!   proc offsets down — O(P) end to end. The freed cores go back to the

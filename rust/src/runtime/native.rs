@@ -4,9 +4,11 @@
 //! order, same both-direction CD definition).  Used as the fallback scorer
 //! when `artifacts/` is missing and as the oracle integration tests compare
 //! the PJRT path against. Consumers hand it the shared
-//! [`crate::ctx::MapCtx`] traffic matrix (`ctx.traffic()`) — the scorer
-//! never derives its own copy, which is what keeps the evaluate/refine
-//! paths on exactly one matrix build per workload.
+//! [`crate::ctx::MapCtx`] dense view (`ctx.dense_traffic()`) — the scorer
+//! never derives its own copy, which is what keeps the evaluate/verify
+//! paths on exactly one traffic build per workload. The mapping and
+//! refinement hot paths avoid this scorer's dense walk entirely: they seed
+//! and verify through the sparse [`crate::cost::JobDelta`] scatter.
 
 use crate::coordinator::Placement;
 use crate::cost::{NodeLoads, Scorer};

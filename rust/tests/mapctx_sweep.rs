@@ -103,9 +103,9 @@ fn per_job_matrices_sum_bitwise_to_full_matrix() {
         let ctx = MapCtx::build(&w);
         let full = ctx.traffic();
         let procs = w.total_procs();
-        // Reassemble the block diagonal from the per-job views; every entry
-        // must match the full matrix bit for bit (same `of_job` arithmetic,
-        // same accumulation order).
+        // Reassemble the block diagonal from the per-job sparse views; every
+        // entry must match the full artifact bit for bit (same `of_job`
+        // arithmetic, same accumulation order).
         let mut seen = vec![false; procs * procs];
         for (jid, job) in w.jobs.iter().enumerate() {
             let off = w.job_offset(jid);
@@ -131,9 +131,11 @@ fn per_job_matrices_sum_bitwise_to_full_matrix() {
                 }
             }
         }
-        // The cached per-process rates and job index agree with the matrix.
+        // The precomputed per-process rates and job index agree with the
+        // stored rows (summing the nonzeros in storage order is exactly the
+        // dense row/column sum — adding the zeros back is a bitwise no-op).
         for p in 0..procs {
-            let row_sum: f64 = full.row(p).iter().sum();
+            let row_sum: f64 = full.out_row(p).1.iter().sum();
             assert_eq!(ctx.tx_rate(p).to_bits(), row_sum.to_bits());
             let col_sum: f64 = (0..procs).map(|j| full.get(j, p)).sum();
             assert_eq!(ctx.rx_rate(p).to_bits(), col_sum.to_bits());

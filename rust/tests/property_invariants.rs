@@ -192,6 +192,165 @@ fn refined_mappers_yield_valid_placements_and_never_worse_objectives() {
 }
 
 #[test]
+fn sparse_traffic_round_trips_dense_exactly() {
+    // The sparse-first invariant's foundation: over arbitrary seeded
+    // workloads, `SparseTraffic` and `TrafficMatrix` are two encodings of
+    // the same bits — every cell, every row/column aggregate, and both
+    // conversion directions agree exactly.
+    use nicmap::model::sparse::SparseTraffic;
+    forall(0x19_0000, 25, |rng| {
+        let cluster = gen::cluster(rng);
+        let w = gen::workload(rng, &cluster);
+        let sparse = SparseTraffic::of_workload(&w);
+        let dense = TrafficMatrix::of_workload(&w);
+        let n = dense.len();
+        assert_eq!(sparse.len(), n);
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(
+                    sparse.get(i, j).to_bits(),
+                    dense.get(i, j).to_bits(),
+                    "cell ({i},{j}) drifted between encodings"
+                );
+            }
+            let row_sum: f64 = dense.row(i).iter().sum();
+            assert_eq!(sparse.tx_rate(i).to_bits(), row_sum.to_bits());
+            let col_sum: f64 = (0..n).map(|j| dense.get(j, i)).sum();
+            assert_eq!(sparse.rx_rate(i).to_bits(), col_sum.to_bits());
+            assert_eq!(sparse.adjacency(i), dense.adjacency(i));
+            assert_eq!(sparse.partners_by_volume(i), dense.partners_by_volume(i));
+        }
+        // Both conversion directions are exact round-trips.
+        assert_eq!(sparse.to_dense(), dense);
+        assert_eq!(SparseTraffic::from_dense(&dense), sparse);
+        assert_eq!(SparseTraffic::from_dense(&sparse.to_dense()), sparse);
+    });
+}
+
+/// Bitwise equality of two load vectors (the `NodeLoads` fields are plain
+/// `Vec<f64>`; `to_bits` comparison catches even sign-of-zero drift).
+fn loads_bits_equal(a: &nicmap::cost::NodeLoads, b: &nicmap::cost::NodeLoads) -> bool {
+    let eq = |x: &[f64], y: &[f64]| {
+        x.len() == y.len() && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+    };
+    eq(&a.nic_tx, &b.nic_tx) && eq(&a.nic_rx, &b.nic_rx) && eq(&a.intra, &b.intra)
+}
+
+#[test]
+fn sparse_seeded_ledger_tracks_dense_ledger_bit_for_bit() {
+    // A ledger seeded through the sparse scatter (`from_sparse`) and one
+    // seeded through the dense scorer must stay bitwise interchangeable
+    // under arbitrary move sequences — applies, reverts, and batched peeks
+    // all agree, and both match a full dense recompute at the end.
+    use nicmap::cost::{LoadLedger, Move, Scorer};
+    use nicmap::model::sparse::SparseTraffic;
+    forall(0x1A_0000, 12, |rng| {
+        let cluster = gen::cluster(rng);
+        let w = gen::workload(rng, &cluster);
+        let dense = TrafficMatrix::of_workload(&w);
+        let sparse = SparseTraffic::from_dense(&dense);
+        let start = gen::placement(rng, &w, &cluster);
+        let mut sp = LoadLedger::from_sparse(&sparse, &start, &cluster).unwrap();
+        let mut dn = LoadLedger::new(&NativeScorer, &dense, &start, &cluster).unwrap();
+        assert!(loads_bits_equal(sp.loads(), dn.loads()), "seed loads diverged");
+        let procs = w.total_procs();
+        for round in 0..6 {
+            let a = rng.below(procs as u64) as usize;
+            let b = rng.below(procs as u64) as usize;
+            let free: Vec<usize> =
+                (0..cluster.total_cores()).filter(|&core| sp.is_free(core)).collect();
+            let mv = if round % 2 == 0 && !free.is_empty() {
+                Move::Migrate(a, free[rng.below(free.len() as u64) as usize])
+            } else if a != b {
+                Move::Swap(a, b)
+            } else {
+                continue;
+            };
+            // Batched peek over both ledgers agrees before the apply.
+            let cands = [mv];
+            assert_eq!(
+                sp.peek_batch(&cands).unwrap()[0].to_bits(),
+                dn.peek_batch(&cands).unwrap()[0].to_bits(),
+                "{mv:?}: sparse-seeded peek diverged"
+            );
+            sp.apply(mv).unwrap();
+            dn.apply(mv).unwrap();
+            assert!(loads_bits_equal(sp.loads(), dn.loads()), "{mv:?}: applied loads diverged");
+            if round % 3 == 2 {
+                sp.revert().unwrap();
+                dn.revert().unwrap();
+                assert!(loads_bits_equal(sp.loads(), dn.loads()), "reverted loads diverged");
+            }
+            assert_eq!(sp.objective().to_bits(), dn.objective().to_bits());
+            assert_eq!(sp.placement(), dn.placement());
+        }
+        // Terminal cross-check against the full dense recompute.
+        let full = NativeScorer.score(&dense, &sp.placement(), &cluster).unwrap();
+        assert!(
+            loads_bits_equal(sp.loads(), &full),
+            "sparse-seeded ledger drifted from the dense recompute"
+        );
+        assert_eq!(sp.max_deviation(&NativeScorer).unwrap(), 0.0);
+    });
+}
+
+#[test]
+fn live_ledger_churn_loads_bit_equal_dense_recompute() {
+    // The block-diagonal live ledger under admit/retire/move churn: after
+    // every event its incremental loads equal a from-scratch dense scorer
+    // pass over the composed world — the persistent-ledger invariant,
+    // extended to the sparse block store.
+    use nicmap::cost::{LoadLedger, Move, Scorer};
+    use nicmap::model::sparse::SparseTraffic;
+    forall(0x1B_0000, 12, |rng| {
+        let cluster = gen::cluster(rng);
+        let w = gen::workload(rng, &cluster);
+        let placement = gen::placement(rng, &w, &cluster);
+        let mut ledger = LoadLedger::live(&cluster);
+        let check = |ledger: &LoadLedger| {
+            let full = NativeScorer
+                .score(&ledger.compose_traffic(), &ledger.placement(), &cluster)
+                .unwrap();
+            assert!(
+                loads_bits_equal(ledger.loads(), &full),
+                "live ledger drifted from the dense recompute"
+            );
+        };
+        // Admit every job at its generated cores, checking after each.
+        for (jid, job) in w.jobs.iter().enumerate() {
+            let off = w.job_offset(jid);
+            let cores = &placement.core_of[off..off + job.procs];
+            ledger.admit_block(SparseTraffic::of_job(job), cores).unwrap();
+            check(&ledger);
+        }
+        // Random applied moves on the live world.
+        for _ in 0..4 {
+            let procs = ledger.len();
+            let a = rng.below(procs as u64) as usize;
+            let b = rng.below(procs as u64) as usize;
+            let free: Vec<usize> =
+                (0..cluster.total_cores()).filter(|&core| ledger.is_free(core)).collect();
+            if !free.is_empty() {
+                ledger.apply(Move::Migrate(a, free[0])).unwrap();
+            } else if a != b {
+                ledger.apply(Move::Swap(a, b)).unwrap();
+            } else {
+                continue;
+            }
+            ledger.commit();
+            check(&ledger);
+        }
+        // Retire blocks back to front; the survivors must still match.
+        while ledger.blocks() > 0 {
+            let victim = rng.below(ledger.blocks() as u64) as usize;
+            ledger.retire_block(victim).unwrap();
+            check(&ledger);
+        }
+        assert_eq!(ledger.len(), 0);
+    });
+}
+
+#[test]
 fn new_strategy_threshold_cap_respected_for_single_a2a_jobs() {
     // For a lone all-to-all job the eq. 2 cap must bind exactly (no
     // relaxation is ever needed when threshold * nodes ≥ procs).
@@ -210,7 +369,7 @@ fn new_strategy_threshold_cap_respected_for_single_a2a_jobs() {
             vec![JobSpec::synthetic(Pattern::AllToAll, procs, 4_000_000, 10.0, 10)],
         )
         .unwrap();
-        let t = TrafficMatrix::of_workload(&w);
+        let t = nicmap::model::sparse::SparseTraffic::of_workload(&w);
         let cap = eq2(&t, cluster.nodes);
         let p = MapperKind::New.build().map_workload(&w, &cluster).unwrap();
         let counts: Vec<usize> = (0..cluster.nodes)
