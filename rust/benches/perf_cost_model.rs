@@ -5,12 +5,16 @@
 //! recomputes with O(P) delta evaluations and `peek_batch` amortizes one
 //! traffic-row pass over all of a hot process's candidates.
 //!
-//! The refinement and peek-batch sections *assert* the ledger's complexity
-//! and equivalence contracts (full scorer passes stay constant, candidate
-//! evaluations per round stay O(P), batched objectives bit-equal sequential
-//! peeks); the CI bench-smoke job runs this bench, so a regression to
-//! O(P²)-per-candidate scoring — or a batched path that drifts from the
-//! sequential one — fails the build.
+//! The refinement, peek-batch, and fused-round sections *assert* the
+//! ledger's complexity and equivalence contracts (full scorer passes stay
+//! constant, candidate evaluations per round stay O(P), batched and fused
+//! objectives bit-equal sequential peeks, every distinct primary/partner
+//! row aggregated exactly once per fused call, one fused call per descent
+//! round, fused throughput at least the sequential path's); the CI
+//! bench-smoke job runs this bench, so a regression to O(P²)-per-candidate
+//! scoring — or a batched path that drifts from the sequential one — fails
+//! the build. The fused-round section also writes the machine-readable
+//! `BENCH_cost_model.json` the CI job grep-asserts and uploads.
 
 use nicmap::coordinator::refine::refine;
 use nicmap::coordinator::MapperKind;
@@ -78,6 +82,7 @@ fn main() {
 
     bench_refinement(&cluster);
     bench_peek_batch(&cluster);
+    bench_fused_round(&cluster);
 }
 
 /// Refinement bench on the 256-process synthetic workload: wall time plus
@@ -195,4 +200,163 @@ fn bench_peek_batch(cluster: &ClusterSpec) {
         "peek_batch must be bit-identical to sequential peeks on integer-rate workloads"
     );
     println!("(contract ok: {total} batched objectives bit-equal to sequential peeks)");
+}
+
+/// Fused round-scoring bench (ISSUE 8) on the same 256-process workload:
+/// one kernel call scores a whole descent round's candidates. This bench
+/// owns its process, so the grouped-aggregation contract is asserted with
+/// **exact** counter deltas: every distinct cross-node primary/partner row
+/// aggregated exactly once per fused call, exactly one fused call per
+/// entered descent round, fused candidates/sec at least the sequential
+/// path's, and fused objectives bit-equal to `peek_batch` and sequential
+/// `peek`s. Emits `BENCH_cost_model.json` for the CI artifact.
+fn bench_fused_round(cluster: &ClusterSpec) {
+    use nicmap::cost::{batch, CandidateBatch};
+    use nicmap::coordinator::refine::Refiner;
+    use nicmap::report::json::Obj;
+
+    let w = Workload::builtin("synt1").unwrap();
+    let ctx = MapCtx::build(&w);
+    let start = MapperKind::Blocked.build().map(&ctx, cluster).unwrap();
+    let mut ledger =
+        LoadLedger::new(&NativeScorer, ctx.dense_traffic(), &start, cluster).unwrap();
+
+    // One whole descent round's candidates, in the refiner's exact shape
+    // and order: all hot-node processes' cold-pool swaps, then migrates.
+    let hot = ledger.hottest_node();
+    let mut cold_mask = vec![false; cluster.nodes];
+    for n in ledger.coldest_nodes(3, hot) {
+        cold_mask[n] = true;
+    }
+    let free_targets: Vec<usize> = (0..cluster.nodes)
+        .filter(|&n| n != hot)
+        .filter_map(|n| ledger.free_core_on(n))
+        .collect();
+    let hot_procs = ledger.procs_on(hot);
+    let mut batch = CandidateBatch::new();
+    for &a in &hot_procs {
+        for b in 0..ledger.len() {
+            if b != a && cold_mask[ledger.node_of(b)] {
+                batch.push_swap(a, b);
+            }
+        }
+        for &target in &free_targets {
+            batch.push_migrate(a, target);
+        }
+    }
+    let moves = batch.moves();
+    assert!(!moves.is_empty(), "the hot Blocked node must expose a round of candidates");
+
+    // Expected row walks: the distinct primaries and swap partners of
+    // cross-node candidates (same-node candidates walk nothing).
+    let mut needs_row = vec![false; ledger.len()];
+    for &mv in &moves {
+        match mv {
+            Move::Swap(a, b) => {
+                if ledger.node_of(a) != ledger.node_of(b) {
+                    needs_row[a] = true;
+                    needs_row[b] = true;
+                }
+            }
+            Move::Migrate(p, core) => {
+                if ledger.node_of(p) != cluster.node_of_core(core) {
+                    needs_row[p] = true;
+                }
+            }
+        }
+    }
+    let distinct_rows = needs_row.iter().filter(|&&r| r).count() as u64;
+
+    // Exact grouped-aggregation contract: one fused call, one walk per
+    // distinct row — where the sequential path walks rows per candidate.
+    let f0 = batch::fused_rounds();
+    let r0 = batch::row_aggregations();
+    let fused = ledger.peek_round(&batch).unwrap();
+    assert_eq!(batch::fused_rounds() - f0, 1, "one peek_round = one fused kernel call");
+    assert_eq!(
+        batch::row_aggregations() - r0,
+        distinct_rows,
+        "each distinct primary/partner row must be aggregated exactly once per round"
+    );
+
+    // Bitwise equivalence against both witness paths.
+    let batched = ledger.peek_batch(&moves).unwrap();
+    let mut mismatches = 0usize;
+    for (i, mv) in moves.iter().enumerate() {
+        let seq = ledger.peek(*mv).unwrap();
+        if fused[i].to_bits() != seq.to_bits() || fused[i].to_bits() != batched[i].to_bits() {
+            mismatches += 1;
+        }
+    }
+    assert_eq!(
+        mismatches, 0,
+        "fused round objectives must be bit-identical to peek_batch and sequential peeks"
+    );
+
+    // Throughput: the same candidates through the fused kernel vs one
+    // sequential peek each.
+    const ITERS: usize = 5;
+    let t0 = std::time::Instant::now();
+    for _ in 0..ITERS {
+        std::hint::black_box(ledger.peek_round(&batch).unwrap());
+    }
+    let fused_secs = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    for _ in 0..ITERS {
+        for &mv in &moves {
+            std::hint::black_box(ledger.peek(mv).unwrap());
+        }
+    }
+    let seq_secs = t1.elapsed().as_secs_f64();
+    let fused_cps = (ITERS * moves.len()) as f64 / fused_secs.max(1e-12);
+    let seq_cps = (ITERS * moves.len()) as f64 / seq_secs.max(1e-12);
+    println!(
+        "--- fused round synt1/Blocked: {} candidates ({} distinct rows) | \
+         fused {:.0} cand/s | sequential {:.0} cand/s ({:.2}x)",
+        moves.len(),
+        distinct_rows,
+        fused_cps,
+        seq_cps,
+        fused_cps / seq_cps.max(1e-12)
+    );
+    assert!(
+        fused_cps >= seq_cps,
+        "fused round scoring regressed below sequential peeks: {fused_cps:.0} < {seq_cps:.0}"
+    );
+
+    // One fused call per entered descent round, end to end through `run`
+    // (an exhausted budget enters `moves` rounds; an early break one more).
+    let f1 = batch::fused_rounds();
+    let refiner = Refiner::default();
+    let rep =
+        refiner.run(&NativeScorer, ctx.dense_traffic(), &start, &w, cluster).unwrap();
+    let entered = if rep.moves == refiner.max_rounds { rep.moves } else { rep.moves + 1 };
+    assert_eq!(
+        batch::fused_rounds() - f1,
+        entered as u64,
+        "descend must issue exactly one fused scoring call per entered round"
+    );
+    assert_eq!(rep.batched_fallbacks, 0, "native path must not count PJRT fallbacks");
+    println!(
+        "(contract ok: {} fused calls for {} accepted moves, {} delta evals)",
+        entered, rep.moves, rep.delta_evals
+    );
+
+    let doc = Obj::new()
+        .str("bench", "fused_round")
+        .str("workload", "synt1")
+        .int("procs", w.total_procs() as u64)
+        .int("nodes", cluster.nodes as u64)
+        .int("batch_len", moves.len() as u64)
+        .num("fused_cands_per_sec", fused_cps)
+        .num("sequential_cands_per_sec", seq_cps)
+        .num("speedup", fused_cps / seq_cps.max(1e-12))
+        .int("fused_calls", entered as u64)
+        .int("row_aggregations", distinct_rows)
+        .int("moves", rep.moves as u64)
+        .int("delta_evals", rep.delta_evals as u64)
+        .int("batched_fallbacks", rep.batched_fallbacks)
+        .build();
+    std::fs::write("BENCH_cost_model.json", doc).expect("write BENCH_cost_model.json");
+    println!("(wrote BENCH_cost_model.json)");
 }

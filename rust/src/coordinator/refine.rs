@@ -8,14 +8,19 @@
 //!   abstraction (native + PJRT implementations in [`crate::runtime`]), and
 //!   the O(P) delta evaluator.
 //! * [`Refiner`] (here) is the pluggable search stage: it seeds a ledger
-//!   with **one** full scorer pass, evaluates each hot process's candidate
-//!   moves through one batched [`LoadLedger::peek_batch`] pass over its
-//!   traffic rows, and re-verifies against one final full pass — where the
-//!   pre-ledger implementation paid a full O(P²) recompute per candidate.
+//!   with **one** full scorer pass, scores each descent round's whole
+//!   candidate set through **one** fused kernel call
+//!   ([`LoadLedger::peek_round`] over a [`CandidateBatch`], see
+//!   [`crate::cost::batch`]), and re-verifies against one final full pass —
+//!   where the pre-ledger implementation paid a full O(P²) recompute per
+//!   candidate and the pre-fused loop one `peek_batch` per hot process.
 //!   The inner loop is exposed as [`Refiner::descend`], which runs on an
 //!   *existing* ledger with no seed and no verify — the online service
 //!   descends on its persistent [`LoadLedger::live`] ledger so a refined
 //!   replay event costs O(P) total, not one O(P²) pass per event.
+//!   [`Refiner::descend_with`] additionally accepts any
+//!   [`RoundScorer`] backend (native fused kernel, or the `pjrt` lowering
+//!   onto the batched cost artifact).
 //! * [`crate::coordinator::pipeline::RefineStage`] lifts the stage into the
 //!   composable placement pipeline, giving every strategy a `+r` variant
 //!   ([`crate::coordinator::MapperSpec`] lowers `B+r` to `[map, refine]`);
@@ -27,7 +32,7 @@
 
 use crate::coordinator::Placement;
 pub use crate::cost::{NodeLoads, Scorer};
-use crate::cost::{JobDelta, LoadLedger, Move};
+use crate::cost::{batch, CandidateBatch, FusedKernel, JobDelta, LoadLedger, RoundScorer};
 use crate::error::Result;
 use crate::model::sparse::SparseTraffic;
 use crate::model::topology::{ClusterSpec, CoreId};
@@ -50,6 +55,12 @@ pub struct RefineReport {
     pub evaluations: usize,
     /// O(P) ledger delta evaluations (one per candidate move considered).
     pub delta_evals: usize,
+    /// PJRT `score_batch` sequential fallbacks observed during this run
+    /// (process-wide counter delta, see
+    /// [`crate::cost::batch::score_batch_fallbacks`]). Always `0` on the
+    /// native path; under `--features pjrt` a `0` here proves the batched
+    /// `cost_model_batched` artifact actually ran.
+    pub batched_fallbacks: u64,
 }
 
 /// Outcome of one [`Refiner::descend`] pass over an existing ledger — the
@@ -73,10 +84,11 @@ pub struct DescentStats {
 /// core) and keep the best improving move, until no move improves or
 /// `max_rounds` is exhausted.
 ///
-/// Candidate moves are scored through [`LoadLedger::peek_batch`] — one pass
-/// over each hot process's traffic rows covers all of its candidates; the
-/// full scorer runs exactly twice (seed + verify) regardless of how many
-/// candidates are considered.
+/// Each round's full candidate set is scored through **one** fused kernel
+/// call ([`LoadLedger::peek_round`]): every distinct primary/partner
+/// traffic row is aggregated exactly once per round, and the full scorer
+/// runs exactly twice (seed + verify) regardless of how many candidates
+/// are considered.
 #[derive(Debug, Clone, Copy)]
 pub struct Refiner {
     /// Maximum accepted moves (one per round).
@@ -133,7 +145,9 @@ impl Refiner {
         let mut ledger = LoadLedger::new(scorer, traffic, start, cluster)?;
         let mut evaluations = 1usize; // the ledger seed pass
         let before = ledger.objective();
+        let fallbacks0 = batch::score_batch_fallbacks();
         let stats = self.descend(&mut ledger, usable)?;
+        let batched_fallbacks = batch::score_batch_fallbacks() - fallbacks0;
         let current = stats.objective;
 
         // Exact-equivalence guarantee: one verifying full recompute is the
@@ -158,6 +172,7 @@ impl Refiner {
             moves: stats.moves,
             evaluations,
             delta_evals: stats.delta_evals,
+            batched_fallbacks,
         })
     }
 
@@ -183,7 +198,9 @@ impl Refiner {
         let mut ledger = LoadLedger::from_sparse(traffic, start, cluster)?;
         let mut evaluations = 1usize; // the sparse seed scatter
         let before = ledger.objective();
+        let fallbacks0 = batch::score_batch_fallbacks();
         let stats = self.descend(&mut ledger, usable)?;
+        let batched_fallbacks = batch::score_batch_fallbacks() - fallbacks0;
         let current = stats.objective;
 
         // Same exact-equivalence guarantee as the dense path: one verifying
@@ -207,6 +224,7 @@ impl Refiner {
             moves: stats.moves,
             evaluations,
             delta_evals: stats.delta_evals,
+            batched_fallbacks,
         })
     }
 
@@ -214,8 +232,8 @@ impl Refiner {
     /// [`Refiner::run_constrained`], exposed so a persistent ledger (the
     /// online service's [`crate::cost::LoadLedger::live`] mode) can be
     /// refined in place with **zero** full scorer passes — no seed, no
-    /// verify, just O(P) candidate deltas per round. Accepted moves are
-    /// committed into the ledger; read the refined placement back with
+    /// verify, just one fused round-scoring call per round. Accepted moves
+    /// are committed into the ledger; read the refined placement back with
     /// [`LoadLedger::placement`]. Migrate targets are restricted to free
     /// cores admitted by `usable` (pass `|_| true` for an unconstrained
     /// descent — exactly what [`Refiner::run`] does after seeding).
@@ -223,6 +241,21 @@ impl Refiner {
         &self,
         ledger: &mut LoadLedger<'_>,
         usable: impl Fn(CoreId) -> bool,
+    ) -> Result<DescentStats> {
+        self.descend_with(ledger, usable, &FusedKernel)
+    }
+
+    /// [`Refiner::descend`] with an explicit round-scoring backend: the
+    /// native [`FusedKernel`] (the default — exact, carries the bitwise
+    /// contract) or the `pjrt` lowering onto the batched cost artifact
+    /// (approximate f32; see `PjrtScorer::score_round`). The search is
+    /// identical either way — only the kernel that scores each round's
+    /// [`CandidateBatch`] changes.
+    pub fn descend_with(
+        &self,
+        ledger: &mut LoadLedger<'_>,
+        usable: impl Fn(CoreId) -> bool,
+        round_scorer: &dyn RoundScorer,
     ) -> Result<DescentStats> {
         let cluster = ledger.cluster();
         let mut delta_evals = 0usize;
@@ -232,8 +265,13 @@ impl Refiner {
         for _ in 0..self.max_rounds {
             let hot = ledger.hottest_node();
             let hot_procs = ledger.procs_on(hot);
-            let cold: std::collections::BTreeSet<usize> =
-                ledger.coldest_nodes(self.cold_pool, hot).into_iter().collect();
+            // Cold-node membership as a flat mask: one O(nodes) fill per
+            // round, O(1) per candidate probe (was a BTreeSet lookup per
+            // process per hot process).
+            let mut cold_mask = vec![false; cluster.nodes];
+            for n in ledger.coldest_nodes(self.cold_pool, hot) {
+                cold_mask[n] = true;
+            }
             // One free core per non-hot node is enough — cores of a node
             // are interchangeable at this granularity. The ledger's free
             // map is updated on every accepted move (and `apply` rejects
@@ -245,39 +283,42 @@ impl Refiner {
                 .filter_map(|n| ledger.free_core_on_where(n, &usable))
                 .collect();
 
-            let mut best: Option<(Move, f64)> = None;
+            // The whole round's candidates, assembled once and scored by a
+            // single fused kernel call — every distinct primary/partner
+            // traffic row is aggregated exactly once per round, where the
+            // per-hot-process `peek_batch` loop re-walked shared swap
+            // partners per candidate (and the pre-ledger implementation
+            // ran a full O(P²) scorer pass per candidate). Candidate order
+            // is unchanged and is part of the contract: swaps by ascending
+            // partner id, then migrates in free-target order, across hot
+            // processes in `procs_on` order — ties keep resolving to the
+            // same move as the sequential loops.
+            let mut batch = CandidateBatch::with_capacity(
+                hot_procs.len() * (ledger.len() + free_targets.len()),
+            );
             for &a in &hot_procs {
-                // All of one hot process's candidates go through a single
-                // batched evaluation: `peek_batch` walks `a`'s traffic rows
-                // once and shares the aggregates across every move (swap
-                // partners still cost one row walk each; migrates become
-                // O(nodes)) — the pre-batch loop re-walked `a`'s rows and
-                // cloned the load vectors per candidate, and the pre-ledger
-                // implementation ran a full O(P²) scorer pass. Candidate
-                // order is unchanged: swaps by ascending partner id, then
-                // migrates in free-target order.
-                let mut cands: Vec<Move> = Vec::new();
                 for b in 0..ledger.len() {
-                    if b != a && cold.contains(&ledger.node_of(b)) {
-                        cands.push(Move::Swap(a, b));
+                    if b != a && cold_mask[ledger.node_of(b)] {
+                        batch.push_swap(a, b);
                     }
                 }
                 for &target in &free_targets {
-                    cands.push(Move::Migrate(a, target));
+                    batch.push_migrate(a, target);
                 }
-                let objs = ledger.peek_batch(&cands)?;
-                delta_evals += cands.len();
-                for (&mv, obj) in cands.iter().zip(objs) {
-                    if obj < current - self.min_gain
-                        && best.map(|(_, bo)| obj < bo).unwrap_or(true)
-                    {
-                        best = Some((mv, obj));
-                    }
+            }
+            let objs = round_scorer.score_round(ledger, &batch)?;
+            delta_evals += batch.len();
+            let mut best: Option<(usize, f64)> = None;
+            for (i, obj) in objs.into_iter().enumerate() {
+                if obj < current - self.min_gain
+                    && best.map(|(_, bo)| obj < bo).unwrap_or(true)
+                {
+                    best = Some((i, obj));
                 }
             }
             match best {
-                Some((mv, obj)) => {
-                    ledger.apply(mv)?;
+                Some((i, obj)) => {
+                    ledger.apply(batch.get(i))?;
                     ledger.commit(); // accepted — drop the undo history
                     current = obj;
                     moves += 1;
@@ -502,6 +543,41 @@ mod tests {
         let result: std::collections::BTreeSet<usize> =
             masked.placement.core_of.iter().copied().collect();
         assert_eq!(result, owned, "masked sparse refinement must stay on owned cores");
+    }
+
+    /// Every entered descent round issues one fused kernel call, the
+    /// native path never trips the PJRT fallback counter, and
+    /// `descend_with(&FusedKernel)` *is* `descend`.
+    #[test]
+    fn descend_scores_rounds_through_the_fused_kernel() {
+        let (traffic, w, cluster) = a2a(8);
+        let start = MapperKind::Blocked.build().map_workload(&w, &cluster).unwrap();
+        let fused0 = crate::cost::batch::fused_rounds();
+        let rep = Refiner::default().run(&NativeScorer, &traffic, &start, &w, &cluster).unwrap();
+        let entered = if rep.moves == Refiner::default().max_rounds {
+            rep.moves
+        } else {
+            rep.moves + 1
+        };
+        // Process-wide counter: other tests may add calls concurrently, so
+        // only the lower bound is race-safe here (the exact one-call-per-
+        // round count is asserted by the single-threaded bench).
+        assert!(
+            crate::cost::batch::fused_rounds() - fused0 >= entered as u64,
+            "one fused scoring call per entered round"
+        );
+        assert_eq!(rep.batched_fallbacks, 0, "native path has no PJRT fallback");
+
+        let mut a = LoadLedger::new(&NativeScorer, &traffic, &start, &cluster).unwrap();
+        let mut b = LoadLedger::new(&NativeScorer, &traffic, &start, &cluster).unwrap();
+        let sa = Refiner::default().descend(&mut a, |_| true).unwrap();
+        let sb = Refiner::default()
+            .descend_with(&mut b, |_| true, &crate::cost::FusedKernel)
+            .unwrap();
+        assert_eq!(sa.moves, sb.moves);
+        assert_eq!(sa.delta_evals, sb.delta_evals);
+        assert_eq!(sa.objective.to_bits(), sb.objective.to_bits());
+        assert_eq!(a.placement(), b.placement());
     }
 
     #[test]

@@ -1,0 +1,666 @@
+//! Fused round-level candidate scoring: one kernel call scores **every**
+//! candidate move of a refinement round (ISSUE 8).
+//!
+//! [`LoadLedger::peek_batch`] amortizes one traffic-row pass over all
+//! candidates of a single hot process, but a descent round considers the
+//! candidates of *all* hot processes — and every swap candidate re-walks
+//! its partner's row even when the same partner appears under several hot
+//! processes. The fused kernel closes both gaps:
+//!
+//! 1. **Flat SoA batch** — [`CandidateBatch`] stores one whole round's
+//!    candidates as parallel arrays (kinds, primaries, partner/target
+//!    slots), assembled once per round by
+//!    [`crate::coordinator::refine::Refiner::descend`]. Node endpoints are
+//!    resolved against the live ledger at scoring time, so a batch is a
+//!    pure description of moves, never stale placement state.
+//! 2. **Grouped row aggregation** — every distinct primary *and* every
+//!    distinct swap partner has its [`RowVols`] aggregates built **exactly
+//!    once per round** (counted by [`row_aggregations`]). The swap-time
+//!    partner adjustment (`row_vols(b, moved: Some((a, nb)))` in the
+//!    per-candidate path) collapses to an O(1) bucket fix-up: the walk
+//!    captures the `a↔b` pair rates, and re-homing `a` from `na` to `nb`
+//!    only moves those two rates between the two buckets the shift reads —
+//!    exact (hence bit-identical) on integer-valued rates, where every
+//!    bucket sum is an exactly-represented integer. Partner walks fan out
+//!    over [`crate::par::par_map`] on large ledgers; slot-ordered results
+//!    keep the output bit-identical to the serial walk.
+//! 3. **Round load summary** — per-NIC-side penalty terms and their
+//!    running left-fold prefixes are precomputed once per round, so each
+//!    candidate pays O(touched nodes) fresh penalty evaluations (4: tx/rx
+//!    of the two endpoint nodes) plus one tail re-fold, instead of the
+//!    full [`NodeLoads::objective`](crate::cost::NodeLoads::objective)
+//!    recompute per candidate. A top-2-per-metric *max* summary — the
+//!    classic trick for bottleneck objectives — cannot work here without
+//!    breaking the bitwise contract: the objective is a **sum** whose IEEE
+//!    left-fold value depends on every term in order, so the kernel reuses
+//!    the longest unchanged fold prefix (bit-exactly reusable by
+//!    determinism of the fold) and re-adds the tail. Touched penalty
+//!    terms: O(1); the term precompute is an element-wise chunked loop
+//!    ([`crate::cost::loads::penalty_terms_into`]) the compiler can
+//!    vectorize, unlike the fold itself, whose order *is* the contract.
+//!
+//! ## Bitwise contract
+//!
+//! [`LoadLedger::peek_round`] equals [`LoadLedger::peek_batch`] equals
+//! sequential [`LoadLedger::peek`] calls candidate-for-candidate — exactly
+//! up to FP associativity, and **bit for bit** on integer-valued rates
+//! below 2⁵³ (every builtin and testkit workload): the per-candidate load
+//! shifts go through the very same [`LoadLedger::shift_vols_parts`]
+//! expression tree, the bucket fix-up is exact integer arithmetic, and the
+//! objective fold re-runs the same additions in the same order from the
+//! last unchanged prefix. Invalid candidates error with the same messages,
+//! at the same candidate, as the sequential path. Enforced by the property
+//! tests in `tests/property_invariants.rs`, the in-module tests below, and
+//! the asserting `perf_cost_model` CI bench.
+//!
+//! ## Counters
+//!
+//! Process-wide counting instrumentation in the style of
+//! [`LoadLedger::seed_passes`]: [`fused_rounds`] counts kernel calls (the
+//! refiner issues exactly one per descent round), [`row_aggregations`]
+//! counts [`RowVols`] row walks (at most one per distinct primary/partner
+//! per fused call), and [`score_batch_fallbacks`] counts the PJRT batched
+//! artifact's sequential fallbacks (see
+//! `PjrtScorer::score_batch`). Asserted by the `perf_cost_model` bench;
+//! test binaries sharing a process must treat deltas as lower bounds.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::Placement;
+use crate::cost::ledger::{LoadLedger, Move, RowVols};
+use crate::cost::loads::{penalty, penalty_terms_into};
+use crate::error::{Error, Result};
+use crate::model::topology::{CoreId, NodeId};
+use crate::model::workload::ProcId;
+use crate::par;
+
+/// Process-wide count of fused round-scoring kernel calls
+/// ([`LoadLedger::peek_round`]).
+static FUSED_ROUNDS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of per-process row aggregations ([`RowVols`] walks),
+/// bumped by the ledger for every walk on any peek path.
+static ROW_AGGREGATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of PJRT `score_batch` sequential fallbacks (no
+/// `cost_model_batched` artifact fit the problem).
+static SCORE_BATCH_FALLBACKS: AtomicU64 = AtomicU64::new(0);
+
+/// Fused kernel calls since process start. One descent round issues exactly
+/// one (asserted by the `perf_cost_model` bench, which owns its process;
+/// concurrent test binaries must only assert monotone deltas).
+pub fn fused_rounds() -> u64 {
+    FUSED_ROUNDS.load(Ordering::Relaxed)
+}
+
+/// Row-aggregate walks since process start. Within one fused call every
+/// distinct primary/partner row is walked at most once.
+pub fn row_aggregations() -> u64 {
+    ROW_AGGREGATIONS.load(Ordering::Relaxed)
+}
+
+/// PJRT batched-scoring sequential fallbacks since process start — `0`
+/// deltas prove the `cost_model_batched` artifact actually ran.
+pub fn score_batch_fallbacks() -> u64 {
+    SCORE_BATCH_FALLBACKS.load(Ordering::Relaxed)
+}
+
+pub(crate) fn note_row_aggregation() {
+    ROW_AGGREGATIONS.fetch_add(1, Ordering::Relaxed);
+}
+
+pub(crate) fn note_score_batch_fallback() {
+    SCORE_BATCH_FALLBACKS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Candidate kind discriminant of the SoA batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Swap,
+    Migrate,
+}
+
+/// One refinement round's candidate moves in flat structure-of-arrays
+/// form: parallel `kinds` / `primaries` / `others` columns (`others[i]` is
+/// the swap partner process or the migrate target core). The refiner
+/// assembles one per round — swaps by ascending partner id then migrates
+/// in free-target order, across hot processes in `procs_on` order — and
+/// scores it with a single [`LoadLedger::peek_round`] call. Node endpoints
+/// are *not* stored: they resolve against the ledger at scoring time, so
+/// the batch never carries placement state that could go stale.
+#[derive(Debug, Clone, Default)]
+pub struct CandidateBatch {
+    kinds: Vec<Kind>,
+    primaries: Vec<ProcId>,
+    others: Vec<usize>,
+}
+
+impl CandidateBatch {
+    /// Empty batch.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Empty batch with room for `cap` candidates.
+    pub fn with_capacity(cap: usize) -> Self {
+        CandidateBatch {
+            kinds: Vec::with_capacity(cap),
+            primaries: Vec::with_capacity(cap),
+            others: Vec::with_capacity(cap),
+        }
+    }
+
+    /// Append a swap of processes `a` and `b`.
+    pub fn push_swap(&mut self, a: ProcId, b: ProcId) {
+        self.kinds.push(Kind::Swap);
+        self.primaries.push(a);
+        self.others.push(b);
+    }
+
+    /// Append a migrate of process `p` to free core `core`.
+    pub fn push_migrate(&mut self, p: ProcId, core: CoreId) {
+        self.kinds.push(Kind::Migrate);
+        self.primaries.push(p);
+        self.others.push(core);
+    }
+
+    /// Number of candidates.
+    pub fn len(&self) -> usize {
+        self.kinds.len()
+    }
+
+    /// True when no candidates were pushed.
+    pub fn is_empty(&self) -> bool {
+        self.kinds.is_empty()
+    }
+
+    /// Candidate `i` as a [`Move`].
+    pub fn get(&self, i: usize) -> Move {
+        match self.kinds[i] {
+            Kind::Swap => Move::Swap(self.primaries[i], self.others[i]),
+            Kind::Migrate => Move::Migrate(self.primaries[i], self.others[i]),
+        }
+    }
+
+    /// All candidates as [`Move`]s, in batch order — the interop view the
+    /// equivalence tests feed to [`LoadLedger::peek_batch`].
+    pub fn moves(&self) -> Vec<Move> {
+        (0..self.len()).map(|i| self.get(i)).collect()
+    }
+
+    /// Batch over an existing move list (interop/testing convenience).
+    pub fn from_moves(moves: &[Move]) -> Self {
+        let mut batch = CandidateBatch::with_capacity(moves.len());
+        for &mv in moves {
+            match mv {
+                Move::Swap(a, b) => batch.push_swap(a, b),
+                Move::Migrate(p, core) => batch.push_migrate(p, core),
+            }
+        }
+        batch
+    }
+
+    /// Materialize one full candidate placement per batch entry against
+    /// the ledger's current placement — the operand layout of the PJRT
+    /// `cost_model_batched` lowering (`PjrtScorer::score_round` packs
+    /// these into one `(B, P, N)` one-hot stack per dispatch). Validates
+    /// each candidate with the same checks and messages as
+    /// [`LoadLedger::peek_round`].
+    pub fn placements(&self, ledger: &LoadLedger<'_>) -> Result<Vec<Placement>> {
+        validate(ledger, self)?;
+        let base = ledger.placement();
+        let mut out = Vec::with_capacity(self.len());
+        for i in 0..self.len() {
+            let mut cand = base.clone();
+            match self.get(i) {
+                Move::Swap(a, b) => cand.core_of.swap(a, b),
+                Move::Migrate(p, core) => cand.core_of[p] = core,
+            }
+            out.push(cand);
+        }
+        Ok(out)
+    }
+}
+
+/// A backend that can score one round's [`CandidateBatch`] against a
+/// ledger, returning one objective per candidate in batch order — the
+/// round-level sibling of [`crate::cost::Scorer`]. [`FusedKernel`] (and
+/// [`crate::runtime::NativeScorer`], which delegates to it) is the exact
+/// native path; the `pjrt`-gated `PjrtScorer` implementation lowers the
+/// round onto the `cost_model_batched` artifact and is approximate (f32
+/// accumulation), so only the native backends carry the bitwise contract.
+pub trait RoundScorer {
+    /// Score every candidate of `batch` against the ledger's current
+    /// state, without mutating it.
+    fn score_round(&self, ledger: &LoadLedger<'_>, batch: &CandidateBatch) -> Result<Vec<f64>>;
+}
+
+/// The in-process fused kernel as a [`RoundScorer`] — the default backend
+/// [`crate::coordinator::refine::Refiner::descend`] drives.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FusedKernel;
+
+impl RoundScorer for FusedKernel {
+    fn score_round(&self, ledger: &LoadLedger<'_>, batch: &CandidateBatch) -> Result<Vec<f64>> {
+        ledger.peek_round(batch)
+    }
+}
+
+/// Fan partner walks out over worker threads only when there are enough
+/// rows to amortize the spawn and the per-row walk is heavy enough to
+/// matter; small rounds (every builtin workload) stay serial so harness
+/// sweeps already running one descent per worker thread never oversubscribe.
+const PAR_MIN_ROWS: usize = 16;
+const PAR_MIN_PROCS: usize = 2048;
+
+/// Resolved node endpoints of one candidate: `None` for same-node moves
+/// (objective unchanged), `Some((u, t))` for a relocation from `u` to `t`.
+type Endpoints = Option<(NodeId, NodeId)>;
+
+/// Validate every candidate in batch order with exactly the checks and
+/// messages of the sequential peek loop, resolving node endpoints.
+fn validate(ledger: &LoadLedger<'_>, batch: &CandidateBatch) -> Result<Vec<Endpoints>> {
+    let total_cores = ledger.cluster().total_cores();
+    let mut endpoints = Vec::with_capacity(batch.len());
+    for i in 0..batch.len() {
+        match batch.get(i) {
+            Move::Swap(a, b) => {
+                if a >= ledger.len() || b >= ledger.len() {
+                    return Err(Error::mapping(format!("ledger: swap({a},{b}) out of range")));
+                }
+                if a == b {
+                    return Err(Error::mapping(format!(
+                        "ledger: swap of process {a} with itself"
+                    )));
+                }
+                let (na, nb) = (ledger.node_of(a), ledger.node_of(b));
+                endpoints.push((na != nb).then_some((na, nb)));
+            }
+            Move::Migrate(p, core) => {
+                if p >= ledger.len() {
+                    return Err(Error::mapping(format!("ledger: migrate of bad process {p}")));
+                }
+                if core >= total_cores {
+                    return Err(Error::mapping(format!("ledger: migrate to bad core {core}")));
+                }
+                if !ledger.is_free(core) {
+                    return Err(Error::mapping(format!(
+                        "ledger: migrate target core {core} already occupied"
+                    )));
+                }
+                let (u, t) = (ledger.node_of(p), ledger.cluster().node_of_core(core));
+                endpoints.push((u != t).then_some((u, t)));
+            }
+        }
+    }
+    Ok(endpoints)
+}
+
+/// The fused round kernel behind [`LoadLedger::peek_round`] (see the
+/// module docs for the algorithm and the bitwise-contract argument).
+pub(crate) fn score_round(
+    ledger: &LoadLedger<'_>,
+    batch: &CandidateBatch,
+) -> Result<Vec<f64>> {
+    FUSED_ROUNDS.fetch_add(1, Ordering::Relaxed);
+    let endpoints = validate(ledger, batch)?;
+    if batch.is_empty() {
+        return Ok(Vec::new());
+    }
+
+    // Distinct processes whose row aggregates this round needs: primaries
+    // of cross-node candidates plus partners of cross-node swaps, in first
+    // appearance order. Swap primaries additionally get a pair-capture
+    // slot: their partner's walk records the a↔b rates the O(1) bucket
+    // fix-up needs, so no row is ever walked twice.
+    let procs = ledger.len();
+    let mut row_slot = vec![usize::MAX; procs];
+    let mut row_procs: Vec<ProcId> = Vec::new();
+    let mut pair_slot = vec![usize::MAX; procs];
+    let mut pair_count = 0usize;
+    let claim_row = |p: ProcId, row_procs: &mut Vec<ProcId>, row_slot: &mut Vec<usize>| {
+        if row_slot[p] == usize::MAX {
+            row_slot[p] = row_procs.len();
+            row_procs.push(p);
+        }
+    };
+    for (i, ep) in endpoints.iter().enumerate() {
+        if ep.is_none() {
+            continue;
+        }
+        claim_row(batch.primaries[i], &mut row_procs, &mut row_slot);
+        if batch.kinds[i] == Kind::Swap {
+            claim_row(batch.others[i], &mut row_procs, &mut row_slot);
+            if pair_slot[batch.primaries[i]] == usize::MAX {
+                pair_slot[batch.primaries[i]] = pair_count;
+                pair_count += 1;
+            }
+        }
+    }
+
+    // One aggregation walk per distinct process. Each walk also captures
+    // the rates toward every pair-slotted primary; [`par::par_map`]'s
+    // slot-ordered results keep the parallel path bit-identical to serial.
+    let pair_slot = &pair_slot;
+    let walk = |p: ProcId| -> (RowVols, Vec<(f64, f64)>) {
+        let mut captured = vec![(0.0, 0.0); pair_count];
+        let vols = ledger.row_vols_tap(p, None, |j, out, inc| {
+            if pair_slot[j] != usize::MAX {
+                captured[pair_slot[j]] = (out, inc);
+            }
+        });
+        (vols, captured)
+    };
+    let rows: Vec<(RowVols, Vec<(f64, f64)>)> =
+        if row_procs.len() >= PAR_MIN_ROWS && procs >= PAR_MIN_PROCS {
+            par::par_map(row_procs.clone(), par::default_threads(), walk)
+        } else {
+            row_procs.iter().map(|&p| walk(p)).collect()
+        };
+
+    // Round load summary: per-NIC-side penalty terms (tx then rx, the
+    // objective's side order) and running left-fold prefixes. `prefix[k]`
+    // is bit-identical to folding `terms[..k]`, so a candidate touching
+    // nodes `u`,`t` resumes the fold at `min(u,t)` with only its 4 touched
+    // terms freshly evaluated — the O(touched-nodes) summary.
+    let nodes = ledger.cluster().nodes;
+    let nic_bw = ledger.nic_bw();
+    let base = ledger.loads();
+    let mut terms = vec![0.0; 2 * nodes];
+    penalty_terms_into(&base.nic_tx, nic_bw, &mut terms[..nodes]);
+    penalty_terms_into(&base.nic_rx, nic_bw, &mut terms[nodes..]);
+    let mut prefix = Vec::with_capacity(2 * nodes + 1);
+    let mut acc = 0.0f64;
+    prefix.push(acc);
+    for &term in &terms {
+        acc += term;
+        prefix.push(acc);
+    }
+    let base_obj = prefix[2 * nodes];
+
+    let mut scratch = base.clone();
+    let mut objs = Vec::with_capacity(batch.len());
+    for (i, ep) in endpoints.iter().enumerate() {
+        let Some((u, t)) = *ep else {
+            objs.push(base_obj);
+            continue;
+        };
+        let va = &rows[row_slot[batch.primaries[i]]].0;
+        LoadLedger::shift_vols(&mut scratch, va, u, t);
+        if batch.kinds[i] == Kind::Swap {
+            // Partner shift on top of the primary's, exactly as the
+            // per-candidate path layers them — with the partner's base
+            // aggregates fixed up for the primary's re-homing `u -> t`
+            // instead of a fresh `row_vols(b, Some((a, t)))` walk. Only
+            // the two buckets the shift reads change, by exactly the a↔b
+            // pair rates (guarded like the walk guards its accumulation).
+            let (vb, captured) = &rows[row_slot[batch.others[i]]];
+            let (out_ba, inc_ba) = captured[pair_slot[batch.primaries[i]]];
+            let (mut out_u, mut inc_u) = (vb.out[t], vb.inc[t]);
+            let (mut out_t, mut inc_t) = (vb.out[u], vb.inc[u]);
+            if out_ba > 0.0 {
+                out_u += out_ba;
+                out_t -= out_ba;
+            }
+            if inc_ba > 0.0 {
+                inc_u += inc_ba;
+                inc_t -= inc_ba;
+            }
+            LoadLedger::shift_vols_parts(
+                &mut scratch,
+                out_u,
+                inc_u,
+                out_t,
+                inc_t,
+                vb.out_tot,
+                vb.inc_tot,
+                t,
+                u,
+            );
+        }
+        // Objective: 4 fresh penalty terms, then resume the base fold from
+        // the last index the candidate left untouched.
+        let (lo, hi) = (u.min(t), u.max(t));
+        let idx = [lo, hi, nodes + lo, nodes + hi];
+        let fresh = [
+            penalty(scratch.nic_tx[lo] / nic_bw),
+            penalty(scratch.nic_tx[hi] / nic_bw),
+            penalty(scratch.nic_rx[lo] / nic_bw),
+            penalty(scratch.nic_rx[hi] / nic_bw),
+        ];
+        let saved = [terms[idx[0]], terms[idx[1]], terms[idx[2]], terms[idx[3]]];
+        for (k, &ix) in idx.iter().enumerate() {
+            terms[ix] = fresh[k];
+        }
+        let mut obj = prefix[lo];
+        for &term in &terms[lo..] {
+            obj += term;
+        }
+        objs.push(obj);
+        for (k, &ix) in idx.iter().enumerate() {
+            terms[ix] = saved[k];
+        }
+        ledger.restore_nodes(&mut scratch, u, t);
+    }
+    Ok(objs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::LoadLedger;
+    use crate::model::pattern::Pattern;
+    use crate::model::sparse::SparseTraffic;
+    use crate::model::topology::ClusterSpec;
+    use crate::model::traffic::TrafficMatrix;
+    use crate::model::workload::{JobSpec, Workload};
+    use crate::runtime::NativeScorer;
+
+    fn setup(procs: usize) -> (TrafficMatrix, Workload, ClusterSpec) {
+        let cluster = ClusterSpec::small_test_cluster();
+        let w = Workload::new(
+            "t",
+            vec![
+                JobSpec::synthetic(Pattern::AllToAll, procs / 2, 64_000, 10.0, 100),
+                JobSpec::synthetic(Pattern::Linear, procs - procs / 2, 32_000, 5.0, 50),
+            ],
+        )
+        .unwrap();
+        (TrafficMatrix::of_workload(&w), w, cluster)
+    }
+
+    /// A descent-shaped round batch: every hot-node process against the
+    /// cold pool plus one free core per other node.
+    fn round_batch(ledger: &LoadLedger<'_>) -> CandidateBatch {
+        let cluster = ledger.cluster();
+        let hot = ledger.hottest_node();
+        let mut cold_mask = vec![false; cluster.nodes];
+        for n in ledger.coldest_nodes(3, hot) {
+            cold_mask[n] = true;
+        }
+        let free_targets: Vec<usize> = (0..cluster.nodes)
+            .filter(|&n| n != hot)
+            .filter_map(|n| ledger.free_core_on(n))
+            .collect();
+        let mut batch = CandidateBatch::new();
+        for a in ledger.procs_on(hot) {
+            for b in 0..ledger.len() {
+                if b != a && cold_mask[ledger.node_of(b)] {
+                    batch.push_swap(a, b);
+                }
+            }
+            for &target in &free_targets {
+                batch.push_migrate(a, target);
+            }
+        }
+        batch
+    }
+
+    fn assert_bits_equal(fused: &[f64], other: &[f64], what: &str) {
+        assert_eq!(fused.len(), other.len(), "{what}: length");
+        for (i, (f, o)) in fused.iter().zip(other).enumerate() {
+            assert_eq!(f.to_bits(), o.to_bits(), "{what}: candidate {i} diverged");
+        }
+    }
+
+    #[test]
+    fn soa_batch_round_trips_moves() {
+        let mut batch = CandidateBatch::with_capacity(3);
+        batch.push_swap(1, 7);
+        batch.push_migrate(2, 40);
+        batch.push_swap(3, 0);
+        assert_eq!(batch.len(), 3);
+        assert!(!batch.is_empty());
+        assert_eq!(batch.get(0), Move::Swap(1, 7));
+        assert_eq!(batch.get(1), Move::Migrate(2, 40));
+        let moves = batch.moves();
+        assert_eq!(moves, vec![Move::Swap(1, 7), Move::Migrate(2, 40), Move::Swap(3, 0)]);
+        let rebuilt = CandidateBatch::from_moves(&moves);
+        assert_eq!(rebuilt.moves(), moves);
+        assert!(CandidateBatch::new().is_empty());
+    }
+
+    #[test]
+    fn fused_round_bit_equals_batched_and_sequential_peeks() {
+        let (traffic, _w, cluster) = setup(12);
+        let start = Placement::new((0..12).collect());
+        let mut ledger = LoadLedger::new(&NativeScorer, &traffic, &start, &cluster).unwrap();
+        let batch = round_batch(&ledger);
+        assert!(!batch.is_empty(), "spread placement must expose candidates");
+        let fused = ledger.peek_round(&batch).unwrap();
+        let batched = ledger.peek_batch(&batch.moves()).unwrap();
+        assert_bits_equal(&fused, &batched, "fused vs peek_batch");
+        let seq: Vec<f64> =
+            batch.moves().iter().map(|&mv| ledger.peek(mv).unwrap()).collect();
+        assert_bits_equal(&fused, &seq, "fused vs sequential peeks");
+    }
+
+    #[test]
+    fn shared_partners_and_role_overlap_stay_bit_exact() {
+        // The grouped-aggregation fix-up paths: one partner shared by many
+        // primaries, a process serving as both primary and partner, plus
+        // duplicates, same-node swaps, and migrates in one mixed batch.
+        let (traffic, _w, cluster) = setup(10);
+        let start = Placement::new(vec![0, 1, 4, 5, 8, 9, 12, 13, 2, 6]);
+        let mut ledger = LoadLedger::new(&NativeScorer, &traffic, &start, &cluster).unwrap();
+        let free: Vec<usize> =
+            (0..cluster.total_cores()).filter(|&c| ledger.is_free(c)).collect();
+        let mut batch = CandidateBatch::new();
+        for a in [0usize, 2, 4, 6] {
+            batch.push_swap(a, 7); // shared partner across primaries
+        }
+        batch.push_swap(7, 0); // partner of the above, now primary
+        batch.push_swap(0, 1); // same-node swap (cores 0 and 1)
+        batch.push_swap(3, 5);
+        batch.push_swap(3, 5); // duplicate candidate
+        batch.push_migrate(1, free[0]);
+        batch.push_migrate(9, *free.last().unwrap());
+        let fused = ledger.peek_round(&batch).unwrap();
+        let seq: Vec<f64> =
+            batch.moves().iter().map(|&mv| ledger.peek(mv).unwrap()).collect();
+        assert_bits_equal(&fused, &seq, "mixed batch");
+        let batched = ledger.peek_batch(&batch.moves()).unwrap();
+        assert_bits_equal(&fused, &batched, "mixed batch vs peek_batch");
+    }
+
+    #[test]
+    fn fused_round_works_on_a_live_block_ledger() {
+        // The online path: a block-store ledger must route through the
+        // fused kernel with the same bitwise guarantees as the whole-matrix
+        // store (block offsets in the pair walk included).
+        let cluster = ClusterSpec::small_test_cluster();
+        let j1 = JobSpec::synthetic(Pattern::AllToAll, 6, 64_000, 10.0, 100);
+        let j2 = JobSpec::synthetic(Pattern::Linear, 5, 32_000, 5.0, 50);
+        let mut live = LoadLedger::live(&cluster);
+        live.admit_block(SparseTraffic::of_job(&j1), &[0, 1, 4, 5, 8, 9]).unwrap();
+        live.admit_block(SparseTraffic::of_job(&j2), &[12, 13, 2, 6, 10]).unwrap();
+        let batch = round_batch(&live);
+        assert!(!batch.is_empty());
+        let fused = live.peek_round(&batch).unwrap();
+        let seq: Vec<f64> = batch.moves().iter().map(|&mv| live.peek(mv).unwrap()).collect();
+        assert_bits_equal(&fused, &seq, "live block ledger");
+    }
+
+    #[test]
+    fn fused_round_rejects_invalid_candidates_like_peek_batch() {
+        let (traffic, _w, cluster) = setup(8);
+        let start = Placement::new((0..8).collect());
+        let ledger = LoadLedger::new(&NativeScorer, &traffic, &start, &cluster).unwrap();
+        let occupied = start.core_of[3];
+        let bad: [Vec<Move>; 4] = [
+            vec![Move::Swap(0, 99)],
+            vec![Move::Swap(2, 2)],
+            vec![Move::Migrate(99, 15)],
+            vec![Move::Swap(0, 1), Move::Migrate(0, occupied)],
+        ];
+        for moves in &bad {
+            let fused = ledger.peek_round(&CandidateBatch::from_moves(moves));
+            let batched = ledger.peek_batch(moves);
+            let fe = fused.expect_err("fused must reject").to_string();
+            let be = batched.expect_err("peek_batch must reject").to_string();
+            assert_eq!(fe, be, "error messages must match for {moves:?}");
+        }
+        // Out-of-range migrate core: same message as apply/peek_batch.
+        let err = ledger
+            .peek_round(&CandidateBatch::from_moves(&[Move::Migrate(0, 9999)]))
+            .expect_err("bad core");
+        assert!(err.to_string().contains("bad core"), "{err}");
+    }
+
+    #[test]
+    fn empty_batches_and_counters() {
+        let (traffic, _w, cluster) = setup(8);
+        let start = Placement::new((0..8).collect());
+        let ledger = LoadLedger::new(&NativeScorer, &traffic, &start, &cluster).unwrap();
+        let f0 = fused_rounds();
+        let objs = ledger.peek_round(&CandidateBatch::new()).unwrap();
+        assert!(objs.is_empty());
+        assert!(fused_rounds() > f0, "empty rounds still count as one fused call");
+        let r0 = row_aggregations();
+        let batch = round_batch(&ledger);
+        ledger.peek_round(&batch).unwrap();
+        assert!(row_aggregations() > r0, "cross-node candidates must aggregate rows");
+    }
+
+    #[test]
+    fn placements_materialize_candidates_for_the_batched_artifact() {
+        let (traffic, _w, cluster) = setup(8);
+        let start = Placement::new((0..8).collect());
+        let ledger = LoadLedger::new(&NativeScorer, &traffic, &start, &cluster).unwrap();
+        let free =
+            (0..cluster.total_cores()).find(|&c| ledger.is_free(c)).unwrap();
+        let mut batch = CandidateBatch::new();
+        batch.push_swap(0, 5);
+        batch.push_migrate(2, free);
+        let placements = batch.placements(&ledger).unwrap();
+        assert_eq!(placements.len(), 2);
+        assert_eq!(placements[0].core_of[0], start.core_of[5]);
+        assert_eq!(placements[0].core_of[5], start.core_of[0]);
+        assert_eq!(placements[1].core_of[2], free);
+        // Scoring the materialized placements with the full model agrees
+        // with the fused kernel (the lowering's correctness condition).
+        use crate::cost::Scorer;
+        let fused = ledger.peek_round(&batch).unwrap();
+        for (cand, obj) in placements.iter().zip(&fused) {
+            let full = NativeScorer.score(&traffic, cand, &cluster).unwrap();
+            let full_obj = full.objective(cluster.nic_bw as f64);
+            assert_eq!(full_obj.to_bits(), obj.to_bits(), "lowering drifted");
+        }
+        // Invalid candidates are rejected with the peek messages.
+        let mut bad = CandidateBatch::new();
+        bad.push_swap(0, 0);
+        assert!(batch.placements(&ledger).is_ok());
+        assert!(bad.placements(&ledger).is_err());
+    }
+
+    #[test]
+    fn fused_kernel_round_scorer_delegates_to_peek_round() {
+        let (traffic, _w, cluster) = setup(8);
+        let start = Placement::new((0..8).collect());
+        let ledger = LoadLedger::new(&NativeScorer, &traffic, &start, &cluster).unwrap();
+        let batch = round_batch(&ledger);
+        let via_trait = FusedKernel.score_round(&ledger, &batch).unwrap();
+        let direct = ledger.peek_round(&batch).unwrap();
+        assert_bits_equal(&via_trait, &direct, "RoundScorer trait");
+    }
+}

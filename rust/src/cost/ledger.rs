@@ -44,6 +44,7 @@ use std::borrow::Cow;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::coordinator::Placement;
+use crate::cost::batch::CandidateBatch;
 use crate::cost::{JobDelta, NodeLoads, Scorer};
 use crate::error::{Error, Result};
 use crate::model::sparse::SparseTraffic;
@@ -73,14 +74,15 @@ struct Frame {
 }
 
 /// Per-node aggregates of one process's traffic row and column — the
-/// one-pass artifact behind [`LoadLedger::peek_batch`]. `out[n]`/`inc[n]`
-/// are the byte rates process `p` sends to / receives from processes hosted
-/// on node `n` (self-traffic excluded; it never touches a NIC).
-struct RowVols {
-    out: Vec<f64>,
-    inc: Vec<f64>,
-    out_tot: f64,
-    inc_tot: f64,
+/// one-pass artifact behind [`LoadLedger::peek_batch`] and the fused
+/// round kernel ([`crate::cost::batch`]). `out[n]`/`inc[n]` are the byte
+/// rates process `p` sends to / receives from processes hosted on node `n`
+/// (self-traffic excluded; it never touches a NIC).
+pub(crate) struct RowVols {
+    pub(crate) out: Vec<f64>,
+    pub(crate) inc: Vec<f64>,
+    pub(crate) out_tot: f64,
+    pub(crate) inc_tot: f64,
 }
 
 /// Owned per-job sparse traffic blocks of a live ([`LoadLedger::live`])
@@ -444,6 +446,13 @@ impl<'a> LoadLedger<'a> {
         self.loads.objective(self.nic_bw)
     }
 
+    /// NIC bandwidth divisor the objective normalizes by (the cluster's
+    /// `nic_bw` as `f64`, fixed at construction) — shared with the fused
+    /// round kernel so its penalty terms divide by the very same value.
+    pub(crate) fn nic_bw(&self) -> f64 {
+        self.nic_bw
+    }
+
     /// Node currently hosting process `p`.
     pub fn node_of(&self, p: ProcId) -> NodeId {
         self.node_of[p]
@@ -605,17 +614,19 @@ impl<'a> LoadLedger<'a> {
     /// returning one objective per move in input order.
     ///
     /// Candidates that share a primary process — all swaps/migrates of one
-    /// hot process, the shape the [`crate::coordinator::refine::Refiner`]
-    /// produces — amortize a **single pass** over that process's traffic
+    /// hot process — amortize a **single pass** over that process's traffic
     /// row/column into per-node aggregates. A migrate candidate is then an
     /// O(nodes) delta; a swap candidate still walks its *partner's* row
     /// once (the partner differs per candidate), so batching saves the
     /// primary's row walk and the per-[`Self::peek`] load-vector
     /// clone/snapshot — about half the row traffic of sequential peeks on
-    /// swap-heavy batches, not an asymptotic win. The per-primary
-    /// aggregates are the designated seam for a future SIMD/PJRT batched
-    /// cost artifact: a dense `2 × nodes` tensor per hot process of which
-    /// candidate evaluation is a pure function.
+    /// swap-heavy batches, not an asymptotic win. The refiner no longer
+    /// calls this per hot process: [`Self::peek_round`] fuses a whole
+    /// round — deduplicated primary *and* partner walks, O(touched-nodes)
+    /// objectives off a prefix-folded penalty summary, and the PJRT
+    /// round lowering — and `peek_batch` remains the single-primary
+    /// building block and the sequential witness the fused kernel is
+    /// tested against.
     ///
     /// Results equal sequential [`Self::peek`] calls exactly up to FP
     /// associativity — and **bit for bit** for the integer-valued rates of
@@ -650,7 +661,7 @@ impl<'a> LoadLedger<'a> {
                         let vb = self.row_vols(b, Some((a, nb)));
                         Self::shift_vols(&mut scratch, &vb, nb, na);
                         let obj = scratch.objective(self.nic_bw);
-                        self.restore(&mut scratch, na, nb);
+                        self.restore_nodes(&mut scratch, na, nb);
                         obj
                     }
                 }
@@ -673,7 +684,7 @@ impl<'a> LoadLedger<'a> {
                         let vp = self.primary_vols(&mut cached, p);
                         Self::shift_vols(&mut scratch, vp, u, t);
                         let obj = scratch.objective(self.nic_bw);
-                        self.restore(&mut scratch, u, t);
+                        self.restore_nodes(&mut scratch, u, t);
                         obj
                     }
                 }
@@ -681,6 +692,19 @@ impl<'a> LoadLedger<'a> {
             objs.push(obj);
         }
         Ok(objs)
+    }
+
+    /// Score one whole refinement round's [`CandidateBatch`] in a single
+    /// fused kernel call — the round-level successor of [`Self::peek_batch`]
+    /// (see [`crate::cost::batch`] for the algorithm): every distinct
+    /// primary/partner row aggregated exactly once, O(touched-nodes)
+    /// objectives off a prefix-folded penalty summary, `par`-fanned walks
+    /// on large ledgers. One objective per candidate in batch order; equal
+    /// to sequential [`Self::peek`] calls exactly up to FP associativity
+    /// and bit for bit on integer-valued rates; invalid candidates error
+    /// with the sequential path's checks and messages.
+    pub fn peek_round(&self, batch: &CandidateBatch) -> Result<Vec<f64>> {
+        crate::cost::batch::score_round(self, batch)
     }
 
     /// Aggregates of the batch's primary process, computed once per process
@@ -701,6 +725,22 @@ impl<'a> LoadLedger<'a> {
     /// peer mid-evaluation). O(nnz-per-row): the walk visits exactly the
     /// partners a guarded dense row/column scan would, in the same order.
     fn row_vols(&self, p: ProcId, moved: Option<(ProcId, NodeId)>) -> RowVols {
+        self.row_vols_tap(p, moved, |_, _, _| {})
+    }
+
+    /// [`Self::row_vols`] with a tap: `tap(j, out, inc)` observes every
+    /// non-self pair the walk visits *before* the guarded accumulation, so
+    /// the fused round kernel can capture swap-pair rates during the one
+    /// aggregation pass it performs per distinct process — no second walk.
+    /// Every call counts one row aggregation
+    /// ([`crate::cost::batch::row_aggregations`]), on every peek path.
+    pub(crate) fn row_vols_tap(
+        &self,
+        p: ProcId,
+        moved: Option<(ProcId, NodeId)>,
+        mut tap: impl FnMut(ProcId, f64, f64),
+    ) -> RowVols {
+        crate::cost::batch::note_row_aggregation();
         let nodes = self.cluster.nodes;
         let mut v = RowVols {
             out: vec![0.0; nodes],
@@ -712,6 +752,7 @@ impl<'a> LoadLedger<'a> {
             if j == p {
                 continue; // self-traffic stays intra wherever p lands
             }
+            tap(j, out, inc);
             let mut nj = self.node_of[j];
             if let Some((q, nq)) = moved {
                 if j == q {
@@ -736,15 +777,38 @@ impl<'a> LoadLedger<'a> {
     /// `u` turns inter-node, traffic with partners on `t` turns intra-node,
     /// everything else just changes endpoint. `intra` is left untouched — the
     /// objective reads only the NIC sides.
-    fn shift_vols(loads: &mut NodeLoads, v: &RowVols, u: NodeId, t: NodeId) {
-        loads.nic_tx[u] = loads.nic_tx[u] - (v.out_tot - v.out[u]) + v.inc[u];
-        loads.nic_rx[u] = loads.nic_rx[u] - (v.inc_tot - v.inc[u]) + v.out[u];
-        loads.nic_tx[t] = loads.nic_tx[t] + (v.out_tot - v.out[t]) - v.inc[t];
-        loads.nic_rx[t] = loads.nic_rx[t] + (v.inc_tot - v.inc[t]) - v.out[t];
+    pub(crate) fn shift_vols(loads: &mut NodeLoads, v: &RowVols, u: NodeId, t: NodeId) {
+        Self::shift_vols_parts(
+            loads, v.out[u], v.inc[u], v.out[t], v.inc[t], v.out_tot, v.inc_tot, u, t,
+        );
+    }
+
+    /// Scalar-operand twin of [`Self::shift_vols`]: the four bucket values
+    /// the shift reads, passed directly. The fused round kernel feeds it
+    /// pair-rate-adjusted buckets (a swap partner's aggregates with the
+    /// primary re-homed) without materializing a patched [`RowVols`]; the
+    /// expression tree is **identical** to `shift_vols`, which is what
+    /// keeps the fused path bit-compatible with the sequential one.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn shift_vols_parts(
+        loads: &mut NodeLoads,
+        out_u: f64,
+        inc_u: f64,
+        out_t: f64,
+        inc_t: f64,
+        out_tot: f64,
+        inc_tot: f64,
+        u: NodeId,
+        t: NodeId,
+    ) {
+        loads.nic_tx[u] = loads.nic_tx[u] - (out_tot - out_u) + inc_u;
+        loads.nic_rx[u] = loads.nic_rx[u] - (inc_tot - inc_u) + out_u;
+        loads.nic_tx[t] = loads.nic_tx[t] + (out_tot - out_t) - inc_t;
+        loads.nic_rx[t] = loads.nic_rx[t] + (inc_tot - inc_t) - out_t;
     }
 
     /// Reset the two touched nodes of `scratch` to the ledger's loads.
-    fn restore(&self, scratch: &mut NodeLoads, a: NodeId, b: NodeId) {
+    pub(crate) fn restore_nodes(&self, scratch: &mut NodeLoads, a: NodeId, b: NodeId) {
         for n in [a, b] {
             scratch.nic_tx[n] = self.loads.nic_tx[n];
             scratch.nic_rx[n] = self.loads.nic_rx[n];

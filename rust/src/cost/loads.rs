@@ -45,15 +45,39 @@ impl NodeLoads {
     /// a saturated NIC queues superlinearly, so overloaded nodes must be
     /// drained even at the cost of more total NIC traffic.
     pub fn objective(&self, nic_bw: f64) -> f64 {
-        fn penalty(rho: f64) -> f64 {
-            let over = (rho - 0.8).max(0.0);
-            rho * rho + 100.0 * over * over
-        }
         self.nic_tx
             .iter()
             .chain(self.nic_rx.iter())
             .map(|&load| penalty(load / nic_bw))
             .sum()
+    }
+}
+
+/// One NIC side's penalty at utilization `rho` — the per-term function
+/// [`NodeLoads::objective`] folds (see its docs for the shape). Shared with
+/// the fused round kernel so its O(touched-nodes) term updates evaluate the
+/// very same expression.
+pub(crate) fn penalty(rho: f64) -> f64 {
+    let over = (rho - 0.8).max(0.0);
+    rho * rho + 100.0 * over * over
+}
+
+/// Fill `out[i] = penalty(loads[i] / nic_bw)` — the element-wise precompute
+/// of one objective fold's terms, chunked (8 lanes + remainder) so the
+/// native build can vectorize it: the terms are independent, unlike the
+/// fold that later sums them, whose left-to-right order *is* the bitwise
+/// contract and therefore stays scalar.
+pub(crate) fn penalty_terms_into(loads: &[f64], nic_bw: f64, out: &mut [f64]) {
+    debug_assert_eq!(loads.len(), out.len());
+    let mut loads_it = loads.chunks_exact(8);
+    let mut out_it = out.chunks_exact_mut(8);
+    for (lc, oc) in (&mut loads_it).zip(&mut out_it) {
+        for (o, &l) in oc.iter_mut().zip(lc) {
+            *o = penalty(l / nic_bw);
+        }
+    }
+    for (l, o) in loads_it.remainder().iter().zip(out_it.into_remainder()) {
+        *o = penalty(l / nic_bw);
     }
 }
 
@@ -129,6 +153,28 @@ mod tests {
         let tx_sum = |l: &NodeLoads| l.nic_tx.iter().sum::<f64>();
         assert!(tx_sum(&spread) > tx_sum(&packed), "crafted case must move more bytes");
         assert!(spread.objective(1.0) < packed.objective(1.0));
+    }
+
+    #[test]
+    fn penalty_terms_match_the_objective_fold_termwise() {
+        // The chunked precompute must produce exactly the terms the
+        // objective folds — bitwise, across chunk boundaries and remainders.
+        for n in [0usize, 1, 7, 8, 9, 16, 19] {
+            let loads: Vec<f64> = (0..n).map(|i| (i * 3) as f64 * 0.37e9).collect();
+            let mut terms = vec![f64::NAN; n];
+            penalty_terms_into(&loads, 1.25e9, &mut terms);
+            let mut fold = 0.0f64;
+            for (i, (&l, &t)) in loads.iter().zip(&terms).enumerate() {
+                assert_eq!(
+                    t.to_bits(),
+                    penalty(l / 1.25e9).to_bits(),
+                    "term {i} of {n} drifted"
+                );
+                fold += t;
+            }
+            let l = NodeLoads { nic_tx: loads, nic_rx: vec![], intra: vec![] };
+            assert_eq!(l.objective(1.25e9).to_bits(), fold.to_bits(), "n={n} fold");
+        }
     }
 
     #[test]

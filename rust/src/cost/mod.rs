@@ -14,11 +14,13 @@
 //!   equal on integer rates); afterwards a candidate [`Move`] (swap or
 //!   migrate) is applied/reverted in O(row nnz) by re-attributing only the
 //!   moved processes' stored nonzeros, instead of the O(P²) full recompute.
-//!   [`LoadLedger::peek_batch`] goes one step further: all candidates of
-//!   one hot process are scored off a single pass over its sparse rows
-//!   (per-node aggregates), which is both the refiner's inner loop and the
-//!   seam for a future SIMD/PJRT batched artifact. This is the same
-//!   insight that makes mapping-quality search tractable on large
+//!   [`LoadLedger::peek_batch`] amortizes one row pass over all candidates
+//!   of one hot process, and [`LoadLedger::peek_round`] fuses a **whole
+//!   descent round** into one kernel call over a [`CandidateBatch`] (see
+//!   [`batch`]): every distinct primary/partner row aggregated exactly
+//!   once, O(touched-nodes) objectives off a prefix-folded penalty
+//!   summary, with a PJRT lowering onto the batched cost artifact. This is
+//!   the same insight that makes mapping-quality search tractable on large
 //!   topologies (arXiv:2005.10413) and that the multi-core contention
 //!   model of arXiv:0810.2150 motivates: only the traffic rows of moved
 //!   processes change per move.
@@ -55,9 +57,23 @@
 //! (true for every builtin and `testkit`-generated workload, where rates
 //! are integral messages/sec times integral byte counts). `revert` is
 //! bit-exact unconditionally: each apply snapshots the O(nodes) load
-//! vectors it touches. The invariant is enforced by the property tests in
-//! `tests/property_invariants.rs` and the acceptance test in
-//! `tests/refine_equivalence.rs`.
+//! vectors it touches.
+//!
+//! Candidate *scoring* carries the same contract at every batching level:
+//! one [`LoadLedger::peek`], a per-hot-process [`LoadLedger::peek_batch`],
+//! and the fused round kernel [`LoadLedger::peek_round`] all return the
+//! same objectives — equal up to FP associativity in general, bit for bit
+//! on integer-valued rates — so the refiner's accepted-move sequence is
+//! independent of which path scored the round. The fused kernel earns its
+//! speed without touching the arithmetic: shifts reuse the sequential
+//! path's exact expression tree ([`LoadLedger::shift_vols`] /
+//! `shift_vols_parts`), swap-partner aggregates are fixed up with exact
+//! integer bucket moves instead of a re-walk, and objectives re-run the
+//! objective's own left fold from the longest unchanged prefix rather
+//! than re-associating it. The invariant is enforced by the property
+//! tests in `tests/property_invariants.rs`, the acceptance tests in
+//! `tests/refine_equivalence.rs`, and the asserting `perf_cost_model`
+//! bench.
 //!
 //! ## Bulk-move invariant (jobs, not processes)
 //!
@@ -94,11 +110,13 @@
 //! and at 10⁵-job scale by the zero-seed asserts in
 //! `tests/online_replay.rs` and `benches/perf_online_replay.rs`.
 
+pub mod batch;
 pub mod bulk;
 pub mod ledger;
 pub mod loads;
 pub mod scorer;
 
+pub use batch::{CandidateBatch, FusedKernel, RoundScorer};
 pub use bulk::{BulkLedger, JobDelta, JobMove};
 pub use ledger::{LoadLedger, Move};
 pub use loads::NodeLoads;

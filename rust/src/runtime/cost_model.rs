@@ -195,7 +195,11 @@ impl PjrtScorer<'_> {
         {
             Some(m) => m.clone(),
             None => {
-                // No batched artifact fits: sequential fallback.
+                // No batched artifact fits: sequential fallback — counted,
+                // so benches and reports can assert the batched artifact
+                // actually ran (`RefineReport::batched_fallbacks` surfaces
+                // the per-run delta).
+                crate::cost::batch::note_score_batch_fallback();
                 return placements
                     .iter()
                     .map(|p| self.score_fast(traffic, p, cluster))
@@ -247,6 +251,34 @@ impl Scorer for PjrtScorer<'_> {
         cluster: &ClusterSpec,
     ) -> Result<NodeLoads> {
         self.score_fast(traffic, placement, cluster)
+    }
+}
+
+impl crate::cost::RoundScorer for PjrtScorer<'_> {
+    /// Lower one descent round onto the `cost_model_batched` artifact:
+    /// materialize each candidate's full placement
+    /// ([`crate::cost::CandidateBatch::placements`]), score the whole stack
+    /// through [`PjrtScorer::score_batch`] (one `(B, P, N)` one-hot dispatch
+    /// per artifact-batch chunk), and reduce each candidate's [`NodeLoads`]
+    /// to the scalar objective. Approximate by construction — the artifact
+    /// accumulates in f32 — so this backend is for `descend_with`
+    /// experiments and the `--features pjrt` bench, not the exact default
+    /// path; equivalence to the native kernel is asserted at f32 tolerance
+    /// in `tests/runtime_integration.rs`. The dense traffic view comes from
+    /// [`crate::cost::LoadLedger::compose_traffic`], which rebuilds per
+    /// call and defeats the device-buffer cache; acceptable for the gated
+    /// experimental path.
+    fn score_round(
+        &self,
+        ledger: &crate::cost::LoadLedger<'_>,
+        batch: &crate::cost::CandidateBatch,
+    ) -> Result<Vec<f64>> {
+        let cluster = ledger.cluster();
+        let traffic = ledger.compose_traffic();
+        let candidates = batch.placements(ledger)?;
+        let refs: Vec<&Placement> = candidates.iter().collect();
+        let loads = self.score_batch(&traffic, &refs, cluster)?;
+        Ok(loads.iter().map(|l| l.objective(cluster.nic_bw as f64)).collect())
     }
 }
 

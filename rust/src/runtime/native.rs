@@ -87,6 +87,21 @@ impl Scorer for NativeScorer {
     }
 }
 
+impl crate::cost::RoundScorer for NativeScorer {
+    /// Native round scoring *is* the fused in-process kernel
+    /// ([`crate::cost::batch`]): deduplicated row aggregation, chunked
+    /// penalty-term precompute, prefix-folded objectives — exact, and bit
+    /// identical to sequential peeks on integer-valued rates. Exists so
+    /// `Refiner::descend_with` can take either runtime scorer by trait.
+    fn score_round(
+        &self,
+        ledger: &crate::cost::LoadLedger<'_>,
+        batch: &crate::cost::CandidateBatch,
+    ) -> Result<Vec<f64>> {
+        ledger.peek_round(batch)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

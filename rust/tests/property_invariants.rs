@@ -165,6 +165,101 @@ fn peek_batch_bitwise_equals_sequential_peeks_over_seeded_moves() {
 }
 
 #[test]
+fn fused_round_scoring_matches_peek_batch_and_sequential_peeks_under_descent() {
+    // ISSUE 8 bitwise contract at every batching level, driven through the
+    // refiner's own candidate shape: per descent round, the fused kernel
+    // (`peek_round`), the per-primary `peek_batch`, and one sequential
+    // `peek` per candidate must agree bit for bit on integer-rate testkit
+    // workloads — and selecting/applying moves from the fused objectives
+    // must reproduce `Refiner::descend`'s accepted-move sequence exactly.
+    use nicmap::coordinator::refine::Refiner;
+    use nicmap::cost::{CandidateBatch, LoadLedger};
+    forall(0x1C_0000, 12, |rng| {
+        let cluster = gen::cluster(rng);
+        let w = gen::workload(rng, &cluster);
+        let t = TrafficMatrix::of_workload(&w);
+        let start = gen::placement(rng, &w, &cluster);
+        let refiner = Refiner::default();
+        let mut ledger = LoadLedger::new(&NativeScorer, &t, &start, &cluster).unwrap();
+        let mut current = ledger.objective();
+        let mut accepted = 0usize;
+        for _round in 0..refiner.max_rounds {
+            // Replicate descend's candidate enumeration exactly (hot node,
+            // cold mask, one free target per other node, swaps by ascending
+            // partner id then migrates, hot processes in procs_on order).
+            let hot = ledger.hottest_node();
+            let mut cold_mask = vec![false; cluster.nodes];
+            for n in ledger.coldest_nodes(refiner.cold_pool, hot) {
+                cold_mask[n] = true;
+            }
+            let free_targets: Vec<usize> = (0..cluster.nodes)
+                .filter(|&n| n != hot)
+                .filter_map(|n| ledger.free_core_on(n))
+                .collect();
+            let mut batch = CandidateBatch::new();
+            for a in ledger.procs_on(hot) {
+                for b in 0..ledger.len() {
+                    if b != a && cold_mask[ledger.node_of(b)] {
+                        batch.push_swap(a, b);
+                    }
+                }
+                for &target in &free_targets {
+                    batch.push_migrate(a, target);
+                }
+            }
+            let fused = ledger.peek_round(&batch).unwrap();
+            let moves = batch.moves();
+            let batched = ledger.peek_batch(&moves).unwrap();
+            assert_eq!(fused.len(), moves.len());
+            for (i, mv) in moves.iter().enumerate() {
+                assert_eq!(
+                    fused[i].to_bits(),
+                    batched[i].to_bits(),
+                    "{mv:?}: fused round diverged from peek_batch"
+                );
+                let seq = ledger.peek(*mv).unwrap();
+                assert_eq!(
+                    fused[i].to_bits(),
+                    seq.to_bits(),
+                    "{mv:?}: fused round diverged from sequential peek"
+                );
+            }
+            // descend's selection rule, verbatim (strict improvement over
+            // min_gain, strictly-better-than-best, first seen wins ties).
+            let mut best: Option<(usize, f64)> = None;
+            for (i, &obj) in fused.iter().enumerate() {
+                if obj < current - refiner.min_gain
+                    && best.map(|(_, bo)| obj < bo).unwrap_or(true)
+                {
+                    best = Some((i, obj));
+                }
+            }
+            let Some((i, obj)) = best else { break };
+            ledger.apply(batch.get(i)).unwrap();
+            ledger.commit();
+            current = obj;
+            accepted += 1;
+        }
+        // The real descent on an identically seeded ledger accepts exactly
+        // the same move sequence: same count, same final placement, same
+        // objective bits.
+        let mut fresh = LoadLedger::new(&NativeScorer, &t, &start, &cluster).unwrap();
+        let stats = refiner.descend(&mut fresh, |_| true).unwrap();
+        assert_eq!(stats.moves, accepted, "accepted-move count diverged from descend");
+        assert_eq!(
+            fresh.placement(),
+            ledger.placement(),
+            "accepted-move sequence diverged from descend"
+        );
+        assert_eq!(
+            stats.objective.to_bits(),
+            current.to_bits(),
+            "descent objective diverged from the hand-driven rounds"
+        );
+    });
+}
+
+#[test]
 fn refined_mappers_yield_valid_placements_and_never_worse_objectives() {
     // The +r combinator must keep every structural invariant of its base
     // mapper and can only improve (or match) the cost-model objective.

@@ -213,6 +213,52 @@ fn ledger_loads_equal_full_recompute_after_every_accepted_move() {
 }
 
 #[test]
+fn sparse_and_live_refinement_route_rounds_through_the_fused_kernel() {
+    // ISSUE 8 acceptance on the 256-process workload: both the pipeline's
+    // sparse entry point and the online service's live-ledger descend score
+    // every round with one fused kernel call (counter advances by at least
+    // one per entered round — exact counts belong to the single-process
+    // perf_cost_model bench), the native path never trips the PJRT
+    // sequential fallback, and both paths land on the same refined state.
+    use nicmap::coordinator::refine::Refiner;
+    use nicmap::cost::batch;
+    use nicmap::model::sparse::SparseTraffic;
+    let (traffic, w, cluster, start) = seeded_256();
+    let sparse = SparseTraffic::from_dense(&traffic);
+    let refiner = Refiner { max_rounds: ROUNDS, cold_pool: COLD_POOL, min_gain: MIN_GAIN };
+
+    let fused0 = batch::fused_rounds();
+    let rep = refiner.run_sparse_constrained(&sparse, &start, &w, &cluster, |_| true).unwrap();
+    // An exhausted round budget means `moves` rounds were entered; an early
+    // break means one more round entered than moves accepted.
+    let entered = if rep.moves == ROUNDS { rep.moves } else { rep.moves + 1 };
+    assert!(rep.moves > 0, "Blocked synt1 must admit improving moves");
+    assert!(
+        batch::fused_rounds() - fused0 >= entered as u64,
+        "sparse refinement must issue one fused scoring call per entered round"
+    );
+    assert_eq!(rep.batched_fallbacks, 0, "native path must not count PJRT fallbacks");
+
+    let mut live = LoadLedger::live(&cluster);
+    live.admit_block(sparse, &start.core_of).unwrap();
+    let fused1 = batch::fused_rounds();
+    let stats = refiner.descend(&mut live, |_| true).unwrap();
+    let live_entered = if stats.moves == ROUNDS { stats.moves } else { stats.moves + 1 };
+    assert!(
+        batch::fused_rounds() - fused1 >= live_entered as u64,
+        "live-ledger descend must issue one fused scoring call per entered round"
+    );
+    // Same start, same kernel, same rule => same refined state, bit for bit.
+    assert_eq!(stats.moves, rep.moves);
+    assert_eq!(live.placement(), rep.placement);
+    assert_eq!(
+        stats.objective.to_bits(),
+        rep.after.to_bits(),
+        "live fused descent diverged from the sparse-verified objective"
+    );
+}
+
+#[test]
 fn refine_survives_nan_scoring_without_panicking() {
     // Satellite fix: hot/cold node selection used to `partial_cmp().unwrap()`
     // on f64 loads — a NaN-emitting scorer (e.g. a corrupt artifact) would

@@ -167,6 +167,53 @@ fn batched_scoring_matches_sequential() {
 }
 
 #[test]
+fn pjrt_round_scoring_matches_the_native_fused_kernel() {
+    // The PJRT `RoundScorer` lowering (ISSUE 8): a whole descent round's
+    // `CandidateBatch` dispatched onto the batched cost artifact must agree
+    // with the exact native fused kernel at f32 tolerance, candidate for
+    // candidate — and must do so without a single sequential fallback.
+    use nicmap::cost::{batch, CandidateBatch, LoadLedger, RoundScorer};
+    let s = store();
+    let scorer = PjrtScorer::new(&s);
+    let cluster = ClusterSpec::paper_cluster();
+    let w = Workload::builtin("synt1").unwrap();
+    let traffic = TrafficMatrix::of_workload(&w);
+    let start = MapperKind::Blocked.build().map_workload(&w, &cluster).unwrap();
+    let ledger = LoadLedger::new(&NativeScorer, &traffic, &start, &cluster).unwrap();
+
+    // The refiner's round shape: hot-node processes against the cold pool
+    // plus one free core per other node.
+    let hot = ledger.hottest_node();
+    let cold: Vec<usize> = ledger.coldest_nodes(3, hot);
+    let free_targets: Vec<usize> = (0..cluster.nodes)
+        .filter(|&n| n != hot)
+        .filter_map(|n| ledger.free_core_on(n))
+        .collect();
+    let mut round = CandidateBatch::new();
+    for a in ledger.procs_on(hot) {
+        for b in 0..ledger.len() {
+            if b != a && cold.contains(&ledger.node_of(b)) {
+                round.push_swap(a, b);
+            }
+        }
+        for &target in &free_targets {
+            round.push_migrate(a, target);
+        }
+    }
+    assert!(!round.is_empty());
+
+    let fallbacks0 = batch::score_batch_fallbacks();
+    let pjrt_objs = scorer.score_round(&ledger, &round).unwrap();
+    assert_eq!(
+        batch::score_batch_fallbacks(),
+        fallbacks0,
+        "the batched cost artifact must cover the round without fallbacks"
+    );
+    let native_objs = ledger.peek_round(&round).unwrap();
+    assert_close(&pjrt_objs, &native_objs, 1e-4, "round objectives");
+}
+
+#[test]
 fn oversized_problem_rejected_cleanly() {
     let s = store();
     let scorer = PjrtScorer::new(&s);
