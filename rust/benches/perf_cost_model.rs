@@ -211,8 +211,9 @@ fn bench_peek_batch(cluster: &ClusterSpec) {
 /// path's, and fused objectives bit-equal to `peek_batch` and sequential
 /// `peek`s. Emits `BENCH_cost_model.json` for the CI artifact.
 fn bench_fused_round(cluster: &ClusterSpec) {
-    use nicmap::cost::{batch, CandidateBatch};
     use nicmap::coordinator::refine::Refiner;
+    use nicmap::cost::CandidateBatch;
+    use nicmap::obs::testkit::counter_guard;
     use nicmap::report::json::Obj;
 
     let w = Workload::builtin("synt1").unwrap();
@@ -269,12 +270,13 @@ fn bench_fused_round(cluster: &ClusterSpec) {
 
     // Exact grouped-aggregation contract: one fused call, one walk per
     // distinct row — where the sequential path walks rows per candidate.
-    let f0 = batch::fused_rounds();
-    let r0 = batch::row_aggregations();
+    // The guard baselines the registry; this bench owns its process, so
+    // the deltas are exact.
+    let mut guard = counter_guard();
     let fused = ledger.peek_round(&batch).unwrap();
-    assert_eq!(batch::fused_rounds() - f0, 1, "one peek_round = one fused kernel call");
+    assert_eq!(guard.delta("batch.fused_rounds"), 1, "one peek_round = one fused kernel call");
     assert_eq!(
-        batch::row_aggregations() - r0,
+        guard.delta("batch.row_aggregations"),
         distinct_rows,
         "each distinct primary/partner row must be aggregated exactly once per round"
     );
@@ -326,13 +328,13 @@ fn bench_fused_round(cluster: &ClusterSpec) {
 
     // One fused call per entered descent round, end to end through `run`
     // (an exhausted budget enters `moves` rounds; an early break one more).
-    let f1 = batch::fused_rounds();
+    guard.rebaseline();
     let refiner = Refiner::default();
     let rep =
         refiner.run(&NativeScorer, ctx.dense_traffic(), &start, &w, cluster).unwrap();
     let entered = if rep.moves == refiner.max_rounds { rep.moves } else { rep.moves + 1 };
     assert_eq!(
-        batch::fused_rounds() - f1,
+        guard.delta("batch.fused_rounds"),
         entered as u64,
         "descend must issue exactly one fused scoring call per entered round"
     );

@@ -44,6 +44,13 @@ VERBS
   artifacts                                 list AOT artifacts + PJRT platform
   help                                      this text
 
+`map`, `bench`, and `replay` also take `--trace-out [FILE]` and
+`--metrics-json [FILE]`: the first writes a Chrome trace_event JSON of
+the run's spans (load it in chrome://tracing or Perfetto), the second
+the flat delta of the metrics registry over the run; bare flags write
+TRACE_<verb>.json / METRICS_<verb>.json. Without either flag the spans
+stay disabled (the zero-overhead path).
+
 Mapper letters are case-insensitive (N == n) and any mapper takes a `+r`
 suffix (B+r, c+r, D+r, n+r, ...) selecting the cost-model refinement stage
 after the base mapping; `--mappers all` is the paper's B,C,D,N and
@@ -56,13 +63,13 @@ included) places through the occupancy-aware `place` entry point. For
 /// Entry point given parsed args; returns the process exit code.
 pub fn main_with_args(args: Args) -> Result<()> {
     match args.verb.as_str() {
-        "map" => cmd_map(&args),
+        "map" => with_obs(&args, "map", || cmd_map(&args)),
         "simulate" => cmd_simulate(&args),
         "figure" => cmd_figure(&args),
-        "bench" => cmd_bench(&args),
+        "bench" => with_obs(&args, "bench", || cmd_bench(&args)),
         "evaluate" => cmd_evaluate(&args),
         "refine" => cmd_refine(&args),
-        "replay" => cmd_replay(&args),
+        "replay" => with_obs(&args, "replay", || cmd_replay(&args)),
         "workload" => cmd_workload(&args),
         "artifacts" => cmd_artifacts(),
         "" | "help" | "-h" | "--help" => {
@@ -71,6 +78,41 @@ pub fn main_with_args(args: Args) -> Result<()> {
         }
         other => Err(Error::usage(format!("unknown verb {other:?}\n{USAGE}"))),
     }
+}
+
+/// Run a verb body under the observability layer when `--trace-out` or
+/// `--metrics-json` is present: arm an [`crate::obs`] span capture and
+/// snapshot the metrics registry before the body, then write the requested
+/// artifacts after it. A bare flag writes the default `TRACE_<verb>.json` /
+/// `METRICS_<verb>.json`; with neither flag the body runs with spans
+/// disabled (the zero-overhead path), exactly as before this layer existed.
+fn with_obs<F: FnOnce() -> Result<()>>(args: &Args, tag: &str, f: F) -> Result<()> {
+    let path_for = |key: &str, prefix: &str| match args.get(key) {
+        Some("true") => Some(format!("{prefix}_{tag}.json")),
+        Some(path) => Some(path.to_string()),
+        None => None,
+    };
+    let trace_path = path_for("trace-out", "TRACE");
+    let metrics_path = path_for("metrics-json", "METRICS");
+    if trace_path.is_none() && metrics_path.is_none() {
+        return f();
+    }
+    let before = crate::obs::snapshot();
+    let cap = crate::obs::capture();
+    let result = f();
+    // Disarm and collect even when the body failed, so a later verb in the
+    // same process does not inherit an armed capture.
+    let trace = cap.finish();
+    result?;
+    if let Some(path) = trace_path {
+        std::fs::write(&path, trace.chrome_json())?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = metrics_path {
+        std::fs::write(&path, crate::obs::snapshot().diff(&before).to_json())?;
+        println!("wrote {path}");
+    }
+    Ok(())
 }
 
 /// Resolve (cluster, workload) from `--spec` or `--workload`.
@@ -752,6 +794,68 @@ mod tests {
         assert!(doc.contains("\"trace\":\"poisson:5:4\""));
         assert!(doc.contains("\"events_per_sec\":"));
         assert!(doc.contains("\"time_to_place_p50_secs\":"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn map_writes_trace_and_metrics_artifacts() {
+        let dir = std::env::temp_dir().join("nicmap_map_obs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace_path = dir.join("TRACE_map.json");
+        let metrics_path = dir.join("METRICS_map.json");
+        main_with_args(args(&[
+            "map",
+            "--workload",
+            "real4",
+            "--mapper",
+            "N+r",
+            "--trace-out",
+            trace_path.to_str().unwrap(),
+            "--metrics-json",
+            metrics_path.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let trace = std::fs::read_to_string(&trace_path).unwrap();
+        assert!(trace.starts_with("{\"traceEvents\":["));
+        assert!(trace.contains("\"ctx.build\""));
+        assert!(trace.contains("\"map.place\""));
+        assert!(trace.contains("\"refine.descend\""), "N+r runs the refinement stage");
+        let metrics = std::fs::read_to_string(&metrics_path).unwrap();
+        assert!(metrics.contains("\"schema\":\"nicmap-metrics-v1\""));
+        assert!(metrics.contains("\"traffic.workload_builds\""));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replay_writes_trace_and_metrics_artifacts() {
+        let dir = std::env::temp_dir().join("nicmap_replay_obs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace_path = dir.join("TRACE_replay.json");
+        let metrics_path = dir.join("METRICS_replay.json");
+        main_with_args(args(&[
+            "replay",
+            "--trace",
+            "poisson:9:4",
+            "--mappers",
+            "N+r",
+            "--threads",
+            "2",
+            "--trace-out",
+            trace_path.to_str().unwrap(),
+            "--metrics-json",
+            metrics_path.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let trace = std::fs::read_to_string(&trace_path).unwrap();
+        assert!(trace.starts_with("{\"traceEvents\":["));
+        assert!(trace.contains("\"replay.run\""));
+        assert!(trace.contains("\"replay.event\""));
+        assert!(trace.contains("\"ledger.admit\""));
+        assert!(trace.contains("\"thread_name\""), "worker tracks carry slot names");
+        let metrics = std::fs::read_to_string(&metrics_path).unwrap();
+        assert!(metrics.contains("\"schema\":\"nicmap-metrics-v1\""));
+        assert!(metrics.contains("\"replay.events\""));
+        assert!(metrics.contains("\"ledger.admits\""));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -88,6 +88,7 @@ pub trait Mapper {
 
     /// Batch mapping: [`Mapper::place`] into an all-free occupancy.
     fn map(&self, ctx: &MapCtx, cluster: &ClusterSpec) -> Result<Placement> {
+        let _span = crate::obs::span_with("map.place", || self.name().to_string());
         self.place(ctx, cluster, &mut Occupancy::new(cluster))
     }
 

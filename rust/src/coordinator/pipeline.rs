@@ -78,6 +78,7 @@ impl Stage for MapStage {
                 self.inner.name()
             )));
         }
+        let _span = crate::obs::span_with("map.stage", || self.inner.name().to_string());
         self.inner.place(ctx, cluster, occ)
     }
 }
@@ -124,6 +125,7 @@ impl Stage for RefineStage {
         let prev = prev.ok_or_else(|| {
             Error::mapping("refine stage needs a placement from an earlier map stage")
         })?;
+        let _span = crate::obs::span("refine.stage");
         // Cores this pipeline may use: free in the live occupancy, plus the
         // ones the earlier stages already claimed for this placement. The
         // set of cores owned by *others* cannot change mid-stage, so it is

@@ -30,14 +30,39 @@
 //!   never materializes a dense P×P matrix — and under a partially occupied
 //!   cluster it constrains migrates to unowned cores.
 
+use std::sync::OnceLock;
+
 use crate::coordinator::Placement;
 pub use crate::cost::{NodeLoads, Scorer};
-use crate::cost::{batch, CandidateBatch, FusedKernel, JobDelta, LoadLedger, RoundScorer};
+use crate::cost::{batch, CandidateBatch, FusedKernel, JobDelta, LoadLedger, Move, RoundScorer};
 use crate::error::Result;
 use crate::model::sparse::SparseTraffic;
 use crate::model::topology::{ClusterSpec, CoreId};
 use crate::model::traffic::TrafficMatrix;
 use crate::model::workload::Workload;
+use crate::obs;
+
+/// Registry counter `refine.rounds`: descent rounds entered (each issues
+/// exactly one fused round-scoring call; `batch.fused_rounds` also counts
+/// non-descent callers like direct `peek_round` users).
+fn rounds_counter() -> obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    *C.get_or_init(|| obs::counter("refine.rounds"))
+}
+
+/// Registry counter `refine.candidates`: candidate moves scored across
+/// all descent rounds (the process-wide view of
+/// [`DescentStats::delta_evals`]).
+fn candidates_counter() -> obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    *C.get_or_init(|| obs::counter("refine.candidates"))
+}
+
+/// Registry counter `refine.moves`: accepted moves across all descents.
+fn moves_counter() -> obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    *C.get_or_init(|| obs::counter("refine.moves"))
+}
 
 /// Result of a refinement run.
 #[derive(Debug, Clone)]
@@ -257,12 +282,15 @@ impl Refiner {
         usable: impl Fn(CoreId) -> bool,
         round_scorer: &dyn RoundScorer,
     ) -> Result<DescentStats> {
+        let _span = obs::span("refine.descend");
         let cluster = ledger.cluster();
         let mut delta_evals = 0usize;
         let mut moves = 0usize;
         let mut current = ledger.objective();
 
         for _ in 0..self.max_rounds {
+            let _round_span = obs::span("refine.round");
+            rounds_counter().inc();
             let hot = ledger.hottest_node();
             let hot_procs = ledger.procs_on(hot);
             // Cold-node membership as a flat mask: one O(nodes) fill per
@@ -308,6 +336,7 @@ impl Refiner {
             }
             let objs = round_scorer.score_round(ledger, &batch)?;
             delta_evals += batch.len();
+            candidates_counter().add(batch.len() as u64);
             let mut best: Option<(usize, f64)> = None;
             for (i, obj) in objs.into_iter().enumerate() {
                 if obj < current - self.min_gain
@@ -318,10 +347,24 @@ impl Refiner {
             }
             match best {
                 Some((i, obj)) => {
-                    ledger.apply(batch.get(i))?;
+                    let accepted = batch.get(i);
+                    ledger.apply(accepted)?;
                     ledger.commit(); // accepted — drop the undo history
                     current = obj;
                     moves += 1;
+                    moves_counter().inc();
+                    // The accepted-move sequence is deterministic, so the
+                    // instant's args are part of the structural trace.
+                    match accepted {
+                        Move::Swap(a, b) => obs::event(
+                            "refine.accept",
+                            &[("swap", 1), ("a", a as u64), ("b", b as u64)],
+                        ),
+                        Move::Migrate(p, core) => obs::event(
+                            "refine.accept",
+                            &[("migrate", 1), ("p", p as u64), ("core", core as u64)],
+                        ),
+                    }
                 }
                 None => break,
             }

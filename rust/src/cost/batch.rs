@@ -56,15 +56,17 @@
 //! ## Counters
 //!
 //! Process-wide counting instrumentation in the style of
-//! [`LoadLedger::seed_passes`]: [`fused_rounds`] counts kernel calls (the
+//! [`LoadLedger::seed_passes`], held in the [`crate::obs`] metrics
+//! registry (`batch.*` names): [`fused_rounds`] counts kernel calls (the
 //! refiner issues exactly one per descent round), [`row_aggregations`]
 //! counts [`RowVols`] row walks (at most one per distinct primary/partner
 //! per fused call), and [`score_batch_fallbacks`] counts the PJRT batched
 //! artifact's sequential fallbacks (see
 //! `PjrtScorer::score_batch`). Asserted by the `perf_cost_model` bench;
-//! test binaries sharing a process must treat deltas as lower bounds.
+//! test binaries sharing a process must treat deltas as lower bounds and
+//! serialize via [`crate::obs::testkit::counter_guard`].
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 
 use crate::coordinator::Placement;
 use crate::cost::ledger::{LoadLedger, Move, RowVols};
@@ -74,43 +76,57 @@ use crate::model::topology::{CoreId, NodeId};
 use crate::model::workload::ProcId;
 use crate::par;
 
-/// Process-wide count of fused round-scoring kernel calls
-/// ([`LoadLedger::peek_round`]).
-static FUSED_ROUNDS: AtomicU64 = AtomicU64::new(0);
+/// Registry counter `batch.fused_rounds`: process-wide count of fused
+/// round-scoring kernel calls ([`LoadLedger::peek_round`]).
+fn fused_counter() -> crate::obs::Counter {
+    static C: OnceLock<crate::obs::Counter> = OnceLock::new();
+    *C.get_or_init(|| crate::obs::counter("batch.fused_rounds"))
+}
 
-/// Process-wide count of per-process row aggregations ([`RowVols`] walks),
-/// bumped by the ledger for every walk on any peek path.
-static ROW_AGGREGATIONS: AtomicU64 = AtomicU64::new(0);
+/// Registry counter `batch.row_aggregations`: process-wide count of
+/// per-process row aggregations ([`RowVols`] walks), bumped by the ledger
+/// for every walk on any peek path.
+fn rows_counter() -> crate::obs::Counter {
+    static C: OnceLock<crate::obs::Counter> = OnceLock::new();
+    *C.get_or_init(|| crate::obs::counter("batch.row_aggregations"))
+}
 
-/// Process-wide count of PJRT `score_batch` sequential fallbacks (no
-/// `cost_model_batched` artifact fit the problem).
-static SCORE_BATCH_FALLBACKS: AtomicU64 = AtomicU64::new(0);
+/// Registry counter `batch.score_batch_fallbacks`: process-wide count of
+/// PJRT `score_batch` sequential fallbacks (no `cost_model_batched`
+/// artifact fit the problem).
+fn fallbacks_counter() -> crate::obs::Counter {
+    static C: OnceLock<crate::obs::Counter> = OnceLock::new();
+    *C.get_or_init(|| crate::obs::counter("batch.score_batch_fallbacks"))
+}
 
 /// Fused kernel calls since process start. One descent round issues exactly
 /// one (asserted by the `perf_cost_model` bench, which owns its process;
-/// concurrent test binaries must only assert monotone deltas).
+/// concurrent test binaries must only assert monotone deltas). Thin shim
+/// over the `batch.fused_rounds` registry counter.
 pub fn fused_rounds() -> u64 {
-    FUSED_ROUNDS.load(Ordering::Relaxed)
+    fused_counter().get()
 }
 
 /// Row-aggregate walks since process start. Within one fused call every
-/// distinct primary/partner row is walked at most once.
+/// distinct primary/partner row is walked at most once. Thin shim over the
+/// `batch.row_aggregations` registry counter.
 pub fn row_aggregations() -> u64 {
-    ROW_AGGREGATIONS.load(Ordering::Relaxed)
+    rows_counter().get()
 }
 
 /// PJRT batched-scoring sequential fallbacks since process start — `0`
-/// deltas prove the `cost_model_batched` artifact actually ran.
+/// deltas prove the `cost_model_batched` artifact actually ran. Thin shim
+/// over the `batch.score_batch_fallbacks` registry counter.
 pub fn score_batch_fallbacks() -> u64 {
-    SCORE_BATCH_FALLBACKS.load(Ordering::Relaxed)
+    fallbacks_counter().get()
 }
 
 pub(crate) fn note_row_aggregation() {
-    ROW_AGGREGATIONS.fetch_add(1, Ordering::Relaxed);
+    rows_counter().inc();
 }
 
 pub(crate) fn note_score_batch_fallback() {
-    SCORE_BATCH_FALLBACKS.fetch_add(1, Ordering::Relaxed);
+    fallbacks_counter().inc();
 }
 
 /// Candidate kind discriminant of the SoA batch.
@@ -302,7 +318,7 @@ pub(crate) fn score_round(
     ledger: &LoadLedger<'_>,
     batch: &CandidateBatch,
 ) -> Result<Vec<f64>> {
-    FUSED_ROUNDS.fetch_add(1, Ordering::Relaxed);
+    fused_counter().inc();
     let endpoints = validate(ledger, batch)?;
     if batch.is_empty() {
         return Ok(Vec::new());

@@ -41,7 +41,7 @@
 //!   (the persistent-ledger invariant of [`crate::cost`]).
 
 use std::borrow::Cow;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 
 use crate::coordinator::Placement;
 use crate::cost::batch::CandidateBatch;
@@ -51,10 +51,28 @@ use crate::model::sparse::SparseTraffic;
 use crate::model::topology::{ClusterSpec, CoreId, NodeId};
 use crate::model::traffic::TrafficMatrix;
 use crate::model::workload::ProcId;
+use crate::obs;
 
-/// Process-wide count of full seed passes ([`LoadLedger::new`] and
-/// [`LoadLedger::from_sparse`]).
-static SEED_PASSES: AtomicU64 = AtomicU64::new(0);
+/// Registry counter `ledger.seed_passes`: process-wide count of full seed
+/// passes ([`LoadLedger::new`] and [`LoadLedger::from_sparse`]).
+fn seeds_counter() -> obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    *C.get_or_init(|| obs::counter("ledger.seed_passes"))
+}
+
+/// Registry counter `ledger.admits`: successful
+/// [`LoadLedger::admit_block`] splices.
+fn admits_counter() -> obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    *C.get_or_init(|| obs::counter("ledger.admits"))
+}
+
+/// Registry counter `ledger.retires`: successful
+/// [`LoadLedger::retire_block`] deletions.
+fn retires_counter() -> obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    *C.get_or_init(|| obs::counter("ledger.retires"))
+}
 
 /// A candidate placement change the ledger can apply and revert.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -202,7 +220,8 @@ impl<'a> LoadLedger<'a> {
         cluster: &'a ClusterSpec,
     ) -> Result<Self> {
         let (used, node_of) = Self::validate_placement(placement, traffic.len(), cluster)?;
-        SEED_PASSES.fetch_add(1, Ordering::Relaxed);
+        let _span = obs::span("ledger.seed");
+        seeds_counter().inc();
         let loads = scorer.score(traffic, placement, cluster)?;
         Ok(LoadLedger {
             traffic: TrafficStore::Whole(Cow::Owned(SparseTraffic::from_dense(traffic))),
@@ -228,7 +247,8 @@ impl<'a> LoadLedger<'a> {
         cluster: &'a ClusterSpec,
     ) -> Result<Self> {
         let (used, node_of) = Self::validate_placement(placement, traffic.len(), cluster)?;
-        SEED_PASSES.fetch_add(1, Ordering::Relaxed);
+        let _span = obs::span("ledger.seed");
+        seeds_counter().inc();
         let loads = JobDelta::compute(traffic, &placement.core_of, cluster)?.loads;
         Ok(LoadLedger {
             traffic: TrafficStore::Whole(Cow::Borrowed(traffic)),
@@ -247,9 +267,10 @@ impl<'a> LoadLedger<'a> {
     /// persistent-ledger invariant (see [`crate::cost`]): a [`Self::live`]
     /// ledger is seeded **zero** times no matter how many events it
     /// absorbs, asserted by `tests/online_replay.rs` and the
-    /// `perf_online_replay` bench.
+    /// `perf_online_replay` bench. Thin shim over the
+    /// `ledger.seed_passes` registry counter.
     pub fn seed_passes() -> u64 {
-        SEED_PASSES.load(Ordering::Relaxed)
+        seeds_counter().get()
     }
 
     /// Empty **persistent** ledger over `cluster`: no live jobs, no borrowed
@@ -284,6 +305,7 @@ impl<'a> LoadLedger<'a> {
     /// out of range, duplicated, or already occupied. Clears the undo
     /// history.
     pub fn admit_block(&mut self, traffic: SparseTraffic, cores: &[CoreId]) -> Result<()> {
+        let _span = obs::span("ledger.admit");
         if matches!(self.traffic, TrafficStore::Whole(_)) {
             return Err(Error::mapping(
                 "ledger: admit_block on a whole-matrix ledger (use LoadLedger::live)",
@@ -328,6 +350,7 @@ impl<'a> LoadLedger<'a> {
             store.block_of.extend(std::iter::repeat(bidx).take(traffic.len()));
             store.blocks.push(traffic);
         }
+        admits_counter().inc();
         self.undo.clear();
         Ok(())
     }
@@ -339,6 +362,7 @@ impl<'a> LoadLedger<'a> {
     /// cores in local-rank order so the caller can release its own
     /// occupancy. Clears the undo history.
     pub fn retire_block(&mut self, block: usize) -> Result<Vec<CoreId>> {
+        let _span = obs::span("ledger.retire");
         let (start, procs, delta) = match &self.traffic {
             TrafficStore::Whole(_) => {
                 return Err(Error::mapping(
@@ -383,6 +407,7 @@ impl<'a> LoadLedger<'a> {
                 };
             }
         }
+        retires_counter().inc();
         self.undo.clear();
         Ok(freed)
     }

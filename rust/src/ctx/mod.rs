@@ -76,6 +76,7 @@ impl MapCtx {
     /// per-job sparse build per job, one CSR adjacency build. O(nnz) —
     /// everything downstream is reuse.
     pub fn build(w: &Workload) -> MapCtx {
+        let _span = crate::obs::span_with("ctx.build", || w.name.clone());
         let traffic = SparseTraffic::of_workload(w);
         let jobs = JobTraffic::for_workload(w);
         let job_adj_avg: Vec<f64> = jobs.iter().map(|j| j.matrix.avg_adjacency()).collect();

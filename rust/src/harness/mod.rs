@@ -137,6 +137,9 @@ pub fn run_cell(
     mapper: MapperSpec,
     cfg: &SimConfig,
 ) -> Result<Cell> {
+    let _span = crate::obs::span_with("harness.cell", || {
+        format!("{} x {}", ctx.workload().name, mapper.name())
+    });
     let t0 = std::time::Instant::now();
     let placement = mapper.build().map(ctx, cluster)?;
     let map_secs = t0.elapsed().as_secs_f64();
@@ -175,10 +178,14 @@ pub fn run_sweep(
     threads: usize,
 ) -> Result<Vec<WorkloadRun>> {
     let ctxs: Vec<Arc<MapCtx>> = workloads.iter().map(MapCtx::shared).collect();
-    let cells: Vec<(usize, MapperSpec)> = (0..workloads.len())
+    let cells: Vec<(usize, (usize, MapperSpec))> = (0..workloads.len())
         .flat_map(|wi| mappers.iter().map(move |&m| (wi, m)))
+        .enumerate()
         .collect();
-    let results = crate::par::par_map(cells, threads, |(wi, mapper)| {
+    let results = crate::par::par_map(cells, threads, |(slot, (wi, mapper))| {
+        // Trace events of this cell land in the slot's own track, keyed by
+        // input index — serial and threaded sweeps trace identically.
+        let _scope = crate::obs::slot_scope(slot);
         let ctx = Arc::clone(&ctxs[wi]);
         run_cell(&ctx, cluster, mapper, cfg)
     });

@@ -12,8 +12,10 @@
 //!   the `+r` mapper variants, the online elastic mapping service that
 //!   places streaming job arrivals/departures incrementally ([`online`]),
 //!   a deterministic discrete-event simulator of the 16-node InfiniBand
-//!   cluster the paper evaluates on ([`sim`]), and the workload models
-//!   ([`model`]) including an NPB communication characterization.
+//!   cluster the paper evaluates on ([`sim`]), the workload models
+//!   ([`model`]) including an NPB communication characterization, and a
+//!   zero-dependency observability layer ([`obs`]) — metrics registry,
+//!   span tracing, Chrome-trace export — across all of the above.
 //! * **Layer 2 (JAX, `python/compile/model.py`)** — the placement cost
 //!   model `M = AᵀTA` + NIC/demand/adjacency reductions, AOT-lowered once
 //!   to HLO text.
@@ -114,6 +116,7 @@ pub mod error;
 pub mod graph;
 pub mod harness;
 pub mod model;
+pub mod obs;
 pub mod online;
 pub mod par;
 pub mod report;

@@ -12,25 +12,30 @@
 //! * full-scorer verification recomputes and CLI reporting,
 //! * small interop/test fixtures.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 
 use crate::model::workload::{JobId, JobSpec, ProcId, Workload};
+use crate::obs::metrics::{self, Counter};
 
-/// Process-wide count of [`TrafficMatrix::of_workload`] constructions.
+/// Registry counter `traffic.workload_builds`: process-wide count of
+/// [`TrafficMatrix::of_workload`] constructions.
 ///
 /// The full workload matrix is the single most expensive model artifact
 /// (O(P²)); the [`crate::ctx::MapCtx`] layer exists to build it exactly once
 /// per workload. This counter is the instrumentation that lets tests *prove*
 /// that guarantee (one increment per workload per sweep) instead of assuming
 /// it — see `tests/mapctx_sweep.rs`.
-static WORKLOAD_BUILDS: AtomicU64 = AtomicU64::new(0);
+fn builds_counter() -> Counter {
+    static C: OnceLock<Counter> = OnceLock::new();
+    *C.get_or_init(|| metrics::counter("traffic.workload_builds"))
+}
 
 /// Count one full-workload traffic construction. Shared by
 /// [`TrafficMatrix::of_workload`] and
 /// [`crate::model::sparse::SparseTraffic::of_workload`] — dense or sparse,
 /// it is the same once-per-workload artifact the counter guards.
 pub(crate) fn note_workload_build() {
-    WORKLOAD_BUILDS.fetch_add(1, Ordering::Relaxed);
+    builds_counter().inc();
 }
 
 /// Dense square traffic matrix in bytes/sec.
@@ -84,9 +89,11 @@ impl TrafficMatrix {
     ///
     /// Monotone counter for the one-build-per-workload guarantee of
     /// [`crate::ctx::MapCtx`]; tests snapshot it around a sweep and assert
-    /// the delta. Per-job ([`Self::of_job`]) builds are not counted.
+    /// the delta. Per-job ([`Self::of_job`]) builds are not counted. Thin
+    /// shim over the `traffic.workload_builds` registry counter — new code
+    /// should prefer [`crate::obs::testkit::counter_guard`] deltas.
     pub fn workload_builds() -> u64 {
-        WORKLOAD_BUILDS.load(Ordering::Relaxed)
+        builds_counter().get()
     }
 
     /// Matrix dimension (process count).

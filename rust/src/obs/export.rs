@@ -1,0 +1,345 @@
+//! Trace exporters: the Chrome `trace_event` JSON writer and the
+//! timing-masked structural span tree.
+//!
+//! [`Trace::chrome_json`] emits the stable subset of the Chrome trace
+//! format — `"X"` complete events with microsecond `ts`/`dur`, `"i"`
+//! instant events, and `"M"` `thread_name` metadata, one `tid` per track —
+//! loadable directly in `chrome://tracing` or [Perfetto](https://ui.perfetto.dev).
+//! Span details and per-span counter deltas land in each event's `args`.
+//!
+//! [`Trace::span_tree`] is the comparison form: names, nesting, and
+//! instant events (with their deterministic integer args) per track, with
+//! timestamps, durations, and per-span counter deltas — the only
+//! nondeterministic values a trace contains — stripped. The trace
+//! determinism tests assert serial and threaded runs are `==` here.
+
+use std::collections::BTreeSet;
+
+use crate::obs::span::{RawEvent, Trace};
+use crate::report::json;
+
+/// One track of a [`Trace::span_tree`]: the main thread's
+/// (`slot: None`) or one parallel work item's (`slot: Some(index)`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TrackTree {
+    /// Work-item slot, `None` for the main track.
+    pub slot: Option<usize>,
+    /// Top-level spans in start order.
+    pub roots: Vec<SpanNode>,
+    /// Instant events recorded outside any span, in order.
+    pub instants: Vec<InstantNode>,
+}
+
+/// One span of a [`TrackTree`]: name and nested structure, timings
+/// masked.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanNode {
+    /// Span name (e.g. `"refine.round"`).
+    pub name: String,
+    /// Child spans in start order.
+    pub children: Vec<SpanNode>,
+    /// Instant events recorded directly inside this span, in order.
+    pub instants: Vec<InstantNode>,
+}
+
+impl SpanNode {
+    fn new(name: &str) -> SpanNode {
+        SpanNode { name: name.to_string(), children: Vec::new(), instants: Vec::new() }
+    }
+}
+
+/// One instant event of a [`TrackTree`]: name plus its deterministic
+/// integer args (e.g. the endpoints of an accepted move).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InstantNode {
+    /// Event name (e.g. `"refine.accept"`).
+    pub name: String,
+    /// Integer args in recorded order.
+    pub args: Vec<(String, u64)>,
+}
+
+impl Trace {
+    /// True when the capture recorded nothing.
+    pub fn is_empty(&self) -> bool {
+        self.tracks.is_empty()
+    }
+
+    /// Number of tracks (main + one per slot that recorded events).
+    pub fn track_count(&self) -> usize {
+        self.tracks.len()
+    }
+
+    /// Every distinct span and instant-event name in the trace, sorted.
+    pub fn span_names(&self) -> BTreeSet<String> {
+        let mut names = BTreeSet::new();
+        for track in &self.tracks {
+            for ev in &track.events {
+                match ev {
+                    RawEvent::Begin { name, .. } | RawEvent::Instant { name, .. } => {
+                        names.insert(name.to_string());
+                    }
+                    RawEvent::End { .. } => {}
+                }
+            }
+        }
+        names
+    }
+
+    /// The structural form of the trace: per-track span trees with
+    /// timings and counter deltas masked. Serial and threaded runs of the
+    /// same work are `==` here (the trace-determinism invariant).
+    pub fn span_tree(&self) -> Vec<TrackTree> {
+        self.tracks.iter().map(build_track).collect()
+    }
+
+    /// All instant events named `name` across all tracks, in track order
+    /// then recording order — e.g. the accepted-move sequence as
+    /// `"refine.accept"` events.
+    pub fn instants_named(&self, name: &str) -> Vec<InstantNode> {
+        let mut out = Vec::new();
+        for track in &self.tracks {
+            for ev in &track.events {
+                if let RawEvent::Instant { name: n, args, .. } = ev {
+                    if *n == name {
+                        out.push(instant_node(n, args));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Render the Chrome `trace_event` JSON
+    /// (`{"traceEvents":[...]}`): load in `chrome://tracing` or Perfetto.
+    pub fn chrome_json(&self) -> String {
+        let mut events: Vec<String> = Vec::new();
+        for (tid, track) in self.tracks.iter().enumerate() {
+            let tid = tid as u64;
+            let label = match track.slot {
+                None => "main".to_string(),
+                Some(s) => format!("slot {s}"),
+            };
+            events.push(
+                json::Obj::new()
+                    .str("name", "thread_name")
+                    .str("ph", "M")
+                    .int("pid", 0)
+                    .int("tid", tid)
+                    .raw("args", json::Obj::new().str("name", &label).build())
+                    .build(),
+            );
+            // Stack-pair Begin/End into "X" complete events; orphan Ends
+            // (capture boundary inside an open span) are dropped.
+            let mut stack: Vec<(&'static str, Option<&String>, u64)> = Vec::new();
+            for ev in &track.events {
+                match ev {
+                    RawEvent::Begin { name, detail, ts_ns } => {
+                        stack.push((name, detail.as_ref(), *ts_ns));
+                    }
+                    RawEvent::End { ts_ns, deltas } => {
+                        if let Some((name, detail, t0)) = stack.pop() {
+                            events.push(complete_event(name, detail, t0, *ts_ns, deltas, tid));
+                        }
+                    }
+                    RawEvent::Instant { name, args, ts_ns } => {
+                        let mut a = json::Obj::new();
+                        for (k, v) in args {
+                            a = a.int(k, *v);
+                        }
+                        events.push(
+                            json::Obj::new()
+                                .str("name", name)
+                                .str("ph", "i")
+                                .str("s", "t")
+                                .int("pid", 0)
+                                .int("tid", tid)
+                                .num("ts", *ts_ns as f64 / 1000.0)
+                                .raw("args", a.build())
+                                .build(),
+                        );
+                    }
+                }
+            }
+            // Spans still open when the capture finished: emit zero-dur
+            // markers so they stay visible rather than vanishing.
+            while let Some((name, detail, t0)) = stack.pop() {
+                events.push(complete_event(name, detail, t0, t0, &[], tid));
+            }
+        }
+        format!("{{\"traceEvents\":{}}}\n", json::array(&events))
+    }
+}
+
+fn complete_event(
+    name: &str,
+    detail: Option<&String>,
+    t0_ns: u64,
+    t1_ns: u64,
+    deltas: &[(&'static str, u64)],
+    tid: u64,
+) -> String {
+    let mut args = json::Obj::new();
+    if let Some(d) = detail {
+        args = args.str("detail", d);
+    }
+    for (k, v) in deltas {
+        args = args.int(k, *v);
+    }
+    json::Obj::new()
+        .str("name", name)
+        .str("ph", "X")
+        .int("pid", 0)
+        .int("tid", tid)
+        .num("ts", t0_ns as f64 / 1000.0)
+        .num("dur", t1_ns.saturating_sub(t0_ns) as f64 / 1000.0)
+        .raw("args", args.build())
+        .build()
+}
+
+fn instant_node(name: &str, args: &[(&'static str, u64)]) -> InstantNode {
+    InstantNode {
+        name: name.to_string(),
+        args: args.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+    }
+}
+
+fn build_track(track: &crate::obs::span::Track) -> TrackTree {
+    // A synthetic root absorbs top-level spans and stray instants; stray
+    // Ends (from a capture boundary) are ignored.
+    let mut stack = vec![SpanNode::new("")];
+    for ev in &track.events {
+        match ev {
+            RawEvent::Begin { name, .. } => stack.push(SpanNode::new(name)),
+            RawEvent::End { .. } => {
+                if stack.len() > 1 {
+                    let done = stack.pop().expect("stack len checked above");
+                    stack.last_mut().expect("root never popped").children.push(done);
+                }
+            }
+            RawEvent::Instant { name, args, .. } => {
+                stack
+                    .last_mut()
+                    .expect("root never popped")
+                    .instants
+                    .push(instant_node(name, args));
+            }
+        }
+    }
+    // Unclosed spans fold into their parents in start order.
+    while stack.len() > 1 {
+        let done = stack.pop().expect("stack len checked above");
+        stack.last_mut().expect("root never popped").children.push(done);
+    }
+    let root = stack.pop().expect("root always present");
+    TrackTree { slot: track.slot, roots: root.children, instants: root.instants }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::Track;
+
+    fn begin(name: &'static str, ts: u64) -> RawEvent {
+        RawEvent::Begin { name, detail: None, ts_ns: ts }
+    }
+
+    fn end(ts: u64) -> RawEvent {
+        RawEvent::End { ts_ns: ts, deltas: Vec::new() }
+    }
+
+    fn instant(name: &'static str, ts: u64) -> RawEvent {
+        RawEvent::Instant { name, args: vec![("k", 3)], ts_ns: ts }
+    }
+
+    fn sample_trace() -> Trace {
+        Trace {
+            tracks: vec![
+                Track {
+                    slot: None,
+                    events: vec![
+                        begin("outer", 1_000),
+                        begin("inner", 2_000),
+                        instant("tick", 2_500),
+                        end(3_000),
+                        end(4_000),
+                    ],
+                },
+                Track { slot: Some(0), events: vec![begin("cell", 1_500), end(1_600)] },
+            ],
+        }
+    }
+
+    #[test]
+    fn span_tree_nests_and_masks_timings() {
+        let trees = sample_trace().span_tree();
+        assert_eq!(trees.len(), 2);
+        assert_eq!(trees[0].slot, None);
+        assert_eq!(trees[0].roots.len(), 1);
+        let outer = &trees[0].roots[0];
+        assert_eq!(outer.name, "outer");
+        assert_eq!(outer.children.len(), 1);
+        assert_eq!(outer.children[0].name, "inner");
+        assert_eq!(outer.children[0].instants[0].name, "tick");
+        assert_eq!(outer.children[0].instants[0].args, vec![("k".to_string(), 3)]);
+        assert_eq!(trees[1].slot, Some(0));
+        assert_eq!(trees[1].roots[0].name, "cell");
+
+        // Same structure at different timestamps compares equal.
+        let mut shifted = sample_trace();
+        for track in &mut shifted.tracks {
+            for ev in &mut track.events {
+                match ev {
+                    RawEvent::Begin { ts_ns, .. }
+                    | RawEvent::End { ts_ns, .. }
+                    | RawEvent::Instant { ts_ns, .. } => *ts_ns += 77_000,
+                }
+            }
+        }
+        assert_eq!(sample_trace().span_tree(), shifted.span_tree());
+    }
+
+    #[test]
+    fn span_tree_tolerates_unbalanced_events() {
+        let t = Trace {
+            tracks: vec![Track {
+                slot: None,
+                // Stray End, then a Begin left open at capture end.
+                events: vec![end(10), begin("open", 20), instant("tick", 30)],
+            }],
+        };
+        let trees = t.span_tree();
+        assert_eq!(trees[0].roots.len(), 1);
+        assert_eq!(trees[0].roots[0].name, "open");
+        assert_eq!(trees[0].roots[0].instants[0].name, "tick");
+    }
+
+    #[test]
+    fn chrome_json_emits_complete_instant_and_metadata_events() {
+        let text = sample_trace().chrome_json();
+        assert!(text.starts_with("{\"traceEvents\":["));
+        assert!(text.ends_with("]}\n"));
+        assert!(text.contains("\"ph\":\"M\""));
+        assert!(text.contains("\"name\":\"main\""));
+        assert!(text.contains("\"name\":\"slot 0\""));
+        assert!(text.contains("\"name\":\"outer\""));
+        assert!(text.contains("\"ph\":\"X\""));
+        assert!(text.contains("\"ph\":\"i\""));
+        // inner: ts 2000ns -> 2us, dur 1000ns -> 1us.
+        assert!(text.contains("\"ts\":2,\"dur\":1"));
+        // Instant args survive.
+        assert!(text.contains("\"k\":3"));
+    }
+
+    #[test]
+    fn span_names_and_instants_named_cover_both_event_kinds() {
+        let t = sample_trace();
+        let names = t.span_names();
+        assert!(names.contains("outer"));
+        assert!(names.contains("inner"));
+        assert!(names.contains("cell"));
+        assert!(names.contains("tick"));
+        let ticks = t.instants_named("tick");
+        assert_eq!(ticks.len(), 1);
+        assert_eq!(ticks[0].args, vec![("k".to_string(), 3)]);
+    }
+}

@@ -1,0 +1,327 @@
+//! The metrics registry: named process-wide counters, gauges, and
+//! histograms behind one `snapshot()` / `diff()` / `reset()` API.
+//!
+//! Registration ([`counter`], [`gauge`], [`histogram`]) hands back a `Copy`
+//! handle onto leaked `AtomicU64` cells, so a bump is a single relaxed
+//! `fetch_add` with no lock — exactly the always-on cost the scattered
+//! statics this registry absorbed already paid
+//! (`TrafficMatrix::workload_builds`, `LoadLedger::seed_passes`, the
+//! `cost::batch` trio). The registry lock is touched only at first
+//! registration per name and by [`snapshot`] / [`reset`], never on the
+//! bump path. Registration is idempotent: the same name returns the same
+//! cells, so call sites cache handles in a `OnceLock` purely to skip the
+//! name lookup.
+//!
+//! Counters are process-wide and monotone; tests that assert deltas must
+//! serialize against other bumping tests in the same process via
+//! [`crate::obs::testkit::counter_guard`] (which also takes the snapshot).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::report::json;
+
+/// Histogram bucket count: bucket `i` holds observations `v` with
+/// `2^(i-1) <= v < 2^i` (bucket 0 holds `v == 0`), saturating at the top.
+const HIST_BUCKETS: usize = 32;
+
+/// Registered metric kinds — they differ only in cell layout and how
+/// [`snapshot`] flattens them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+struct Entry {
+    name: &'static str,
+    kind: Kind,
+    /// Leaked cells: 1 for counter/gauge; `[count, sum, buckets...]` for
+    /// histograms.
+    cells: &'static [AtomicU64],
+}
+
+static REGISTRY: Mutex<Vec<Entry>> = Mutex::new(Vec::new());
+
+fn registry() -> MutexGuard<'static, Vec<Entry>> {
+    // Counter asserts poison the lock without corrupting it; keep going.
+    REGISTRY.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn register(name: &'static str, kind: Kind, width: usize) -> &'static [AtomicU64] {
+    let mut reg = registry();
+    if let Some(e) = reg.iter().find(|e| e.name == name) {
+        assert!(
+            e.kind == kind,
+            "metric {name:?} already registered as a different kind ({:?} vs {kind:?})",
+            e.kind
+        );
+        return e.cells;
+    }
+    let cells: Vec<AtomicU64> = (0..width).map(|_| AtomicU64::new(0)).collect();
+    let cells: &'static [AtomicU64] = Box::leak(cells.into_boxed_slice());
+    reg.push(Entry { name, kind, cells });
+    cells
+}
+
+/// Handle to a registered monotone counter. `Copy`; bumps are relaxed
+/// atomic adds with no lock.
+#[derive(Debug, Clone, Copy)]
+pub struct Counter {
+    cell: &'static AtomicU64,
+}
+
+impl Counter {
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.cell.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Add 1.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+/// Handle to a registered gauge (last-write-wins level).
+#[derive(Debug, Clone, Copy)]
+pub struct Gauge {
+    cell: &'static AtomicU64,
+}
+
+impl Gauge {
+    /// Set the level.
+    pub fn set(&self, v: u64) {
+        self.cell.store(v, Ordering::Relaxed);
+    }
+
+    /// Current level.
+    pub fn get(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+/// Handle to a registered histogram: power-of-two buckets plus running
+/// count and sum. Snapshots flatten it to `name.count` / `name.sum`.
+#[derive(Debug, Clone, Copy)]
+pub struct Histogram {
+    /// `[count, sum, bucket 0 .. bucket HIST_BUCKETS-1]`.
+    cells: &'static [AtomicU64],
+}
+
+fn bucket_of(v: u64) -> usize {
+    ((u64::BITS - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+impl Histogram {
+    /// Record one observation.
+    pub fn observe(&self, v: u64) {
+        self.cells[0].fetch_add(1, Ordering::Relaxed);
+        self.cells[1].fetch_add(v, Ordering::Relaxed);
+        self.cells[2 + bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Observations so far.
+    pub fn count(&self) -> u64 {
+        self.cells[0].load(Ordering::Relaxed)
+    }
+
+    /// Sum of observations so far.
+    pub fn sum(&self) -> u64 {
+        self.cells[1].load(Ordering::Relaxed)
+    }
+
+    /// Mean observation, `None` before the first one.
+    pub fn mean(&self) -> Option<f64> {
+        let n = self.count();
+        (n > 0).then(|| self.sum() as f64 / n as f64)
+    }
+}
+
+/// Register (or look up) the counter `name` and return its handle.
+pub fn counter(name: &'static str) -> Counter {
+    Counter { cell: &register(name, Kind::Counter, 1)[0] }
+}
+
+/// Register (or look up) the gauge `name` and return its handle.
+pub fn gauge(name: &'static str) -> Gauge {
+    Gauge { cell: &register(name, Kind::Gauge, 1)[0] }
+}
+
+/// Register (or look up) the histogram `name` and return its handle.
+pub fn histogram(name: &'static str) -> Histogram {
+    Histogram { cells: register(name, Kind::Histogram, 2 + HIST_BUCKETS) }
+}
+
+/// Point-in-time view of every registered metric, flattened to named
+/// `u64` scalars in name order (histograms contribute `name.count` and
+/// `name.sum`). Cheap value type: compare, [`diff`](Self::diff), iterate.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    values: BTreeMap<String, u64>,
+}
+
+impl MetricsSnapshot {
+    /// Value of `name`, 0 when absent (metrics register lazily, so a name
+    /// not bumped yet simply isn't there).
+    pub fn get(&self, name: &str) -> u64 {
+        self.values.get(name).copied().unwrap_or(0)
+    }
+
+    /// Per-name saturating difference `self - earlier` over the union of
+    /// both key sets.
+    pub fn diff(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        let mut values = BTreeMap::new();
+        for name in self.values.keys().chain(earlier.values.keys()) {
+            values.entry(name.clone()).or_insert_with(|| {
+                self.get(name).saturating_sub(earlier.get(name))
+            });
+        }
+        MetricsSnapshot { values }
+    }
+
+    /// Iterate `(name, value)` in name order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.values.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    /// Number of flattened scalars.
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// True when no metric has been registered yet.
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Flat metrics JSON: `{"schema":"nicmap-metrics-v1","counters":{...}}`
+    /// with every flattened scalar under `counters` in name order.
+    pub fn to_json(&self) -> String {
+        let mut counters = json::Obj::new();
+        for (name, value) in self.iter() {
+            counters = counters.int(name, value);
+        }
+        let obj = json::Obj::new()
+            .str("schema", "nicmap-metrics-v1")
+            .raw("counters", counters.build());
+        format!("{}\n", obj.build())
+    }
+}
+
+/// Snapshot every registered metric.
+pub fn snapshot() -> MetricsSnapshot {
+    let reg = registry();
+    let mut values = BTreeMap::new();
+    for e in reg.iter() {
+        match e.kind {
+            Kind::Counter | Kind::Gauge => {
+                values.insert(e.name.to_string(), e.cells[0].load(Ordering::Relaxed));
+            }
+            Kind::Histogram => {
+                values.insert(format!("{}.count", e.name), e.cells[0].load(Ordering::Relaxed));
+                values.insert(format!("{}.sum", e.name), e.cells[1].load(Ordering::Relaxed));
+            }
+        }
+    }
+    MetricsSnapshot { values }
+}
+
+/// Zero every registered metric. For test/bench isolation only: callers
+/// must hold [`crate::obs::testkit::counter_guard`] (or otherwise own the
+/// process) — racing a reset against live bumpers loses bumps by design.
+pub fn reset() {
+    let reg = registry();
+    for e in reg.iter() {
+        for cell in e.cells {
+            cell.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Names are unique to this module so concurrent lib tests bumping the
+    // real metrics can't perturb the deltas asserted here.
+
+    #[test]
+    fn counter_registers_once_and_snapshots_flat() {
+        let c = counter("test.metrics.counter_a");
+        let before = snapshot();
+        c.add(3);
+        c.inc();
+        let after = snapshot();
+        assert_eq!(after.diff(&before).get("test.metrics.counter_a"), 4);
+        // Re-registration returns the same cell.
+        let again = counter("test.metrics.counter_a");
+        again.inc();
+        assert_eq!(c.get(), again.get());
+    }
+
+    #[test]
+    fn gauge_is_last_write_wins() {
+        let g = gauge("test.metrics.gauge_a");
+        g.set(7);
+        g.set(2);
+        assert_eq!(g.get(), 2);
+        assert_eq!(snapshot().get("test.metrics.gauge_a"), 2);
+    }
+
+    #[test]
+    fn histogram_flattens_count_and_sum() {
+        let h = histogram("test.metrics.hist_a");
+        let before = snapshot();
+        h.observe(0);
+        h.observe(1);
+        h.observe(1000);
+        let d = snapshot().diff(&before);
+        assert_eq!(d.get("test.metrics.hist_a.count"), 3);
+        assert_eq!(d.get("test.metrics.hist_a.sum"), 1001);
+        assert!(h.mean().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn bucket_of_is_monotone_and_saturating() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn diff_covers_union_of_keys_and_saturates() {
+        let mut a = MetricsSnapshot::default();
+        let mut b = MetricsSnapshot::default();
+        a.values.insert("x".into(), 5);
+        b.values.insert("x".into(), 7);
+        b.values.insert("y".into(), 2);
+        let d = b.diff(&a);
+        assert_eq!(d.get("x"), 2);
+        assert_eq!(d.get("y"), 2);
+        // Saturating, not wrapping, when the "later" side is behind.
+        let d2 = a.diff(&b);
+        assert_eq!(d2.get("x"), 0);
+        assert_eq!(d2.get("y"), 0);
+    }
+
+    #[test]
+    fn metrics_json_is_flat_and_schema_tagged() {
+        counter("test.metrics.json_a").inc();
+        let text = snapshot().to_json();
+        assert!(text.starts_with("{\"schema\":\"nicmap-metrics-v1\","));
+        assert!(text.contains("\"counters\":{"));
+        assert!(text.contains("\"test.metrics.json_a\":"));
+        assert!(text.ends_with("}\n"));
+    }
+}

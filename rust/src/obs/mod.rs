@@ -1,0 +1,58 @@
+//! Zero-dependency observability: one metrics registry, span-based
+//! tracing, and exporters across map, refine, and replay (ISSUE 9).
+//!
+//! Three layers, all in-crate:
+//!
+//! * **[`metrics`]** — named process-wide counters/gauges/histograms
+//!   behind one registry with `snapshot()` / `diff()` / `reset()`
+//!   semantics. The previously scattered instrumentation atomics
+//!   (`TrafficMatrix::workload_builds`, `LoadLedger::seed_passes`, the
+//!   `cost::batch` trio) live here now, their old accessors kept as thin
+//!   shims.
+//! * **[`span`](mod@self::span)** — RAII tracing guards
+//!   ([`span`](fn@self::span)/[`span_with`]/[`event`]) recording nested
+//!   timings, instant events,
+//!   and per-span metric deltas into thread-local buffers. Parallel
+//!   fan-out sites install [`slot_scope`]s keyed by work-item index, so
+//!   serial and threaded runs of the same work produce structurally
+//!   identical traces. A [`capture`] guard arms recording and returns the
+//!   merged slot-ordered [`Trace`].
+//! * **[`export`]** — the Chrome `trace_event` JSON writer
+//!   ([`Trace::chrome_json`], loadable in `chrome://tracing`/Perfetto)
+//!   and the timing-masked structural [`Trace::span_tree`] used by the
+//!   determinism tests. Flat metrics JSON comes from
+//!   [`MetricsSnapshot::to_json`].
+//!
+//! Instrumented sites: `MapCtx` build, every `Mapper::place` path, the
+//! pipeline stages, `Refiner::descend` rounds (candidates scored, moves
+//! accepted as `refine.accept` instants), `LoadLedger` seed/admit/retire,
+//! per-event spans in `online::Replay`, the harness sweep cells, and the
+//! sim engine. The CLI surfaces it via `--trace-out` / `--metrics-json`
+//! on `map`/`bench`/`replay`.
+//!
+//! ## Invariants
+//!
+//! * **Zero overhead when disabled.** Tracing is off by default; an
+//!   uncaptured span site costs one relaxed atomic load and nothing else
+//!   (no clock, no allocation, no thread-local access). Registry counters
+//!   are the same always-on relaxed atomics the code carried before the
+//!   registry existed.
+//! * **No perturbation when enabled.** Recording only reads clocks and
+//!   counters: instrumented runs produce **bit-identical** placements,
+//!   churn metrics, and accepted-move sequences to uninstrumented runs.
+//!   Timings and per-span counter deltas are the only nondeterministic
+//!   trace values, and structural comparisons exclude them. Pinned by
+//!   `tests/obs_determinism.rs`.
+
+pub mod export;
+pub mod metrics;
+pub mod span;
+pub mod testkit;
+
+pub use export::{InstantNode, SpanNode, TrackTree};
+pub use metrics::{
+    counter, gauge, histogram, snapshot, Counter, Gauge, Histogram, MetricsSnapshot,
+};
+pub use span::{
+    capture, enabled, event, slot_scope, span, span_with, Capture, SlotScope, Span, Trace,
+};

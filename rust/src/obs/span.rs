@@ -1,0 +1,381 @@
+//! Span-based tracing: RAII guards recording nested timings, instant
+//! events, and per-span metric deltas into thread-local buffers, merged
+//! slot-ordered so serial and threaded runs produce structurally
+//! identical traces.
+//!
+//! ## Recording model
+//!
+//! Tracing is **off by default**: [`span`] costs one relaxed atomic load
+//! and returns an unarmed guard — no clock read, no allocation, no
+//! thread-local touch. A [`capture`] arms recording process-wide until its
+//! guard is finished or dropped; captures are serialized by an internal
+//! lock so concurrent tests cannot interleave traces.
+//!
+//! While armed, every [`span`] / [`event`] appends to the calling thread's
+//! buffer. Parallel fan-out sites (the harness sweep, `online::Replay`)
+//! install a [`slot_scope`] around each work item: events inside the scope
+//! are routed to a dedicated per-slot **track** keyed by the item's input
+//! index — not by worker thread — so a run with `threads=1` and a run with
+//! `threads=8` emit the same set of tracks with the same nesting.
+//! Timestamps (and per-span metric deltas, which other threads may
+//! contaminate) are the only values that differ; structural comparisons
+//! ([`Trace::span_tree`](crate::obs::Trace::span_tree)) exclude both.
+//!
+//! ## No-perturbation invariant
+//!
+//! Recording never influences placement: spans only read clocks and
+//! counters. `tests/obs_determinism.rs` pins that instrumented runs
+//! produce bit-identical placements, churn metrics, and accepted-move
+//! sequences to uninstrumented ones.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+use crate::obs::metrics::{self, Counter};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Bumped per capture; thread buffers stamped with an older generation
+/// hold stale events from a previous capture and are cleared on first use.
+static GENERATION: AtomicU64 = AtomicU64::new(0);
+
+/// Finished per-slot tracks of the active capture.
+static TRACKS: Mutex<Vec<Track>> = Mutex::new(Vec::new());
+
+/// Serializes captures process-wide.
+static CAPTURE_LOCK: Mutex<()> = Mutex::new(());
+
+fn now_ns() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// True while a capture is armed. One relaxed load — this is the entire
+/// cost of every instrumentation site when tracing is off.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Counters whose per-span deltas are attached to closing span events
+/// (visible in the Chrome trace `args`). Kept to the hot families so a
+/// span begin/end is a handful of relaxed loads.
+const DELTA_COUNTERS: [&str; 10] = [
+    "traffic.workload_builds",
+    "ledger.seed_passes",
+    "ledger.admits",
+    "ledger.retires",
+    "batch.fused_rounds",
+    "batch.row_aggregations",
+    "batch.score_batch_fallbacks",
+    "refine.rounds",
+    "refine.candidates",
+    "refine.moves",
+];
+
+fn delta_set() -> &'static [(&'static str, Counter)] {
+    static SET: OnceLock<Vec<(&'static str, Counter)>> = OnceLock::new();
+    SET.get_or_init(|| DELTA_COUNTERS.iter().map(|&n| (n, metrics::counter(n))).collect())
+}
+
+fn read_marks() -> Vec<u64> {
+    delta_set().iter().map(|(_, c)| c.get()).collect()
+}
+
+/// One raw event inside a track. `End` carries the nonzero per-span
+/// counter deltas computed when the guard dropped.
+#[derive(Debug, Clone)]
+pub(crate) enum RawEvent {
+    Begin { name: &'static str, detail: Option<String>, ts_ns: u64 },
+    End { ts_ns: u64, deltas: Vec<(&'static str, u64)> },
+    Instant { name: &'static str, args: Vec<(&'static str, u64)>, ts_ns: u64 },
+}
+
+impl RawEvent {
+    fn ts_ns(&self) -> u64 {
+        match self {
+            RawEvent::Begin { ts_ns, .. }
+            | RawEvent::End { ts_ns, .. }
+            | RawEvent::Instant { ts_ns, .. } => *ts_ns,
+        }
+    }
+}
+
+/// A finished event sequence: the main thread's (`slot: None`) or one
+/// work item's (`slot: Some(index)`).
+#[derive(Debug, Clone)]
+pub(crate) struct Track {
+    pub(crate) slot: Option<usize>,
+    pub(crate) events: Vec<RawEvent>,
+}
+
+struct ThreadBuf {
+    gen: u64,
+    slot: Option<usize>,
+    events: Vec<RawEvent>,
+    /// Counter marks of the open spans on this thread, innermost last.
+    marks: Vec<Vec<u64>>,
+}
+
+thread_local! {
+    static TLS: RefCell<ThreadBuf> = const {
+        RefCell::new(ThreadBuf { gen: 0, slot: None, events: Vec::new(), marks: Vec::new() })
+    };
+}
+
+/// Run `f` on this thread's buffer, first invalidating state left over
+/// from an earlier capture.
+fn with_buf<R>(f: impl FnOnce(&mut ThreadBuf) -> R) -> R {
+    let gen = GENERATION.load(Ordering::Relaxed);
+    TLS.with(|b| {
+        let mut b = b.borrow_mut();
+        if b.gen != gen {
+            b.events.clear();
+            b.marks.clear();
+            b.slot = None;
+            b.gen = gen;
+        }
+        f(&mut b)
+    })
+}
+
+/// RAII span guard from [`span`] / [`span_with`]. Unarmed (a no-op) when
+/// tracing is disabled.
+#[must_use = "a span measures the scope of its guard; dropping it immediately records nothing useful"]
+pub struct Span {
+    armed: bool,
+}
+
+/// Open a named span covering the guard's lifetime. When tracing is
+/// disabled this is one relaxed load and returns an inert guard.
+pub fn span(name: &'static str) -> Span {
+    open_span(name, None)
+}
+
+/// Like [`span`], with a detail string attached to the trace event. The
+/// closure is evaluated only when tracing is enabled, so formatting costs
+/// nothing in the disabled path.
+pub fn span_with(name: &'static str, detail: impl FnOnce() -> String) -> Span {
+    if !enabled() {
+        return Span { armed: false };
+    }
+    open_span(name, Some(detail()))
+}
+
+fn open_span(name: &'static str, detail: Option<String>) -> Span {
+    if !enabled() {
+        return Span { armed: false };
+    }
+    let marks = read_marks();
+    let ts_ns = now_ns();
+    with_buf(|b| {
+        b.marks.push(marks);
+        b.events.push(RawEvent::Begin { name, detail, ts_ns });
+    });
+    Span { armed: true }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let ts_ns = now_ns();
+        let now: Vec<u64> = read_marks();
+        with_buf(|b| {
+            // A capture boundary inside an open span clears the buffer;
+            // the orphan End below is ignored by the tree builder.
+            let deltas = match b.marks.pop() {
+                Some(begin) => delta_set()
+                    .iter()
+                    .zip(begin.iter().zip(now.iter()))
+                    .filter(|(_, (b0, b1))| b1 > b0)
+                    .map(|((name, _), (b0, b1))| (*name, b1 - b0))
+                    .collect(),
+                None => Vec::new(),
+            };
+            b.events.push(RawEvent::End { ts_ns, deltas });
+        });
+    }
+}
+
+/// Record an instant event (a point, not a range) with small integer
+/// args — e.g. the accepted move of a refinement round. No-op when
+/// tracing is disabled; `args` is only copied when enabled.
+pub fn event(name: &'static str, args: &[(&'static str, u64)]) {
+    if !enabled() {
+        return;
+    }
+    let ts_ns = now_ns();
+    with_buf(|b| b.events.push(RawEvent::Instant { name, args: args.to_vec(), ts_ns }));
+}
+
+/// RAII guard from [`slot_scope`]. Unarmed when tracing is disabled.
+#[must_use = "the scope routes events for its guard's lifetime; dropping it immediately routes nothing"]
+pub struct SlotScope {
+    armed: bool,
+    prev_slot: Option<usize>,
+    prev_events: Vec<RawEvent>,
+}
+
+/// Route this thread's events into the per-slot track `slot` until the
+/// guard drops. Installed at parallel fan-out sites around each work item,
+/// keyed by the item's **input index**: `par_map` runs items on arbitrary
+/// worker threads, but identical slot keys make serial and threaded traces
+/// structurally identical. On drop the finished track is published and the
+/// thread's previous routing restored (scopes nest).
+pub fn slot_scope(slot: usize) -> SlotScope {
+    if !enabled() {
+        return SlotScope { armed: false, prev_slot: None, prev_events: Vec::new() };
+    }
+    let mut prev_slot = None;
+    let mut prev_events = Vec::new();
+    with_buf(|b| {
+        prev_slot = b.slot.take();
+        prev_events = std::mem::take(&mut b.events);
+        b.slot = Some(slot);
+    });
+    SlotScope { armed: true, prev_slot, prev_events }
+}
+
+impl Drop for SlotScope {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let prev_slot = self.prev_slot.take();
+        let prev_events = std::mem::take(&mut self.prev_events);
+        with_buf(|b| {
+            let slot = b.slot.take();
+            let events = std::mem::take(&mut b.events);
+            if !events.is_empty() {
+                let mut tracks = TRACKS.lock().unwrap_or_else(|e| e.into_inner());
+                tracks.push(Track { slot, events });
+            }
+            b.slot = prev_slot;
+            b.events = prev_events;
+        });
+    }
+}
+
+/// Active capture returned by [`capture`]. Recording stays armed until
+/// [`finish`](Self::finish) (which returns the [`Trace`]) or drop (which
+/// just disarms).
+pub struct Capture {
+    _lock: MutexGuard<'static, ()>,
+    finished: bool,
+}
+
+/// Arm tracing process-wide and start a fresh capture. Captures are
+/// serialized: a second concurrent call blocks until the first finishes.
+/// Call [`Capture::finish`] on the same thread that ran the traced work
+/// (its unscoped events become the `main` track).
+pub fn capture() -> Capture {
+    let lock = CAPTURE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    GENERATION.fetch_add(1, Ordering::Relaxed);
+    TRACKS.lock().unwrap_or_else(|e| e.into_inner()).clear();
+    // Eagerly sync this thread's buffer to the new generation.
+    with_buf(|_| {});
+    // Touch the delta set so counter registration cost lands here, not
+    // inside the first traced span.
+    let _ = delta_set();
+    ENABLED.store(true, Ordering::SeqCst);
+    Capture { _lock: lock, finished: false }
+}
+
+impl Capture {
+    /// Disarm tracing, flush this thread's unscoped events as the `main`
+    /// track, and return the merged slot-ordered [`Trace`].
+    pub fn finish(mut self) -> Trace {
+        self.finished = true;
+        ENABLED.store(false, Ordering::SeqCst);
+        let main_events = TLS.with(|b| {
+            let mut b = b.borrow_mut();
+            if b.gen == GENERATION.load(Ordering::Relaxed) {
+                b.slot = None;
+                b.marks.clear();
+                std::mem::take(&mut b.events)
+            } else {
+                Vec::new()
+            }
+        });
+        let mut tracks = std::mem::take(&mut *TRACKS.lock().unwrap_or_else(|e| e.into_inner()));
+        if !main_events.is_empty() {
+            tracks.push(Track { slot: None, events: main_events });
+        }
+        // Main first, then slots ascending; ties (repeated slot keys from
+        // nested scopes) by start time, then publication order.
+        tracks.sort_by_key(|t| {
+            (t.slot.map_or(0, |s| s + 1), t.events.first().map_or(0, RawEvent::ts_ns))
+        });
+        Trace { tracks }
+    }
+}
+
+impl Drop for Capture {
+    fn drop(&mut self) {
+        if !self.finished {
+            ENABLED.store(false, Ordering::SeqCst);
+        }
+    }
+}
+
+/// A finished capture: the `main` track followed by per-slot tracks in
+/// slot order. Export with
+/// [`chrome_json`](Trace::chrome_json) / [`span_tree`](Trace::span_tree)
+/// (see [`crate::obs::export`]).
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub(crate) tracks: Vec<Track>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests build Track/RawEvent values directly (no capture), so
+    // they cannot be perturbed by — or perturb — concurrent lib tests.
+
+    #[test]
+    fn disabled_span_and_event_are_inert() {
+        // Holding the capture lock guarantees no concurrent test has
+        // tracing armed (captures clear ENABLED before releasing it).
+        let _lock = CAPTURE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        assert!(!enabled());
+        let s = span("test.span.noop");
+        event("test.span.noop_event", &[("k", 1)]);
+        drop(s);
+        let scope = slot_scope(3);
+        drop(scope);
+        TLS.with(|b| {
+            let b = b.borrow();
+            assert!(b.events.is_empty());
+            assert!(b.marks.is_empty());
+            assert!(b.slot.is_none());
+        });
+    }
+
+    #[test]
+    fn raw_event_timestamps_are_accessible() {
+        let e = RawEvent::Begin { name: "x", detail: None, ts_ns: 7 };
+        assert_eq!(e.ts_ns(), 7);
+        let e = RawEvent::End { ts_ns: 9, deltas: Vec::new() };
+        assert_eq!(e.ts_ns(), 9);
+    }
+
+    #[test]
+    fn track_sort_is_main_first_then_slot_order() {
+        let ev = |ts| RawEvent::Instant { name: "i", args: Vec::new(), ts_ns: ts };
+        let mut tracks = vec![
+            Track { slot: Some(2), events: vec![ev(5)] },
+            Track { slot: None, events: vec![ev(9)] },
+            Track { slot: Some(0), events: vec![ev(1)] },
+        ];
+        tracks.sort_by_key(|t| {
+            (t.slot.map_or(0, |s| s + 1), t.events.first().map_or(0, RawEvent::ts_ns))
+        });
+        let slots: Vec<Option<usize>> = tracks.iter().map(|t| t.slot).collect();
+        assert_eq!(slots, vec![None, Some(0), Some(2)]);
+    }
+}

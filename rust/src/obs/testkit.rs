@@ -1,0 +1,66 @@
+//! Test-isolation helpers for counting tests.
+//!
+//! Process-wide counters are shared by every test in a binary, so a test
+//! asserting an exact delta must (a) serialize against other bumping
+//! tests and (b) measure from a baseline. [`counter_guard`] does both in
+//! one call: it takes a shared lock and snapshots the registry, replacing
+//! the ad-hoc file-local `Mutex<()>` convention the counting tests used
+//! to carry (`tests/mapctx_sweep.rs`, `benches/perf_cost_model.rs`).
+
+use std::sync::{Mutex, MutexGuard};
+
+use crate::obs::metrics::{snapshot, MetricsSnapshot};
+
+static COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+/// Guard from [`counter_guard`]: holds the shared counter lock and the
+/// baseline [`MetricsSnapshot`] taken at acquisition.
+pub struct CounterGuard {
+    _lock: MutexGuard<'static, ()>,
+    start: MetricsSnapshot,
+}
+
+/// Serialize this test against other counting tests in the process and
+/// snapshot every registered metric as the delta baseline.
+pub fn counter_guard() -> CounterGuard {
+    // A panicking guard holder poisons the lock without corrupting the
+    // counters; later tests measure their own deltas, so keep going.
+    let lock = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    CounterGuard { _lock: lock, start: snapshot() }
+}
+
+impl CounterGuard {
+    /// Increase of metric `name` since the baseline snapshot.
+    pub fn delta(&self, name: &str) -> u64 {
+        snapshot().diff(&self.start).get(name)
+    }
+
+    /// Move the baseline to now — for tests measuring several windows
+    /// under one lock.
+    pub fn rebaseline(&mut self) {
+        self.start = snapshot();
+    }
+
+    /// The baseline snapshot.
+    pub fn start(&self) -> &MetricsSnapshot {
+        &self.start
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::counter;
+
+    #[test]
+    fn guard_measures_deltas_and_rebaselines() {
+        let c = counter("test.testkit.guarded");
+        let mut g = counter_guard();
+        c.add(2);
+        assert_eq!(g.delta("test.testkit.guarded"), 2);
+        g.rebaseline();
+        assert_eq!(g.delta("test.testkit.guarded"), 0);
+        c.inc();
+        assert_eq!(g.delta("test.testkit.guarded"), 1);
+    }
+}

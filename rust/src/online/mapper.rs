@@ -36,6 +36,8 @@
 //! full-scorer seed passes — both counted invariants, asserted by
 //! `tests/online_replay.rs` and the `perf_online_replay` bench.
 
+use std::sync::OnceLock;
+
 use crate::coordinator::refine::Refiner;
 use crate::coordinator::{Mapper, MapperSpec, Occupancy, Placement};
 use crate::cost::{LoadLedger, NodeLoads};
@@ -44,9 +46,17 @@ use crate::error::{Error, Result};
 use crate::model::topology::ClusterSpec;
 use crate::model::traffic::TrafficMatrix;
 use crate::model::workload::{JobSpec, Workload};
+use crate::obs;
 use crate::online::trace::{TraceEvent, TraceEventKind};
 use crate::sim::{simulate, SimConfig};
 use crate::units::Ns;
+
+/// Registry counter `replay.events`: trace events processed by any
+/// [`OnlineMapper`] in this process.
+fn events_counter() -> obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    *C.get_or_init(|| obs::counter("replay.events"))
+}
 
 /// Replay knobs.
 #[derive(Debug, Clone, Copy)]
@@ -110,6 +120,10 @@ pub struct EventRecord {
     pub procs: usize,
     /// Processes whose core changed in this event's refinement pass.
     pub migrations: usize,
+    /// Candidate moves scored by this event's refinement pass (0 when
+    /// refinement was skipped). Deterministic — part of the
+    /// [`crate::online::ChurnReport::metrics_eq`] comparison.
+    pub refine_evals: usize,
     /// Live cost-model objective after the event (placement-cost
     /// trajectory).
     pub objective: f64,
@@ -232,6 +246,8 @@ impl<'c> OnlineMapper<'c> {
     /// malformations (departing a job that never arrived) are errors;
     /// capacity shortfalls are recorded rejections.
     pub fn on_event(&mut self, ev: &TraceEvent) -> Result<EventRecord> {
+        let _span = obs::span("replay.event");
+        events_counter().inc();
         let t0 = std::time::Instant::now();
         let seq = self.seq;
         self.seq += 1;
@@ -258,13 +274,13 @@ impl<'c> OnlineMapper<'c> {
         };
         // Bounded refinement after the event for `+r` specs (skipped when
         // the event changed nothing placeable).
-        let migrations = if self.spec.refined
+        let (migrations, refine_evals) = if self.spec.refined
             && self.cfg.refine_rounds > 0
             && matches!(action, EventAction::Placed | EventAction::Departed)
         {
             self.refine_pass()?
         } else {
-            0
+            (0, 0)
         };
         let waiting_ms = if self.cfg.sim_every > 0
             && (seq + 1) % self.cfg.sim_every == 0
@@ -274,6 +290,18 @@ impl<'c> OnlineMapper<'c> {
         } else {
             None
         };
+        // The action is deterministic, so the instant is part of the
+        // structural trace (unlike timings).
+        let action_event = match action {
+            EventAction::Placed => "replay.placed",
+            EventAction::Rejected => "replay.rejected",
+            EventAction::Departed => "replay.departed",
+            EventAction::DepartedUnplaced => "replay.departed_unplaced",
+        };
+        obs::event(
+            action_event,
+            &[("seq", seq as u64), ("procs", procs as u64), ("migrations", migrations as u64)],
+        );
         Ok(EventRecord {
             seq,
             at_ns: ev.at_ns,
@@ -281,6 +309,7 @@ impl<'c> OnlineMapper<'c> {
             job: job_name,
             procs,
             migrations,
+            refine_evals,
             objective: self.ledger.objective(),
             live_procs: self.ledger.len(),
             free_cores: self.occ.total_free(),
@@ -292,8 +321,12 @@ impl<'c> OnlineMapper<'c> {
     /// Admit one job: single-job ctx, free-core-restricted placement, block
     /// splice into the persistent ledger.
     fn admit(&mut self, instance: usize, job: &JobSpec) -> Result<()> {
+        let _span = obs::span_with("replay.admit", || job.name.clone());
         let ctx = MapCtx::for_job(job)?;
-        let placement = self.base.place(&ctx, self.cluster, &mut self.occ)?;
+        let placement = {
+            let _place = obs::span_with("map.place", || self.base.name().to_string());
+            self.base.place(&ctx, self.cluster, &mut self.occ)?
+        };
         self.ledger.admit_block(ctx.traffic().clone(), &placement.core_of)?;
         self.live.push(LiveJob { instance, spec: job.clone() });
         Ok(())
@@ -303,6 +336,7 @@ impl<'c> OnlineMapper<'c> {
     /// block's current cores, offsets remapped) and release the freed
     /// cores. Returns the departed spec.
     fn retire(&mut self, instance: usize) -> Result<JobSpec> {
+        let _span = obs::span("replay.retire");
         let pos = self
             .live
             .iter()
@@ -324,14 +358,15 @@ impl<'c> OnlineMapper<'c> {
 
     /// One bounded refinement descent on the persistent ledger — no
     /// traffic composition, no scorer seed, no verify pass. Returns the
-    /// number of processes whose core changed and re-points the occupancy
-    /// at the refined cores.
-    fn refine_pass(&mut self) -> Result<usize> {
+    /// number of processes whose core changed and the candidate moves
+    /// scored, and re-points the occupancy at the refined cores.
+    fn refine_pass(&mut self) -> Result<(usize, usize)> {
         if self.live.is_empty() {
-            return Ok(0);
+            return Ok((0, 0));
         }
+        let _span = obs::span("replay.refine");
         let start = self.ledger.placement();
-        self.refiner.descend(&mut self.ledger, |_| true)?;
+        let stats = self.refiner.descend(&mut self.ledger, |_| true)?;
         let refined = self.ledger.placement();
         let moved = refined
             .core_of
@@ -340,7 +375,7 @@ impl<'c> OnlineMapper<'c> {
             .filter(|(a, b)| a != b)
             .count();
         if moved == 0 {
-            return Ok(0);
+            return Ok((0, stats.delta_evals));
         }
         // Re-point the occupancy at the refined cores: release every
         // changed old core before claiming any new one, so a core swapped
@@ -355,7 +390,7 @@ impl<'c> OnlineMapper<'c> {
                 self.occ.claim(new)?;
             }
         }
-        Ok(moved)
+        Ok((moved, stats.delta_evals))
     }
 
     /// Round-capped simulation of the live workload under the live

@@ -186,6 +186,7 @@ impl ChurnReport {
                     && a.job == b.job
                     && a.procs == b.procs
                     && a.migrations == b.migrations
+                    && a.refine_evals == b.refine_evals
                     && a.objective.to_bits() == b.objective.to_bits()
                     && a.live_procs == b.live_procs
                     && a.free_cores == b.free_cores
@@ -284,7 +285,12 @@ impl<'a> Replay<'a> {
         };
         let trace = self.trace;
         let cfg = self.cfg;
-        crate::par::par_map(self.mappers, self.threads, |spec| {
+        let cells: Vec<(usize, MapperSpec)> = self.mappers.into_iter().enumerate().collect();
+        crate::par::par_map(cells, self.threads, |(slot, spec)| {
+            // Trace events of this mapper cell land in the slot's own
+            // track, keyed by input index — serial and threaded replays
+            // trace identically.
+            let _scope = crate::obs::slot_scope(slot);
             replay_one(trace, cluster, spec, &cfg)
         })
         .into_iter()
@@ -301,6 +307,7 @@ fn replay_one(
     spec: MapperSpec,
     cfg: &ReplayConfig,
 ) -> Result<ChurnReport> {
+    let _span = crate::obs::span_with("replay.run", || spec.name());
     let t0 = std::time::Instant::now();
     let mut service = OnlineMapper::new(cluster, spec, *cfg)?;
     let mut events = Vec::with_capacity(trace.events.len());

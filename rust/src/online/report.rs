@@ -17,6 +17,7 @@
 //! | `mapper` | replay | mapper spec name (`N`, `N+r`, ...) |
 //! | `seq`, `at_ns`, `action`, `job`, `procs` | event | trace event identity |
 //! | `migrations` | event | processes moved by this event's refinement |
+//! | `refine_evals` | event | candidate moves scored by this event's refinement |
 //! | `objective` | event | live cost-model objective after the event |
 //! | `live_procs`, `free_cores` | event | occupancy after the event |
 //! | `waiting_ms` | event | epoch waiting snapshot (absent off-schedule) |
@@ -42,6 +43,7 @@ pub fn churn_to_csv(reports: &[ChurnReport]) -> Csv {
         "job",
         "procs",
         "migrations",
+        "refine_evals",
         "objective",
         "live_procs",
         "free_cores",
@@ -65,6 +67,7 @@ pub fn churn_to_csv(reports: &[ChurnReport]) -> Csv {
                 e.job.clone(),
                 e.procs.to_string(),
                 e.migrations.to_string(),
+                e.refine_evals.to_string(),
                 format!("{}", e.objective),
                 e.live_procs.to_string(),
                 e.free_cores.to_string(),
@@ -96,6 +99,7 @@ pub fn churn_to_json(reports: &[ChurnReport], threads: usize, wall_secs: f64) ->
                     .str("job", &e.job)
                     .int("procs", e.procs as u64)
                     .int("migrations", e.migrations as u64)
+                    .int("refine_evals", e.refine_evals as u64)
                     .num("objective", e.objective)
                     .int("live_procs", e.live_procs as u64)
                     .int("free_cores", e.free_cores as u64)
@@ -162,9 +166,9 @@ mod tests {
         let rows: usize = reports.iter().map(|r| r.events.len()).sum();
         assert_eq!(text.lines().count(), 1 + rows);
         assert!(text.starts_with(
-            "trace,mapper,seq,at_ns,action,job,procs,migrations,objective,live_procs,\
-             free_cores,waiting_ms,place_secs,events_per_sec,time_to_place_p50_secs,\
-             time_to_place_p99_secs"
+            "trace,mapper,seq,at_ns,action,job,procs,migrations,refine_evals,objective,\
+             live_procs,free_cores,waiting_ms,place_secs,events_per_sec,\
+             time_to_place_p50_secs,time_to_place_p99_secs"
         ));
         assert!(text.contains(",Blocked,"));
         assert!(text.contains(",New+r,"));

@@ -47,6 +47,7 @@ pub fn simulate(
     cfg: &SimConfig,
 ) -> Result<SimReport> {
     placement.validate(w, cluster)?;
+    let _span = crate::obs::span_with("sim.run", || w.name.clone());
     let wall_start = std::time::Instant::now();
 
     let total = w.total_procs();

@@ -12,26 +12,21 @@
 //!   new path.
 //!
 //! Every test that (transitively) constructs a workload matrix serializes
-//! on one mutex: `workload_builds` is a process-wide counter and this file
-//! is its own test binary, so the lock is all the isolation the counting
-//! assertions need.
-
-use std::sync::Mutex;
+//! through [`counter_guard`]: `traffic.workload_builds` is a process-wide
+//! registry counter, and the guard both locks out other counting tests and
+//! snapshots the baseline the delta assertions measure from.
 
 use nicmap::coordinator::{MapperKind, MapperSpec};
 use nicmap::ctx::MapCtx;
 use nicmap::harness::{run_cell, run_sweep, run_workload, sweeps_identical};
 use nicmap::model::topology::ClusterSpec;
-use nicmap::model::traffic::TrafficMatrix;
 use nicmap::model::workload::Workload;
+use nicmap::obs::testkit::counter_guard;
 use nicmap::sim::SimConfig;
 use nicmap::testkit::{forall, gen};
 
-static COUNTER_LOCK: Mutex<()> = Mutex::new(());
-
-fn counter_guard() -> std::sync::MutexGuard<'static, ()> {
-    COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
-}
+/// The registry name behind `TrafficMatrix::workload_builds`.
+const BUILDS: &str = "traffic.workload_builds";
 
 /// Builtin workload with every flow capped to `rounds` rounds.
 fn scaled(name: &str, rounds: u64) -> Workload {
@@ -42,34 +37,32 @@ fn scaled(name: &str, rounds: u64) -> Workload {
 
 #[test]
 fn sweep_builds_exactly_one_traffic_matrix_per_workload() {
-    let _guard = counter_guard();
+    let mut guard = counter_guard();
     let cluster = ClusterSpec::paper_cluster();
     let cfg = SimConfig::default();
     let workloads = vec![scaled("synt4", 5), scaled("real4", 5)];
 
     // The full 8-column sweep (4 base mappers + their `+r` variants, which
     // additionally run the traffic-hungry refinement stage), threaded.
-    let before = TrafficMatrix::workload_builds();
     let runs = run_sweep(&workloads, &cluster, &MapperSpec::PAPER_REFINED, &cfg, 4).unwrap();
-    let delta = TrafficMatrix::workload_builds() - before;
     assert_eq!(runs.len(), 2);
     assert_eq!(runs[0].cells.len(), 8);
     assert_eq!(
-        delta,
+        guard.delta(BUILDS),
         workloads.len() as u64,
         "a sweep must build the workload matrix exactly once per workload"
     );
 
     // The serial per-workload driver holds the same guarantee.
-    let before = TrafficMatrix::workload_builds();
+    guard.rebaseline();
     let run = run_workload(&workloads[0], &cluster, &MapperSpec::PAPER_REFINED, &cfg).unwrap();
     assert_eq!(run.cells.len(), 8);
-    assert_eq!(TrafficMatrix::workload_builds() - before, 1);
+    assert_eq!(guard.delta(BUILDS), 1);
 }
 
 #[test]
 fn mappers_and_refiner_reuse_the_ctx_matrix() {
-    let _guard = counter_guard();
+    let mut guard = counter_guard();
     let cluster = ClusterSpec::paper_cluster();
     let w = scaled("real4", 5);
     let ctx = MapCtx::build(&w);
@@ -77,21 +70,21 @@ fn mappers_and_refiner_reuse_the_ctx_matrix() {
     // Once a ctx exists, no mapper — including every `+r` variant, whose
     // refinement stage is the heaviest traffic consumer — may rebuild the
     // workload matrix.
-    let before = TrafficMatrix::workload_builds();
+    guard.rebaseline();
     for spec in MapperSpec::PAPER_REFINED {
         let p = spec.build().map(&ctx, &cluster).unwrap();
         p.validate(&w, &cluster).unwrap();
     }
     assert_eq!(
-        TrafficMatrix::workload_builds(),
-        before,
+        guard.delta(BUILDS),
+        0,
         "mapping through a shared ctx must not rebuild the traffic matrix"
     );
 
     // And a cell driven through the harness on that ctx stays build-free.
-    let before = TrafficMatrix::workload_builds();
+    guard.rebaseline();
     run_cell(&ctx, &cluster, MapperSpec::plus_r(MapperKind::New), &SimConfig::default()).unwrap();
-    assert_eq!(TrafficMatrix::workload_builds(), before);
+    assert_eq!(guard.delta(BUILDS), 0);
 }
 
 #[test]

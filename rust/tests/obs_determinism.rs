@@ -1,0 +1,196 @@
+//! Observability determinism tests (ISSUE 9): the two invariants of
+//! `nicmap::obs` documented in the module docs.
+//!
+//! * **No perturbation** — instrumented runs produce bit-identical
+//!   placements, churn metrics, and accepted-move sequences to
+//!   uninstrumented runs.
+//! * **Structural trace identity** — serial and threaded runs of the same
+//!   work produce equal [`Trace::span_tree`] forms (slot tracks are keyed
+//!   by input index, not worker thread; timings and counter deltas are
+//!   masked).
+//!
+//! Every test takes [`counter_guard`] first: captures and counter deltas
+//! are process-wide, so the tests in this binary serialize against each
+//! other (the lock order counter-lock -> capture-lock is the same
+//! everywhere, so there is no deadlock).
+//!
+//! [`Trace::span_tree`]: nicmap::obs::Trace::span_tree
+
+use nicmap::coordinator::refine::Refiner;
+use nicmap::coordinator::{MapperKind, MapperSpec};
+use nicmap::cost::LoadLedger;
+use nicmap::ctx::MapCtx;
+use nicmap::harness::{cap_rounds, replays_identical, run_sweep, sweeps_identical};
+use nicmap::model::topology::ClusterSpec;
+use nicmap::model::workload::Workload;
+use nicmap::obs;
+use nicmap::obs::testkit::counter_guard;
+use nicmap::online::{ArrivalTrace, ChurnReport, Replay};
+use nicmap::runtime::NativeScorer;
+use nicmap::sim::SimConfig;
+
+fn sweep_inputs() -> (Vec<Workload>, ClusterSpec, Vec<MapperSpec>, SimConfig) {
+    let mut w = Workload::builtin("real4").unwrap();
+    cap_rounds(&mut w, 3);
+    let mappers =
+        vec![MapperSpec::plain(MapperKind::Blocked), MapperSpec::plus_r(MapperKind::New)];
+    (vec![w], ClusterSpec::paper_cluster(), mappers, SimConfig::default())
+}
+
+fn run_replay(threads: usize) -> Vec<ChurnReport> {
+    let trace = ArrivalTrace::builtin("poisson:11:6").unwrap();
+    let cluster = ClusterSpec::paper_cluster();
+    let mappers =
+        [MapperSpec::plain(MapperKind::Blocked), MapperSpec::plus_r(MapperKind::New)];
+    Replay::new(&trace)
+        .on(&cluster)
+        .mappers(&mappers)
+        .sim_every(3)
+        .sim_rounds(2)
+        .threads(threads)
+        .run()
+        .unwrap()
+}
+
+/// Tracing a sweep changes nothing it measures: the instrumented runs
+/// (threaded and serial) match the uninstrumented baseline bit for bit,
+/// and their traces are structurally identical to each other.
+#[test]
+fn sweep_is_unperturbed_and_trace_is_thread_invariant() {
+    let _guard = counter_guard();
+    let (workloads, cluster, mappers, cfg) = sweep_inputs();
+    let baseline = run_sweep(&workloads, &cluster, &mappers, &cfg, 2).unwrap();
+
+    let cap = obs::capture();
+    let threaded = run_sweep(&workloads, &cluster, &mappers, &cfg, 2).unwrap();
+    let threaded_trace = cap.finish();
+
+    let cap = obs::capture();
+    let serial = run_sweep(&workloads, &cluster, &mappers, &cfg, 1).unwrap();
+    let serial_trace = cap.finish();
+
+    assert!(sweeps_identical(&baseline, &threaded), "tracing perturbed the threaded sweep");
+    assert!(sweeps_identical(&baseline, &serial), "tracing perturbed the serial sweep");
+
+    // One slot track per cell plus the main track, same in both modes.
+    assert_eq!(threaded_trace.track_count(), 1 + mappers.len());
+    assert_eq!(threaded_trace.span_tree(), serial_trace.span_tree());
+
+    let names = threaded_trace.span_names();
+    for expected in ["ctx.build", "harness.cell", "map.place", "sim.run", "refine.descend"] {
+        assert!(names.contains(expected), "sweep trace missing span {expected:?}");
+    }
+}
+
+/// Same invariants for the online replay: instrumented == uninstrumented
+/// on every churn metric (including the new `refine_evals` column), and
+/// the span trees — with the deterministic `refine.accept` / `replay.*`
+/// instants they carry — do not depend on the thread count.
+#[test]
+fn replay_is_unperturbed_and_trace_is_thread_invariant() {
+    let _guard = counter_guard();
+    let baseline = run_replay(2);
+
+    let cap = obs::capture();
+    let threaded = run_replay(2);
+    let threaded_trace = cap.finish();
+
+    let cap = obs::capture();
+    let serial = run_replay(1);
+    let serial_trace = cap.finish();
+
+    assert!(replays_identical(&baseline, &threaded), "tracing perturbed the threaded replay");
+    assert!(replays_identical(&baseline, &serial), "tracing perturbed the serial replay");
+    assert_eq!(threaded_trace.span_tree(), serial_trace.span_tree());
+
+    // The accepted-move sequence is part of the structural trace: the +r
+    // mapper's per-event refinement accepts the same moves in the same
+    // order regardless of threading.
+    assert_eq!(
+        threaded_trace.instants_named("refine.accept"),
+        serial_trace.instants_named("refine.accept")
+    );
+    // Every replay event leaves exactly one action instant, in order.
+    let actions: usize = ["replay.placed", "replay.rejected", "replay.departed"]
+        .iter()
+        .map(|n| threaded_trace.instants_named(n).len())
+        .sum::<usize>()
+        + threaded_trace.instants_named("replay.departed_unplaced").len();
+    let events: usize = baseline.iter().map(|r| r.events.len()).sum();
+    assert_eq!(actions, events);
+
+    let names = threaded_trace.span_names();
+    for expected in ["replay.run", "replay.event", "replay.admit", "map.place", "ledger.admit"]
+    {
+        assert!(names.contains(expected), "replay trace missing span {expected:?}");
+    }
+
+    // Exporter smoke on a real capture: both tracks named, events present.
+    let chrome = threaded_trace.chrome_json();
+    assert!(chrome.starts_with("{\"traceEvents\":["));
+    assert!(chrome.contains("\"name\":\"slot 0\""));
+    assert!(chrome.contains("\"name\":\"slot 1\""));
+    assert!(chrome.contains("\"name\":\"replay.event\""));
+}
+
+/// A traced descent on a live ledger accepts the same move sequence as an
+/// untraced one — same placement, same stats bits — and reports each
+/// accepted move as one `refine.accept` instant.
+#[test]
+fn descend_is_unperturbed_and_reports_accepted_moves() {
+    let _guard = counter_guard();
+    let w = Workload::builtin("real4").unwrap();
+    let cluster = ClusterSpec::paper_cluster();
+    let ctx = MapCtx::build(&w);
+    let start = MapperKind::Blocked.build().map(&ctx, &cluster).unwrap();
+
+    let mut plain = LoadLedger::new(&NativeScorer, ctx.dense_traffic(), &start, &cluster).unwrap();
+    let plain_stats = Refiner::default().descend(&mut plain, |_| true).unwrap();
+
+    let cap = obs::capture();
+    let mut traced =
+        LoadLedger::new(&NativeScorer, ctx.dense_traffic(), &start, &cluster).unwrap();
+    let traced_stats = Refiner::default().descend(&mut traced, |_| true).unwrap();
+    let trace = cap.finish();
+
+    assert_eq!(plain_stats.moves, traced_stats.moves);
+    assert_eq!(plain_stats.delta_evals, traced_stats.delta_evals);
+    assert_eq!(plain_stats.objective.to_bits(), traced_stats.objective.to_bits());
+    assert_eq!(plain.placement().core_of, traced.placement().core_of);
+
+    assert_eq!(trace.instants_named("refine.accept").len(), traced_stats.moves);
+    let names = trace.span_names();
+    assert!(names.contains("refine.descend"));
+    assert!(names.contains("refine.round"));
+}
+
+/// The capture guard is the only thing that arms tracing: outside one,
+/// spans record nothing (the zero-overhead path), and a fresh capture
+/// starts from an empty trace.
+#[test]
+fn capture_scopes_recording() {
+    let _guard = counter_guard();
+    {
+        let _outside = obs::span("obs_determinism.outside");
+        obs::event("obs_determinism.outside_event", &[]);
+    }
+    let cap = obs::capture();
+    assert!(obs::enabled());
+    let trace = cap.finish();
+    assert!(!obs::enabled());
+    assert!(trace.is_empty(), "events recorded outside a capture leaked in");
+}
+
+/// `metrics::reset` zeroes every registered metric; with the counter lock
+/// held nothing is bumping, so the snapshot after is exactly zero.
+#[test]
+fn reset_zeroes_the_registry() {
+    let _guard = counter_guard();
+    let c = obs::counter("obs_determinism.reset_probe");
+    c.add(41);
+    assert!(obs::snapshot().get("obs_determinism.reset_probe") >= 41);
+    obs::metrics::reset();
+    for (name, value) in obs::snapshot().iter() {
+        assert_eq!(value, 0, "metric {name:?} survived reset");
+    }
+}
