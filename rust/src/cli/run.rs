@@ -7,9 +7,11 @@ use crate::cost::{NodeLoads, Scorer};
 use crate::ctx::MapCtx;
 use crate::error::{Error, Result};
 use crate::harness::{
-    cap_rounds, render_figure, replays_identical, run_real, run_sweep,
-    run_synthetic, run_workload, sweep_to_csv, sweep_to_json, sweeps_identical, Metric,
+    cap_rounds, render_figure, render_topology_comparison, replays_identical, run_real,
+    run_sweep, run_synthetic, run_topology_sweep, run_workload, sweep_to_csv, sweep_to_json,
+    sweeps_identical, topology_sweep_to_json, Metric,
 };
+use crate::model::fabric::Topology;
 use crate::model::spec;
 use crate::model::topology::ClusterSpec;
 use crate::model::traffic::TrafficMatrix;
@@ -50,6 +52,16 @@ the run's spans (load it in chrome://tracing or Perfetto), the second
 the flat delta of the metrics registry over the run; bare flags write
 TRACE_<verb>.json / METRICS_<verb>.json. Without either flag the spans
 stay disabled (the zero-overhead path).
+
+Every cluster-consuming verb also takes the fabric flags
+`--topology switch|fat-tree:PODS|dragonfly:GROUPS|torus:XxYxZ` (the
+interconnect the cluster routes over; default the paper's single switch)
+and `--hop-weight W` (adds `W * traffic-weighted hop distance / nic_bw`
+to the placement objective; default 0, which is bit-identical to the
+hop-unaware model). `bench --topology a,b,c` with a comma-separated list
+runs the mapper x workload x topology comparison instead of the flat
+sweep, prints per-fabric columns plus mapper-ranking flips, and `--json`
+writes BENCH_topology.json.
 
 Mapper letters are case-insensitive (N == n) and any mapper takes a `+r`
 suffix (B+r, c+r, D+r, n+r, ...) selecting the cost-model refinement stage
@@ -115,14 +127,33 @@ fn with_obs<F: FnOnce() -> Result<()>>(args: &Args, tag: &str, f: F) -> Result<(
     Ok(())
 }
 
-/// Resolve (cluster, workload) from `--spec` or `--workload`.
-fn load_input(args: &Args) -> Result<(ClusterSpec, Workload)> {
-    if let Some(path) = args.get("spec") {
-        let s = spec::load(std::path::Path::new(path))?;
-        return Ok((s.cluster, s.workload));
+/// Apply the shared fabric flags to a cluster: `--topology SPEC`
+/// (hardened parsing through [`Topology::parse`] — malformed specs error
+/// listing every valid form) and `--hop-weight W`, then re-validate so a
+/// fabric that cannot host the cluster's node count fails here, not deep
+/// inside a sweep.
+fn apply_fabric_flags(args: &Args, mut cluster: ClusterSpec) -> Result<ClusterSpec> {
+    if let Some(spec) = args.get("topology") {
+        cluster = cluster.with_topology(Topology::parse(spec)?);
     }
-    let name = args.require("workload")?;
-    Ok((ClusterSpec::paper_cluster(), Workload::builtin(name)?))
+    if let Some(w) = args.get_parse::<f64>("hop-weight")? {
+        cluster = cluster.with_hop_weight(w);
+    }
+    cluster.validate()?;
+    Ok(cluster)
+}
+
+/// Resolve (cluster, workload) from `--spec` or `--workload`, with the
+/// fabric flags applied on top of either source.
+fn load_input(args: &Args) -> Result<(ClusterSpec, Workload)> {
+    let (cluster, w) = if let Some(path) = args.get("spec") {
+        let s = spec::load(std::path::Path::new(path))?;
+        (s.cluster, s.workload)
+    } else {
+        let name = args.require("workload")?;
+        (ClusterSpec::paper_cluster(), Workload::builtin(name)?)
+    };
+    Ok((apply_fabric_flags(args, cluster)?, w))
 }
 
 /// Resolve the input and build its shared [`MapCtx`] — the single
@@ -335,12 +366,17 @@ fn cmd_bench(args: &Args) -> Result<()> {
             cap_rounds(w, rounds);
         }
     }
-    let cluster = ClusterSpec::paper_cluster();
     let mut cfg = SimConfig::default();
     if let Some(st) = args.get_parse::<u64>("stagger")? {
         cfg.stagger_ns = st;
     }
     let threads = args.get_parse::<usize>("threads")?.unwrap_or_else(crate::par::default_threads);
+    // A comma-separated `--topology` list selects the fabric comparison
+    // instead of the flat sweep; a single fabric just reshapes the cluster.
+    if let Some(list) = args.get("topology").filter(|s| s.contains(',')) {
+        return cmd_bench_topology(args, list, &workloads, &mappers, &cfg, threads);
+    }
+    let cluster = apply_fabric_flags(args, ClusterSpec::paper_cluster())?;
 
     println!(
         "bench sweep: {} workloads x {} mappers = {} cells on {} threads",
@@ -413,6 +449,56 @@ fn cmd_bench(args: &Args) -> Result<()> {
     }
     if let Some(path) = output_path("csv", "BENCH_harness.csv") {
         sweep_to_csv(&runs).write(std::path::Path::new(&path))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// The mapper × workload × topology comparison behind `bench --topology
+/// a,b,c` (ISSUE 10): one full sweep per fabric off the same base cluster,
+/// a side-by-side table with mapper-ranking flips against the first
+/// (baseline) fabric, and `--json` writing `BENCH_topology.json`.
+fn cmd_bench_topology(
+    args: &Args,
+    list: &str,
+    workloads: &[Workload],
+    mappers: &[MapperSpec],
+    cfg: &SimConfig,
+    threads: usize,
+) -> Result<()> {
+    let topologies: Vec<Topology> =
+        list.split(',').map(|s| Topology::parse(s.trim())).collect::<Result<Vec<_>>>()?;
+    let mut base = ClusterSpec::paper_cluster();
+    if let Some(w) = args.get_parse::<f64>("hop-weight")? {
+        base = base.with_hop_weight(w);
+    }
+    println!(
+        "topology sweep: {} workloads x {} mappers x {} fabrics on {} threads",
+        workloads.len(),
+        mappers.len(),
+        topologies.len(),
+        threads
+    );
+    let t0 = std::time::Instant::now();
+    let sweeps = run_topology_sweep(workloads, &base, &topologies, mappers, cfg, threads)?;
+    let wall_secs = t0.elapsed().as_secs_f64();
+    print!("{}", render_topology_comparison(&sweeps, Metric::WaitingMs));
+    println!("topology sweep wall: {wall_secs:.2}s on {threads} threads");
+
+    let output_path = |key: &str, default: &str| match args.get(key) {
+        Some("true") => Some(default.to_string()),
+        Some(path) => Some(path.to_string()),
+        None => None,
+    };
+    if let Some(path) = output_path("json", "BENCH_topology.json") {
+        let doc = topology_sweep_to_json(
+            &sweeps,
+            Metric::WaitingMs,
+            base.hop_weight,
+            threads,
+            wall_secs,
+        );
+        std::fs::write(&path, doc)?;
         println!("wrote {path}");
     }
     Ok(())
@@ -508,7 +594,7 @@ fn cmd_replay(args: &Args) -> Result<()> {
     if let Some(r) = args.get_parse::<u64>("sim-rounds")? {
         cfg.sim_rounds = r;
     }
-    let cluster = ClusterSpec::paper_cluster();
+    let cluster = apply_fabric_flags(args, ClusterSpec::paper_cluster())?;
     let threads = args.get_parse::<usize>("threads")?.unwrap_or_else(crate::par::default_threads);
 
     println!(
@@ -875,6 +961,113 @@ mod tests {
         // churn now that `place` projects the free cores.
         main_with_args(args(&["replay", "--trace", "poisson:5:3", "--mappers", "D,kway,D+r"]))
             .unwrap();
+    }
+
+    #[test]
+    fn fabric_flags_apply_and_reject_malformed_specs() {
+        // Every cluster-consuming verb accepts the fabric flags.
+        main_with_args(args(&[
+            "map", "--workload", "real4", "--mapper", "N", "--topology", "fat-tree:4",
+        ]))
+        .unwrap();
+        main_with_args(args(&[
+            "map", "--workload", "real4", "--mapper", "N+r", "--topology", "torus:4x2x2",
+            "--hop-weight", "0.5",
+        ]))
+        .unwrap();
+        main_with_args(args(&[
+            "evaluate", "--workload", "real4", "--native", "--topology", "dragonfly:4",
+        ]))
+        .unwrap();
+        // Hardened parsing: every malformed form errors listing the valid
+        // forms, exactly like the `poisson:SEED:JOBS` trace specs.
+        for bad in [
+            "mesh",
+            "fat-tree",
+            "fat-tree:",
+            "fat-tree:0",
+            "fat-tree:x",
+            "fat-tree:4:2",
+            "dragonfly:-2",
+            "torus:4x2",
+            "torus:4x2x2x2",
+            "torus:4x0x2",
+            "torus:axbxc",
+        ] {
+            let err = main_with_args(args(&["map", "--workload", "real4", "--topology", bad]))
+                .expect_err(&format!("{bad:?} must be rejected"))
+                .to_string();
+            assert!(
+                err.contains("switch|fat-tree:PODS|dragonfly:GROUPS|torus:XxYxZ"),
+                "{bad:?} error must list the valid forms: {err}"
+            );
+        }
+        // A fabric that cannot host the 16-node paper cluster fails the
+        // up-front validation, not deep inside a sweep.
+        assert!(
+            main_with_args(args(&["map", "--workload", "real4", "--topology", "fat-tree:3"]))
+                .is_err()
+        );
+        // Bad hop weights are rejected too.
+        for bad in ["-1", "NaN", "inf", "zz"] {
+            assert!(
+                main_with_args(args(&["map", "--workload", "real4", "--hop-weight", bad]))
+                    .is_err(),
+                "--hop-weight {bad} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn replay_accepts_fabric_flags() {
+        main_with_args(args(&[
+            "replay", "--trace", "poisson:5:3", "--mappers", "N+r", "--topology",
+            "torus:4x2x2", "--hop-weight", "0.5",
+        ]))
+        .unwrap();
+        assert!(main_with_args(args(&[
+            "replay", "--trace", "poisson:5:3", "--topology", "grid:4",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn bench_topology_sweep_writes_comparison_json() {
+        let dir = std::env::temp_dir().join("nicmap_bench_topology_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_topology.json");
+        main_with_args(args(&[
+            "bench",
+            "--workloads",
+            "real4",
+            "--mappers",
+            "B,N",
+            "--rounds",
+            "3",
+            "--threads",
+            "2",
+            "--topology",
+            "switch,fat-tree:4,torus:4x2x2",
+            "--hop-weight",
+            "0.5",
+            "--json",
+            path.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let doc = std::fs::read_to_string(&path).unwrap();
+        assert!(doc.contains("\"schema\":\"nicmap-topology-v1\""));
+        assert!(doc.contains("\"topologies\":[\"switch\",\"fat-tree:4\",\"torus:4x2x2\"]"));
+        assert!(doc.contains("\"hop_weight\":0.5"));
+        assert!(doc.contains("\"ranking_flips\":"));
+        assert!(doc.contains("\"cells_per_sec\":"));
+        let _ = std::fs::remove_dir_all(&dir);
+        // Malformed members of the list are rejected with the valid forms.
+        let err = main_with_args(args(&[
+            "bench", "--workloads", "real4", "--topology", "switch,blorp",
+        ]))
+        .expect_err("bad list member")
+        .to_string();
+        assert!(err.contains("switch|fat-tree:PODS"), "{err}");
     }
 
     #[test]

@@ -181,7 +181,13 @@ impl Refiner {
         let placement = ledger.placement();
         let full = scorer.score(traffic, &placement, cluster)?;
         evaluations += 1;
-        let after = full.objective(cluster.nic_bw as f64);
+        let mut after = full.objective(cluster.nic_bw as f64);
+        if ledger.dist_state_ref().is_some() {
+            // Independent from-scratch distance recompute on top of the
+            // NIC-side witness; structurally skipped at weight 0 so the
+            // historical value stays bit-identical.
+            after += ledger.dist_witness();
+        }
         debug_assert!(
             !after.is_finite()
                 || !current.is_finite()
@@ -234,7 +240,12 @@ impl Refiner {
         let placement = ledger.placement();
         let full = JobDelta::compute(traffic, &placement.core_of, cluster)?.loads;
         evaluations += 1;
-        let after = full.objective(cluster.nic_bw as f64);
+        let mut after = full.objective(cluster.nic_bw as f64);
+        if ledger.dist_state_ref().is_some() {
+            // Same independent distance witness as the dense path
+            // (structurally skipped at weight 0).
+            after += ledger.dist_witness();
+        }
         debug_assert!(
             !after.is_finite()
                 || !current.is_finite()

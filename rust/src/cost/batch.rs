@@ -53,6 +53,15 @@
 //! tests in `tests/property_invariants.rs`, the in-module tests below, and
 //! the asserting `perf_cost_model` CI bench.
 //!
+//! On a nonzero cluster `hop_weight` (ISSUE 10) every candidate objective
+//! additionally carries the hop-distance term. The same grouped-row trick
+//! applies: the primary's (and swap partner's) per-node volume aggregates
+//! dot the hop-matrix row difference, and the partner's re-homing fix-up
+//! is one `(out + inc) · (D[u][t] + D[t][u])` correction — exact integer
+//! arithmetic again, so the bitwise contract extends unchanged. At weight
+//! 0 the distance path is structurally absent and the kernel is
+//! byte-for-byte the historical one.
+//!
 //! ## Counters
 //!
 //! Process-wide counting instrumentation in the style of
@@ -394,15 +403,28 @@ pub(crate) fn score_round(
     }
     let base_obj = prefix[2 * nodes];
 
+    // Hop-distance state (`None` at weight 0, keeping the historical path
+    // structurally unchanged). Same-node candidates leave the distance cost
+    // untouched, so their objective is the base fold plus the standing term.
+    let dist = ledger.dist_state_ref();
+    let base_obj_total = match dist {
+        None => base_obj,
+        Some(d) => base_obj + d.weight * d.cost / nic_bw,
+    };
+
     let mut scratch = base.clone();
     let mut objs = Vec::with_capacity(batch.len());
     for (i, ep) in endpoints.iter().enumerate() {
         let Some((u, t)) = *ep else {
-            objs.push(base_obj);
+            objs.push(base_obj_total);
             continue;
         };
         let va = &rows[row_slot[batch.primaries[i]]].0;
         LoadLedger::shift_vols(&mut scratch, va, u, t);
+        let mut dd = match dist {
+            Some(d) => d.delta(va, u, t, nodes),
+            None => 0.0,
+        };
         if batch.kinds[i] == Kind::Swap {
             // Partner shift on top of the primary's, exactly as the
             // per-candidate path layers them — with the partner's base
@@ -433,6 +455,19 @@ pub(crate) fn score_round(
                 t,
                 u,
             );
+            // Partner's distance delta for `t -> u`, from the *raw*
+            // aggregates plus the re-homing correction: moving the a↔b
+            // rates' bucket from `u` to `t` shifts the dot product by
+            // exactly `(out + inc) · (D[u][t] + D[t][u])` — the same exact
+            // integer the per-candidate path's re-homed walk produces.
+            if let Some(d) = dist {
+                let mut db = d.delta(vb, t, u, nodes);
+                if out_ba > 0.0 || inc_ba > 0.0 {
+                    db += (out_ba + inc_ba)
+                        * (d.hop[u * nodes + t] + d.hop[t * nodes + u]);
+                }
+                dd += db;
+            }
         }
         // Objective: 4 fresh penalty terms, then resume the base fold from
         // the last index the candidate left untouched.
@@ -451,6 +486,9 @@ pub(crate) fn score_round(
         let mut obj = prefix[lo];
         for &term in &terms[lo..] {
             obj += term;
+        }
+        if let Some(d) = dist {
+            obj += d.weight * (d.cost + dd) / nic_bw;
         }
         objs.push(obj);
         for (k, &ix) in idx.iter().enumerate() {
@@ -577,6 +615,39 @@ mod tests {
         assert_bits_equal(&fused, &seq, "mixed batch");
         let batched = ledger.peek_batch(&batch.moves()).unwrap();
         assert_bits_equal(&fused, &batched, "mixed batch vs peek_batch");
+    }
+
+    #[test]
+    fn fused_round_carries_the_hop_distance_term_bit_exactly() {
+        // Weighted torus cluster: the fused kernel's grouped distance path
+        // (raw partner aggregates + re-homing correction) must agree bit
+        // for bit with the sequential and per-primary-batched peeks, which
+        // walk re-homed rows. Exercises shared partners and role overlap.
+        let (traffic, _w, base) = setup(10);
+        let cluster = base
+            .with_topology(crate::model::fabric::Topology::parse("torus:2x2x1").unwrap())
+            .with_hop_weight(0.25);
+        cluster.validate().unwrap();
+        let start = Placement::new(vec![0, 1, 4, 5, 8, 9, 12, 13, 2, 6]);
+        let mut ledger = LoadLedger::new(&NativeScorer, &traffic, &start, &cluster).unwrap();
+        assert!(ledger.dist_term() > 0.0);
+        let free: Vec<usize> =
+            (0..cluster.total_cores()).filter(|&c| ledger.is_free(c)).collect();
+        let mut batch = CandidateBatch::new();
+        for a in [0usize, 2, 4, 6] {
+            batch.push_swap(a, 7); // shared partner across primaries
+        }
+        batch.push_swap(7, 0); // partner of the above, now primary
+        batch.push_swap(0, 1); // same-node swap: base fold + standing term
+        batch.push_swap(3, 5);
+        batch.push_migrate(1, free[0]);
+        batch.push_migrate(9, *free.last().unwrap());
+        let fused = ledger.peek_round(&batch).unwrap();
+        let seq: Vec<f64> =
+            batch.moves().iter().map(|&mv| ledger.peek(mv).unwrap()).collect();
+        assert_bits_equal(&fused, &seq, "weighted fused vs sequential peeks");
+        let batched = ledger.peek_batch(&batch.moves()).unwrap();
+        assert_bits_equal(&fused, &batched, "weighted fused vs peek_batch");
     }
 
     #[test]

@@ -74,6 +74,14 @@ fn retires_counter() -> obs::Counter {
     *C.get_or_init(|| obs::counter("ledger.retires"))
 }
 
+/// Registry counter `ledger.dist_updates`: incremental updates of the
+/// hop-distance aggregate (seeds, relocations, block splices) on ledgers
+/// with a nonzero `hop_weight`. Zero-weight ledgers never touch it.
+fn dist_updates_counter() -> obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    *C.get_or_init(|| obs::counter("ledger.dist_updates"))
+}
+
 /// A candidate placement change the ledger can apply and revert.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Move {
@@ -84,11 +92,48 @@ pub enum Move {
 }
 
 /// Undo record for one applied move: the pre-move load vectors (restored
-/// wholesale, hence bit-exact) plus the touched processes' previous cores.
+/// wholesale, hence bit-exact) plus the touched processes' previous cores
+/// and the pre-move hop-distance aggregate.
 struct Frame {
     loads: NodeLoads,
     cores: [(ProcId, CoreId); 2],
     touched: usize,
+    dist_cost: f64,
+}
+
+/// Hop-distance state of a ledger whose cluster has a nonzero
+/// [`ClusterSpec::hop_weight`]: the dense node-pair hop matrix
+/// ([`crate::model::fabric::Topology::hop_matrix`]) and the incrementally
+/// maintained aggregate `cost = Σ rate_ij * hops(node_i, node_j)` over the
+/// stored traffic nonzeros (each directed nonzero once, via its out
+/// direction). The objective adds `weight * cost / nic_bw`.
+///
+/// Absent (`None` on the ledger) at weight 0 — the historical code path
+/// runs untouched, keeping every objective bit-identical.
+pub(crate) struct DistState {
+    /// Row-major `nodes x nodes` hop distances.
+    pub(crate) hop: Vec<f64>,
+    /// The cluster's `hop_weight`.
+    pub(crate) weight: f64,
+    /// Current distance aggregate over all stored nonzeros.
+    pub(crate) cost: f64,
+}
+
+impl DistState {
+    /// Distance-cost delta of relocating the aggregated process from node
+    /// `u` to node `t`: `Σ_n (out[n] + inc[n]) * (D[t][n] - D[u][n])`.
+    /// All quantities are products and sums of integers on integer-valued
+    /// rates, so this bucket-order sum equals [`LoadLedger::relocate`]'s
+    /// pair-order accumulation exactly — bit for bit through the objective.
+    pub(crate) fn delta(&self, v: &RowVols, u: NodeId, t: NodeId, nodes: usize) -> f64 {
+        let ru = &self.hop[u * nodes..][..nodes];
+        let rt = &self.hop[t * nodes..][..nodes];
+        let mut dd = 0.0;
+        for n in 0..nodes {
+            dd += (v.out[n] + v.inc[n]) * (rt[n] - ru[n]);
+        }
+        dd
+    }
 }
 
 /// Per-node aggregates of one process's traffic row and column — the
@@ -176,6 +221,9 @@ pub struct LoadLedger<'a> {
     used: Vec<bool>,
     loads: NodeLoads,
     undo: Vec<Frame>,
+    /// Hop-distance aggregates; `None` at `hop_weight == 0`, keeping the
+    /// historical NIC-only paths bit-identical.
+    dist: Option<DistState>,
 }
 
 impl<'a> LoadLedger<'a> {
@@ -223,7 +271,7 @@ impl<'a> LoadLedger<'a> {
         let _span = obs::span("ledger.seed");
         seeds_counter().inc();
         let loads = scorer.score(traffic, placement, cluster)?;
-        Ok(LoadLedger {
+        let mut ledger = LoadLedger {
             traffic: TrafficStore::Whole(Cow::Owned(SparseTraffic::from_dense(traffic))),
             cluster,
             nic_bw: cluster.nic_bw as f64,
@@ -232,7 +280,10 @@ impl<'a> LoadLedger<'a> {
             used,
             loads,
             undo: Vec::new(),
-        })
+            dist: Self::dist_state(cluster),
+        };
+        ledger.seed_dist();
+        Ok(ledger)
     }
 
     /// Seed a ledger from `placement` over a borrowed sparse traffic
@@ -250,7 +301,7 @@ impl<'a> LoadLedger<'a> {
         let _span = obs::span("ledger.seed");
         seeds_counter().inc();
         let loads = JobDelta::compute(traffic, &placement.core_of, cluster)?.loads;
-        Ok(LoadLedger {
+        let mut ledger = LoadLedger {
             traffic: TrafficStore::Whole(Cow::Borrowed(traffic)),
             cluster,
             nic_bw: cluster.nic_bw as f64,
@@ -259,7 +310,10 @@ impl<'a> LoadLedger<'a> {
             used,
             loads,
             undo: Vec::new(),
-        })
+            dist: Self::dist_state(cluster),
+        };
+        ledger.seed_dist();
+        Ok(ledger)
     }
 
     /// Number of full seed passes ([`Self::new`] / [`Self::from_sparse`])
@@ -292,7 +346,51 @@ impl<'a> LoadLedger<'a> {
             used: vec![false; cluster.total_cores()],
             loads: NodeLoads::zeros(cluster.nodes),
             undo: Vec::new(),
+            dist: Self::dist_state(cluster),
         }
+    }
+
+    /// Hop-distance state for `cluster` — `Some` only at a nonzero weight,
+    /// with a zero aggregate ([`Self::seed_dist`] / the block splices fill
+    /// it in).
+    fn dist_state(cluster: &ClusterSpec) -> Option<DistState> {
+        (cluster.hop_weight != 0.0).then(|| DistState {
+            hop: cluster.topology.hop_matrix(cluster.nodes),
+            weight: cluster.hop_weight,
+            cost: 0.0,
+        })
+    }
+
+    /// Seed the distance aggregate from scratch over every stored row.
+    fn seed_dist(&mut self) {
+        if self.dist.is_none() {
+            return;
+        }
+        let cost = self.dist_cost_of_rows(0..self.len());
+        if let Some(d) = self.dist.as_mut() {
+            d.cost = cost;
+        }
+        dist_updates_counter().inc();
+    }
+
+    /// Distance cost contributed by the given process rows: each row's out
+    /// nonzeros weighted by the sender/receiver node pair's hop distance.
+    /// Summing out directions over all rows visits each directed nonzero
+    /// exactly once. `0.0` without distance state.
+    fn dist_cost_of_rows(&self, rows: std::ops::Range<usize>) -> f64 {
+        let Some(d) = self.dist.as_ref() else { return 0.0 };
+        let n = self.cluster.nodes;
+        let mut cost = 0.0;
+        for p in rows {
+            let row = &d.hop[self.node_of[p] * n..][..n];
+            for (j, out, _inc) in self.traffic.pairs(p) {
+                if j == p || out <= 0.0 {
+                    continue; // self-traffic never crosses the fabric
+                }
+                cost += out * row[self.node_of[j]];
+            }
+        }
+        cost
     }
 
     /// Splice an arriving job's local-rank sparse `traffic` block into a
@@ -350,6 +448,15 @@ impl<'a> LoadLedger<'a> {
             store.block_of.extend(std::iter::repeat(bidx).take(traffic.len()));
             store.blocks.push(traffic);
         }
+        if self.dist.is_some() {
+            // The block is diagonal: its rows' out walks cover exactly its
+            // traffic, so the aggregate grows by the block's own cost.
+            let added = self.dist_cost_of_rows(start..self.len());
+            if let Some(d) = self.dist.as_mut() {
+                d.cost += added;
+            }
+            dist_updates_counter().inc();
+        }
         admits_counter().inc();
         self.undo.clear();
         Ok(())
@@ -383,6 +490,15 @@ impl<'a> LoadLedger<'a> {
                 (start, procs, delta)
             }
         };
+        if self.dist.is_some() {
+            // Subtract the block's cost at its *current* node assignment
+            // before its rows disappear from the store.
+            let removed = self.dist_cost_of_rows(start..start + procs);
+            if let Some(d) = self.dist.as_mut() {
+                d.cost -= removed;
+            }
+            dist_updates_counter().inc();
+        }
         for n in 0..self.loads.nodes() {
             self.loads.nic_tx[n] -= delta.loads.nic_tx[n];
             self.loads.nic_rx[n] -= delta.loads.nic_rx[n];
@@ -466,9 +582,48 @@ impl<'a> LoadLedger<'a> {
         &self.loads
     }
 
-    /// Scalar objective of the current loads (see [`NodeLoads::objective`]).
+    /// Scalar objective of the current loads (see [`NodeLoads::objective`])
+    /// plus, on a nonzero `hop_weight`, the hop-distance term
+    /// `weight * cost / nic_bw`. At weight 0 the term is structurally absent
+    /// (not a `+ 0.0`), so the value is bit-identical to the historical
+    /// NIC-only objective.
     pub fn objective(&self) -> f64 {
-        self.loads.objective(self.nic_bw)
+        let nic = self.loads.objective(self.nic_bw);
+        match &self.dist {
+            None => nic,
+            Some(d) => nic + d.weight * d.cost / self.nic_bw,
+        }
+    }
+
+    /// The hop-distance objective term as maintained incrementally
+    /// (`weight * cost / nic_bw`; `0.0` at weight 0) — what
+    /// [`Self::objective`] adds on top of the NIC penalty.
+    pub fn dist_term(&self) -> f64 {
+        self.dist.as_ref().map_or(0.0, |d| d.weight * d.cost / self.nic_bw)
+    }
+
+    /// The hop-distance objective term recomputed from scratch over every
+    /// stored nonzero — the verification witness the refiner's full
+    /// recompute adds to its NIC-side pass. Bit-equal to
+    /// [`Self::dist_term`] on integer-valued rates no matter how many
+    /// moves and splices the aggregate absorbed.
+    pub fn dist_witness(&self) -> f64 {
+        match &self.dist {
+            None => 0.0,
+            Some(d) => d.weight * self.dist_cost_of_rows(0..self.len()) / self.nic_bw,
+        }
+    }
+
+    /// Process-wide count of incremental distance-aggregate updates —
+    /// thin shim over the `ledger.dist_updates` registry counter. Stays
+    /// zero while every ledger runs at weight 0.
+    pub fn dist_updates() -> u64 {
+        dist_updates_counter().get()
+    }
+
+    /// Distance state for the fused round kernel (`None` at weight 0).
+    pub(crate) fn dist_state_ref(&self) -> Option<&DistState> {
+        self.dist.as_ref()
     }
 
     /// NIC bandwidth divisor the objective normalizes by (the cluster's
@@ -560,6 +715,7 @@ impl<'a> LoadLedger<'a> {
             loads: self.loads.clone(),
             cores: [(0, 0); 2],
             touched: 0,
+            dist_cost: self.dist.as_ref().map_or(0.0, |d| d.cost),
         };
         match mv {
             Move::Swap(a, b) => {
@@ -623,6 +779,9 @@ impl<'a> LoadLedger<'a> {
             self.used[prev] = true;
         }
         self.loads = frame.loads;
+        if let Some(d) = self.dist.as_mut() {
+            d.cost = frame.dist_cost;
+        }
         Ok(())
     }
 
@@ -681,11 +840,19 @@ impl<'a> LoadLedger<'a> {
                     } else {
                         let va = self.primary_vols(&mut cached, a);
                         Self::shift_vols(&mut scratch, va, na, nb);
+                        let dd_a = match &self.dist {
+                            Some(d) => d.delta(va, na, nb, self.cluster.nodes),
+                            None => 0.0,
+                        };
                         // The second relocation of the swap sees `a` already
                         // on b's node — mirror it in b's aggregates.
                         let vb = self.row_vols(b, Some((a, nb)));
                         Self::shift_vols(&mut scratch, &vb, nb, na);
-                        let obj = scratch.objective(self.nic_bw);
+                        let mut obj = scratch.objective(self.nic_bw);
+                        if let Some(d) = &self.dist {
+                            let dd = dd_a + d.delta(&vb, nb, na, self.cluster.nodes);
+                            obj += d.weight * (d.cost + dd) / self.nic_bw;
+                        }
                         self.restore_nodes(&mut scratch, na, nb);
                         obj
                     }
@@ -708,7 +875,11 @@ impl<'a> LoadLedger<'a> {
                     } else {
                         let vp = self.primary_vols(&mut cached, p);
                         Self::shift_vols(&mut scratch, vp, u, t);
-                        let obj = scratch.objective(self.nic_bw);
+                        let mut obj = scratch.objective(self.nic_bw);
+                        if let Some(d) = &self.dist {
+                            let dd = d.delta(vp, u, t, self.cluster.nodes);
+                            obj += d.weight * (d.cost + dd) / self.nic_bw;
+                        }
                         self.restore_nodes(&mut scratch, u, t);
                         obj
                     }
@@ -868,13 +1039,21 @@ impl<'a> LoadLedger<'a> {
 
     /// Re-attribute process `p`'s traffic rows from its current node to
     /// `to`. One merged pass over `p`'s nonzeros: O(nnz-per-row), never
-    /// O(P).
+    /// O(P). On a nonzero `hop_weight` the same pass accumulates the
+    /// hop-distance delta (`rate * (hops_after - hops_before)` per pair;
+    /// self-traffic is zero-distance both sides).
     fn relocate(&mut self, p: ProcId, to: NodeId) {
         let from = self.node_of[p];
         if from == to {
             self.node_of[p] = to;
             return;
         }
+        let n = self.cluster.nodes;
+        let hop = self
+            .dist
+            .as_ref()
+            .map(|d| (&d.hop[from * n..][..n], &d.hop[to * n..][..n]));
+        let mut dd = 0.0;
         for (j, out, inc) in self.traffic.pairs(p) {
             if j == p {
                 // Self-traffic (zero for every pattern, but stay exact):
@@ -887,6 +1066,9 @@ impl<'a> LoadLedger<'a> {
                 continue;
             }
             let nj = self.node_of[j];
+            if let Some((rf, rt)) = hop {
+                dd += (out + inc) * (rt[nj] - rf[nj]);
+            }
             if out > 0.0 {
                 // p -> j leaves `from`'s books...
                 if nj == from {
@@ -918,6 +1100,10 @@ impl<'a> LoadLedger<'a> {
                     self.loads.nic_rx[to] += inc;
                 }
             }
+        }
+        if let Some(d) = self.dist.as_mut() {
+            d.cost += dd;
+            dist_updates_counter().inc();
         }
         self.node_of[p] = to;
     }
@@ -1382,6 +1568,110 @@ mod tests {
             .score(&live.compose_traffic(), &live.placement(), &cluster)
             .unwrap();
         assert_loads_bits_eq(live.loads(), &full, "retire after moves");
+    }
+
+    #[test]
+    fn zero_weight_objective_is_the_plain_nic_objective() {
+        // With hop_weight 0 (every historical cluster) there is no distance
+        // state at all: the objective is the NodeLoads fold, bit for bit,
+        // on every topology.
+        let (t, _w, base) = setup();
+        for spec in ["switch", "fat-tree:2", "dragonfly:2", "torus:2x2x1"] {
+            let cluster = base
+                .clone()
+                .with_topology(crate::model::fabric::Topology::parse(spec).unwrap());
+            let p = Placement::new((0..8).collect());
+            let mut ledger = LoadLedger::new(&NativeScorer, &t, &p, &cluster).unwrap();
+            assert_eq!(ledger.dist_term(), 0.0, "{spec}");
+            assert_eq!(ledger.dist_witness(), 0.0, "{spec}");
+            assert_eq!(
+                ledger.objective().to_bits(),
+                ledger.loads().objective(cluster.nic_bw as f64).to_bits(),
+                "{spec}"
+            );
+            ledger.apply(Move::Swap(0, 7)).unwrap();
+            assert_eq!(
+                ledger.objective().to_bits(),
+                ledger.loads().objective(cluster.nic_bw as f64).to_bits(),
+                "{spec} after a move"
+            );
+        }
+    }
+
+    #[test]
+    fn hop_weighted_objective_tracks_the_witness_through_moves() {
+        let base = ClusterSpec::small_test_cluster();
+        let cluster = base
+            .with_topology(crate::model::fabric::Topology::parse("torus:2x2x1").unwrap())
+            .with_hop_weight(0.5);
+        cluster.validate().unwrap();
+        let w = Workload::new(
+            "t",
+            vec![JobSpec::synthetic(Pattern::AllToAll, 8, 64_000, 10.0, 100)],
+        )
+        .unwrap();
+        let t = TrafficMatrix::of_workload(&w);
+        let p = Placement::new((0..8).collect());
+        let mut ledger = LoadLedger::new(&NativeScorer, &t, &p, &cluster).unwrap();
+        assert!(ledger.dist_term() > 0.0, "cross-node a2a traffic has distance");
+        let before = LoadLedger::dist_updates();
+        for mv in [Move::Swap(0, 7), Move::Migrate(2, 12), Move::Swap(1, 5)] {
+            // Batch, sequential peek, and apply all agree bitwise.
+            let batched = ledger.peek_batch(&[mv]).unwrap()[0];
+            let peeked = ledger.peek(mv).unwrap();
+            assert_eq!(batched.to_bits(), peeked.to_bits(), "{mv:?}");
+            ledger.apply(mv).unwrap();
+            assert_eq!(ledger.objective().to_bits(), peeked.to_bits(), "{mv:?}");
+            // The incremental aggregate never drifts from a fresh recompute.
+            assert_eq!(
+                ledger.dist_term().to_bits(),
+                ledger.dist_witness().to_bits(),
+                "{mv:?} aggregate drift"
+            );
+            // The objective is exactly NIC + distance term.
+            let nic = ledger.loads().objective(cluster.nic_bw as f64);
+            assert_eq!(ledger.objective().to_bits(), (nic + ledger.dist_term()).to_bits());
+        }
+        assert!(LoadLedger::dist_updates() > before, "updates are counted");
+        // Revert restores the aggregate bit-exactly.
+        let term = ledger.dist_term();
+        ledger.apply(Move::Swap(0, 4)).unwrap();
+        ledger.revert().unwrap();
+        assert_eq!(ledger.dist_term().to_bits(), term.to_bits());
+    }
+
+    #[test]
+    fn live_ledger_maintains_distance_aggregates_across_splices() {
+        let (jobs, cores, base) = three_jobs();
+        let cluster = base
+            .with_topology(crate::model::fabric::Topology::parse("fat-tree:2").unwrap())
+            .with_hop_weight(1.5);
+        let mut live = LoadLedger::live(&cluster);
+        assert_eq!(live.dist_term(), 0.0, "empty ledger has zero distance cost");
+        for (job, cs) in jobs.iter().zip(&cores) {
+            live.admit_block(SparseTraffic::of_job(job), cs).unwrap();
+            assert_eq!(
+                live.dist_term().to_bits(),
+                live.dist_witness().to_bits(),
+                "after admit"
+            );
+        }
+        live.apply(Move::Swap(0, 5)).unwrap();
+        live.commit();
+        live.retire_block(1).unwrap();
+        assert_eq!(
+            live.dist_term().to_bits(),
+            live.dist_witness().to_bits(),
+            "after moves + retire"
+        );
+        // Bit-equal to a whole-matrix ledger over the same live state.
+        let fresh = LoadLedger::from_sparse(
+            &SparseTraffic::from_dense(&live.compose_traffic()),
+            &live.placement(),
+            &cluster,
+        )
+        .unwrap();
+        assert_eq!(live.objective().to_bits(), fresh.objective().to_bits());
     }
 
     #[test]

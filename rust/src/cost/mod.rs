@@ -75,6 +75,27 @@
 //! `tests/refine_equivalence.rs`, and the asserting `perf_cost_model`
 //! bench.
 //!
+//! ## Hop-weighted objective invariant (topologies)
+//!
+//! With a fabric [`crate::model::fabric::Topology`] on the cluster and a
+//! nonzero `hop_weight`, the ledger's objective gains a distance term
+//! `weight * Σ rate(i→j)·hops(node(i), node(j)) / nic_bw`, maintained
+//! **sparse-first and incrementally**: seeding walks stored nonzeros once,
+//! each relocation folds `(out + inc) · (D[to][n] − D[from][n])` over the
+//! moved process's row aggregates (O(row nnz), same walk the load shift
+//! already does), and block admit/retire splice the block's own distance
+//! cost in/out. Every batching level (`peek`, `peek_batch`, `peek_round`)
+//! carries the term through the same exact-integer arithmetic, so the
+//! bitwise scoring contract above extends verbatim. At `hop_weight == 0`
+//! (every historical cluster, and the default) the distance state is
+//! structurally absent — not a `+ 0.0` — so placements, objectives, and
+//! accepted-move sequences are **bit-identical** to the pre-topology
+//! model; `tests/refine_equivalence.rs` and
+//! `tests/property_invariants.rs` prove it across fat-tree, dragonfly,
+//! and torus fabrics. The incremental aggregate is verified against the
+//! from-scratch [`LoadLedger::dist_witness`] recompute by the refiner's
+//! debug witness and the ledger tests.
+//!
 //! ## Bulk-move invariant (jobs, not processes)
 //!
 //! The online mapping service ([`crate::online`]) admits and retires whole

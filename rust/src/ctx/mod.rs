@@ -24,7 +24,10 @@
 //! * per-process total tx/rx byte rates (row/column sums — eq. 1 split by
 //!   direction, precomputed inside the sparse artifact),
 //! * the proc → job index,
-//! * the CSR adjacency [`Graph`] the recursive-bisection mappers cut.
+//! * the CSR adjacency [`Graph`] the recursive-bisection mappers cut,
+//! * a lazy per-fabric hop-distance matrix ([`MapCtx::hop_matrix`]) so
+//!   topology-aware consumers read inter-node distances without each
+//!   rebuilding the `nodes × nodes` table.
 //!
 //! The dense [`TrafficMatrix`] is the degenerate/interop case:
 //! [`MapCtx::dense_traffic`] materializes it lazily (at most once, cached)
@@ -43,10 +46,12 @@
 //! [`TrafficMatrix::workload_builds`] in `tests/mapctx_sweep.rs` (sparse
 //! builds count against the same counter).
 
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::graph::Graph;
+use crate::model::fabric::Topology;
 use crate::model::sparse::SparseTraffic;
+use crate::model::topology::ClusterSpec;
 use crate::model::traffic::{JobTraffic, TrafficMatrix};
 use crate::model::workload::{JobId, ProcId, Workload};
 
@@ -69,6 +74,10 @@ pub struct MapCtx {
     job_adj_avg: Vec<f64>,
     job_of_proc: Vec<JobId>,
     graph: Graph,
+    /// Lazy hop-distance matrix cache keyed by `(topology, nodes)` — shared
+    /// across clones (`Arc`) so one workload context swept over many mapper
+    /// cells on the same fabric builds each matrix once.
+    hop_cache: Arc<Mutex<Option<(Topology, usize, Arc<Vec<f64>>)>>>,
 }
 
 impl MapCtx {
@@ -93,6 +102,7 @@ impl MapCtx {
             job_adj_avg,
             job_of_proc,
             graph,
+            hop_cache: Arc::new(Mutex::new(None)),
         }
     }
 
@@ -177,6 +187,26 @@ impl MapCtx {
     /// Job owning process `p` (O(1), precomputed).
     pub fn job_of(&self, p: ProcId) -> JobId {
         self.job_of_proc[p]
+    }
+
+    /// Hop-distance matrix of `cluster`'s fabric (row-major `nodes ×
+    /// nodes`; see [`Topology::hop_matrix`]) — how topology-aware mappers
+    /// and reports read inter-node distances through the shared context.
+    /// Computed on first request and cached keyed by `(topology, nodes)`,
+    /// so sweeping one workload across mapper cells on the same fabric
+    /// builds the matrix once; sweeping across fabrics rebuilds only on
+    /// the topology change. The `Arc` makes hand-outs and clones free.
+    pub fn hop_matrix(&self, cluster: &ClusterSpec) -> Arc<Vec<f64>> {
+        let key = (cluster.topology, cluster.nodes);
+        let mut cache = self.hop_cache.lock().unwrap();
+        if let Some((topo, nodes, m)) = cache.as_ref() {
+            if (*topo, *nodes) == key {
+                return Arc::clone(m);
+            }
+        }
+        let m = Arc::new(cluster.topology.hop_matrix(cluster.nodes));
+        *cache = Some((key.0, key.1, Arc::clone(&m)));
+        m
     }
 
     /// Process count.
@@ -280,6 +310,32 @@ mod tests {
         std::thread::scope(|s| {
             s.spawn(move || assert_eq!(peer.len(), 7));
         });
+    }
+
+    #[test]
+    fn hop_matrix_caches_per_fabric_and_tracks_the_topology() {
+        let w = two_job_workload();
+        let ctx = MapCtx::build(&w);
+        let single = ClusterSpec::small_test_cluster();
+        let torus = ClusterSpec::small_test_cluster()
+            .with_topology(Topology::parse("torus:2x2x1").unwrap());
+        // Values match a direct topology build.
+        let m = ctx.hop_matrix(&single);
+        assert_eq!(*m, single.topology.hop_matrix(single.nodes));
+        assert_eq!(m.len(), 16);
+        assert_eq!(m[0], 0.0);
+        assert_eq!(m[1], 1.0);
+        // Same fabric: cached allocation, no rebuild.
+        assert!(Arc::ptr_eq(&m, &ctx.hop_matrix(&single)));
+        // Clones share the cache.
+        assert!(Arc::ptr_eq(&m, &ctx.clone().hop_matrix(&single)));
+        // A different fabric replaces the cached entry.
+        let t = ctx.hop_matrix(&torus);
+        assert_eq!(*t, torus.topology.hop_matrix(torus.nodes));
+        assert!(!Arc::ptr_eq(&m, &t));
+        assert!(Arc::ptr_eq(&t, &ctx.hop_matrix(&torus)));
+        // The first matrix is still correct to rebuild afterwards.
+        assert_eq!(*ctx.hop_matrix(&single), *m);
     }
 
     #[test]

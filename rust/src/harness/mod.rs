@@ -20,6 +20,7 @@ use std::sync::Arc;
 use crate::coordinator::{MapperKind, MapperSpec, DEFAULT_RANDOM_SEED};
 use crate::ctx::MapCtx;
 use crate::error::Result;
+use crate::model::fabric::Topology;
 use crate::model::npb;
 use crate::model::topology::ClusterSpec;
 use crate::model::workload::Workload;
@@ -57,6 +58,16 @@ impl Metric {
             Metric::WaitingMs => "waiting time (ms)",
             Metric::WorkloadFinishS => "workload finish (s)",
             Metric::TotalFinishS => "total job finish (s)",
+        }
+    }
+
+    /// Stable snake_case key for machine-readable documents
+    /// (`BENCH_topology.json`).
+    pub fn key(&self) -> &'static str {
+        match self {
+            Metric::WaitingMs => "waiting_ms",
+            Metric::WorkloadFinishS => "workload_finish_s",
+            Metric::TotalFinishS => "total_finish_s",
         }
     }
 }
@@ -203,6 +214,225 @@ pub fn run_sweep(
         }
     }
     Ok(runs)
+}
+
+/// One fabric's full workload × mapper sweep — a [`run_sweep`] result
+/// tagged with the [`Topology`] it ran on.
+#[derive(Debug, Clone)]
+pub struct TopologyRun {
+    /// Fabric this sweep ran on.
+    pub topology: Topology,
+    /// One run per workload, each holding every mapper cell.
+    pub runs: Vec<WorkloadRun>,
+}
+
+/// Sweep `workloads × mappers` once per fabric in `topologies` (ISSUE 10):
+/// each fabric gets the base cluster with only its `topology` swapped, so
+/// `hop_weight` and every physical parameter are held constant across the
+/// comparison. Per-fabric sweeps inherit [`run_sweep`]'s bit-identical
+/// parallel/serial guarantee; fabrics run in input order so the whole
+/// sweep is deterministic.
+pub fn run_topology_sweep(
+    workloads: &[Workload],
+    base: &ClusterSpec,
+    topologies: &[Topology],
+    mappers: &[MapperSpec],
+    cfg: &SimConfig,
+    threads: usize,
+) -> Result<Vec<TopologyRun>> {
+    let mut out = Vec::with_capacity(topologies.len());
+    for &topology in topologies {
+        let cluster = base.clone().with_topology(topology);
+        cluster.validate()?;
+        let _span = crate::obs::span_with("harness.topology", || topology.to_string());
+        out.push(TopologyRun {
+            topology,
+            runs: run_sweep(workloads, &cluster, mappers, cfg, threads)?,
+        });
+    }
+    Ok(out)
+}
+
+/// Best-to-worst mapper order of one workload row under `metric`. The sort
+/// is stable, so exact ties keep the sweep's cell order and cannot
+/// manufacture spurious ranking flips.
+pub fn mapper_ranking(run: &WorkloadRun, metric: Metric) -> Vec<MapperSpec> {
+    let mut order: Vec<(f64, MapperSpec)> =
+        run.cells.iter().map(|c| (metric.of(&c.report), c.mapper)).collect();
+    order.sort_by(|a, b| a.0.total_cmp(&b.0));
+    order.into_iter().map(|(_, m)| m).collect()
+}
+
+/// A mapper-ranking change between the baseline fabric and another on the
+/// same workload — the evidence that topology choice changes which mapping
+/// strategy wins, not just every strategy's absolute numbers.
+#[derive(Debug, Clone)]
+pub struct RankingFlip {
+    /// Workload the orders diverge on.
+    pub workload: String,
+    /// Baseline fabric (the sweep's first topology).
+    pub baseline: Topology,
+    /// Fabric whose ranking diverged.
+    pub topology: Topology,
+    /// Best-to-worst mapper order on the baseline fabric.
+    pub baseline_order: Vec<MapperSpec>,
+    /// Best-to-worst mapper order on `topology`.
+    pub order: Vec<MapperSpec>,
+}
+
+/// Every mapper-ranking change of `sweeps[1..]` against the first
+/// (baseline) fabric under `metric`, in (fabric, workload) order.
+pub fn ranking_flips(sweeps: &[TopologyRun], metric: Metric) -> Vec<RankingFlip> {
+    let Some(base) = sweeps.first() else {
+        return Vec::new();
+    };
+    let mut flips = Vec::new();
+    for tr in &sweeps[1..] {
+        for (brun, run) in base.runs.iter().zip(&tr.runs) {
+            let baseline_order = mapper_ranking(brun, metric);
+            let order = mapper_ranking(run, metric);
+            if baseline_order != order {
+                flips.push(RankingFlip {
+                    workload: run.workload.clone(),
+                    baseline: base.topology,
+                    topology: tr.topology,
+                    baseline_order,
+                    order,
+                });
+            }
+        }
+    }
+    flips
+}
+
+fn ranking_letters(order: &[MapperSpec]) -> String {
+    order.iter().map(|m| m.letter()).collect::<Vec<_>>().join(" > ")
+}
+
+/// Render a topology sweep as a side-by-side comparison (one `metric`
+/// column per fabric) followed by the mapper-ranking changes against the
+/// baseline fabric — the headline artifact of `nicmap bench --topology
+/// a,b,c`.
+pub fn render_topology_comparison(sweeps: &[TopologyRun], metric: Metric) -> String {
+    let mut out = String::new();
+    let Some(base) = sweeps.first() else {
+        return out;
+    };
+    out.push_str(&format!("=== topology comparison — {} ===\n", metric.label()));
+    let mut header: Vec<String> = vec!["workload".into(), "mapper".into()];
+    header.extend(sweeps.iter().map(|t| t.topology.to_string()));
+    let mut table = Table::new(header);
+    for (wi, brun) in base.runs.iter().enumerate() {
+        for cell in &brun.cells {
+            let mut row = vec![brun.workload.clone(), cell.mapper.letter()];
+            for tr in sweeps {
+                row.push(
+                    tr.runs
+                        .get(wi)
+                        .and_then(|r| r.value(cell.mapper, metric))
+                        .map_or("-".into(), |x| format!("{x:.1}")),
+                );
+            }
+            table.row(row);
+        }
+    }
+    out.push_str(&table.render());
+    let flips = ranking_flips(sweeps, metric);
+    if flips.is_empty() {
+        out.push_str(&format!(
+            "no mapper-ranking changes vs {} on {}\n",
+            base.topology,
+            metric.label()
+        ));
+    } else {
+        for f in &flips {
+            out.push_str(&format!(
+                "ranking flip on {}: {} [{}] -> {} [{}]\n",
+                f.workload,
+                f.baseline,
+                ranking_letters(&f.baseline_order),
+                f.topology,
+                ranking_letters(&f.order),
+            ));
+        }
+    }
+    out
+}
+
+/// Render a topology sweep as the machine-readable `BENCH_topology.json`
+/// document (`nicmap-topology-v1`): run metadata (fabrics, mappers,
+/// workloads, hop weight), throughput (`cells_per_sec`), the ranking-flip
+/// records under `metric`, and one record per (fabric × workload × mapper)
+/// cell.
+pub fn topology_sweep_to_json(
+    sweeps: &[TopologyRun],
+    metric: Metric,
+    hop_weight: f64,
+    threads: usize,
+    wall_secs: f64,
+) -> String {
+    let topologies: Vec<String> =
+        sweeps.iter().map(|t| json::quote(&t.topology.to_string())).collect();
+    let mappers: Vec<String> = sweeps
+        .first()
+        .and_then(|t| t.runs.first())
+        .map(|run| run.cells.iter().map(|c| json::quote(&c.mapper.name())).collect())
+        .unwrap_or_default();
+    let workloads: Vec<String> = sweeps
+        .first()
+        .map(|t| t.runs.iter().map(|r| json::quote(&r.workload)).collect())
+        .unwrap_or_default();
+    let mut cells = Vec::new();
+    for tr in sweeps {
+        for run in &tr.runs {
+            for cell in &run.cells {
+                cells.push(
+                    json::Obj::new()
+                        .str("topology", &tr.topology.to_string())
+                        .str("workload", &run.workload)
+                        .str("mapper", &cell.mapper.name())
+                        .num("waiting_ms", cell.report.waiting_ms())
+                        .num("workload_finish_s", cell.report.workload_finish_s())
+                        .num("total_finish_s", cell.report.total_finish_s())
+                        .num("map_secs", cell.map_secs)
+                        .int("events", cell.report.events)
+                        .build(),
+                );
+            }
+        }
+    }
+    let flips = ranking_flips(sweeps, metric);
+    let flip_docs: Vec<String> = flips
+        .iter()
+        .map(|f| {
+            let names = |o: &[MapperSpec]| -> Vec<String> {
+                o.iter().map(|m| json::quote(&m.name())).collect()
+            };
+            json::Obj::new()
+                .str("workload", &f.workload)
+                .str("baseline", &f.baseline.to_string())
+                .str("topology", &f.topology.to_string())
+                .raw("baseline_order", json::array(&names(&f.baseline_order)))
+                .raw("order", json::array(&names(&f.order)))
+                .build()
+        })
+        .collect();
+    let mut out = json::Obj::new()
+        .str("schema", "nicmap-topology-v1")
+        .str("metric", metric.key())
+        .num("hop_weight", hop_weight)
+        .int("threads", threads as u64)
+        .num("wall_secs", wall_secs)
+        .num("cells_per_sec", cells.len() as f64 / wall_secs.max(1e-12))
+        .raw("topologies", json::array(&topologies))
+        .raw("mappers", json::array(&mappers))
+        .raw("workloads", json::array(&workloads))
+        .int("ranking_flips", flips.len() as u64)
+        .raw("flips", json::array(&flip_docs))
+        .raw("cells", json::array(&cells))
+        .build();
+    out.push('\n');
+    out
 }
 
 /// Replay one arrival trace under every mapper of `mappers`, one full
@@ -595,6 +825,75 @@ mod tests {
         assert_eq!(text.lines().count(), 1 + 4, "header + one row per cell");
         assert!(text.contains("tiny,Blocked,"));
         assert!(text.contains("tiny,New,"));
+    }
+
+    #[test]
+    fn topology_sweep_covers_every_fabric_and_reports_flips() {
+        let cluster = ClusterSpec::small_test_cluster();
+        let workloads = vec![Workload::new(
+            "tiny",
+            vec![JobSpec::synthetic(Pattern::AllToAll, 8, 64 * KB, 50.0, 5)],
+        )
+        .unwrap()];
+        let topologies = [
+            Topology::SingleSwitch,
+            Topology::parse("fat-tree:2").unwrap(),
+            Topology::parse("torus:2x2x1").unwrap(),
+        ];
+        let mappers = [
+            MapperSpec::plain(MapperKind::Blocked),
+            MapperSpec::plain(MapperKind::New),
+        ];
+        let sweeps = run_topology_sweep(
+            &workloads,
+            &cluster,
+            &topologies,
+            &mappers,
+            &SimConfig::default(),
+            2,
+        )
+        .unwrap();
+        assert_eq!(sweeps.len(), 3);
+        for (tr, &topo) in sweeps.iter().zip(&topologies) {
+            assert_eq!(tr.topology, topo);
+            assert_eq!(tr.runs.len(), 1);
+            assert_eq!(tr.runs[0].cells.len(), 2);
+            for cell in &tr.runs[0].cells {
+                assert!(Metric::WaitingMs.of(&cell.report) >= 0.0);
+            }
+        }
+        // Rankings are well-formed permutations of the swept mappers.
+        for tr in &sweeps {
+            let order = mapper_ranking(&tr.runs[0], Metric::WaitingMs);
+            assert_eq!(order.len(), 2);
+            assert!(order.contains(&mappers[0]) && order.contains(&mappers[1]));
+        }
+        // Flips (if any) reference the baseline fabric and a real workload.
+        for f in ranking_flips(&sweeps, Metric::WaitingMs) {
+            assert_eq!(f.baseline, Topology::SingleSwitch);
+            assert_eq!(f.workload, "tiny");
+            assert_ne!(f.baseline_order, f.order);
+        }
+        // The comparison renders one column per fabric.
+        let text = render_topology_comparison(&sweeps, Metric::WaitingMs);
+        assert!(text.contains("topology comparison"));
+        assert!(text.contains("switch"));
+        assert!(text.contains("fat-tree:2"));
+        assert!(text.contains("torus:2x2x1"));
+        // And the JSON document is self-describing.
+        let doc = topology_sweep_to_json(&sweeps, Metric::WaitingMs, 0.0, 2, 1.0);
+        assert!(doc.starts_with('{') && doc.ends_with("}\n"));
+        assert!(doc.contains("\"schema\":\"nicmap-topology-v1\""));
+        assert!(doc.contains("\"metric\":\"waiting_ms\""));
+        assert!(doc.contains("\"topologies\":[\"switch\",\"fat-tree:2\",\"torus:2x2x1\"]"));
+        assert!(doc.contains("\"mappers\":[\"Blocked\",\"New\"]"));
+        assert!(doc.contains("\"workloads\":[\"tiny\"]"));
+        assert!(doc.contains("\"ranking_flips\":"));
+        assert!(doc.contains("\"cells_per_sec\":6"));
+        assert!(doc.contains("\"topology\":\"torus:2x2x1\""));
+        // Empty sweeps degrade cleanly.
+        assert_eq!(render_topology_comparison(&[], Metric::WaitingMs), "");
+        assert!(ranking_flips(&[], Metric::WaitingMs).is_empty());
     }
 
     #[test]

@@ -1,0 +1,510 @@
+//! Interconnect topology of the cluster (ISSUE 10): what sits *between*
+//! the per-node NICs.
+//!
+//! The paper's platform is 16 nodes on one switch (§5.1, Table 1) —
+//! [`Topology::SingleSwitch`], the default carried by
+//! [`paper_cluster`](crate::model::topology::ClusterSpec::paper_cluster).
+//! Real fabrics are multi-level, and mapper rankings flip with the fabric
+//! ("Mapping Matters", PAPERS.md), so [`Topology`] generalizes the model:
+//!
+//! * [`Topology::SingleSwitch`] — every pair of nodes is one switch hop
+//!   apart; routes and costs are bit-identical to the historical model.
+//! * [`Topology::FatTree`] — nodes grouped into pods; same-pod traffic
+//!   takes the pod switch (one hop, like the single switch), cross-pod
+//!   traffic additionally crosses the source and destination pod uplinks.
+//! * [`Topology::Dragonfly`] — nodes grouped into groups; cross-group
+//!   traffic crosses the source group's global link.
+//! * [`Topology::Torus3d`] — nodes at 3-D coordinates; traffic is routed
+//!   dimension-ordered over wraparound links, one hop per link crossed.
+//!
+//! Two consumers read the topology:
+//!
+//! * [`crate::sim::fabric::Fabric`] materializes the per-level links as
+//!   queueing servers and builds distance-aware routes (variable hop
+//!   counts, per-level bandwidth).
+//! * [`crate::cost::LoadLedger`] folds [`Topology::hop_matrix`] into an
+//!   optional hop-weighted objective term
+//!   ([`ClusterSpec::hop_weight`](crate::model::topology::ClusterSpec)),
+//!   which is exactly zero-cost and bit-inert at weight 0.
+//!
+//! CLI surface: `--topology` accepts exactly the forms of
+//! [`Topology::parse`] (`switch|fat-tree:PODS|dragonfly:GROUPS|torus:XxYxZ`),
+//! hardened like the `poisson:SEED:JOBS` trace spec — every malformed form
+//! errors with the valid forms listed.
+
+use crate::error::{Error, Result};
+use crate::model::topology::NodeId;
+use crate::units::{BytesPerSec, GB};
+
+/// The valid `--topology` spec forms, quoted by every parse error.
+pub const VALID_FORMS: &str = "switch|fat-tree:PODS|dragonfly:GROUPS|torus:XxYxZ";
+
+/// Hard capacity of a simulator [`crate::sim::fabric::Route`]: the longest
+/// admissible path (tx + intermediate links + rx + memory).
+/// [`Topology::validate`] rejects fabrics whose diameter would overflow it.
+pub const MAX_ROUTE_HOPS: usize = 16;
+
+/// Default uplink/global-link bandwidth for parsed fat-tree and dragonfly
+/// specs: 2 GB/s, twice the paper NIC, so one link carries a whole pod's
+/// cross-traffic at a believable oversubscription.
+pub const DEFAULT_LINK_BW: BytesPerSec = 2 * GB;
+
+/// One level of inter-node links in a fabric (descriptor, not state): how
+/// many link servers the level contributes and their per-link bandwidth.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkLevel {
+    /// Human-readable level name (`"uplink"`, `"global"`, `"torus-link"`).
+    pub name: &'static str,
+    /// Number of link servers at this level.
+    pub count: usize,
+    /// Bandwidth of each link at this level.
+    pub bandwidth: BytesPerSec,
+}
+
+/// Interconnect topology between the nodes of a
+/// [`ClusterSpec`](crate::model::topology::ClusterSpec).
+///
+/// All fields are integers, so the enum is `Copy + Eq + Hash` and usable as
+/// a cache key (see [`crate::ctx::MapCtx::hop_matrix`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Topology {
+    /// Every node on one switch — the paper platform. Zero link servers;
+    /// routes and hop distances are the historical model, bit for bit.
+    SingleSwitch,
+    /// `pods` equal pods of nodes; each pod has one uplink of bandwidth
+    /// `uplink_bw` toward the core. Cross-pod routes cross both endpoint
+    /// pods' uplinks.
+    FatTree {
+        /// Number of pods; must divide the node count.
+        pods: usize,
+        /// Per-pod uplink bandwidth.
+        uplink_bw: BytesPerSec,
+    },
+    /// `groups` equal groups of nodes; each group has one global link of
+    /// bandwidth `global_bw`. Cross-group routes cross the source group's
+    /// global link.
+    Dragonfly {
+        /// Number of groups; must divide the node count.
+        groups: usize,
+        /// Per-group global-link bandwidth.
+        global_bw: BytesPerSec,
+    },
+    /// Nodes at 3-D wraparound coordinates `x + X*(y + Y*z)` for
+    /// `dims = [X, Y, Z]`; dimension-ordered shortest-path routing, one
+    /// router server per node forwarding at NIC bandwidth.
+    Torus3d {
+        /// Torus extents; their product must equal the node count.
+        dims: [usize; 3],
+    },
+}
+
+/// Parse one numeric field of a topology spec; zero and non-numeric values
+/// both error with the valid forms listed.
+fn parse_field(field: &str, what: &str, spec: &str) -> Result<usize> {
+    let n: usize = field.parse().map_err(|_| {
+        Error::usage(format!("bad {what} {field:?} in topology {spec:?} (expected {VALID_FORMS})"))
+    })?;
+    if n == 0 {
+        return Err(Error::usage(format!(
+            "{what} must be >= 1 in topology {spec:?} (expected {VALID_FORMS})"
+        )));
+    }
+    Ok(n)
+}
+
+impl Topology {
+    /// Parse a `--topology` spec. Accepted forms (case-insensitive):
+    /// `switch`, `fat-tree:PODS`, `dragonfly:GROUPS`, `torus:XxYxZ`.
+    /// Every malformed form — unknown kind, missing/extra fields, zero or
+    /// non-numeric values — errors with the valid forms listed, mirroring
+    /// the hardened `poisson:SEED:JOBS` trace parsing.
+    pub fn parse(spec: &str) -> Result<Topology> {
+        let trimmed = spec.trim();
+        let lower = trimmed.to_ascii_lowercase();
+        match lower.split_once(':') {
+            None => match lower.as_str() {
+                "switch" | "single-switch" => Ok(Topology::SingleSwitch),
+                _ => Err(Error::usage(format!(
+                    "unknown topology {trimmed:?} (expected {VALID_FORMS})"
+                ))),
+            },
+            Some((kind, rest)) => match kind {
+                "fat-tree" | "fattree" => {
+                    let pods = parse_field(rest, "pod count", trimmed)?;
+                    Ok(Topology::FatTree { pods, uplink_bw: DEFAULT_LINK_BW })
+                }
+                "dragonfly" => {
+                    let groups = parse_field(rest, "group count", trimmed)?;
+                    Ok(Topology::Dragonfly { groups, global_bw: DEFAULT_LINK_BW })
+                }
+                "torus" => {
+                    let fields: Vec<&str> = rest.split('x').collect();
+                    if fields.len() != 3 {
+                        return Err(Error::usage(format!(
+                            "torus topology {trimmed:?} needs dims XxYxZ \
+                             (expected {VALID_FORMS})"
+                        )));
+                    }
+                    let mut dims = [0usize; 3];
+                    for (d, f) in dims.iter_mut().zip(&fields) {
+                        *d = parse_field(f, "torus dim", trimmed)?;
+                    }
+                    Ok(Topology::Torus3d { dims })
+                }
+                _ => Err(Error::usage(format!(
+                    "unknown topology {trimmed:?} (expected {VALID_FORMS})"
+                ))),
+            },
+        }
+    }
+
+    /// Canonical spec string ([`Topology::parse`] round-trips it).
+    pub fn name(&self) -> String {
+        match *self {
+            Topology::SingleSwitch => "switch".into(),
+            Topology::FatTree { pods, .. } => format!("fat-tree:{pods}"),
+            Topology::Dragonfly { groups, .. } => format!("dragonfly:{groups}"),
+            Topology::Torus3d { dims } => format!("torus:{}x{}x{}", dims[0], dims[1], dims[2]),
+        }
+    }
+
+    /// True for the paper's flat single-switch fabric.
+    pub fn is_single_switch(&self) -> bool {
+        matches!(self, Topology::SingleSwitch)
+    }
+
+    /// Validate against a node count: group/pod counts must divide it,
+    /// torus dims must multiply to it, bandwidths must be positive, and the
+    /// fabric diameter must fit [`MAX_ROUTE_HOPS`].
+    pub fn validate(&self, nodes: usize) -> Result<()> {
+        match *self {
+            Topology::SingleSwitch => Ok(()),
+            Topology::FatTree { pods, uplink_bw } => {
+                if pods == 0 || nodes % pods != 0 {
+                    return Err(Error::spec(format!(
+                        "fat-tree pods ({pods}) must be >= 1 and divide nodes ({nodes})"
+                    )));
+                }
+                if uplink_bw == 0 {
+                    return Err(Error::spec("fat-tree uplink bandwidth must be > 0"));
+                }
+                Ok(())
+            }
+            Topology::Dragonfly { groups, global_bw } => {
+                if groups == 0 || nodes % groups != 0 {
+                    return Err(Error::spec(format!(
+                        "dragonfly groups ({groups}) must be >= 1 and divide nodes ({nodes})"
+                    )));
+                }
+                if global_bw == 0 {
+                    return Err(Error::spec("dragonfly global-link bandwidth must be > 0"));
+                }
+                Ok(())
+            }
+            Topology::Torus3d { dims } => {
+                if dims.iter().any(|&d| d == 0) {
+                    return Err(Error::spec(format!(
+                        "torus dims {}x{}x{} must all be >= 1",
+                        dims[0], dims[1], dims[2]
+                    )));
+                }
+                if dims[0] * dims[1] * dims[2] != nodes {
+                    return Err(Error::spec(format!(
+                        "torus dims {}x{}x{} must multiply to nodes ({nodes})",
+                        dims[0], dims[1], dims[2]
+                    )));
+                }
+                // Longest route: tx + (diameter - 1) routers + rx + memory.
+                let diameter: usize = dims.iter().map(|&d| d / 2).sum();
+                if 2 + diameter.max(1) + 1 > MAX_ROUTE_HOPS {
+                    return Err(Error::spec(format!(
+                        "torus {}x{}x{} diameter {diameter} exceeds the \
+                         {MAX_ROUTE_HOPS}-hop route capacity",
+                        dims[0], dims[1], dims[2]
+                    )));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Switch/link hops between two nodes (`0` for `a == b`): `1` on the
+    /// single switch; `1` same-pod / `3` cross-pod on the fat tree (pod
+    /// switch, or pod switch + two uplinks); `1` same-group / `3`
+    /// cross-group on the dragonfly; the wraparound Manhattan distance on
+    /// the torus. This is the distance the hop-weighted objective term and
+    /// [`Topology::hop_matrix`] use.
+    pub fn hop_distance(&self, a: NodeId, b: NodeId, nodes: usize) -> usize {
+        if a == b {
+            return 0;
+        }
+        match *self {
+            Topology::SingleSwitch => 1,
+            Topology::FatTree { pods, .. } => {
+                let per = (nodes / pods.max(1)).max(1);
+                if a / per == b / per {
+                    1
+                } else {
+                    3
+                }
+            }
+            Topology::Dragonfly { groups, .. } => {
+                let per = (nodes / groups.max(1)).max(1);
+                if a / per == b / per {
+                    1
+                } else {
+                    3
+                }
+            }
+            Topology::Torus3d { dims } => {
+                let ca = torus_coords(a, dims);
+                let cb = torus_coords(b, dims);
+                (0..3)
+                    .map(|i| {
+                        let fwd = (cb[i] + dims[i] - ca[i]) % dims[i];
+                        fwd.min(dims[i] - fwd)
+                    })
+                    .sum()
+            }
+        }
+    }
+
+    /// Dense `nodes x nodes` hop-distance matrix (row-major, `f64` whole
+    /// numbers, zero diagonal, symmetric) — the artifact the cost ledger's
+    /// distance aggregates index.
+    pub fn hop_matrix(&self, nodes: usize) -> Vec<f64> {
+        let mut m = vec![0.0; nodes * nodes];
+        for a in 0..nodes {
+            for b in 0..nodes {
+                m[a * nodes + b] = self.hop_distance(a, b, nodes) as f64;
+            }
+        }
+        m
+    }
+
+    /// Number of inter-node link servers the simulator materializes for
+    /// this fabric on `nodes` nodes (zero on the single switch — the server
+    /// layout, and with it every golden, is unchanged).
+    pub fn link_count(&self, nodes: usize) -> usize {
+        match *self {
+            Topology::SingleSwitch => 0,
+            Topology::FatTree { pods, .. } => pods,
+            Topology::Dragonfly { groups, .. } => groups,
+            Topology::Torus3d { .. } => nodes,
+        }
+    }
+
+    /// Per-level link descriptors: name, server count, and per-link
+    /// bandwidth of each level (empty on the single switch). Torus routers
+    /// forward at `nic_bw`.
+    pub fn link_levels(&self, nodes: usize, nic_bw: BytesPerSec) -> Vec<LinkLevel> {
+        match *self {
+            Topology::SingleSwitch => Vec::new(),
+            Topology::FatTree { pods, uplink_bw } => {
+                vec![LinkLevel { name: "uplink", count: pods, bandwidth: uplink_bw }]
+            }
+            Topology::Dragonfly { groups, global_bw } => {
+                vec![LinkLevel { name: "global", count: groups, bandwidth: global_bw }]
+            }
+            Topology::Torus3d { .. } => {
+                vec![LinkLevel { name: "torus-link", count: nodes, bandwidth: nic_bw }]
+            }
+        }
+    }
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology::SingleSwitch
+    }
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+/// 3-D coordinates of node `n` for torus extents `dims` (x fastest).
+pub fn torus_coords(n: NodeId, dims: [usize; 3]) -> [usize; 3] {
+    [n % dims[0], (n / dims[0]) % dims[1], n / (dims[0] * dims[1])]
+}
+
+/// The next node on the dimension-ordered shortest wraparound path from
+/// `from` toward `to` (x first, then y, then z; ties between the two wrap
+/// directions break toward `+1`). `from == to` returns `from`. The
+/// simulator chains this to enumerate the intermediate torus routers, so
+/// the route length always matches [`Topology::hop_distance`].
+pub fn torus_next_hop(from: NodeId, to: NodeId, dims: [usize; 3]) -> NodeId {
+    let a = torus_coords(from, dims);
+    let b = torus_coords(to, dims);
+    let mut c = a;
+    for i in 0..3 {
+        if a[i] == b[i] {
+            continue;
+        }
+        let fwd = (b[i] + dims[i] - a[i]) % dims[i];
+        let back = dims[i] - fwd;
+        c[i] = if fwd <= back { (a[i] + 1) % dims[i] } else { (a[i] + dims[i] - 1) % dims[i] };
+        break;
+    }
+    c[0] + dims[0] * (c[1] + dims[1] * c[2])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_canonical_names() {
+        let specs = ["switch", "fat-tree:4", "dragonfly:8", "torus:4x2x2"];
+        for s in specs {
+            let t = Topology::parse(s).unwrap();
+            assert_eq!(t.name(), s, "{s}");
+            assert_eq!(Topology::parse(&t.name()).unwrap(), t);
+            assert_eq!(format!("{t}"), s);
+        }
+        assert_eq!(Topology::parse("single-switch").unwrap(), Topology::SingleSwitch);
+        assert_eq!(Topology::parse(" SWITCH ").unwrap(), Topology::SingleSwitch);
+        assert_eq!(
+            Topology::parse("FatTree:2").unwrap(),
+            Topology::FatTree { pods: 2, uplink_bw: DEFAULT_LINK_BW }
+        );
+        assert_eq!(
+            Topology::parse("torus:4X2x2").unwrap(),
+            Topology::Torus3d { dims: [4, 2, 2] }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed_forms_listing_valid_ones() {
+        let bad = [
+            "",
+            "mesh",
+            "fat-tree",
+            "fat-tree:",
+            "fat-tree:0",
+            "fat-tree:2:3",
+            "fat-tree:two",
+            "fat-tree:-1",
+            "dragonfly",
+            "dragonfly:",
+            "dragonfly:0",
+            "dragonfly:4.5",
+            "torus",
+            "torus:",
+            "torus:4",
+            "torus:4x2",
+            "torus:4x2x2x2",
+            "torus:0x2x2",
+            "torus:4xYx2",
+            "torus:4x2x-2",
+        ];
+        for spec in bad {
+            let err = Topology::parse(spec).expect_err(spec).to_string();
+            assert!(err.contains(VALID_FORMS), "{spec:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn validate_checks_divisibility_and_products() {
+        Topology::SingleSwitch.validate(16).unwrap();
+        Topology::parse("fat-tree:4").unwrap().validate(16).unwrap();
+        assert!(Topology::parse("fat-tree:3").unwrap().validate(16).is_err());
+        Topology::parse("dragonfly:2").unwrap().validate(16).unwrap();
+        assert!(Topology::parse("dragonfly:5").unwrap().validate(16).is_err());
+        Topology::parse("torus:4x2x2").unwrap().validate(16).unwrap();
+        assert!(Topology::parse("torus:4x2x2").unwrap().validate(17).is_err());
+        assert!(Topology::Torus3d { dims: [0, 2, 2] }.validate(0).is_err());
+        assert!(Topology::FatTree { pods: 4, uplink_bw: 0 }.validate(16).is_err());
+        assert!(Topology::Dragonfly { groups: 4, global_bw: 0 }.validate(16).is_err());
+        // A torus whose diameter overflows the route capacity is rejected.
+        assert!(Topology::Torus3d { dims: [32, 1, 1] }.validate(32).is_err());
+        Topology::Torus3d { dims: [8, 2, 2] }.validate(32).unwrap();
+    }
+
+    #[test]
+    fn hop_distances_match_the_fabric_shapes() {
+        // Single switch: 1 everywhere off-diagonal.
+        assert_eq!(Topology::SingleSwitch.hop_distance(3, 3, 16), 0);
+        assert_eq!(Topology::SingleSwitch.hop_distance(0, 15, 16), 1);
+        // Fat tree 16 nodes / 4 pods: nodes 0-3 share pod 0.
+        let ft = Topology::parse("fat-tree:4").unwrap();
+        assert_eq!(ft.hop_distance(0, 3, 16), 1);
+        assert_eq!(ft.hop_distance(0, 4, 16), 3);
+        assert_eq!(ft.hop_distance(12, 15, 16), 1);
+        // Dragonfly mirrors the grouping with its global link.
+        let df = Topology::parse("dragonfly:2").unwrap();
+        assert_eq!(df.hop_distance(0, 7, 16), 1);
+        assert_eq!(df.hop_distance(0, 8, 16), 3);
+        // Torus 4x2x2: neighbours at 1, wraparound shortens long rows.
+        let t = Topology::parse("torus:4x2x2").unwrap();
+        assert_eq!(t.hop_distance(0, 1, 16), 1);
+        assert_eq!(t.hop_distance(0, 3, 16), 1, "x wraps 0 -> 3");
+        assert_eq!(t.hop_distance(0, 2, 16), 2);
+        assert_eq!(t.hop_distance(0, 4, 16), 1, "y neighbour");
+        assert_eq!(t.hop_distance(0, 8, 16), 1, "z neighbour");
+        assert_eq!(t.hop_distance(0, 14, 16), 4, "opposite corner 2+1+1");
+    }
+
+    #[test]
+    fn hop_matrix_is_symmetric_zero_diagonal() {
+        for spec in ["switch", "fat-tree:4", "dragonfly:4", "torus:4x2x2"] {
+            let t = Topology::parse(spec).unwrap();
+            let n = 16;
+            let m = t.hop_matrix(n);
+            assert_eq!(m.len(), n * n);
+            for a in 0..n {
+                assert_eq!(m[a * n + a], 0.0, "{spec} diagonal");
+                for b in 0..n {
+                    assert_eq!(m[a * n + b], m[b * n + a], "{spec} symmetry {a},{b}");
+                    assert_eq!(m[a * n + b], t.hop_distance(a, b, n) as f64);
+                    if a != b {
+                        assert!(m[a * n + b] >= 1.0, "{spec} off-diagonal >= 1");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn torus_paths_step_shortest_and_match_distance() {
+        let dims = [4, 2, 2];
+        let t = Topology::Torus3d { dims };
+        for a in 0..16 {
+            for b in 0..16 {
+                let mut cur = a;
+                let mut steps = 0;
+                while cur != b {
+                    cur = torus_next_hop(cur, b, dims);
+                    steps += 1;
+                    assert!(steps <= 16, "runaway path {a} -> {b}");
+                }
+                assert_eq!(steps, t.hop_distance(a, b, 16), "{a} -> {b}");
+            }
+        }
+        assert_eq!(torus_next_hop(5, 5, dims), 5, "already there");
+    }
+
+    #[test]
+    fn link_levels_describe_the_fabric() {
+        assert!(Topology::SingleSwitch.link_levels(16, 1).is_empty());
+        assert_eq!(Topology::SingleSwitch.link_count(16), 0);
+        let ft = Topology::parse("fat-tree:4").unwrap();
+        let lv = ft.link_levels(16, 1_000);
+        assert_eq!(lv, vec![LinkLevel { name: "uplink", count: 4, bandwidth: DEFAULT_LINK_BW }]);
+        assert_eq!(ft.link_count(16), 4);
+        let t = Topology::parse("torus:4x2x2").unwrap();
+        assert_eq!(
+            t.link_levels(16, 1_000),
+            vec![LinkLevel { name: "torus-link", count: 16, bandwidth: 1_000 }]
+        );
+        assert_eq!(t.link_count(16), 16);
+        // Every level's count matches the simulator's server allocation.
+        for spec in ["switch", "fat-tree:4", "dragonfly:2", "torus:4x2x2"] {
+            let t = Topology::parse(spec).unwrap();
+            let total: usize = t.link_levels(16, 1_000).iter().map(|l| l.count).sum();
+            assert_eq!(total, t.link_count(16), "{spec}");
+        }
+    }
+}

@@ -3,6 +3,10 @@
 //!
 //! * [`topology`] — the physical cluster: nodes × sockets × cores, NUMA
 //!   memory, per-socket cache, NIC, switch (paper Table 1 defaults).
+//! * [`fabric`] — the interconnect between the nodes: the paper's single
+//!   switch plus fat-tree, dragonfly, and 3-D torus fabrics with hop
+//!   distances, per-level link descriptors, and hardened `--topology`
+//!   spec parsing.
 //! * [`pattern`] — the four communication patterns of the synthetic
 //!   workloads (§5.2) and their destination schedules.
 //! * [`workload`] — jobs and workloads, incl. builders for paper
@@ -16,6 +20,7 @@
 //!   case for verification recomputes and the AOT artifact padder.
 //! * [`spec`] — a small text format to load custom clusters/workloads.
 
+pub mod fabric;
 pub mod npb;
 pub mod pattern;
 pub mod sparse;
@@ -24,6 +29,7 @@ pub mod topology;
 pub mod traffic;
 pub mod workload;
 
+pub use fabric::{LinkLevel, Topology};
 pub use pattern::Pattern;
 pub use sparse::SparseTraffic;
 pub use topology::{ClusterSpec, CoreId, NodeId, SocketId};

@@ -17,9 +17,12 @@
 //!
 //! Beyond the paper's four, [`Pattern::Stencil2d`] models the nearest-
 //! neighbour halo exchange of grid codes — the bounded-degree pattern the
-//! sparse traffic layer scales to thousands of processes. It is deliberately
-//! **not** part of [`Pattern::ALL`], which stays the paper's Table-1 set so
-//! the builtin synthetic workloads and generated test data are unchanged.
+//! sparse traffic layer scales to thousands of processes — and
+//! [`Pattern::Stencil3d`] its volumetric cousin (up to six neighbours on a
+//! near-cubic grid), the topology-matched heavy communicator for 3-D torus
+//! sweeps. Both are deliberately **not** part of [`Pattern::ALL`], which
+//! stays the paper's Table-1 set so the builtin synthetic workloads and
+//! generated test data are unchanged.
 
 use crate::model::workload::ProcId;
 
@@ -33,6 +36,21 @@ fn isqrt(n: usize) -> usize {
         x += 1;
     }
     while x * x > n {
+        x -= 1;
+    }
+    x
+}
+
+/// Integer cube root (largest `x` with `x * x * x <= n`).
+fn icbrt(n: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let mut x = (n as f64).cbrt() as usize;
+    while (x + 1) * (x + 1) * (x + 1) <= n {
+        x += 1;
+    }
+    while x * x * x > n {
         x -= 1;
     }
     x
@@ -60,6 +78,38 @@ fn stencil_dests(rank: usize, p: usize) -> Vec<ProcId> {
     out
 }
 
+/// Grid neighbours of `rank` on the near-cubic 3D stencil over `p` ranks:
+/// side `icbrt(p)`, x-fastest row-major placement, the up-to-six face
+/// neighbours clipped to the grid and to `p`, ascending rank order. Ranks
+/// beyond the full cube extend the z axis (they keep their ±z links), so
+/// every rank of a 2-plus-rank job has at least one neighbour and the
+/// relation stays symmetric.
+fn stencil3d_dests(rank: usize, p: usize) -> Vec<ProcId> {
+    let s = icbrt(p).max(1);
+    let x = rank % s;
+    let y = (rank / s) % s;
+    let mut out = Vec::with_capacity(6);
+    if rank >= s * s {
+        out.push(rank - s * s);
+    }
+    if y > 0 {
+        out.push(rank - s);
+    }
+    if x > 0 {
+        out.push(rank - 1);
+    }
+    if x + 1 < s && rank + 1 < p {
+        out.push(rank + 1);
+    }
+    if y + 1 < s && rank + s < p {
+        out.push(rank + s);
+    }
+    if rank + s * s < p {
+        out.push(rank + s * s);
+    }
+    out
+}
+
 /// Communication pattern of one parallel job.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Pattern {
@@ -75,6 +125,11 @@ pub enum Pattern {
     /// grid neighbours each round. Symmetric and bounded-degree — the sparse
     /// scale pattern. Not part of [`Pattern::ALL`].
     Stencil2d,
+    /// Near-cubic 3D grid halo exchange: every rank sends to its up to six
+    /// face neighbours each round. Symmetric and bounded-degree — the
+    /// topology-matched workload for 3-D torus sweeps. Not part of
+    /// [`Pattern::ALL`].
+    Stencil3d,
 }
 
 impl Pattern {
@@ -96,6 +151,7 @@ impl Pattern {
             Pattern::GatherReduce => "Gather/Reduce",
             Pattern::Linear => "Linear",
             Pattern::Stencil2d => "2D Stencil",
+            Pattern::Stencil3d => "3D Stencil",
         }
     }
 
@@ -109,6 +165,7 @@ impl Pattern {
             "2d-stencil" | "stencil-2d" | "stencil2d" | "stencil" | "grid" | "mesh" => {
                 Some(Pattern::Stencil2d)
             }
+            "3d-stencil" | "stencil-3d" | "stencil3d" | "cube" => Some(Pattern::Stencil3d),
             _ => None,
         }
     }
@@ -121,7 +178,7 @@ impl Pattern {
             Pattern::GatherReduce => rank != 0,
             Pattern::Linear => rank + 1 < p,
             // Every rank of a 2-plus-rank grid has at least one neighbour.
-            Pattern::Stencil2d => p > 1,
+            Pattern::Stencil2d | Pattern::Stencil3d => p > 1,
         }
     }
 
@@ -137,6 +194,7 @@ impl Pattern {
             Pattern::GatherReduce => 1,
             Pattern::Linear => 1,
             Pattern::Stencil2d => stencil_dests(rank, p).len(),
+            Pattern::Stencil3d => stencil3d_dests(rank, p).len(),
         }
     }
 
@@ -166,6 +224,7 @@ impl Pattern {
             }
             // Symmetric: partners are exactly the grid neighbours.
             Pattern::Stencil2d => stencil_dests(rank, p).len(),
+            Pattern::Stencil3d => stencil3d_dests(rank, p).len(),
         }
     }
 
@@ -196,6 +255,10 @@ impl Pattern {
                 let d = stencil_dests(rank, p);
                 Some(d[(k % d.len() as u64) as usize])
             }
+            Pattern::Stencil3d => {
+                let d = stencil3d_dests(rank, p);
+                Some(d[(k % d.len() as u64) as usize])
+            }
         }
     }
 
@@ -216,6 +279,7 @@ impl Pattern {
             Pattern::GatherReduce => vec![0],
             Pattern::Linear => vec![rank + 1],
             Pattern::Stencil2d => stencil_dests(rank, p),
+            Pattern::Stencil3d => stencil3d_dests(rank, p),
         }
     }
 
@@ -408,6 +472,62 @@ mod tests {
         // Bounded degree regardless of scale.
         assert_eq!(Pattern::Stencil2d.max_adjacency(4096), 4);
         assert!(Pattern::Stencil2d.avg_adjacency(4096) < 4.0);
+    }
+
+    #[test]
+    fn stencil3d_three_cubed_grid() {
+        let p = 27;
+        // Center of a 3x3x3 cube: all six face neighbours, ascending.
+        assert_eq!(Pattern::Stencil3d.dests(13, p), vec![4, 10, 12, 14, 16, 22]);
+        assert_eq!(Pattern::Stencil3d.adjacency(13, p), 6);
+        // Corners have three neighbours.
+        assert_eq!(Pattern::Stencil3d.dests(0, p), vec![1, 3, 9]);
+        assert_eq!(Pattern::Stencil3d.dests(26, p), vec![17, 23, 25]);
+        // Symmetric: j in dests(i) iff i in dests(j).
+        for i in 0..p {
+            for j in Pattern::Stencil3d.dests(i, p) {
+                assert!(Pattern::Stencil3d.dests(j, p).contains(&i), "{i} <-> {j}");
+            }
+        }
+        // Round-robin schedule cycles the neighbour set.
+        assert_eq!(Pattern::Stencil3d.dest_of(13, p, 0), Some(4));
+        assert_eq!(Pattern::Stencil3d.dest_of(13, p, 7), Some(10));
+    }
+
+    #[test]
+    fn stencil3d_ragged_and_degenerate_sizes() {
+        // p = 2: side 1 — a vertical (z-axis) pair.
+        assert_eq!(Pattern::Stencil3d.dests(0, 2), vec![1]);
+        assert_eq!(Pattern::Stencil3d.dests(1, 2), vec![0]);
+        assert!(!Pattern::Stencil3d.is_sender(0, 1));
+        assert_eq!(Pattern::Stencil3d.dest_of(0, 1, 0), None);
+        // Ragged grids stay symmetric with everyone connected.
+        for p in [2, 3, 5, 7, 10, 12, 17, 30, 64] {
+            for r in 0..p {
+                let d = Pattern::Stencil3d.dests(r, p);
+                assert!(!d.is_empty(), "rank {r} of {p} isolated");
+                assert!(!d.contains(&r));
+                assert!(d.windows(2).all(|w| w[0] < w[1]), "ascending");
+                assert_eq!(d.len(), Pattern::Stencil3d.out_degree(r, p));
+                for j in &d {
+                    assert!(Pattern::Stencil3d.dests(*j, p).contains(&r));
+                }
+            }
+        }
+        // Bounded degree regardless of scale.
+        assert_eq!(Pattern::Stencil3d.max_adjacency(4096), 6);
+        assert!(Pattern::Stencil3d.avg_adjacency(4096) < 6.0);
+    }
+
+    #[test]
+    fn stencil3d_parse_spellings() {
+        for s in ["3d-stencil", "stencil-3d", "stencil3d", "3D Stencil", "cube"] {
+            assert_eq!(Pattern::parse(s), Some(Pattern::Stencil3d), "{s}");
+        }
+        assert_eq!(Pattern::parse(Pattern::Stencil3d.name()), Some(Pattern::Stencil3d));
+        // The cubic patterns never shadow the paper set or the 2D stencil.
+        assert!(!Pattern::ALL.contains(&Pattern::Stencil3d));
+        assert_eq!(Pattern::parse("stencil"), Some(Pattern::Stencil2d));
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! NIC per node.
 
 use crate::error::{Error, Result};
+use crate::model::fabric::Topology;
 use crate::units::{Bytes, BytesPerSec, Ns, GB, MB};
 
 /// Node index in `0..nodes`.
@@ -40,8 +41,18 @@ pub struct ClusterSpec {
     /// NIC bandwidth (Table 1: 1 GB/s, InfiniHost MT23108 4x).
     pub nic_bw: BytesPerSec,
     /// Switch forwarding latency, independent of message size (Table 1:
-    /// 100 ns).
+    /// 100 ns). Multi-level fabrics reuse it as the per-hop forwarding
+    /// latency of every switch/link crossing.
     pub switch_latency: Ns,
+    /// Interconnect between the nodes ([`Topology::SingleSwitch`] is the
+    /// paper platform and the default). Drives the simulator's route
+    /// construction and the cost model's hop distances.
+    pub topology: Topology,
+    /// Weight of the hop-distance term in the cost objective:
+    /// `objective = nic_objective + hop_weight * Σ rate_ij * hops(i,j) / nic_bw`.
+    /// `0.0` (the default) keeps the objective bit-identical to the
+    /// historical NIC-only model on every topology.
+    pub hop_weight: f64,
 }
 
 impl ClusterSpec {
@@ -57,7 +68,28 @@ impl ClusterSpec {
             cache_max_msg: MB,
             nic_bw: GB,
             switch_latency: 100,
+            topology: Topology::SingleSwitch,
+            hop_weight: 0.0,
         }
+    }
+
+    /// This cluster with a different interconnect [`Topology`] — the
+    /// sweep-friendly builder (`paper_cluster().with_topology(t)`).
+    pub fn with_topology(mut self, topology: Topology) -> Self {
+        self.topology = topology;
+        self
+    }
+
+    /// This cluster with a different hop-distance objective weight.
+    pub fn with_hop_weight(mut self, hop_weight: f64) -> Self {
+        self.hop_weight = hop_weight;
+        self
+    }
+
+    /// Switch/link hops between two nodes under this cluster's topology
+    /// (`0` when `a == b`; see [`Topology::hop_distance`]).
+    pub fn hop_distance(&self, a: NodeId, b: NodeId) -> usize {
+        self.topology.hop_distance(a, b, self.nodes)
     }
 
     /// A smaller cluster for fast tests: 4 nodes × 2 sockets × 2 cores.
@@ -81,7 +113,10 @@ impl ClusterSpec {
         if self.remote_mem_pct < 100 {
             return Err(Error::spec("remote_mem_pct is a percentage >= 100"));
         }
-        Ok(())
+        if !self.hop_weight.is_finite() || self.hop_weight < 0.0 {
+            return Err(Error::spec("hop_weight must be a finite non-negative number"));
+        }
+        self.topology.validate(self.nodes)
     }
 
     /// Cores per node.
@@ -248,5 +283,35 @@ mod tests {
         let mut c = ClusterSpec::paper_cluster();
         c.remote_mem_pct = 10;
         assert!(c.validate().is_err());
+        // Topology validation runs through the cluster's own validate.
+        let c = ClusterSpec::paper_cluster()
+            .with_topology(Topology::parse("fat-tree:3").unwrap());
+        assert!(c.validate().is_err(), "3 pods cannot divide 16 nodes");
+        let mut c = ClusterSpec::paper_cluster();
+        c.hop_weight = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = ClusterSpec::paper_cluster();
+        c.hop_weight = f64::NAN;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn paper_cluster_defaults_to_single_switch_weight_zero() {
+        let c = ClusterSpec::paper_cluster();
+        assert!(c.topology.is_single_switch());
+        assert_eq!(c.hop_weight, 0.0);
+        assert_eq!(c.hop_distance(0, 0), 0);
+        assert_eq!(c.hop_distance(0, 15), 1);
+    }
+
+    #[test]
+    fn topology_builders_validate_and_delegate_distances() {
+        let c = ClusterSpec::paper_cluster()
+            .with_topology(Topology::parse("torus:4x2x2").unwrap())
+            .with_hop_weight(0.5);
+        c.validate().unwrap();
+        assert_eq!(c.hop_weight, 0.5);
+        assert_eq!(c.hop_distance(0, 14), 4);
+        assert_eq!(c.hop_distance(0, 1), 1);
     }
 }

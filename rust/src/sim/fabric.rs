@@ -6,11 +6,34 @@
 //!   +10 % when crossing sockets (NUMA remote access);
 //! * inter-node → source NIC-tx service, switch latency, destination NIC-rx
 //!   service, then a memory deposit at the destination socket's memory.
+//!
+//! Multi-level fabrics ([`Topology`], ISSUE 10) extend the inter-node leg
+//! with distance-aware link hops between NIC-tx and NIC-rx, each a queueing
+//! server with its own bandwidth and a `switch_latency` forwarding delay:
+//! * fat tree — cross-pod routes cross the source then destination pod
+//!   uplinks (`tx → up(src) → up(dst) → rx → mem`);
+//! * dragonfly — cross-group routes cross the source group's global link;
+//! * 3-D torus — dimension-ordered routing crosses one router server per
+//!   intermediate node, forwarding at NIC bandwidth.
+//!
+//! On [`Topology::SingleSwitch`] zero link servers exist and every route is
+//! byte-identical to the historical three-hop path — the paper goldens
+//! below pin that.
 
+use crate::model::fabric::{torus_next_hop, Topology, MAX_ROUTE_HOPS};
 use crate::model::topology::{ClusterSpec, CoreId};
+use crate::obs;
 use crate::sim::server::Server;
 use crate::sim::{ServerId, ServerKind};
 use crate::units::{scale_pct, service_ns, Bytes, Ns};
+use std::sync::OnceLock;
+
+/// Registry counter `fabric.routes`: routes built by [`Fabric::route`]
+/// (the simulator recomputes one per message leg event).
+fn routes_counter() -> obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    *C.get_or_init(|| obs::counter("fabric.routes"))
+}
 
 /// One hop of a message route: a server, the service time it will consume
 /// there, and a fixed latency added after service completes (the switch).
@@ -24,14 +47,27 @@ pub struct Hop {
     pub latency_after: Ns,
 }
 
-/// A route is at most three hops (tx, rx, memory deposit).
+/// A message route: one to [`MAX_ROUTE_HOPS`] queueing hops. Single-switch
+/// inter-node routes are exactly three (tx, rx, memory deposit); multi-level
+/// fabrics insert link hops between tx and rx.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Route {
-    hops: [Hop; 3],
+    hops: [Hop; MAX_ROUTE_HOPS],
     len: u8,
 }
 
 impl Route {
+    /// Build a route from its hops. Standing invariant: every route has at
+    /// least one hop (asserted here in debug builds) — there is no
+    /// zero-length message path in the model.
+    fn of(hops: &[Hop]) -> Route {
+        debug_assert!(!hops.is_empty(), "a route always has >= 1 hop");
+        debug_assert!(hops.len() <= MAX_ROUTE_HOPS, "route overflows {MAX_ROUTE_HOPS} hops");
+        let mut arr = [Hop { server: 0, service: 0, latency_after: 0 }; MAX_ROUTE_HOPS];
+        arr[..hops.len()].copy_from_slice(hops);
+        Route { hops: arr, len: hops.len() as u8 }
+    }
+
     /// Hops as a slice.
     pub fn hops(&self) -> &[Hop] {
         &self.hops[..self.len as usize]
@@ -42,8 +78,12 @@ impl Route {
         self.len as usize
     }
 
-    /// Never true — every route has ≥1 hop.
+    /// False for every route [`Fabric::route`] builds: construction asserts
+    /// the ≥ 1-hop invariant (debug builds), so this can only return `true`
+    /// for a route that bypassed it. Kept for slice-API symmetry with
+    /// [`Route::len`].
     pub fn is_empty(&self) -> bool {
+        debug_assert!(self.len >= 1, "a route always has >= 1 hop");
         self.len == 0
     }
 
@@ -59,22 +99,27 @@ impl Route {
 pub struct Fabric {
     cluster: ClusterSpec,
     /// `[0,S)` caches, `[S,2S)` memories, `[2S,2S+N)` NIC-tx,
-    /// `[2S+N,2S+2N)` NIC-rx.
+    /// `[2S+N,2S+2N)` NIC-rx, `[2S+2N,2S+2N+L)` fabric links
+    /// (`L = topology.link_count(nodes)`, zero on the single switch).
     pub servers: Vec<Server>,
     sockets: u32,
     nodes: u32,
+    links: u32,
 }
 
 impl Fabric {
     /// Build the server set for `cluster`.
     pub fn new(cluster: &ClusterSpec) -> Self {
+        let _span = obs::span_with("fabric.build", || cluster.topology.name());
         let sockets = cluster.total_sockets() as u32;
         let nodes = cluster.nodes as u32;
+        let links = cluster.topology.link_count(cluster.nodes) as u32;
         Fabric {
             cluster: cluster.clone(),
-            servers: vec![Server::default(); (2 * sockets + 2 * nodes) as usize],
+            servers: vec![Server::default(); (2 * sockets + 2 * nodes + links) as usize],
             sockets,
             nodes,
+            links,
         }
     }
 
@@ -102,6 +147,14 @@ impl Fabric {
         2 * self.sockets + self.nodes + node as ServerId
     }
 
+    /// Fabric-link server `l` in `0..topology.link_count(nodes)` (a pod
+    /// uplink, a group global link, or a node's torus router).
+    #[inline]
+    pub fn link_id(&self, l: usize) -> ServerId {
+        debug_assert!((l as u32) < self.links, "link {l} out of range");
+        2 * self.sockets + 2 * self.nodes + l as ServerId
+    }
+
     /// Category of a server id.
     pub fn kind(&self, id: ServerId) -> ServerKind {
         ServerKind::of(id, &self.cluster)
@@ -111,37 +164,37 @@ impl Fabric {
     /// cores. `src == dst` is a caller bug (patterns never self-send).
     pub fn route(&self, src: CoreId, dst: CoreId, bytes: Bytes) -> Route {
         debug_assert_ne!(src, dst, "self-send has no route");
+        routes_counter().inc();
         let c = &self.cluster;
         let src_socket = c.socket_of_core(src);
         let dst_socket = c.socket_of_core(dst);
         let src_node = c.node_of_core(src);
         let dst_node = c.node_of_core(dst);
-        let nil = Hop { server: 0, service: 0, latency_after: 0 };
 
         if src_node == dst_node {
             if src_socket == dst_socket && bytes <= c.cache_max_msg {
                 // Intra-socket cache path.
-                let hop = Hop {
+                return Route::of(&[Hop {
                     server: self.cache_id(src_socket),
                     service: service_ns(bytes, c.cache_bw),
                     latency_after: 0,
-                };
-                return Route { hops: [hop, nil, nil], len: 1 };
+                }]);
             }
             // Intra-node memory path; remote NUMA penalty across sockets.
             let mut service = service_ns(bytes, c.mem_bw);
             if src_socket != dst_socket {
                 service = scale_pct(service, c.remote_mem_pct);
             }
-            let hop = Hop {
+            return Route::of(&[Hop {
                 server: self.memory_id(dst_socket),
                 service,
                 latency_after: 0,
-            };
-            return Route { hops: [hop, nil, nil], len: 1 };
+            }]);
         }
 
-        // Inter-node: tx → switch → rx → memory deposit.
+        // Inter-node: tx → switch/links → rx → memory deposit. Every
+        // switch/link crossing adds the Table 1 forwarding latency; link
+        // hops queue at their level's bandwidth.
         let nic_svc = service_ns(bytes, c.nic_bw);
         let tx = Hop {
             server: self.nic_tx_id(src_node),
@@ -158,18 +211,71 @@ impl Fabric {
             service: service_ns(bytes, c.mem_bw),
             latency_after: 0,
         };
-        Route { hops: [tx, rx, dep], len: 3 }
+        let mut hops = [tx; MAX_ROUTE_HOPS];
+        let mut n = 1;
+        match c.topology {
+            // Single switch, and the intra-pod/intra-group fast paths of
+            // the hierarchical fabrics: the historical three-hop route.
+            Topology::SingleSwitch => {}
+            Topology::FatTree { pods, uplink_bw } => {
+                let per = (c.nodes / pods.max(1)).max(1);
+                let (sp, dp) = (src_node / per, dst_node / per);
+                if sp != dp {
+                    // Up the source pod's uplink, down the destination's.
+                    for pod in [sp, dp] {
+                        hops[n] = Hop {
+                            server: self.link_id(pod),
+                            service: service_ns(bytes, uplink_bw),
+                            latency_after: c.switch_latency,
+                        };
+                        n += 1;
+                    }
+                }
+            }
+            Topology::Dragonfly { groups, global_bw } => {
+                let per = (c.nodes / groups.max(1)).max(1);
+                let (sg, dg) = (src_node / per, dst_node / per);
+                if sg != dg {
+                    hops[n] = Hop {
+                        server: self.link_id(sg),
+                        service: service_ns(bytes, global_bw),
+                        latency_after: c.switch_latency,
+                    };
+                    n += 1;
+                }
+            }
+            Topology::Torus3d { dims } => {
+                // Dimension-ordered path; each intermediate node's router
+                // forwards at NIC bandwidth. Direct neighbours cross zero
+                // routers and keep the three-hop shape.
+                let mut cur = torus_next_hop(src_node, dst_node, dims);
+                while cur != dst_node {
+                    hops[n] = Hop {
+                        server: self.link_id(cur),
+                        service: nic_svc,
+                        latency_after: c.switch_latency,
+                    };
+                    n += 1;
+                    cur = torus_next_hop(cur, dst_node, dims);
+                }
+            }
+        }
+        hops[n] = rx;
+        hops[n + 1] = dep;
+        Route::of(&hops[..n + 2])
     }
 
     /// Waiting-time totals bucketed by server kind, in ns:
-    /// `(nic, memory, cache)`.
+    /// `(nic, memory, cache)`. Fabric-link waits count toward the NIC
+    /// bucket — they are the same "network interface" contention the
+    /// paper's accounting tracks, one level up.
     pub fn wait_by_kind(&self) -> (u128, u128, u128) {
         let mut nic = 0u128;
         let mut mem = 0u128;
         let mut cache = 0u128;
         for (i, s) in self.servers.iter().enumerate() {
             match self.kind(i as ServerId) {
-                ServerKind::NicTx | ServerKind::NicRx => nic += s.wait_ns,
+                ServerKind::NicTx | ServerKind::NicRx | ServerKind::Link => nic += s.wait_ns,
                 ServerKind::Memory => mem += s.wait_ns,
                 ServerKind::Cache => cache += s.wait_ns,
             }
@@ -250,6 +356,97 @@ mod tests {
         let f = fabric();
         assert_eq!(f.route(0, 1, MB).hop(0).server, f.cache_id(0), "1 MB still cache");
         assert_eq!(f.route(0, 1, MB + 1).hop(0).server, f.memory_id(0));
+    }
+
+    #[test]
+    fn fat_tree_cross_pod_crosses_both_uplinks() {
+        let c = ClusterSpec::paper_cluster()
+            .with_topology(Topology::parse("fat-tree:4").unwrap());
+        let f = Fabric::new(&c);
+        // 160 historical servers + 4 pod uplinks.
+        assert_eq!(f.servers.len(), 164);
+        assert_eq!(f.kind(f.link_id(0)), ServerKind::Link);
+        // Same pod (node 0 → node 1): the historical three-hop route.
+        let r = f.route(0, 16, 64 * KB);
+        assert_eq!(r.len(), 3);
+        let golden = Fabric::new(&ClusterSpec::paper_cluster()).route(0, 16, 64 * KB);
+        assert_eq!(r.hops(), golden.hops());
+        // Cross pod (node 0 → node 4): tx, up(pod 0), up(pod 1), rx, mem.
+        let r = f.route(0, 64, 64 * KB);
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.hop(0).server, f.nic_tx_id(0));
+        assert_eq!(r.hop(1).server, f.link_id(0));
+        assert_eq!(r.hop(1).service, 32_000, "64 KB at the 2 GB/s uplink");
+        assert_eq!(r.hop(1).latency_after, 100, "each crossing forwards");
+        assert_eq!(r.hop(2).server, f.link_id(1));
+        assert_eq!(r.hop(3).server, f.nic_rx_id(4));
+        assert_eq!(r.hop(4).server, f.memory_id(16));
+    }
+
+    #[test]
+    fn dragonfly_cross_group_crosses_source_global_link() {
+        let c = ClusterSpec::paper_cluster()
+            .with_topology(Topology::parse("dragonfly:2").unwrap());
+        let f = Fabric::new(&c);
+        assert_eq!(f.servers.len(), 162);
+        // Same group: three hops. Cross group: the source's global link.
+        assert_eq!(f.route(0, 16, 64 * KB).len(), 3);
+        let r = f.route(0, 128, 64 * KB); // node 0 → node 8
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.hop(1).server, f.link_id(0));
+        assert_eq!(r.hop(1).service, 32_000);
+        assert_eq!(r.hop(2).server, f.nic_rx_id(8));
+    }
+
+    #[test]
+    fn torus_routes_cross_one_router_per_intermediate_node() {
+        let c = ClusterSpec::paper_cluster()
+            .with_topology(Topology::parse("torus:4x2x2").unwrap());
+        let f = Fabric::new(&c);
+        assert_eq!(f.servers.len(), 176, "one router per node");
+        // Direct neighbours keep the three-hop shape.
+        assert_eq!(f.route(0, 16, 64 * KB).len(), 3);
+        // Node 0 → node 2 is two x-steps through node 1's router.
+        let r = f.route(0, 32, 64 * KB);
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.hop(0).server, f.nic_tx_id(0));
+        assert_eq!(r.hop(1).server, f.link_id(1));
+        assert_eq!(r.hop(1).service, 64_000, "routers forward at NIC bandwidth");
+        assert_eq!(r.hop(2).server, f.nic_rx_id(2));
+        assert_eq!(r.hop(3).server, f.memory_id(8));
+        // Route length always tracks the topology's hop distance:
+        // tx + (hops - 1) routers + rx + memory.
+        for (a, b) in [(0usize, 14usize), (3, 8), (5, 10)] {
+            let d = c.hop_distance(a, b);
+            let r = f.route(a * 16, b * 16, KB);
+            assert_eq!(r.len(), d + 2, "{a} -> {b}");
+        }
+    }
+
+    #[test]
+    fn single_switch_routes_and_layout_unchanged_by_topology_field() {
+        // The golden baseline: explicit SingleSwitch is byte-identical to
+        // the historical fabric (no link servers, same routes).
+        let c = ClusterSpec::paper_cluster().with_topology(Topology::SingleSwitch);
+        let f = Fabric::new(&c);
+        assert_eq!(f.servers.len(), 160);
+        let r = f.route(0, 16, 64 * KB);
+        assert_eq!(r.len(), 3);
+        assert!(!r.is_empty());
+    }
+
+    #[test]
+    fn link_waits_fold_into_the_nic_bucket() {
+        let c = ClusterSpec::paper_cluster()
+            .with_topology(Topology::parse("fat-tree:4").unwrap());
+        let mut f = Fabric::new(&c);
+        let l = f.link_id(2) as usize;
+        f.servers[l].accept(0, 100);
+        f.servers[l].accept(10, 100); // waits 90
+        let (nic, mem, cache) = f.wait_by_kind();
+        assert_eq!(nic, 90);
+        assert_eq!(mem, 0);
+        assert_eq!(cache, 0);
     }
 
     #[test]

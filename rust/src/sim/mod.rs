@@ -30,9 +30,11 @@ mod tests {
 
 /// Identifier of a queuing server inside the fabric.
 ///
-/// Layout (S = total sockets, N = nodes):
+/// Layout (S = total sockets, N = nodes, L = `topology.link_count(N)`):
 /// `[0, S)` caches, `[S, 2S)` memories, `[2S, 2S+N)` NIC-tx, `[2S+N, 2S+2N)`
-/// NIC-rx.
+/// NIC-rx, `[2S+2N, 2S+2N+L)` inter-node fabric links (uplinks, global
+/// links, or torus routers). `L = 0` on the single switch, so the paper
+/// layout is byte-identical to the historical one.
 pub type ServerId = u32;
 
 /// Server category, derived from the id layout — used to bucket waiting
@@ -47,6 +49,11 @@ pub enum ServerKind {
     NicTx,
     /// NIC receive side.
     NicRx,
+    /// Inter-node fabric link (fat-tree uplink, dragonfly global link, or
+    /// torus router). Absent on [`Topology::SingleSwitch`].
+    ///
+    /// [`Topology`]: crate::model::fabric::Topology
+    Link,
 }
 
 impl ServerKind {
@@ -54,11 +61,13 @@ impl ServerKind {
     pub fn of(id: ServerId, cluster: &ClusterSpec) -> ServerKind {
         let s = cluster.total_sockets() as u32;
         let n = cluster.nodes as u32;
+        let l = cluster.topology.link_count(cluster.nodes) as u32;
         match id {
             x if x < s => ServerKind::Cache,
             x if x < 2 * s => ServerKind::Memory,
             x if x < 2 * s + n => ServerKind::NicTx,
             x if x < 2 * s + 2 * n => ServerKind::NicRx,
+            x if x < 2 * s + 2 * n + l => ServerKind::Link,
             _ => panic!("server id {id} out of range"),
         }
     }

@@ -2,6 +2,7 @@
 //! placements. All driven by [`super::rng::SplitMix64`] so failures replay.
 
 use crate::coordinator::Placement;
+use crate::model::fabric::Topology;
 use crate::model::pattern::Pattern;
 use crate::model::topology::ClusterSpec;
 use crate::model::workload::{FlowSpec, JobSpec, Workload};
@@ -22,6 +23,10 @@ pub fn cluster(rng: &mut SplitMix64) -> ClusterSpec {
         cache_max_msg: *rng.choose(&[256 * KB, MB, 4 * MB]),
         nic_bw: *rng.choose(&[GB, 2 * GB]),
         switch_latency: rng.below(1000),
+        // Property tests exercise the historical single-switch semantics;
+        // topology-specific suites build fabrics explicitly.
+        topology: Topology::SingleSwitch,
+        hop_weight: 0.0,
     };
     debug_assert!(c.validate().is_ok());
     c

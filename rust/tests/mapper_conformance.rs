@@ -143,6 +143,64 @@ fn place_deterministic_across_repeated_calls() {
     }
 }
 
+/// ISSUE 10: at hop weight 0 every spec's placement is bit-identical on
+/// every fabric — carrying a topology on the cluster must not perturb any
+/// strategy (the distance state is structurally absent), including the
+/// `+r` refinement stage, on both the all-free and partially occupied
+/// paths. Under a nonzero weight, `place` still satisfies every
+/// structural contract (valid, duplicate-free, claimed cores untouched,
+/// deterministic).
+#[test]
+fn placements_are_fabric_invariant_at_weight_zero_and_valid_under_weight() {
+    use nicmap::model::fabric::Topology;
+    let w = mixed_workload(24, 8);
+    let ctx = MapCtx::build(&w);
+    let claimed = seeded_claims(&ClusterSpec::paper_cluster(), 0xFAB_0010, 96);
+    for spec in all_specs() {
+        let base_cluster = ClusterSpec::paper_cluster();
+        let batch_base = spec.build().map(&ctx, &base_cluster).unwrap();
+        let mut occ = occupancy_with(&base_cluster, &claimed);
+        let occ_base = spec.build().place(&ctx, &base_cluster, &mut occ).unwrap();
+        for name in ["switch", "fat-tree:4", "dragonfly:4", "torus:4x2x2"] {
+            let topology = Topology::parse(name).unwrap();
+            let fabric = ClusterSpec::paper_cluster().with_topology(topology);
+            fabric.validate().unwrap();
+            assert_eq!(
+                spec.build().map(&ctx, &fabric).unwrap(),
+                batch_base,
+                "{spec:?} on {name}: batch placement drifted at weight 0"
+            );
+            let mut focc = occupancy_with(&fabric, &claimed);
+            assert_eq!(
+                spec.build().place(&ctx, &fabric, &mut focc).unwrap(),
+                occ_base,
+                "{spec:?} on {name}: occupied placement drifted at weight 0"
+            );
+            // Nonzero weight: the refined specs may legitimately place
+            // differently (the objective changed), but every structural
+            // contract must hold and the result stays deterministic.
+            let weighted = fabric.clone().with_hop_weight(0.5);
+            weighted.validate().unwrap();
+            let a = spec.build().map(&ctx, &weighted).unwrap();
+            let b = spec.build().map(&ctx, &weighted).unwrap();
+            assert_eq!(a, b, "{spec:?} on {name}: weighted placement nondeterministic");
+            a.validate(&w, &weighted)
+                .unwrap_or_else(|e| panic!("{spec:?} on {name} weighted: {e}"));
+            let mut wocc = occupancy_with(&weighted, &claimed);
+            let p = spec.build().place(&ctx, &weighted, &mut wocc).unwrap();
+            let claimed_set: std::collections::BTreeSet<_> = claimed.iter().copied().collect();
+            let mut seen = std::collections::BTreeSet::new();
+            for &c in &p.core_of {
+                assert!(
+                    !claimed_set.contains(&c),
+                    "{spec:?} on {name} weighted: touched claimed core {c}"
+                );
+                assert!(seen.insert(c), "{spec:?} on {name} weighted: core {c} double-used");
+            }
+        }
+    }
+}
+
 /// Fewer free cores than processes is a clean error for every spec — and
 /// the occupancy is still usable afterwards (no partial claims observable
 /// through a subsequent successful placement).

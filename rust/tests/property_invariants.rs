@@ -445,6 +445,147 @@ fn live_ledger_churn_loads_bit_equal_dense_recompute() {
     });
 }
 
+/// Fabrics valid on any generated cluster (2–8 nodes): the flat switch, a
+/// one-dimensional torus ring (nontrivial distances), and a fat tree /
+/// dragonfly with the largest divisor grouping available.
+fn valid_fabrics(nodes: usize) -> Vec<nicmap::model::fabric::Topology> {
+    use nicmap::model::fabric::Topology;
+    let mut out = vec![
+        Topology::SingleSwitch,
+        Topology::parse(&format!("torus:{nodes}x1x1")).unwrap(),
+    ];
+    let split = if nodes % 2 == 0 { 2 } else { 1 };
+    out.push(Topology::parse(&format!("fat-tree:{split}")).unwrap());
+    out.push(Topology::parse(&format!("dragonfly:{split}")).unwrap());
+    out
+}
+
+#[test]
+fn zero_weight_fabrics_keep_the_ledger_bit_identical_and_sim_conservative() {
+    // ISSUE 10: at hop weight 0 the distance state is structurally absent,
+    // so carrying any fabric on a generated cluster leaves ledger seeds,
+    // peeks, and applied-move loads bit-identical to the flat cluster;
+    // and the simulator's multi-hop routing must still conserve messages.
+    use nicmap::cost::{LoadLedger, Move};
+    use nicmap::model::sparse::SparseTraffic;
+    forall(0x1D_0000, 12, |rng| {
+        let cluster = gen::cluster(rng);
+        let w = gen::workload(rng, &cluster);
+        let sparse = SparseTraffic::of_workload(&w);
+        let start = gen::placement(rng, &w, &cluster);
+        let mut base = LoadLedger::from_sparse(&sparse, &start, &cluster).unwrap();
+        let procs = w.total_procs();
+        let moves: Vec<Move> = (0..4)
+            .filter_map(|_| {
+                let a = rng.below(procs as u64) as usize;
+                let b = rng.below(procs as u64) as usize;
+                (a != b).then_some(Move::Swap(a, b))
+            })
+            .collect();
+        for topology in valid_fabrics(cluster.nodes) {
+            let fabric = cluster.clone().with_topology(topology);
+            fabric.validate().unwrap_or_else(|e| panic!("{topology}: {e}"));
+            let mut ledger = LoadLedger::from_sparse(&sparse, &start, &fabric).unwrap();
+            assert_eq!(ledger.dist_term(), 0.0, "{topology}: weight-0 distance term");
+            assert_eq!(
+                ledger.objective().to_bits(),
+                base.objective().to_bits(),
+                "{topology}: seed objective diverged at weight 0"
+            );
+            for &mv in &moves {
+                assert_eq!(
+                    ledger.peek(mv).unwrap().to_bits(),
+                    base.peek(mv).unwrap().to_bits(),
+                    "{topology}: {mv:?} peek diverged at weight 0"
+                );
+                ledger.apply(mv).unwrap();
+                base.apply(mv).unwrap();
+                assert_eq!(
+                    ledger.objective().to_bits(),
+                    base.objective().to_bits(),
+                    "{topology}: {mv:?} applied objective diverged at weight 0"
+                );
+            }
+            for _ in &moves {
+                ledger.revert().unwrap();
+                base.revert().unwrap();
+            }
+            // Multi-hop routing conserves every message on any fabric.
+            let p = gen::placement(rng, &w, &fabric);
+            let r = simulate(&w, &p, &fabric, &SimConfig::default()).unwrap();
+            assert_eq!(r.sent, r.delivered, "{topology}: conservation");
+            for job in &r.jobs {
+                assert!(job.finish_ns <= r.end_ns, "{topology}: job finishes after end");
+            }
+        }
+    });
+}
+
+#[test]
+fn weighted_distance_term_tracks_the_witness_under_random_moves() {
+    // Under a nonzero (power-of-two, hence exact) hop weight, the
+    // incrementally maintained distance term must equal the from-scratch
+    // witness bit for bit after every peek/apply/revert, and every scoring
+    // level must agree on the weighted objective.
+    use nicmap::cost::{LoadLedger, Move};
+    use nicmap::model::sparse::SparseTraffic;
+    forall(0x1E_0000, 12, |rng| {
+        let cluster = gen::cluster(rng);
+        let w = gen::workload(rng, &cluster);
+        let sparse = SparseTraffic::of_workload(&w);
+        let start = gen::placement(rng, &w, &cluster);
+        for topology in valid_fabrics(cluster.nodes) {
+            let fabric = cluster.clone().with_topology(topology).with_hop_weight(0.5);
+            fabric.validate().unwrap();
+            let mut ledger = LoadLedger::from_sparse(&sparse, &start, &fabric).unwrap();
+            assert_eq!(
+                ledger.dist_term().to_bits(),
+                ledger.dist_witness().to_bits(),
+                "{topology}: seeded distance term diverged from witness"
+            );
+            let procs = w.total_procs();
+            for round in 0..5 {
+                let a = rng.below(procs as u64) as usize;
+                let b = rng.below(procs as u64) as usize;
+                let free: Vec<usize> =
+                    (0..fabric.total_cores()).filter(|&c| ledger.is_free(c)).collect();
+                let mv = if round % 2 == 0 && !free.is_empty() {
+                    Move::Migrate(a, free[rng.below(free.len() as u64) as usize])
+                } else if a != b {
+                    Move::Swap(a, b)
+                } else {
+                    continue;
+                };
+                let peeked = ledger.peek(mv).unwrap();
+                assert_eq!(
+                    ledger.peek_batch(&[mv]).unwrap()[0].to_bits(),
+                    peeked.to_bits(),
+                    "{topology}: {mv:?} weighted peek_batch diverged"
+                );
+                ledger.apply(mv).unwrap();
+                assert_eq!(
+                    ledger.objective().to_bits(),
+                    peeked.to_bits(),
+                    "{topology}: {mv:?} applied weighted objective != peek"
+                );
+                assert_eq!(
+                    ledger.dist_term().to_bits(),
+                    ledger.dist_witness().to_bits(),
+                    "{topology}: {mv:?} distance term diverged from witness"
+                );
+                if round % 3 == 2 {
+                    ledger.revert().unwrap();
+                    assert_eq!(
+                        ledger.dist_term().to_bits(),
+                        ledger.dist_witness().to_bits(),
+                        "{topology}: reverted distance term diverged"
+                    );
+                }
+            }
+        }
+    });
+}
+
 #[test]
 fn new_strategy_threshold_cap_respected_for_single_a2a_jobs() {
     // For a lone all-to-all job the eq. 2 cap must bind exactly (no

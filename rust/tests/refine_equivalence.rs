@@ -259,6 +259,79 @@ fn sparse_and_live_refinement_route_rounds_through_the_fused_kernel() {
 }
 
 #[test]
+fn zero_hop_weight_refinement_is_bit_identical_across_fabrics() {
+    // ISSUE 10 acceptance: with the distance weight at 0 (the default),
+    // carrying any fabric on the cluster must not change refinement at
+    // all — the distance state is structurally absent, so placements,
+    // objectives, accepted-move counts, and full-pass counts are bit
+    // identical to the flat single-switch model.
+    use nicmap::coordinator::refine::Refiner;
+    use nicmap::model::fabric::Topology;
+    use nicmap::model::sparse::SparseTraffic;
+    let (traffic, w, cluster, start) = seeded_256();
+    let sparse = SparseTraffic::from_dense(&traffic);
+    let refiner = Refiner { max_rounds: ROUNDS, cold_pool: COLD_POOL, min_gain: MIN_GAIN };
+    let base = refiner.run_sparse_constrained(&sparse, &start, &w, &cluster, |_| true).unwrap();
+    assert!(base.moves > 0, "Blocked synt1 must admit improving moves");
+    for spec in ["switch", "fat-tree:4", "dragonfly:4", "torus:4x2x2"] {
+        let fabric = ClusterSpec::paper_cluster().with_topology(Topology::parse(spec).unwrap());
+        fabric.validate().unwrap();
+        assert_eq!(fabric.hop_weight, 0.0);
+        let rep =
+            refiner.run_sparse_constrained(&sparse, &start, &w, &fabric, |_| true).unwrap();
+        assert_eq!(rep.placement, base.placement, "{spec}: placement diverged at weight 0");
+        assert_eq!(rep.moves, base.moves, "{spec}");
+        assert_eq!(rep.evaluations, base.evaluations, "{spec}");
+        assert_eq!(
+            rep.after.to_bits(),
+            base.after.to_bits(),
+            "{spec}: objective diverged at weight 0"
+        );
+        assert_eq!(rep.before.to_bits(), base.before.to_bits(), "{spec}");
+    }
+}
+
+#[test]
+fn weighted_refinement_agrees_between_sparse_and_live_paths() {
+    // Under a nonzero hop weight the sparse pipeline path and the online
+    // live-ledger descend must still land on the same refined state bit
+    // for bit (same greedy rule, same fused kernel, same exact integer
+    // distance arithmetic), and the incrementally maintained distance
+    // term must equal the from-scratch witness.
+    use nicmap::coordinator::refine::Refiner;
+    use nicmap::model::fabric::Topology;
+    use nicmap::model::sparse::SparseTraffic;
+    let cluster = ClusterSpec::paper_cluster()
+        .with_topology(Topology::parse("torus:4x2x2").unwrap())
+        .with_hop_weight(0.5);
+    cluster.validate().unwrap();
+    let w = Workload::builtin("synt1").unwrap();
+    let traffic = TrafficMatrix::of_workload(&w);
+    let sparse = SparseTraffic::from_dense(&traffic);
+    let start = MapperKind::Blocked.build().map_workload(&w, &cluster).unwrap();
+    let refiner = Refiner { max_rounds: ROUNDS, cold_pool: COLD_POOL, min_gain: MIN_GAIN };
+
+    let rep = refiner.run_sparse_constrained(&sparse, &start, &w, &cluster, |_| true).unwrap();
+    assert!(rep.after <= rep.before, "weighted refinement must never regress");
+
+    let mut live = LoadLedger::live(&cluster);
+    live.admit_block(sparse, &start.core_of).unwrap();
+    let stats = refiner.descend(&mut live, |_| true).unwrap();
+    assert_eq!(stats.moves, rep.moves);
+    assert_eq!(live.placement(), rep.placement);
+    assert_eq!(
+        stats.objective.to_bits(),
+        rep.after.to_bits(),
+        "weighted live descent diverged from the sparse-verified objective"
+    );
+    assert_eq!(
+        live.dist_term().to_bits(),
+        live.dist_witness().to_bits(),
+        "incremental distance term diverged from the from-scratch witness"
+    );
+}
+
+#[test]
 fn refine_survives_nan_scoring_without_panicking() {
     // Satellite fix: hot/cold node selection used to `partial_cmp().unwrap()`
     // on f64 loads — a NaN-emitting scorer (e.g. a corrupt artifact) would
